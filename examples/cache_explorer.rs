@@ -1,0 +1,64 @@
+//! Cache explorer: the Fig. 5 design-space exploration interactively —
+//! sweep the VIMA cache size and the vector size, show hit rates and
+//! speedups for the reuse-heavy kernels.
+//!
+//! Run: `cargo run --release --example cache_explorer [-- --paper]`
+
+use vima_sim::config::SystemConfig;
+use vima_sim::sim::simulate;
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+use vima_sim::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let footprint: u64 = if args.flag("paper") { 64 << 20 } else { 4 << 20 };
+    let base_cfg = SystemConfig::default();
+
+    println!("== VIMA cache size sweep (Stencil, {} MB) ==", footprint >> 20);
+    println!(
+        "{:<9} {:>7} {:>14} {:>10} {:>10} {:>9}",
+        "cache", "lines", "vima cycles", "hits", "misses", "speedup"
+    );
+    let avx = simulate(&base_cfg, TraceParams::new(KernelId::Stencil, Backend::Avx, footprint));
+    for kb in [8usize, 16, 32, 64, 128, 256] {
+        let mut cfg = base_cfg.clone();
+        cfg.vima.cache_bytes = kb << 10;
+        let r = simulate(&cfg, TraceParams::new(KernelId::Stencil, Backend::Vima, footprint));
+        println!(
+            "{:<9} {:>7} {:>14} {:>10} {:>10} {:>8.2}x",
+            format!("{kb}KB"),
+            kb * 1024 / cfg.vima.vector_bytes,
+            r.cycles,
+            r.report.get("vima.vcache_hits").unwrap_or(0.0),
+            r.report.get("vima.vcache_misses").unwrap_or(0.0),
+            avx.cycles as f64 / r.cycles as f64,
+        );
+    }
+
+    println!("\n== Vector size ablation (VecSum, {} MB; Sec. III-C) ==", footprint >> 20);
+    println!("{:<9} {:>14} {:>10} {:>22}", "vector", "vima cycles", "speedup", "vs 8KB configuration");
+    let avx = simulate(&base_cfg, TraceParams::new(KernelId::VecSum, Backend::Avx, footprint));
+    let mut best = None;
+    let mut rows = Vec::new();
+    for vb in [256u32, 512, 1024, 2048, 4096, 8192] {
+        let mut cfg = base_cfg.clone();
+        cfg.vima.vector_bytes = vb as usize;
+        let p = TraceParams::new(KernelId::VecSum, Backend::Vima, footprint).with_vector_bytes(vb);
+        let r = simulate(&cfg, p);
+        if vb == 8192 {
+            best = Some(r.cycles);
+        }
+        rows.push((vb, r.cycles, avx.cycles as f64 / r.cycles as f64));
+    }
+    let best = best.unwrap();
+    for (vb, cycles, speedup) in rows {
+        println!(
+            "{:<9} {:>14} {:>9.2}x {:>21.1}%",
+            format!("{vb}B"),
+            cycles,
+            speedup,
+            (cycles as f64 / best as f64 - 1.0) * 100.0
+        );
+    }
+    println!("\n(the paper reports 256 B vectors ~74% worse than 8 KB on average)");
+}

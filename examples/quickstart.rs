@@ -1,0 +1,73 @@
+//! Quickstart: simulate one workload on the AVX baseline and on VIMA, and
+//! (if `make artifacts` has been run) verify the VIMA instruction stream
+//! *functionally* through the PJRT runtime.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use vima_sim::config::SystemConfig;
+use vima_sim::isa::TraceEvent;
+use vima_sim::runtime::functional::FunctionalVima;
+use vima_sim::runtime::{default_artifacts_dir, Engine};
+use vima_sim::sim::simulate;
+use vima_sim::trace::{layout, Backend, KernelId, TraceParams};
+
+fn main() -> Result<()> {
+    let cfg = SystemConfig::default();
+    let footprint = 12u64 << 20; // 12 MB total (three 4 MB arrays)
+
+    // --- timing: VecSum on both backends --------------------------------
+    let avx = simulate(&cfg, TraceParams::new(KernelId::VecSum, Backend::Avx, footprint));
+    let vima = simulate(&cfg, TraceParams::new(KernelId::VecSum, Backend::Vima, footprint));
+    println!("VecSum, {} MB total footprint:", footprint >> 20);
+    println!("  AVX  baseline: {:>12} cycles  {:>10.6} J", avx.cycles, avx.energy.total_j);
+    println!("  VIMA         : {:>12} cycles  {:>10.6} J", vima.cycles, vima.energy.total_j);
+    println!(
+        "  speedup {:.2}x, energy {:.1}% of baseline",
+        vima.speedup_vs(&avx),
+        vima.energy_ratio_vs(&avx) * 100.0
+    );
+
+    // --- functional: replay the first VIMA instructions through PJRT ----
+    match Engine::new(default_artifacts_dir()) {
+        Ok(engine) => {
+            let mut fx = FunctionalVima::new(engine);
+            // Seed functional memory for the first 4 vector triples.
+            let elems = 2048usize;
+            for v in 0..4u64 {
+                let base = v * 8192;
+                let a: Vec<f32> = (0..elems).map(|i| (v as f32) + i as f32 * 0.001).collect();
+                let b: Vec<f32> = (0..elems).map(|i| 1.0 + i as f32 * 0.002).collect();
+                fx.write_vector(layout::A + base, a);
+                fx.write_vector(layout::B + base, b);
+            }
+            let trace = TraceParams::new(KernelId::VecSum, Backend::Vima, 4 * 3 * 8192);
+            for ev in trace.stream() {
+                if let TraceEvent::Vima(instr) = ev {
+                    fx.execute(&instr)?;
+                }
+            }
+            // Check c = a + b elementwise for every produced vector.
+            let mut checked = 0;
+            for v in 0..4u64 {
+                let base = v * 8192;
+                let a = fx.read_vector(layout::A + base).unwrap().to_vec();
+                let b = fx.read_vector(layout::B + base).unwrap().to_vec();
+                let c = fx.read_vector(layout::C + base).expect("result vector");
+                for i in 0..elems {
+                    assert!((c[i] - (a[i] + b[i])).abs() < 1e-5, "mismatch at {v}/{i}");
+                    checked += 1;
+                }
+            }
+            println!(
+                "\nfunctional check: {} VIMA instructions executed via PJRT, {checked} elements verified",
+                fx.executed
+            );
+        }
+        Err(e) => {
+            println!("\n(skipping functional check: {e}; run `make artifacts` first)");
+        }
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

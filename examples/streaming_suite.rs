@@ -1,0 +1,57 @@
+//! Streaming suite: the paper's intro motivation — MemSet / MemCopy / VecSum
+//! across dataset sizes on all three systems (AVX baseline, HIVE, VIMA),
+//! i.e. a superset of Fig. 2's kernels with per-size detail.
+//!
+//! Run: `cargo run --release --example streaming_suite [-- --paper]`
+
+use vima_sim::config::SystemConfig;
+use vima_sim::sim::simulate;
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+use vima_sim::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let sizes: &[u64] = if args.flag("paper") {
+        &[4 << 20, 16 << 20, 64 << 20]
+    } else {
+        &[1 << 20, 4 << 20]
+    };
+    let cfg = SystemConfig::default();
+
+    println!(
+        "{:<10} {:>6} {:>14} {:>14} {:>14} {:>12} {:>12}",
+        "kernel", "MB", "avx cycles", "hive cycles", "vima cycles", "hive spdup", "vima spdup"
+    );
+    for kernel in [KernelId::MemSet, KernelId::MemCopy, KernelId::VecSum] {
+        for &bytes in sizes {
+            let avx = simulate(&cfg, TraceParams::new(kernel, Backend::Avx, bytes));
+            let hive = simulate(&cfg, TraceParams::new(kernel, Backend::Hive, bytes));
+            let vima = simulate(&cfg, TraceParams::new(kernel, Backend::Vima, bytes));
+            println!(
+                "{:<10} {:>6} {:>14} {:>14} {:>14} {:>11.2}x {:>11.2}x",
+                kernel.to_string(),
+                bytes >> 20,
+                avx.cycles,
+                hive.cycles,
+                vima.cycles,
+                hive.speedup_vs(&avx),
+                vima.speedup_vs(&avx),
+            );
+        }
+    }
+
+    println!("\nEnergy breakdown for VecSum at {} MB:", sizes[sizes.len() - 1] >> 20);
+    let bytes = sizes[sizes.len() - 1];
+    for (name, backend) in [("AVX", Backend::Avx), ("VIMA", Backend::Vima)] {
+        let r = simulate(&cfg, TraceParams::new(KernelId::VecSum, backend, bytes));
+        let e = &r.energy;
+        println!(
+            "  {name:<5} total={:.6} J  core={:.6}  caches={:.6}  dram={:.6}  vima={:.6}",
+            e.total_j,
+            e.core_j,
+            e.cache_dynamic_j + e.cache_static_j,
+            e.dram_dynamic_j + e.dram_static_j,
+            e.vima_j
+        );
+    }
+}

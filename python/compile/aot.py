@@ -1,0 +1,218 @@
+"""AOT lowering: every Layer-2 entry point -> HLO text in artifacts/.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each entry is lowered with ``return_tuple=True`` so the Rust side unwraps
+with ``to_tuple1()``.  A ``manifest.json`` records every artifact's input
+and output shapes/dtypes for the Rust runtime registry.
+
+Run:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import (
+    elements_per_vector,
+    knn_dist_block,
+    mlp_layer,
+    stencil_row,
+    vima_binop,
+    vima_broadcast,
+    vima_copy,
+    vima_dot,
+    vima_reduce_sum,
+    vima_ternop,
+)
+
+S = jax.ShapeDtypeStruct
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --- registry ----------------------------------------------------------------
+
+REGISTRY = {}
+
+
+def register(name, fn, *arg_specs):
+    if name in REGISTRY:
+        raise ValueError(f"duplicate artifact name {name}")
+    REGISTRY[name] = (fn, arg_specs)
+
+
+def _vec_spec(dtype):
+    """One 8 KB VIMA vector of ``dtype``."""
+    return S((elements_per_vector(dtype),), dtype)
+
+
+DTYPES = {
+    "f32": jnp.float32,
+    "f64": jnp.float64,
+    "i32": jnp.int32,
+    "i64": jnp.int64,
+}
+
+# Per-VIMA-instruction artifacts: one HLO module per (opcode, dtype), operating
+# on a single 8 KB vector — the granularity at which the Rust sequencer
+# executes functional compute.
+for dname, dt in DTYPES.items():
+    v = _vec_spec(dt)
+    for op in ("add", "sub", "mul"):
+        register(f"v{op}_{dname}", functools.partial(vima_binop, op), v, v)
+    if dname.startswith("f"):
+        for op in ("div", "min", "max"):
+            register(f"v{op}_{dname}", functools.partial(vima_binop, op), v, v)
+        register(f"vfma_{dname}", vima_ternop, v, v, v)
+        register(f"vdot_{dname}", vima_dot, v, v)
+    else:
+        for op in ("and", "or", "xor"):
+            register(f"v{op}_{dname}", functools.partial(vima_binop, op), v, v)
+
+register("vredsum_f32", vima_reduce_sum, _vec_spec(jnp.float32))
+register("vmov_f32", vima_copy, _vec_spec(jnp.float32))
+register("vmov_i32", vima_copy, _vec_spec(jnp.int32))
+
+_EPV32 = elements_per_vector(jnp.float32)  # 2048
+
+
+def _bcast(dtype):
+    def fn(value):
+        return vima_broadcast(value[0], elements_per_vector(dtype), dtype)
+    return fn
+
+
+register("vbcast_f32", _bcast(jnp.float32), S((1,), jnp.float32))
+register("vbcast_i32", _bcast(jnp.int32), S((1,), jnp.int32))
+
+# Kernel-level artifacts (paper Sec. IV-A shapes, scaled to artifact size).
+register(
+    "stencil_row_f32",
+    stencil_row,
+    S((_EPV32,), jnp.float32),
+    S((_EPV32,), jnp.float32),
+    S((_EPV32,), jnp.float32),
+)
+register("stencil2d_f32", model.stencil, S((64, _EPV32), jnp.float32))
+register("matmul_f32", model.matmul, S((256, 256), jnp.float32), S((256, 256), jnp.float32))
+register("knn_dist_f32", knn_dist_block, S((512,), jnp.float32), S((256, 512), jnp.float32))
+register(
+    "mlp_layer_f32",
+    mlp_layer,
+    S((256, 256), jnp.float32),
+    S((256,), jnp.float32),
+    S((256,), jnp.float32),
+)
+
+# Workload-level artifacts used by the examples / end-to-end driver.
+register("vecsum_f32", model.vecsum, S((16 * _EPV32,), jnp.float32), S((16 * _EPV32,), jnp.float32))
+register("memcopy_f32", model.memcopy, S((16 * _EPV32,), jnp.float32))
+register("memset_i32", lambda v: model.memset(16 * _EPV32, v[0]), S((1,), jnp.int32))
+register("saxpy_f32", lambda a, x, y: model.saxpy(a[0], x, y), S((1,), jnp.float32),
+         S((8 * _EPV32,), jnp.float32), S((8 * _EPV32,), jnp.float32))
+register(
+    "knn_classify_i32",
+    functools.partial(model.knn_classify, k=9, n_classes=16),
+    S((32, 128), jnp.float32),
+    S((1024, 128), jnp.float32),
+    S((1024,), jnp.int32),
+)
+register(
+    "mlp_inference_i32",
+    model.mlp_inference,
+    S((32, 256), jnp.float32),   # x batch
+    S((256, 256), jnp.float32),  # w1
+    S((256,), jnp.float32),      # b1
+    S((16, 256), jnp.float32),   # w2
+    S((16,), jnp.float32),       # b2
+)
+register(
+    "mlp_logits_f32",
+    model.mlp_logits,
+    S((32, 256), jnp.float32),
+    S((256, 256), jnp.float32),
+    S((256,), jnp.float32),
+    S((16, 256), jnp.float32),
+    S((16,), jnp.float32),
+)
+
+
+# --- driver --------------------------------------------------------------------
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": jnp.dtype(s.dtype).name}
+
+
+def lower_one(name: str, out_dir: str) -> dict:
+    fn, specs = REGISTRY[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_aval = jax.eval_shape(fn, *specs)
+    outs = jax.tree_util.tree_leaves(out_aval)
+    return {
+        "inputs": [_spec_json(s) for s in specs],
+        "outputs": [_spec_json(s) for s in outs],
+        "hlo_bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    args = ap.parse_args()
+
+    jax.config.update("jax_enable_x64", True)  # i64/f64 VIMA ops
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = sorted(REGISTRY)
+    if args.only:
+        names = [n for n in names if re.search(args.only, n)]
+    manifest = {}
+    for i, name in enumerate(names):
+        manifest[name] = lower_one(name, args.out_dir)
+        print(f"[{i + 1}/{len(names)}] {name}: {manifest[name]['hlo_bytes']} chars", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+
+    # TSV manifest for the Rust runtime (parsed in-tree, no JSON dependency):
+    # name<TAB>inputs<TAB>outputs, each side dtype:dim,dim,... joined by ';'.
+    def side(specs):
+        return ";".join(
+            f"{s['dtype']}:{','.join(str(d) for d in s['shape'])}" for s in specs
+        ) or "-"
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tinputs\toutputs\n")
+        for name in names:
+            m = manifest[name]
+            f.write(f"{name}\t{side(m['inputs'])}\t{side(m['outputs'])}\n")
+    print(f"wrote {len(names)} artifacts + manifest.[json|tsv] to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernels: the VIMA vector-unit functional model.
+
+Every kernel mirrors the hardware decomposition the paper describes in
+Sec. III-D: one VIMA instruction operates over an 8 KB vector (2048 x 32-bit
+or 1024 x 64-bit elements) executed by 256 physical lanes over 8 pipelined
+beats.  The Pallas grid/block structure is isomorphic to that schedule:
+blocks of LANES elements, grid of VECTOR_BYTES / (LANES * dtype_size) steps.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; numerics are identical, timing is modelled by
+the Rust cycle simulator (Layer 3), not by these kernels.
+"""
+
+from .vima_alu import (
+    LANES,
+    VECTOR_BYTES,
+    elements_per_vector,
+    vima_binop,
+    vima_ternop,
+    vima_broadcast,
+    vima_copy,
+    vima_dot,
+    vima_reduce_sum,
+)
+from .stencil import stencil_row, stencil2d
+from .matmul import matmul_tiled, MXU_TILE
+from .knn import knn_dist_block
+from .mlp import mlp_layer
+
+__all__ = [
+    "LANES",
+    "VECTOR_BYTES",
+    "elements_per_vector",
+    "vima_binop",
+    "vima_ternop",
+    "vima_broadcast",
+    "vima_copy",
+    "vima_dot",
+    "vima_reduce_sum",
+    "stencil_row",
+    "stencil2d",
+    "matmul_tiled",
+    "MXU_TILE",
+    "knn_dist_block",
+    "mlp_layer",
+]

@@ -1,0 +1,48 @@
+"""Tiled matrix multiplication as a Pallas kernel (paper Sec. IV-A, *MatMul*).
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+MatMul runs on 256 scalar-lane FUs near memory; on a TPU the same insight
+(keep operand tiles resident close to the FUs, stream the large matrix once)
+maps to MXU-shaped (128, 128) tiles held in VMEM with a K-accumulation grid.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array edge; also divides the paper's 2048-element vectors.
+MXU_TILE = 128
+
+
+def matmul_tiled(a, b, *, tile_m: int = MXU_TILE, tile_n: int = MXU_TILE, tile_k: int = MXU_TILE):
+    """C = A @ B with (tile_m, tile_k) x (tile_k, tile_n) VMEM tiles.
+
+    Grid is (M/tm, N/tn, K/tk); the K axis accumulates into the same output
+    block (revisiting grid dimension), zeroed on the first K step.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    for dim, tile, name in ((m, tile_m, "M"), (n, tile_n, "N"), (k, tile_k, "K")):
+        if dim % tile != 0:
+            raise ValueError(f"{name}={dim} not a multiple of its tile {tile}")
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        grid=(m // tile_m, n // tile_n, k // tile_k),
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a, b)

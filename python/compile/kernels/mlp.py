@@ -1,0 +1,40 @@
+"""Multi-Layer Perceptron inference kernel (paper Sec. IV-A, *MLP*).
+
+One dense layer ``relu(W @ x + b)``: the weight matrix streams through the
+vector units row-block by row-block while the activation vector ``x`` stays
+resident in the VIMA cache (same reuse shape as kNN's test vector).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def mlp_layer(w, x, b, *, rows_per_block: int = 64, relu: bool = True):
+    """``relu(W @ x + b)`` with W (H, F), x (F,), b (H,) -> (H,)."""
+    h, f = w.shape
+    if x.shape != (f,):
+        raise ValueError(f"x shape {x.shape} != ({f},)")
+    if b.shape != (h,):
+        raise ValueError(f"b shape {b.shape} != ({h},)")
+    # Narrow output layers (e.g. a 16-class logit head) use a single block.
+    rows_per_block = min(rows_per_block, h)
+    if h % rows_per_block != 0:
+        raise ValueError(f"rows {h} not a multiple of block {rows_per_block}")
+
+    def kernel(w_ref, x_ref, b_ref, o_ref):
+        acc = w_ref[...] @ x_ref[...] + b_ref[...]
+        o_ref[...] = jnp.maximum(acc, 0) if relu else acc
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h,), w.dtype),
+        grid=(h // rows_per_block,),
+        in_specs=[
+            pl.BlockSpec((rows_per_block, f), lambda i: (i, 0)),  # weights: streamed
+            pl.BlockSpec((f,), lambda i: (0,)),  # activations: cache-resident
+            pl.BlockSpec((rows_per_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block,), lambda i: (i,)),
+        interpret=True,
+    )(w, x, b)

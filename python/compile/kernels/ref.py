@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth the pytest suite asserts against; no Pallas, no
+blocking — just the mathematical definition of each VIMA operation.
+"""
+
+import jax.numpy as jnp
+
+
+# --- vima_alu -------------------------------------------------------------
+
+def binop(op: str, a, b):
+    return {
+        "add": lambda: a + b,
+        "sub": lambda: a - b,
+        "mul": lambda: a * b,
+        "div": lambda: a / b,
+        "min": lambda: jnp.minimum(a, b),
+        "max": lambda: jnp.maximum(a, b),
+        "and": lambda: a & b,
+        "or": lambda: a | b,
+        "xor": lambda: a ^ b,
+    }[op]()
+
+
+def fma(a, b, c):
+    return a * b + c
+
+
+def broadcast(value, n, dtype):
+    return jnp.full((n,), value, dtype)
+
+
+def copy(a):
+    return a
+
+
+def dot(a, b):
+    return jnp.sum(a * b).reshape(1)
+
+
+def reduce_sum(a):
+    return jnp.sum(a).reshape(1)
+
+
+# --- stencil ---------------------------------------------------------------
+
+def stencil_row(prev, cur, nxt, coeff_center=0.5, coeff_neighbor=0.125):
+    cc = jnp.asarray(coeff_center, cur.dtype)
+    cn = jnp.asarray(coeff_neighbor, cur.dtype)
+    left = jnp.concatenate([jnp.zeros((1,), cur.dtype), cur[:-1]])
+    right = jnp.concatenate([cur[1:], jnp.zeros((1,), cur.dtype)])
+    return cc * cur + cn * (prev + nxt + left + right)
+
+
+def stencil2d(x, coeff_center=0.5, coeff_neighbor=0.125):
+    cc = jnp.asarray(coeff_center, x.dtype)
+    cn = jnp.asarray(coeff_neighbor, x.dtype)
+    p = jnp.pad(x, 1)
+    return (
+        cc * x
+        + cn * (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:])
+    )
+
+
+# --- matmul / knn / mlp ----------------------------------------------------
+
+def matmul(a, b):
+    return a @ b
+
+
+def knn_dist(test, train):
+    diff = train - test[None, :]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def mlp_layer(w, x, b, relu=True):
+    y = w @ x + b
+    return jnp.maximum(y, 0) if relu else y

@@ -1,0 +1,71 @@
+"""5-point stencil convolution as a Pallas kernel (paper Sec. IV-A, *Stencil*).
+
+The paper's Stencil kernel convolves a 5-point cross over a matrix.  In VIMA
+terms each output row is produced from three input rows held in the VIMA
+cache — this is exactly the data-reuse case the VIMA cache exists for
+(Sec. III-E, Fig. 2): the row fetched for iteration *i* is reused by
+iterations *i+1* and *i+2*.
+
+The kernel expresses that reuse pattern directly: the input matrix is padded
+by one row top/bottom, three overlapping (1, W) row views feed each output
+row via shifted block index maps.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def stencil_row(prev, cur, nxt, *, coeff_center: float = 0.5, coeff_neighbor: float = 0.125):
+    """One output row of the 5-point stencil from its three source rows.
+
+    ``out[j] = cc * cur[j] + cn * (prev[j] + nxt[j] + cur[j-1] + cur[j+1])``
+    with zero boundary at the row edges (j-1 / j+1 clamped out).
+    """
+    w = cur.shape[0]
+    # Python-float coefficients are baked into the kernel as immediates
+    # (Pallas rejects captured traced constants).
+    cc, cn = float(coeff_center), float(coeff_neighbor)
+
+    def kernel(p_ref, c_ref, n_ref, o_ref):
+        c = c_ref[...]
+        left = jnp.concatenate([jnp.zeros((1,), c.dtype), c[:-1]])
+        right = jnp.concatenate([c[1:], jnp.zeros((1,), c.dtype)])
+        o_ref[...] = cc * c + cn * (p_ref[...] + n_ref[...] + left + right)
+
+    spec = pl.BlockSpec((w,), lambda: (0,))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((w,), cur.dtype),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(prev, cur, nxt)
+
+
+def stencil2d(x, *, coeff_center: float = 0.5, coeff_neighbor: float = 0.125):
+    """Full 5-point stencil over an (H, W) matrix, zero boundary.
+
+    Implemented as a single pallas_call with a row grid and three overlapping
+    row views into the zero-padded input — the same HBM->cache schedule the
+    VIMA sequencer produces (each row is fetched once, used three times).
+    """
+    h, w = x.shape
+    cc, cn = float(coeff_center), float(coeff_neighbor)
+    padded = jnp.pad(x, ((1, 1), (0, 0)))
+
+    def kernel(p_ref, c_ref, n_ref, o_ref):
+        c = c_ref[0, :]
+        left = jnp.concatenate([jnp.zeros((1,), c.dtype), c[:-1]])
+        right = jnp.concatenate([c[1:], jnp.zeros((1,), c.dtype)])
+        o_ref[0, :] = cc * c + cn * (p_ref[0, :] + n_ref[0, :] + left + right)
+
+    row = lambda off: pl.BlockSpec((1, w), lambda i, off=off: (i + off, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        grid=(h,),
+        in_specs=[row(0), row(1), row(2)],
+        out_specs=pl.BlockSpec((1, w), lambda i: (i, 0)),
+        interpret=True,
+    )(padded, padded, padded)

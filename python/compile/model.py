@@ -1,0 +1,126 @@
+"""Layer-2 JAX workload graphs — what the VIMA vector units compute.
+
+Each of the paper's seven kernels (Sec. IV-A) gets a functional definition
+built on the Layer-1 Pallas kernels.  These are the compute graphs that
+``aot.py`` lowers to HLO text; the Rust coordinator executes them via PJRT
+for the *functional* half of a simulation while the cycle model (Layer 3)
+produces the *timing* half.
+
+Vectors longer than one 8 KB VIMA vector are processed as a scanned sequence
+of per-vector instructions — exactly the instruction stream the stop-and-go
+dispatch protocol produces (one VIMA instruction at a time, Sec. III-C).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    elements_per_vector,
+    knn_dist_block,
+    matmul_tiled,
+    mlp_layer,
+    stencil2d,
+    vima_binop,
+    vima_broadcast,
+    vima_copy,
+    vima_ternop,
+)
+
+
+def _as_vectors(a):
+    """Reshape a flat array into (n_instructions, elems_per_8KB_vector)."""
+    epv = elements_per_vector(a.dtype)
+    if a.shape[0] % epv != 0:
+        raise ValueError(f"array of {a.shape[0]} elems not a multiple of {epv}")
+    return a.reshape(-1, epv)
+
+
+def _per_vector(fn, *arrays):
+    """Apply a per-8KB-vector kernel across a long array via lax.map —
+    the L2 analogue of the sequencer issuing one VIMA instruction per vector."""
+    vecs = [_as_vectors(a) for a in arrays]
+    out = jax.lax.map(lambda args: fn(*args), tuple(vecs))
+    return out.reshape(-1)
+
+
+# --- the seven paper workloads ---------------------------------------------
+
+
+def memset(n: int, value, dtype=jnp.int32):
+    """MemSet: set all positions of a vector to a specific value."""
+    epv = elements_per_vector(dtype)
+    if n % epv != 0:
+        raise ValueError(f"n={n} not a multiple of {epv}")
+    one = vima_broadcast(value, epv, dtype)
+    return jnp.tile(one, n // epv)
+
+
+def memcopy(src):
+    """MemCopy: stream-copy a vector to a new location."""
+    return _per_vector(vima_copy, src)
+
+
+def vecsum(a, b):
+    """VecSum: elementwise sum of two vectors."""
+    return _per_vector(lambda x, y: vima_binop("add", x, y), a, b)
+
+
+def stencil(x):
+    """Stencil: 5-point convolution over a matrix (zero boundary)."""
+    return stencil2d(x)
+
+
+def matmul(a, b):
+    """MatMul: square matrix multiply via MXU-shaped tiles."""
+    return matmul_tiled(a, b)
+
+
+def knn_distances(test_batch, train):
+    """kNN hot loop: all test-x-train squared-L2 distances.
+
+    test_batch (T, F), train (R, F) -> (T, R).  Each test vector stays
+    VIMA-cache resident while the training set streams past it.
+    """
+    return jax.lax.map(lambda t: knn_dist_block(t, train), test_batch)
+
+
+def knn_classify(test_batch, train, labels, k: int = 9, n_classes: int = 16):
+    """Full kNN: distances -> top-k -> majority vote -> predicted labels (T,)."""
+    dists = knn_distances(test_batch, train)
+    _, idx = jax.lax.top_k(-dists, k)  # (T, k) nearest indices
+    votes = labels[idx]  # (T, k)
+    counts = jax.nn.one_hot(votes, n_classes, dtype=jnp.int32).sum(axis=1)
+    return jnp.argmax(counts, axis=1).astype(jnp.int32)
+
+
+def mlp_inference(x_batch, w1, b1, w2, b2):
+    """MLP inference step: two dense layers, relu hidden, argmax output.
+
+    x_batch (B, F); w1 (H, F); w2 (C, H) -> predicted classes (B,).
+    """
+    def one(x):
+        h = mlp_layer(w1, x, b1, relu=True)
+        logits = mlp_layer(w2, h, b2, relu=False)
+        return jnp.argmax(logits).astype(jnp.int32)
+
+    return jax.lax.map(one, x_batch)
+
+
+def mlp_logits(x_batch, w1, b1, w2, b2):
+    """Same forward pass but returning the raw logits (B, C) for validation."""
+    def one(x):
+        h = mlp_layer(w1, x, b1, relu=True)
+        return mlp_layer(w2, h, b2, relu=False)
+
+    return jax.lax.map(one, x_batch)
+
+
+def saxpy(alpha, x, y):
+    """Extension workload: alpha*x + y via the fused ternop (used by examples)."""
+    epv = elements_per_vector(x.dtype)
+    alpha_vec = vima_broadcast(alpha, epv, x.dtype)
+
+    def one(xv, yv):
+        return vima_ternop(alpha_vec, xv, yv)
+
+    return _per_vector(one, x, y)

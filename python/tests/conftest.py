@@ -1,0 +1,19 @@
+import os
+import sys
+
+import jax
+import pytest
+
+# Allow `pytest python/tests/` from the repository root: the compile
+# package lives in python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# i64/f64 VIMA operand types require x64 mode (must be set before any trace).
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+
+    return np.random.RandomState(0x51)

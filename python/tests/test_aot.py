@@ -1,0 +1,109 @@
+"""AOT pipeline checks: every registered artifact lowers to parseable HLO text
+and the manifest faithfully records its signature."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+
+class TestRegistry:
+    def test_registry_is_nonempty_and_unique(self):
+        assert len(aot.REGISTRY) >= 40
+        # names are the artifact filenames; they must be filesystem-safe
+        for name in aot.REGISTRY:
+            assert name.replace("_", "").isalnum(), name
+
+    def test_every_dtype_has_core_ops(self):
+        for d in ("f32", "f64", "i32", "i64"):
+            for op in ("add", "sub", "mul"):
+                assert f"v{op}_{d}" in aot.REGISTRY
+
+    def test_float_ops_have_div_and_fma(self):
+        for d in ("f32", "f64"):
+            assert f"vdiv_{d}" in aot.REGISTRY
+            assert f"vfma_{d}" in aot.REGISTRY
+            assert f"vdot_{d}" in aot.REGISTRY
+
+    def test_int_ops_have_bitwise(self):
+        for d in ("i32", "i64"):
+            for op in ("and", "or", "xor"):
+                assert f"v{op}_{d}" in aot.REGISTRY
+
+    def test_workload_artifacts_present(self):
+        for name in (
+            "vecsum_f32",
+            "memcopy_f32",
+            "memset_i32",
+            "stencil2d_f32",
+            "matmul_f32",
+            "knn_dist_f32",
+            "knn_classify_i32",
+            "mlp_inference_i32",
+            "mlp_logits_f32",
+            "saxpy_f32",
+        ):
+            assert name in aot.REGISTRY, name
+
+
+class TestLowering:
+    @pytest.mark.parametrize("name", ["vadd_f32", "vdot_f64", "vxor_i32", "vbcast_f32"])
+    def test_instruction_artifact_lowers(self, name, tmp_path):
+        meta = aot.lower_one(name, str(tmp_path))
+        text = (tmp_path / f"{name}.hlo.txt").read_text()
+        assert text.startswith("HloModule"), text[:80]
+        assert meta["hlo_bytes"] == len(text)
+        # the entry computation must return a tuple (rust unwraps to_tuple1)
+        assert "ENTRY" in text
+
+    def test_manifest_shapes_match_registry(self, tmp_path):
+        meta = aot.lower_one("mlp_logits_f32", str(tmp_path))
+        assert [tuple(i["shape"]) for i in meta["inputs"]] == [
+            (32, 256),
+            (256, 256),
+            (256,),
+            (16, 256),
+            (16,),
+        ]
+        assert meta["outputs"] == [{"shape": [32, 16], "dtype": "float32"}]
+
+    def test_vector_artifacts_are_8kb(self):
+        """Every per-instruction artifact operates on exactly one 8 KB vector."""
+        for name, (_, specs) in aot.REGISTRY.items():
+            if not name.startswith("v") or name.startswith("vecsum"):
+                continue
+            for s in specs:
+                if len(s.shape) == 1 and s.shape[0] > 1:
+                    nbytes = s.shape[0] * jnp.dtype(s.dtype).itemsize
+                    assert nbytes == 8192, f"{name}: operand is {nbytes} B"
+
+
+class TestArtifactsDir:
+    """Validates the artifacts/ directory produced by `make artifacts`."""
+
+    ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture(autouse=True)
+    def _skip_without_artifacts(self):
+        if not os.path.exists(os.path.join(self.ARTIFACTS, "manifest.json")):
+            pytest.skip("run `make artifacts` first")
+
+    def test_manifest_covers_registry(self):
+        with open(os.path.join(self.ARTIFACTS, "manifest.json")) as f:
+            manifest = json.load(f)
+        missing = set(aot.REGISTRY) - set(manifest)
+        assert not missing, f"artifacts stale, missing {missing}: re-run make artifacts"
+
+    def test_all_hlo_files_exist_and_parse_header(self):
+        with open(os.path.join(self.ARTIFACTS, "manifest.json")) as f:
+            manifest = json.load(f)
+        for name in manifest:
+            path = os.path.join(self.ARTIFACTS, f"{name}.hlo.txt")
+            assert os.path.exists(path), path
+            with open(path) as fh:
+                assert fh.read(9) == "HloModule"

@@ -1,0 +1,296 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal for Layer 1.
+
+Hypothesis sweeps shapes/dtypes/ops of the Pallas kernels and asserts
+allclose against the pure-jnp oracle in ``compile.kernels.ref``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    LANES,
+    VECTOR_BYTES,
+    elements_per_vector,
+    knn_dist_block,
+    matmul_tiled,
+    mlp_layer,
+    stencil_row,
+    stencil2d,
+    vima_binop,
+    vima_broadcast,
+    vima_copy,
+    vima_dot,
+    vima_reduce_sum,
+    vima_ternop,
+)
+from compile.kernels import ref
+
+FLOAT_DTYPES = [jnp.float32, jnp.float64]
+INT_DTYPES = [jnp.int32, jnp.int64]
+FLOAT_OPS = ["add", "sub", "mul", "div", "min", "max"]
+INT_OPS = ["add", "sub", "mul", "and", "or", "xor"]
+
+HYPO = settings(max_examples=25, deadline=None)
+
+
+def _tol(dtype):
+    return dict(rtol=1e-5, atol=1e-5) if dtype == jnp.float32 else dict(rtol=1e-12, atol=1e-12)
+
+
+# --- elementwise ALU ---------------------------------------------------------
+
+
+class TestBinopFloat:
+    @pytest.mark.parametrize("dtype", FLOAT_DTYPES, ids=["f32", "f64"])
+    @pytest.mark.parametrize("op", FLOAT_OPS)
+    def test_full_vector(self, op, dtype, rng):
+        n = elements_per_vector(dtype)
+        a = jnp.asarray(rng.uniform(-50, 50, n), dtype)
+        b = jnp.asarray(rng.uniform(1, 50, n), dtype)  # positive: safe for div
+        got = vima_binop(op, a, b)
+        np.testing.assert_allclose(got, ref.binop(op, a, b), **_tol(dtype))
+
+    @HYPO
+    @given(
+        op=st.sampled_from(FLOAT_OPS),
+        blocks=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_any_block_multiple(self, op, blocks, seed):
+        """Vectors of any multiple of LANES work (design-exploration sizes)."""
+        rng = np.random.RandomState(seed)
+        n = blocks * LANES
+        a = jnp.asarray(rng.uniform(-10, 10, n), jnp.float32)
+        b = jnp.asarray(rng.uniform(1, 10, n), jnp.float32)
+        np.testing.assert_allclose(
+            vima_binop(op, a, b), ref.binop(op, a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rejects_non_multiple(self):
+        a = jnp.zeros(LANES + 1, jnp.float32)
+        with pytest.raises(ValueError, match="not a multiple"):
+            vima_binop("add", a, a)
+
+    def test_rejects_shape_mismatch(self):
+        a = jnp.zeros(LANES, jnp.float32)
+        b = jnp.zeros(2 * LANES, jnp.float32)
+        with pytest.raises(ValueError, match="operand mismatch"):
+            vima_binop("add", a, b)
+
+    def test_rejects_unknown_op(self):
+        a = jnp.zeros(LANES, jnp.float32)
+        with pytest.raises(KeyError):
+            vima_binop("rsqrt", a, a)
+
+    def test_vector_bytes_constant(self):
+        """Paper Sec. III-A: one VIMA instruction = 8 KB vector."""
+        assert VECTOR_BYTES == 8192
+        assert elements_per_vector(jnp.float32) == 2048
+        assert elements_per_vector(jnp.float64) == 1024
+        assert elements_per_vector(jnp.int32) == 2048
+        assert elements_per_vector(jnp.int64) == 1024
+
+
+class TestBinopInt:
+    @pytest.mark.parametrize("dtype", INT_DTYPES, ids=["i32", "i64"])
+    @pytest.mark.parametrize("op", INT_OPS)
+    def test_full_vector(self, op, dtype, rng):
+        n = elements_per_vector(dtype)
+        a = jnp.asarray(rng.randint(-1000, 1000, n), dtype)
+        b = jnp.asarray(rng.randint(-1000, 1000, n), dtype)
+        np.testing.assert_array_equal(vima_binop(op, a, b), ref.binop(op, a, b))
+
+    def test_bitwise_rejects_float(self):
+        a = jnp.zeros(LANES, jnp.float32)
+        with pytest.raises(TypeError, match="integer"):
+            vima_binop("xor", a, a)
+
+    def test_int_wraparound_matches_ref(self):
+        """i32 overflow must wrap identically in kernel and oracle."""
+        a = jnp.full(LANES, 2**31 - 1, jnp.int32)
+        b = jnp.ones(LANES, jnp.int32)
+        np.testing.assert_array_equal(vima_binop("add", a, b), ref.binop("add", a, b))
+
+
+class TestTernopBroadcastCopy:
+    @pytest.mark.parametrize("dtype", FLOAT_DTYPES, ids=["f32", "f64"])
+    def test_fma(self, dtype, rng):
+        n = elements_per_vector(dtype)
+        a, b, c = (jnp.asarray(rng.uniform(-5, 5, n), dtype) for _ in range(3))
+        np.testing.assert_allclose(vima_ternop(a, b, c), ref.fma(a, b, c), **_tol(dtype))
+
+    @HYPO
+    @given(value=st.floats(-1e6, 1e6, allow_nan=False, width=32), blocks=st.integers(1, 8))
+    def test_broadcast_f32(self, value, blocks):
+        n = blocks * LANES
+        got = vima_broadcast(value, n, jnp.float32)
+        np.testing.assert_array_equal(got, ref.broadcast(value, n, jnp.float32))
+
+    @HYPO
+    @given(value=st.integers(-(2**31), 2**31 - 1), blocks=st.integers(1, 8))
+    def test_broadcast_i32(self, value, blocks):
+        n = blocks * LANES
+        got = vima_broadcast(value, n, jnp.int32)
+        np.testing.assert_array_equal(got, ref.broadcast(value, n, jnp.int32))
+
+    def test_copy_roundtrip(self, rng):
+        a = jnp.asarray(rng.uniform(-1, 1, 2048), jnp.float32)
+        np.testing.assert_array_equal(vima_copy(a), a)
+
+
+class TestReductions:
+    @pytest.mark.parametrize("dtype", FLOAT_DTYPES, ids=["f32", "f64"])
+    def test_dot_full_vector(self, dtype, rng):
+        n = elements_per_vector(dtype)
+        a = jnp.asarray(rng.uniform(-1, 1, n), dtype)
+        b = jnp.asarray(rng.uniform(-1, 1, n), dtype)
+        np.testing.assert_allclose(
+            vima_dot(a, b), ref.dot(a, b), rtol=1e-4 if dtype == jnp.float32 else 1e-10
+        )
+
+    @HYPO
+    @given(blocks=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+    def test_reduce_sum_any_length(self, blocks, seed):
+        rng = np.random.RandomState(seed)
+        a = jnp.asarray(rng.uniform(-1, 1, blocks * LANES), jnp.float32)
+        np.testing.assert_allclose(vima_reduce_sum(a), ref.reduce_sum(a), rtol=1e-4, atol=1e-4)
+
+    def test_dot_zero_vectors(self):
+        a = jnp.zeros(2048, jnp.float32)
+        assert float(vima_dot(a, a)[0]) == 0.0
+
+
+# --- stencil -----------------------------------------------------------------
+
+
+class TestStencil:
+    def test_row_matches_ref(self, rng):
+        p, c, n = (jnp.asarray(rng.uniform(-1, 1, 2048), jnp.float32) for _ in range(3))
+        np.testing.assert_allclose(
+            stencil_row(p, c, n), ref.stencil_row(p, c, n), rtol=1e-5, atol=1e-6
+        )
+
+    @HYPO
+    @given(
+        h=st.integers(2, 24),
+        w_blocks=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_2d_matches_ref(self, h, w_blocks, seed):
+        rng = np.random.RandomState(seed)
+        x = jnp.asarray(rng.uniform(-1, 1, (h, w_blocks * LANES)), jnp.float32)
+        np.testing.assert_allclose(stencil2d(x), ref.stencil2d(x), rtol=1e-5, atol=1e-6)
+
+    def test_2d_boundary_is_zero_padded(self):
+        """A one-hot input exposes the boundary handling exactly."""
+        x = jnp.zeros((4, 256), jnp.float32).at[0, 0].set(1.0)
+        out = stencil2d(x)
+        expect = ref.stencil2d(x)
+        np.testing.assert_allclose(out, expect, atol=1e-7)
+        # corner: only the center coefficient contributes at (0,0)
+        assert float(out[0, 0]) == pytest.approx(0.5)
+
+    def test_custom_coefficients(self, rng):
+        x = jnp.asarray(rng.uniform(-1, 1, (8, 512)), jnp.float32)
+        np.testing.assert_allclose(
+            stencil2d(x, coeff_center=1.0, coeff_neighbor=0.25),
+            ref.stencil2d(x, 1.0, 0.25),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+
+# --- matmul ------------------------------------------------------------------
+
+
+class TestMatmul:
+    @HYPO
+    @given(
+        m=st.sampled_from([128, 256]),
+        n=st.sampled_from([128, 256]),
+        k=st.sampled_from([128, 256, 384]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, n, k, seed):
+        rng = np.random.RandomState(seed)
+        a = jnp.asarray(rng.uniform(-1, 1, (m, k)), jnp.float32)
+        b = jnp.asarray(rng.uniform(-1, 1, (k, n)), jnp.float32)
+        np.testing.assert_allclose(matmul_tiled(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-3)
+
+    def test_identity(self):
+        eye = jnp.eye(128, dtype=jnp.float32)
+        a = jnp.asarray(np.random.RandomState(7).rand(128, 128), jnp.float32)
+        np.testing.assert_allclose(matmul_tiled(a, eye), a, rtol=1e-6)
+
+    def test_rejects_bad_inner_dim(self):
+        a = jnp.zeros((128, 128), jnp.float32)
+        b = jnp.zeros((256, 128), jnp.float32)
+        with pytest.raises(ValueError, match="inner dims"):
+            matmul_tiled(a, b)
+
+    def test_rejects_non_tile_multiple(self):
+        a = jnp.zeros((100, 128), jnp.float32)
+        b = jnp.zeros((128, 128), jnp.float32)
+        with pytest.raises(ValueError, match="not a multiple"):
+            matmul_tiled(a, b)
+
+
+# --- knn / mlp ----------------------------------------------------------------
+
+
+class TestKnnMlp:
+    @HYPO
+    @given(
+        f=st.sampled_from([32, 128, 512]),
+        r_blocks=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_knn_dist(self, f, r_blocks, seed):
+        rng = np.random.RandomState(seed)
+        t = jnp.asarray(rng.uniform(-1, 1, f), jnp.float32)
+        tr = jnp.asarray(rng.uniform(-1, 1, (r_blocks * 64, f)), jnp.float32)
+        np.testing.assert_allclose(
+            knn_dist_block(t, tr), ref.knn_dist(t, tr), rtol=1e-4, atol=1e-4
+        )
+
+    def test_knn_self_distance_zero(self, rng):
+        t = jnp.asarray(rng.uniform(-1, 1, 64), jnp.float32)
+        tr = jnp.tile(t, (64, 1))
+        np.testing.assert_allclose(knn_dist_block(t, tr), np.zeros(64), atol=1e-5)
+
+    def test_knn_rejects_feature_mismatch(self):
+        with pytest.raises(ValueError, match="feature dims"):
+            knn_dist_block(jnp.zeros(32, jnp.float32), jnp.zeros((64, 64), jnp.float32))
+
+    @HYPO
+    @given(
+        h=st.sampled_from([64, 128, 256]),
+        f=st.sampled_from([64, 256]),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_mlp_layer(self, h, f, relu, seed):
+        rng = np.random.RandomState(seed)
+        w = jnp.asarray(rng.randn(h, f), jnp.float32)
+        x = jnp.asarray(rng.randn(f), jnp.float32)
+        b = jnp.asarray(rng.randn(h), jnp.float32)
+        np.testing.assert_allclose(
+            mlp_layer(w, x, b, relu=relu), ref.mlp_layer(w, x, b, relu), rtol=1e-4, atol=1e-4
+        )
+
+    def test_mlp_narrow_head(self, rng):
+        """Output layers narrower than one row-block still work (16-class head)."""
+        w = jnp.asarray(rng.randn(16, 64), jnp.float32)
+        x = jnp.asarray(rng.randn(64), jnp.float32)
+        b = jnp.asarray(rng.randn(16), jnp.float32)
+        np.testing.assert_allclose(
+            mlp_layer(w, x, b), ref.mlp_layer(w, x, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_mlp_relu_clamps(self):
+        w = -jnp.eye(64, dtype=jnp.float32)
+        x = jnp.ones(64, jnp.float32)
+        b = jnp.zeros(64, jnp.float32)
+        np.testing.assert_array_equal(mlp_layer(w, x, b, relu=True), np.zeros(64))

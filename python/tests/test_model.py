@@ -1,0 +1,117 @@
+"""Layer-2 workload-graph correctness and shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import elements_per_vector, ref
+
+HYPO = settings(max_examples=10, deadline=None)
+EPV = elements_per_vector(jnp.float32)  # 2048
+
+
+class TestStreaming:
+    @HYPO
+    @given(vectors=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+    def test_vecsum(self, vectors, seed):
+        rng = np.random.RandomState(seed)
+        n = vectors * EPV
+        a = jnp.asarray(rng.uniform(-10, 10, n), jnp.float32)
+        b = jnp.asarray(rng.uniform(-10, 10, n), jnp.float32)
+        np.testing.assert_allclose(model.vecsum(a, b), a + b, rtol=1e-6)
+
+    @HYPO
+    @given(vectors=st.integers(1, 8), value=st.integers(-1000, 1000))
+    def test_memset(self, vectors, value):
+        n = vectors * elements_per_vector(jnp.int32)
+        out = model.memset(n, value)
+        np.testing.assert_array_equal(out, np.full(n, value, np.int32))
+
+    def test_memset_rejects_partial_vector(self):
+        with pytest.raises(ValueError, match="not a multiple"):
+            model.memset(100, 1)
+
+    def test_memcopy(self, rng):
+        src = jnp.asarray(rng.uniform(-1, 1, 4 * EPV), jnp.float32)
+        np.testing.assert_array_equal(model.memcopy(src), src)
+
+    def test_saxpy(self, rng):
+        x = jnp.asarray(rng.uniform(-1, 1, 2 * EPV), jnp.float32)
+        y = jnp.asarray(rng.uniform(-1, 1, 2 * EPV), jnp.float32)
+        # fma rounds once, mul+add twice — allow one ulp of f32 slack
+        np.testing.assert_allclose(model.saxpy(2.5, x, y), 2.5 * x + y, rtol=1e-4, atol=1e-6)
+
+
+class TestStencilMatmul:
+    def test_stencil(self, rng):
+        x = jnp.asarray(rng.uniform(-1, 1, (16, EPV)), jnp.float32)
+        np.testing.assert_allclose(model.stencil(x), ref.stencil2d(x), rtol=1e-5, atol=1e-6)
+
+    def test_matmul(self, rng):
+        a = jnp.asarray(rng.uniform(-1, 1, (256, 256)), jnp.float32)
+        b = jnp.asarray(rng.uniform(-1, 1, (256, 256)), jnp.float32)
+        np.testing.assert_allclose(model.matmul(a, b), a @ b, rtol=1e-4, atol=1e-3)
+
+
+class TestKnn:
+    def test_distances_shape_and_values(self, rng):
+        tb = jnp.asarray(rng.uniform(0, 1, (4, 128)), jnp.float32)
+        tr = jnp.asarray(rng.uniform(0, 1, (256, 128)), jnp.float32)
+        d = model.knn_distances(tb, tr)
+        assert d.shape == (4, 256)
+        expect = np.stack([ref.knn_dist(t, tr) for t in tb])
+        np.testing.assert_allclose(d, expect, rtol=1e-4, atol=1e-4)
+
+    def test_classify_matches_sklearn_style_oracle(self, rng):
+        """Majority vote over the k nearest must match a numpy re-implementation."""
+        k, n_classes = 9, 16
+        tb = jnp.asarray(rng.uniform(0, 1, (8, 32)), jnp.float32)
+        tr = jnp.asarray(rng.uniform(0, 1, (512, 32)), jnp.float32)
+        lab = jnp.asarray(rng.randint(0, n_classes, 512), jnp.int32)
+        got = model.knn_classify(tb, tr, lab, k=k, n_classes=n_classes)
+
+        d = np.asarray(model.knn_distances(tb, tr))
+        for i in range(8):
+            nearest = np.argsort(d[i], kind="stable")[:k]
+            votes = np.bincount(np.asarray(lab)[nearest], minlength=n_classes)
+            assert int(got[i]) == int(np.argmax(votes))
+
+    def test_classify_separable_clusters(self):
+        """Test points placed on top of labeled clusters must classify exactly."""
+        centers = jnp.asarray([[0.0, 0.0], [10.0, 10.0]], jnp.float32)
+        train = jnp.concatenate([jnp.tile(c, (64, 1)) for c in centers])
+        train = jnp.pad(train, ((0, 0), (0, 30)))  # 32 features
+        labels = jnp.asarray([0] * 64 + [1] * 64, jnp.int32)
+        tests = jnp.pad(centers, ((0, 0), (0, 30)))
+        got = model.knn_classify(tests, train, labels, k=9, n_classes=2)
+        np.testing.assert_array_equal(got, [0, 1])
+
+
+class TestMlp:
+    def test_logits_match_numpy(self, rng):
+        B, F, H, C = 8, 64, 128, 16
+        x = jnp.asarray(rng.randn(B, F), jnp.float32)
+        w1 = jnp.asarray(rng.randn(H, F) * 0.1, jnp.float32)
+        b1 = jnp.asarray(rng.randn(H) * 0.1, jnp.float32)
+        w2 = jnp.asarray(rng.randn(C, H) * 0.1, jnp.float32)
+        b2 = jnp.asarray(rng.randn(C) * 0.1, jnp.float32)
+        got = model.mlp_logits(x, w1, b1, w2, b2)
+        h = np.maximum(np.asarray(x) @ np.asarray(w1).T + np.asarray(b1), 0)
+        expect = h @ np.asarray(w2).T + np.asarray(b2)
+        np.testing.assert_allclose(got, expect, rtol=1e-3, atol=1e-3)
+
+    def test_inference_is_argmax_of_logits(self, rng):
+        B, F, H, C = 4, 64, 64, 16
+        args = (
+            jnp.asarray(rng.randn(B, F), jnp.float32),
+            jnp.asarray(rng.randn(H, F) * 0.1, jnp.float32),
+            jnp.asarray(rng.randn(H) * 0.1, jnp.float32),
+            jnp.asarray(rng.randn(C, H) * 0.1, jnp.float32),
+            jnp.asarray(rng.randn(C) * 0.1, jnp.float32),
+        )
+        preds = model.mlp_inference(*args)
+        logits = model.mlp_logits(*args)
+        np.testing.assert_array_equal(preds, np.argmax(np.asarray(logits), axis=1))

@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig. 2 (HIVE vs VIMA vs AVX on MemSet/VecSum/Stencil)
+//! and report the wall time of the whole experiment.
+//!
+//! `VIMA_BENCH_SCALE=paper cargo bench --bench fig2_hive` runs the full
+//! Sec. IV dataset sizes; the default is the 1/16 quick scale.
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::SizeScale;
+use vima_sim::coordinator::Experiment;
+use vima_sim::util::bench;
+
+fn scale() -> SizeScale {
+    match std::env::var("VIMA_BENCH_SCALE").as_deref() {
+        Ok("paper") => SizeScale::Paper,
+        _ => SizeScale::Quick,
+    }
+}
+
+fn main() {
+    bench::section("Fig. 2 reproduction (HIVE vs VIMA vs AVX)");
+    let exp = Experiment::new(SystemConfig::default(), scale());
+    let mut last = None;
+    bench::bench("fig2_full_experiment", 3, || {
+        last = Some(exp.fig2());
+    });
+    let table = last.unwrap();
+    println!("\n{}", table.to_markdown());
+    // Headline assertions from the paper's Fig. 2 discussion.
+    for (label, vals) in &table.rows {
+        bench::metric(&format!("fig2.{label}.hive_speedup"), vals[0], "x");
+        bench::metric(&format!("fig2.{label}.vima_speedup"), vals[1], "x");
+    }
+}

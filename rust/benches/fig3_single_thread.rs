@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig. 3 (VIMA speedup vs single-thread AVX over all
+//! seven kernels x three dataset sizes).
+//!
+//! `VIMA_BENCH_SCALE=paper cargo bench --bench fig3_single_thread` runs the
+//! full Sec. IV sizes (several minutes — MatMul/kNN dominate).
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::SizeScale;
+use vima_sim::coordinator::Experiment;
+use vima_sim::util::bench;
+
+fn scale() -> SizeScale {
+    match std::env::var("VIMA_BENCH_SCALE").as_deref() {
+        Ok("paper") => SizeScale::Paper,
+        _ => SizeScale::Quick,
+    }
+}
+
+fn main() {
+    bench::section("Fig. 3 reproduction (single-thread speedup matrix)");
+    let exp = Experiment::new(SystemConfig::default(), scale());
+    let mut last = None;
+    bench::bench("fig3_full_experiment", 1, || {
+        last = Some(exp.fig3());
+    });
+    let table = last.unwrap();
+    println!("\n{}", table.to_markdown());
+    let mut max = 0f64;
+    for (label, vals) in &table.rows {
+        bench::metric(&format!("fig3.{label}.speedup"), vals[0], "x");
+        max = max.max(vals[0]);
+    }
+    bench::metric("fig3.max_speedup", max, "x (paper headline: up to 26x)");
+}

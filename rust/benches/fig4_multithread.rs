@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig. 4 (multithreaded AVX 1..32 cores vs one VIMA
+//! device; speedup and energy relative to single-thread AVX).
+//!
+//! `VIMA_BENCH_SCALE=paper cargo bench --bench fig4_multithread` for the
+//! paper's largest dataset sizes.
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::SizeScale;
+use vima_sim::coordinator::Experiment;
+use vima_sim::util::bench;
+
+fn scale() -> SizeScale {
+    match std::env::var("VIMA_BENCH_SCALE").as_deref() {
+        Ok("paper") => SizeScale::Paper,
+        _ => SizeScale::Quick,
+    }
+}
+
+fn main() {
+    bench::section("Fig. 4 reproduction (VIMA vs multithreaded AVX)");
+    let exp = Experiment::new(SystemConfig::default(), scale());
+    let mut last = None;
+    bench::bench("fig4_full_experiment", 1, || {
+        last = Some(exp.fig4());
+    });
+    let table = last.unwrap();
+    println!("\n{}", table.to_markdown());
+    for (label, _) in &table.rows {
+        let vima = table.get(label, "vima_speedup").unwrap();
+        let avx16 = table.get(label, "avx16_speedup").unwrap();
+        let avx32 = table.get(label, "avx32_speedup").unwrap();
+        bench::metric(&format!("fig4.{label}.vima"), vima, "x");
+        bench::metric(&format!("fig4.{label}.avx16"), avx16, "x");
+        bench::metric(&format!("fig4.{label}.avx32"), avx32, "x");
+        bench::metric(
+            &format!("fig4.{label}.vima_energy"),
+            table.get(label, "vima_energy").unwrap() * 100.0,
+            "% of AVX-1T",
+        );
+    }
+}

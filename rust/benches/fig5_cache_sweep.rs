@@ -1,0 +1,50 @@
+//! Bench: regenerate Fig. 5 (VIMA speedup for cache sizes 16..256 KB) plus
+//! the Sec. III-C ablations (vector size, stop-and-go).
+//!
+//! `VIMA_BENCH_SCALE=paper cargo bench --bench fig5_cache_sweep` for the
+//! paper's largest dataset sizes.
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::SizeScale;
+use vima_sim::coordinator::Experiment;
+use vima_sim::util::bench;
+
+fn scale() -> SizeScale {
+    match std::env::var("VIMA_BENCH_SCALE").as_deref() {
+        Ok("paper") => SizeScale::Paper,
+        _ => SizeScale::Quick,
+    }
+}
+
+fn main() {
+    bench::section("Fig. 5 reproduction (VIMA cache-size sweep) + ablations");
+    let exp = Experiment::new(SystemConfig::default(), scale());
+
+    let mut fig5 = None;
+    bench::bench("fig5_cache_sweep", 1, || {
+        fig5 = Some(exp.fig5());
+    });
+    let fig5 = fig5.unwrap();
+    println!("\n{}", fig5.to_markdown());
+
+    let mut ab1 = None;
+    bench::bench("ablation_vector_size", 1, || {
+        ab1 = Some(exp.ablation_vector_size());
+    });
+    println!("\n{}", ab1.unwrap().to_markdown());
+
+    let mut ab2 = None;
+    bench::bench("ablation_stop_and_go", 1, || {
+        ab2 = Some(exp.ablation_stop_and_go());
+    });
+    let ab2 = ab2.unwrap();
+    println!("\n{}", ab2.to_markdown());
+    for (label, vals) in &ab2.rows {
+        bench::metric(&format!("stop_and_go.{label}.gap_bubble"), vals[1], "% (paper: 2-4%)");
+        bench::metric(
+            &format!("stop_and_go.{label}.pipelining_bound"),
+            vals[2],
+            "% (precise-exception upper bound)",
+        );
+    }
+}

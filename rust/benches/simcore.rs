@@ -1,0 +1,93 @@
+//! Simulator micro-benchmarks — the §Perf instrument for the L3 hot paths:
+//! trace generation rate, core-model µop throughput, memory-system access
+//! rate, VIMA device instruction rate, and whole-stack events/second.
+
+use vima_sim::cache::MemorySystem;
+use vima_sim::config::SystemConfig;
+use vima_sim::cpu::Core;
+use vima_sim::isa::{FuType, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
+use vima_sim::mem3d::Mem3D;
+use vima_sim::sim::simulate;
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+use vima_sim::util::bench;
+use vima_sim::vima::VimaDevice;
+
+fn main() {
+    let cfg = SystemConfig::default();
+
+    bench::section("trace generation");
+    let n_events = TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20).stream().count();
+    let r = bench::bench("trace_gen_vecsum_avx_8mb", 5, || {
+        TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20).stream().count()
+    });
+    bench::metric("trace_gen.events_per_sec", n_events as f64 / r.mean_s, "ev/s");
+
+    bench::section("core model (L1-hit ALU/load mix)");
+    let uops: Vec<Uop> = (0..100_000u64)
+        .map(|i| match i % 4 {
+            0 => Uop::load(0x400, 0x1000 + (i % 64) * 64, 64, 1),
+            1 => Uop::alu(0x408, FuType::IntAlu, [1, NO_REG, NO_REG], 2),
+            2 => Uop::alu(0x410, FuType::FpMul, [2, NO_REG, NO_REG], 3),
+            _ => Uop::branch(0x418, true),
+        })
+        .collect();
+    let r = bench::bench("core_100k_uops", 10, || {
+        let mut core = Core::new(0, &cfg.core);
+        let mut mem = MemorySystem::new(&cfg, 1);
+        for u in &uops {
+            core.run_uop(u, &mut mem);
+        }
+        core.now()
+    });
+    bench::metric("core.uops_per_sec", 100_000.0 / r.mean_s, "uops/s");
+
+    bench::section("memory system (streaming misses)");
+    let r = bench::bench("memsys_100k_miss_stream", 10, || {
+        let mut mem = MemorySystem::new(&cfg, 1);
+        let mut t = 0;
+        for i in 0..100_000u64 {
+            t = mem.access(0, i * 64, false, t).done.saturating_sub(60);
+        }
+        t
+    });
+    bench::metric("memsys.accesses_per_sec", 100_000.0 / r.mean_s, "acc/s");
+
+    bench::section("3D memory (raw vault/bank model)");
+    let r = bench::bench("mem3d_100k_vima_subreqs", 10, || {
+        let mut m = Mem3D::new(&cfg.mem, cfg.core.freq_ghz);
+        let mut done = 0u64;
+        for i in 0..100_000u64 {
+            done = m.vima_access(i * 64, false, done.saturating_sub(40)).done;
+        }
+        done
+    });
+    bench::metric("mem3d.subreqs_per_sec", 100_000.0 / r.mean_s, "req/s");
+
+    bench::section("VIMA device (instruction pipeline)");
+    let r = bench::bench("vima_10k_instructions", 10, || {
+        let mut v = VimaDevice::new(&cfg.vima, 1, cfg.core.freq_ghz);
+        let mut m = Mem3D::new(&cfg.mem, cfg.core.freq_ghz);
+        let mut t = 0;
+        for i in 0..10_000u64 {
+            let base = (i % 512) * 0x6000;
+            let instr = VimaInstr::new(
+                VimaOp::Add,
+                VDtype::F32,
+                &[base, base + 0x2000],
+                Some(base + 0x4000),
+                8192,
+            );
+            t = v.execute(&instr, t, &mut m);
+        }
+        t
+    });
+    bench::metric("vima.instrs_per_sec", 10_000.0 / r.mean_s, "instr/s");
+
+    bench::section("whole stack (end-to-end simulate)");
+    let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20);
+    let events = p.stream().count() as f64;
+    let r = bench::bench("simulate_vecsum_avx_8mb", 5, || simulate(&cfg, p).cycles);
+    bench::metric("sim.end_to_end_events_per_sec", events / r.mean_s, "ev/s");
+    let sim_cycles = simulate(&cfg, p).cycles as f64;
+    bench::metric("sim.simulated_cycles_per_sec", sim_cycles / r.mean_s, "cy/s");
+}

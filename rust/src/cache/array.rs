@@ -1,0 +1,185 @@
+//! Set-associative tag array with true-LRU replacement and dirty bits.
+
+/// Tag storage for one cache. Data values are never stored — the simulator
+/// is timing-only on this path (functional values flow through
+/// [`crate::runtime`] instead).
+pub struct CacheArray {
+    sets: usize,
+    ways: usize,
+    line_shift: u32,
+    /// Interleaved (tag, stamp<<1 | dirty) per way — one cache-friendly
+    /// array instead of three parallel ones (the tag walk is the hottest
+    /// loop in the whole simulator).
+    lines: Vec<(u64, u64)>,
+    tick: u64,
+}
+
+pub const INVALID: u64 = u64::MAX;
+
+impl CacheArray {
+    pub fn new(sets: usize, ways: usize, line_bytes: usize) -> Self {
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        assert!(line_bytes.is_power_of_two());
+        Self {
+            sets,
+            ways,
+            line_shift: line_bytes.trailing_zeros(),
+            lines: vec![(INVALID, 0); sets * ways],
+            tick: 0,
+        }
+    }
+
+    #[inline]
+    fn index(&self, addr: u64) -> (usize, u64) {
+        let line = addr >> self.line_shift;
+        ((line as usize) & (self.sets - 1), line)
+    }
+
+    /// Probe for `addr`; on hit, refresh LRU and (for writes) set dirty.
+    #[inline]
+    pub fn lookup(&mut self, addr: u64, is_write: bool) -> bool {
+        let (set, line) = self.index(addr);
+        let base = set * self.ways;
+        for w in 0..self.ways {
+            let l = &mut self.lines[base + w];
+            if l.0 == line {
+                self.tick += 1;
+                l.1 = (self.tick << 1) | (l.1 & 1) | (is_write as u64);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Install `addr` (evicting LRU if needed). Returns the address of an
+    /// evicted **dirty** line, if any, which the caller must write back.
+    pub fn insert(&mut self, addr: u64, dirty: bool) -> Option<u64> {
+        let (set, line) = self.index(addr);
+        let base = set * self.ways;
+        // Prefer an invalid way; otherwise evict the smallest stamp (LRU).
+        let mut victim = 0;
+        let mut best = u64::MAX;
+        for w in 0..self.ways {
+            let l = self.lines[base + w];
+            if l.0 == INVALID {
+                victim = w;
+                break;
+            }
+            if l.1 >> 1 < best {
+                best = l.1 >> 1;
+                victim = w;
+            }
+        }
+        let idx = base + victim;
+        let old = self.lines[idx];
+        let evicted = if old.0 != INVALID && old.1 & 1 == 1 {
+            Some(old.0 << self.line_shift)
+        } else {
+            None
+        };
+        self.tick += 1;
+        self.lines[idx] = (line, (self.tick << 1) | dirty as u64);
+        evicted
+    }
+
+    /// Drop `addr` if present; returns whether the dropped line was dirty.
+    pub fn invalidate(&mut self, addr: u64) -> bool {
+        let (set, line) = self.index(addr);
+        let base = set * self.ways;
+        for w in 0..self.ways {
+            let l = &mut self.lines[base + w];
+            if l.0 == line {
+                let was_dirty = l.1 & 1 == 1;
+                *l = (INVALID, 0);
+                return was_dirty;
+            }
+        }
+        false
+    }
+
+    /// Number of valid lines currently resident (test/inspection helper).
+    pub fn occupancy(&self) -> usize {
+        self.lines.iter().filter(|l| l.0 != INVALID).count()
+    }
+
+    pub fn reset(&mut self) {
+        self.lines.fill((INVALID, 0));
+        self.tick = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = CacheArray::new(4, 2, 64);
+        assert!(!c.lookup(0x100, false));
+        assert_eq!(c.insert(0x100, false), None);
+        assert!(c.lookup(0x100, false));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = CacheArray::new(1, 2, 64); // one set, 2 ways
+        c.insert(0x000, false);
+        c.insert(0x040, false);
+        c.lookup(0x000, false); // refresh line 0 -> line 0x040 becomes LRU
+        c.insert(0x080, false); // evicts 0x040
+        assert!(c.lookup(0x000, false));
+        assert!(!c.lookup(0x040, false));
+        assert!(c.lookup(0x080, false));
+    }
+
+    #[test]
+    fn dirty_eviction_returns_victim_address() {
+        let mut c = CacheArray::new(1, 1, 64);
+        c.insert(0x1000, true);
+        let victim = c.insert(0x2000, false);
+        assert_eq!(victim, Some(0x1000));
+    }
+
+    #[test]
+    fn clean_eviction_returns_none() {
+        let mut c = CacheArray::new(1, 1, 64);
+        c.insert(0x1000, false);
+        assert_eq!(c.insert(0x2000, false), None);
+    }
+
+    #[test]
+    fn write_hit_dirties_line() {
+        let mut c = CacheArray::new(2, 1, 64);
+        c.insert(0x40, false);
+        assert!(c.lookup(0x40, true)); // write hit
+        assert_eq!(c.insert(0x40 + 128, false), Some(0x40)); // same set, evict dirty
+    }
+
+    #[test]
+    fn invalidate_reports_dirtiness() {
+        let mut c = CacheArray::new(2, 2, 64);
+        c.insert(0x80, true);
+        assert!(c.invalidate(0x80));
+        assert!(!c.lookup(0x80, false));
+        assert!(!c.invalidate(0x80)); // already gone
+    }
+
+    #[test]
+    fn occupancy_counts() {
+        let mut c = CacheArray::new(4, 2, 64);
+        assert_eq!(c.occupancy(), 0);
+        c.insert(0x0, false);
+        c.insert(0x40, false);
+        assert_eq!(c.occupancy(), 2);
+        c.reset();
+        assert_eq!(c.occupancy(), 0);
+    }
+
+    #[test]
+    fn addresses_in_same_line_alias() {
+        let mut c = CacheArray::new(4, 2, 64);
+        c.insert(0x100, false);
+        assert!(c.lookup(0x13F, false)); // same 64 B line
+        assert!(!c.lookup(0x140, false));
+    }
+}

@@ -1,0 +1,571 @@
+//! Host cache hierarchy (Table I rows 2-4): per-core L1D/L1I and L2, shared
+//! LLC, all 64 B lines with LRU replacement, write-back + write-allocate,
+//! MSHR-limited miss parallelism.
+//!
+//! Like [`crate::mem3d`], the model is latency-forwarding: each level tracks
+//! its outstanding-miss window (MSHRs) as a ring of completion timestamps, so
+//! miss-level parallelism is bounded exactly without per-cycle ticking.
+
+mod array;
+mod mshr;
+mod prefetch;
+
+pub use array::CacheArray;
+pub use mshr::MshrWindow;
+pub use prefetch::StridePrefetcher;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{CacheConfig, SystemConfig};
+use crate::mem3d::Mem3D;
+use crate::stats::StatsReport;
+
+/// 1 MB-region occupancy filter size (16 K regions = 16 GB before aliasing;
+/// aliasing is harmless — it only forces the slow path).
+const REGION_WORDS: usize = 256;
+
+#[derive(Debug, Default, Clone)]
+pub struct LevelStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+    pub accesses: u64,
+    /// Cycles spent waiting for a free MSHR.
+    pub mshr_stall_cycles: u64,
+}
+
+/// One cache level: array + MSHR window + stats.
+pub struct CacheLevel {
+    pub cfg: CacheConfig,
+    array: CacheArray,
+    mshrs: MshrWindow,
+    pub stats: LevelStats,
+}
+
+impl CacheLevel {
+    pub fn new(cfg: &CacheConfig) -> Self {
+        Self {
+            array: CacheArray::new(cfg.sets(), cfg.ways, cfg.line_bytes),
+            mshrs: MshrWindow::new(cfg.mshrs),
+            cfg: cfg.clone(),
+            stats: LevelStats::default(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.array.reset();
+        self.mshrs.reset();
+        self.stats = LevelStats::default();
+    }
+}
+
+/// The full host-side memory system for `n` cores: per-core L1D + L2,
+/// shared LLC, backed by the 3D-stacked memory.
+///
+/// (L1I is omitted from timing: the paper's kernels are tiny loops that
+/// always hit; its static/dynamic energy is accounted in [`crate::energy`].)
+pub struct MemorySystem {
+    pub l1: Vec<CacheLevel>,
+    pub l2: Vec<CacheLevel>,
+    pub llc: CacheLevel,
+    pub mem: Mem3D,
+    /// Posted DRAM traffic (store write-allocate fetches, dirty write-backs,
+    /// prefetches) ordered by arrival time. Demand loads merge this queue
+    /// before they touch the DRAM resource clocks, so the latency-forwarding
+    /// model sees requests in approximately arrival order even though stores
+    /// issue at data-dependent (much later) pipeline times than younger loads.
+    pending: BinaryHeap<Reverse<(u64, u64, bool)>>,
+    /// Per-core stride prefetchers (into the LLC; see [`StridePrefetcher`]).
+    prefetchers: Vec<StridePrefetcher>,
+    pf_enabled: bool,
+    pf_buf: Vec<u64>,
+    /// Coarse occupancy filter: bit per 1 MB address region that has ever
+    /// been touched by a host access since the last reset. `flush_range`
+    /// (the per-VIMA-instruction coherence walk) skips regions the host
+    /// never cached — the dominant cost of VIMA-heavy simulations otherwise.
+    region_filter: Vec<u64>,
+    /// In-flight prefetches: line -> cycle the data reaches the LLC.
+    /// A demand access that meets an in-flight prefetch waits for the
+    /// remainder (prefetch *timeliness*: a k-ahead stream only hides
+    /// k x demand-interval cycles of DRAM latency, not all of it).
+    pf_inflight: std::collections::HashMap<u64, u64>,
+    /// DRAM fill latency estimate for prefetch timeliness.
+    pf_fill_latency: u64,
+    pub pf_late_hits: u64,
+}
+
+/// Result of a host memory access.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccessResult {
+    pub done: u64,
+    /// Which level served it: 1, 2, 3 (LLC) or 4 (DRAM).
+    pub level: u8,
+}
+
+impl MemorySystem {
+    pub fn new(cfg: &SystemConfig, cores: usize) -> Self {
+        Self {
+            l1: (0..cores).map(|_| CacheLevel::new(&cfg.l1d)).collect(),
+            l2: (0..cores).map(|_| CacheLevel::new(&cfg.l2)).collect(),
+            llc: CacheLevel::new(&cfg.llc),
+            mem: Mem3D::new(&cfg.mem, cfg.core.freq_ghz),
+            pending: BinaryHeap::new(),
+            region_filter: vec![0; REGION_WORDS],
+            prefetchers: (0..cores).map(|_| StridePrefetcher::new(&cfg.prefetch)).collect(),
+            pf_enabled: cfg.prefetch.enabled,
+            pf_buf: Vec::with_capacity(8),
+            pf_inflight: std::collections::HashMap::new(),
+            // RCD+CAS + burst + link, rounded: one uncontended DRAM round trip
+            pf_fill_latency: Mem3D::new(&cfg.mem, cfg.core.freq_ghz).uncontended_read_latency(),
+            pf_late_hits: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.l1 {
+            l.reset();
+        }
+        for l in &mut self.l2 {
+            l.reset();
+        }
+        self.llc.reset();
+        self.mem.reset();
+        self.pending.clear();
+        for p in &mut self.prefetchers {
+            p.reset();
+        }
+        self.pf_buf.clear();
+        self.pf_inflight.clear();
+        self.pf_late_hits = 0;
+        self.region_filter.fill(0);
+    }
+
+    #[inline]
+    fn region_bit(addr: u64) -> (usize, u64) {
+        let region = ((addr >> 20) as usize) & (REGION_WORDS * 64 - 1);
+        (region / 64, 1u64 << (region % 64))
+    }
+
+    #[inline]
+    fn mark_region(&mut self, addr: u64) {
+        let (w, b) = Self::region_bit(addr);
+        self.region_filter[w] |= b;
+    }
+
+    #[inline]
+    fn region_touched(&self, addr: u64) -> bool {
+        let (w, b) = Self::region_bit(addr);
+        self.region_filter[w] & b != 0
+    }
+
+    /// Feed the stride detector; pull detected lines into the LLC via
+    /// posted DRAM reads (bandwidth-accounted, MSHR-free like a real
+    /// prefetch engine with its own request queue).
+    fn maybe_prefetch(&mut self, core: usize, pc: u64, addr: u64, now: u64) {
+        if !self.pf_enabled {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.pf_buf);
+        buf.clear();
+        self.prefetchers[core].observe(pc, addr, &mut buf);
+        for &line in &buf {
+            if !self.llc.array.lookup(line, false) && !self.pf_inflight.contains_key(&line) {
+                self.post(line, false, now);
+                self.pf_inflight.insert(line, now + self.pf_fill_latency);
+                if self.pf_inflight.len() > (1 << 15) {
+                    // runaway protection (wild stride patterns)
+                    self.pf_inflight.clear();
+                }
+            }
+        }
+        self.pf_buf = buf;
+    }
+
+    /// If `addr` is covered by an in-flight prefetch, complete it: install
+    /// into the LLC and return the cycle its data is available there.
+    fn take_inflight_prefetch(&mut self, addr: u64, now: u64) -> Option<u64> {
+        if self.pf_inflight.is_empty() {
+            return None; // fast path: prefetcher off or idle (no hashing)
+        }
+        let line = addr & !63;
+        let ready = self.pf_inflight.remove(&line)?;
+        if let Some(victim) = self.llc.array.insert(line, false) {
+            self.llc.stats.writebacks += 1;
+            self.post(victim, true, ready);
+        }
+        if ready > now {
+            self.pf_late_hits += 1;
+        }
+        Some(ready)
+    }
+
+    /// Queue posted DRAM traffic (applied in arrival order).
+    fn post(&mut self, addr: u64, is_write: bool, at: u64) {
+        self.pending.push(Reverse((at, addr, is_write)));
+    }
+
+    /// Apply every posted request with arrival time <= `upto`.
+    fn apply_pending(&mut self, upto: u64) {
+        while let Some(&Reverse((t, addr, w))) = self.pending.peek() {
+            if t > upto {
+                break;
+            }
+            self.pending.pop();
+            self.mem.host_access(addr, w, t);
+        }
+    }
+
+    /// Flush all posted traffic into the DRAM model (end of run).
+    pub fn drain_pending(&mut self) {
+        self.apply_pending(u64::MAX);
+    }
+
+    /// One 64 B-line access from `core` at cycle `now`.
+    ///
+    /// **Loads** are demand requests: they walk the MSHR-limited latency
+    /// chain down to DRAM and return when data arrives.
+    ///
+    /// **Stores** are write-allocate but *posted*: the tag arrays update
+    /// immediately (hit/miss, dirtying, evictions) and any DRAM traffic they
+    /// generate (allocate-fetch, write-backs) is queued and merged into the
+    /// DRAM resource clocks in arrival order; the returned completion is the
+    /// store-buffer drain estimate used for MOB occupancy.
+    pub fn access(&mut self, core: usize, addr: u64, is_write: bool, now: u64) -> AccessResult {
+        self.access_pc(core, 0, addr, is_write, now)
+    }
+
+    /// As [`access`](Self::access), with the accessing instruction's PC
+    /// (drives the per-PC stride prefetcher).
+    pub fn access_pc(
+        &mut self,
+        core: usize,
+        pc: u64,
+        addr: u64,
+        is_write: bool,
+        now: u64,
+    ) -> AccessResult {
+        self.mark_region(addr);
+        if is_write {
+            let r = self.store_access(core, addr, now);
+            if r.level > 1 {
+                self.maybe_prefetch(core, pc, addr, now);
+            }
+            r
+        } else {
+            self.apply_pending(now);
+            let r = self.load_access(core, addr, now);
+            if r.level > 1 {
+                self.maybe_prefetch(core, pc, addr, now);
+            }
+            r
+        }
+    }
+
+    fn load_access(&mut self, core: usize, addr: u64, now: u64) -> AccessResult {
+        // --- L1 ---
+        let l1 = &mut self.l1[core];
+        l1.stats.accesses += 1;
+        let t_l1 = now + l1.cfg.latency;
+        if l1.array.lookup(addr, false) {
+            l1.stats.hits += 1;
+            return AccessResult { done: t_l1, level: 1 };
+        }
+        l1.stats.misses += 1;
+        let (start, stall) = l1.mshrs.acquire(t_l1);
+        l1.stats.mshr_stall_cycles += stall;
+
+        // --- L2 ---
+        let l2 = &mut self.l2[core];
+        l2.stats.accesses += 1;
+        let t_l2 = start + l2.cfg.latency;
+        let done = if l2.array.lookup(addr, false) {
+            l2.stats.hits += 1;
+            AccessResult { done: t_l2, level: 2 }
+        } else {
+            l2.stats.misses += 1;
+            let (start2, stall2) = l2.mshrs.acquire(t_l2);
+            l2.stats.mshr_stall_cycles += stall2;
+
+            // --- LLC (shared) ---
+            self.llc.stats.accesses += 1;
+            let t_llc = start2 + self.llc.cfg.latency;
+            let r = if self.llc.array.lookup(addr, false) {
+                self.llc.stats.hits += 1;
+                AccessResult { done: t_llc, level: 3 }
+            } else if let Some(ready) = self.take_inflight_prefetch(addr, t_llc) {
+                // prefetch in flight: wait for its fill (partial hiding)
+                self.llc.stats.hits += 1;
+                AccessResult { done: t_llc.max(ready), level: 3 }
+            } else {
+                self.llc.stats.misses += 1;
+                let (start3, stall3) = self.llc.mshrs.acquire(t_llc);
+                self.llc.stats.mshr_stall_cycles += stall3;
+                let mc = self.mem.host_access(addr, false, start3);
+                if let Some(victim) = self.llc.array.insert(addr, false) {
+                    self.llc.stats.writebacks += 1;
+                    self.post(victim, true, mc.done);
+                }
+                self.llc.mshrs.release(mc.done);
+                AccessResult { done: mc.done, level: 4 }
+            };
+            self.fill_l2(core, addr, r.done);
+            self.l2[core].mshrs.release(r.done);
+            r
+        };
+
+        self.fill_l1(core, addr, false, done.done);
+        self.l1[core].mshrs.release(done.done);
+        done
+    }
+
+    /// Posted store: tag bookkeeping now, DRAM traffic queued.
+    fn store_access(&mut self, core: usize, addr: u64, now: u64) -> AccessResult {
+        let l1 = &mut self.l1[core];
+        l1.stats.accesses += 1;
+        if l1.array.lookup(addr, true) {
+            l1.stats.hits += 1;
+            return AccessResult { done: now + l1.cfg.latency, level: 1 };
+        }
+        l1.stats.misses += 1;
+
+        let l2 = &mut self.l2[core];
+        l2.stats.accesses += 1;
+        let (level, drain) = if l2.array.lookup(addr, false) {
+            l2.stats.hits += 1;
+            (2u8, l2.cfg.latency + self.l1[core].cfg.latency)
+        } else {
+            l2.stats.misses += 1;
+            self.llc.stats.accesses += 1;
+            if self.llc.array.lookup(addr, false) {
+                self.llc.stats.hits += 1;
+                (3, self.llc.cfg.latency + 12)
+            } else if self.take_inflight_prefetch(addr, now).is_some() {
+                self.llc.stats.hits += 1;
+                (3, self.llc.cfg.latency + 12)
+            } else {
+                self.llc.stats.misses += 1;
+                // write-allocate fetch from DRAM, posted
+                self.post(addr, false, now);
+                if let Some(victim) = self.llc.array.insert(addr, false) {
+                    self.llc.stats.writebacks += 1;
+                    self.post(victim, true, now);
+                }
+                // store-buffer drain estimate for a DRAM-filling store
+                (4, 70)
+            }
+        };
+        self.fill_l2(core, addr, now);
+        self.fill_l1(core, addr, true, now);
+        AccessResult { done: now + drain, level }
+    }
+
+    /// Install into L2, pushing dirty victims down (write-backs posted).
+    fn fill_l2(&mut self, core: usize, addr: u64, at: u64) {
+        let l2 = &mut self.l2[core];
+        if let Some(victim) = l2.array.insert(addr, false) {
+            l2.stats.writebacks += 1;
+            self.llc.stats.accesses += 1;
+            if self.llc.array.lookup(victim, true) {
+                self.llc.stats.hits += 1;
+            } else {
+                self.llc.stats.misses += 1;
+                if let Some(v2) = self.llc.array.insert(victim, true) {
+                    self.llc.stats.writebacks += 1;
+                    self.post(v2, true, at);
+                }
+            }
+        }
+    }
+
+    /// Install into L1, pushing dirty victims down (write-backs posted).
+    fn fill_l1(&mut self, core: usize, addr: u64, dirty: bool, at: u64) {
+        let l1 = &mut self.l1[core];
+        if let Some(victim) = l1.array.insert(addr, dirty) {
+            l1.stats.writebacks += 1;
+            let l2 = &mut self.l2[core];
+            l2.stats.accesses += 1;
+            if l2.array.lookup(victim, true) {
+                l2.stats.hits += 1;
+            } else {
+                l2.stats.misses += 1;
+                if let Some(v2) = l2.array.insert(victim, true) {
+                    l2.stats.writebacks += 1;
+                    self.llc.stats.accesses += 1;
+                    if self.llc.array.lookup(v2, true) {
+                        self.llc.stats.hits += 1;
+                    } else {
+                        self.llc.stats.misses += 1;
+                        if let Some(v3) = self.llc.array.insert(v2, true) {
+                            self.llc.stats.writebacks += 1;
+                            self.post(v3, true, at);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// VIMA-aware coherence (Sec. III-C): before a VIMA instruction executes,
+    /// dirty lines of every operand vector are written back and all copies
+    /// invalidated. Returns the cycle the flush settles and the number of
+    /// dirty lines written back.
+    pub fn flush_range(&mut self, base: u64, bytes: usize, now: u64) -> (u64, u64) {
+        // Fast path: the host never cached anything in the touched regions
+        // (true for most VIMA operand arrays) — nothing to write back.
+        let first = base >> 20;
+        let last = (base + bytes as u64 - 1) >> 20;
+        if (first..=last).all(|r| !self.region_touched(r << 20)) {
+            return (now, 0);
+        }
+        self.apply_pending(now);
+        let mut settle = now;
+        let mut dirty_lines = 0;
+        let line = 64u64;
+        for off in (0..bytes as u64).step_by(64) {
+            let addr = base + off;
+            let mut was_dirty = false;
+            for l1 in &mut self.l1 {
+                was_dirty |= l1.array.invalidate(addr);
+            }
+            for l2 in &mut self.l2 {
+                was_dirty |= l2.array.invalidate(addr);
+            }
+            was_dirty |= self.llc.array.invalidate(addr);
+            if was_dirty {
+                dirty_lines += 1;
+                let c = self.mem.host_access(addr, true, now);
+                settle = settle.max(c.done);
+            }
+        }
+        let _ = line;
+        (settle, dirty_lines)
+    }
+
+    pub fn dump_stats(&self, report: &mut StatsReport) {
+        for (name, levels) in [("l1d", &self.l1), ("l2", &self.l2)] {
+            let mut agg = LevelStats::default();
+            for l in levels.iter() {
+                agg.hits += l.stats.hits;
+                agg.misses += l.stats.misses;
+                agg.writebacks += l.stats.writebacks;
+                agg.accesses += l.stats.accesses;
+                agg.mshr_stall_cycles += l.stats.mshr_stall_cycles;
+            }
+            Self::dump_level(report, name, &agg);
+        }
+        Self::dump_level(report, "llc", &self.llc.stats);
+        let issued: u64 = self.prefetchers.iter().map(|p| p.issued).sum();
+        let detections: u64 = self.prefetchers.iter().map(|p| p.detections).sum();
+        report.add("prefetch.issued", issued as f64);
+        report.add("prefetch.detections", detections as f64);
+        report.add("prefetch.late_hits", self.pf_late_hits as f64);
+        self.mem.dump_stats(report);
+    }
+
+    fn dump_level(report: &mut StatsReport, name: &str, s: &LevelStats) {
+        report.add(format!("{name}.accesses"), s.accesses as f64);
+        report.add(format!("{name}.hits"), s.hits as f64);
+        report.add(format!("{name}.misses"), s.misses as f64);
+        report.add(format!("{name}.writebacks"), s.writebacks as f64);
+        report.add(format!("{name}.mshr_stall_cycles"), s.mshr_stall_cycles as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn sys() -> MemorySystem {
+        MemorySystem::new(&SystemConfig::default(), 1)
+    }
+
+    #[test]
+    fn l1_hit_after_fill() {
+        let mut m = sys();
+        let a = m.access(0, 0x1000, false, 0);
+        assert_eq!(a.level, 4); // cold: DRAM
+        let b = m.access(0, 0x1000, false, a.done);
+        assert_eq!(b.level, 1);
+        assert_eq!(b.done, a.done + 2);
+    }
+
+    #[test]
+    fn level_latencies_order() {
+        let mut m = sys();
+        let dram = m.access(0, 0x2000, false, 0).done;
+        let l1 = m.access(0, 0x2000, false, dram).done - dram;
+        assert!(dram > 22, "dram path {dram}");
+        assert_eq!(l1, 2);
+    }
+
+    #[test]
+    fn llc_serves_second_core() {
+        let mut m = MemorySystem::new(&SystemConfig::default(), 2);
+        let a = m.access(0, 0x4000, false, 0);
+        let b = m.access(1, 0x4000, false, a.done);
+        assert_eq!(b.level, 3, "expected LLC hit from the other core");
+    }
+
+    #[test]
+    fn streaming_evicts_and_writes_back() {
+        let mut m = sys();
+        let mut now = 0;
+        // Write-stream 4 MB: far beyond L1+L2, forcing dirty evictions.
+        for i in 0..(4 << 20) / 64u64 {
+            now = m.access(0, i * 64, true, now).done;
+        }
+        assert!(m.l1[0].stats.writebacks > 0);
+        assert!(m.l2[0].stats.writebacks > 0);
+    }
+
+    #[test]
+    fn mshr_limits_increase_latency_under_burst() {
+        let mut m = sys();
+        // Issue a burst of independent misses at the same cycle.
+        let mut dones: Vec<u64> = (0..64).map(|i| m.access(0, i * 4096, false, 0).done).collect();
+        dones.sort_unstable();
+        // With 10 L1 MSHRs the tail must be significantly delayed vs head.
+        assert!(dones[63] > dones[0] + 50, "no MSHR throttling: {:?}", &dones[60..]);
+        assert!(m.l1[0].stats.mshr_stall_cycles > 0);
+    }
+
+    #[test]
+    fn flush_range_writes_back_dirty() {
+        let mut m = sys();
+        let mut now = 0;
+        for i in 0..128u64 {
+            now = m.access(0, 0x10000 + i * 64, true, now).done;
+        }
+        let (settle, dirty) = m.flush_range(0x10000, 8192, now);
+        assert_eq!(dirty, 128);
+        assert!(settle > now);
+        // After the flush, the lines are gone from every level.
+        let r = m.access(0, 0x10000, false, settle);
+        assert_eq!(r.level, 4);
+    }
+
+    #[test]
+    fn flush_clean_range_is_free() {
+        let mut m = sys();
+        let (settle, dirty) = m.flush_range(0x80000, 8192, 100);
+        assert_eq!((settle, dirty), (100, 0));
+    }
+
+    #[test]
+    fn working_set_in_llc_stops_dram_traffic() {
+        let mut m = sys();
+        let lines = (4 << 20) / 64u64; // 4 MB: fits 16 MB LLC
+        let mut now = 0;
+        for i in 0..lines {
+            now = m.access(0, i * 64, false, now).done;
+        }
+        let cold_dram = m.mem.stats.host_reads;
+        for i in 0..lines {
+            now = m.access(0, i * 64, false, now).done;
+        }
+        // Second pass: no new DRAM reads (all <= LLC).
+        assert_eq!(m.mem.stats.host_reads, cold_dram);
+    }
+}

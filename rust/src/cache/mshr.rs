@@ -1,0 +1,120 @@
+//! MSHR window: bounds miss-level parallelism per cache level.
+//!
+//! Modeled as a fixed-capacity multiset of completion timestamps. Acquiring a
+//! slot at time `t` when all slots are busy pushes the start time to the
+//! earliest completion — exactly the stall a blocked miss queue produces.
+
+/// Outstanding-miss tracker.
+pub struct MshrWindow {
+    /// Completion times of in-flight misses (unordered; capacity = MSHRs).
+    slots: Vec<u64>,
+    capacity: usize,
+}
+
+impl MshrWindow {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "need at least one MSHR");
+        Self { slots: Vec::with_capacity(capacity), capacity }
+    }
+
+    /// Try to start a miss at `t`. Returns `(actual_start, stall_cycles)`.
+    ///
+    /// The caller must later call [`release`](Self::release) with the miss's
+    /// completion time.
+    pub fn acquire(&mut self, t: u64) -> (u64, u64) {
+        // Fast path: a free slot exists without any pruning.
+        if self.slots.len() < self.capacity {
+            return (t, 0);
+        }
+        // Single pass: find the earliest completion while pruning slots that
+        // already completed by `t` (avoids the two O(n) scans of
+        // retain + min_by_key on the hot path).
+        let mut i = 0;
+        let mut min_idx = usize::MAX;
+        let mut min_val = u64::MAX;
+        while i < self.slots.len() {
+            let c = self.slots[i];
+            if c <= t {
+                self.slots.swap_remove(i);
+                if min_idx == self.slots.len() {
+                    // swap_remove moved the recorded-min (last) element here
+                    min_idx = i;
+                }
+                continue; // re-inspect the swapped-in element at `i`
+            }
+            if c < min_val {
+                min_val = c;
+                min_idx = i;
+            }
+            i += 1;
+        }
+        if self.slots.len() < self.capacity {
+            return (t, 0);
+        }
+        // Full of still-outstanding misses: wait for the earliest.
+        self.slots.swap_remove(min_idx);
+        (min_val, min_val - t)
+    }
+
+    /// Record the completion time of the miss started by the last `acquire`.
+    pub fn release(&mut self, completion: u64) {
+        debug_assert!(self.slots.len() < self.capacity);
+        self.slots.push(completion);
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.slots.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_until_full() {
+        let mut m = MshrWindow::new(2);
+        let (s1, st1) = m.acquire(10);
+        m.release(100);
+        let (s2, st2) = m.acquire(10);
+        m.release(200);
+        assert_eq!((s1, st1), (10, 0));
+        assert_eq!((s2, st2), (10, 0));
+    }
+
+    #[test]
+    fn full_window_stalls_until_earliest() {
+        let mut m = MshrWindow::new(2);
+        m.acquire(0);
+        m.release(100);
+        m.acquire(0);
+        m.release(50);
+        let (start, stall) = m.acquire(10);
+        assert_eq!(start, 50); // waits for the miss completing at 50
+        assert_eq!(stall, 40);
+    }
+
+    #[test]
+    fn completed_slots_are_freed() {
+        let mut m = MshrWindow::new(1);
+        m.acquire(0);
+        m.release(5);
+        // At t=10 the previous miss is done; no stall.
+        let (start, stall) = m.acquire(10);
+        assert_eq!((start, stall), (10, 0));
+    }
+
+    #[test]
+    fn in_flight_tracking() {
+        let mut m = MshrWindow::new(4);
+        m.acquire(0);
+        m.release(100);
+        assert_eq!(m.in_flight(), 1);
+        m.reset();
+        assert_eq!(m.in_flight(), 0);
+    }
+}

@@ -1,0 +1,599 @@
+//! System configuration — Table I of the paper as typed defaults.
+//!
+//! Every number in the `Default` impls is taken verbatim from *Table I:
+//! Baseline and VIMA system configuration*. Anything the table does not pin
+//! down (MSHR depths, mispredict penalty, interconnect details) is an
+//! explicit field with a documented, conservative default so experiments can
+//! sweep it.
+//!
+//! Configs serialize to/from a TOML subset (`[section]` + `key = value`
+//! lines, parsed in-tree — the offline build has no serde/toml crates), so
+//! every experiment is reproducible from a checked-in file:
+//!
+//! ```toml
+//! [vima]
+//! cache_bytes = 131072    # 16-line VIMA cache
+//! [llc]
+//! size_bytes = 8388608
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// Value conversion for the TOML subset.
+pub trait TomlValue: Sized {
+    fn parse_toml(s: &str) -> Result<Self>;
+    fn emit_toml(&self) -> String;
+}
+
+impl TomlValue for f64 {
+    fn parse_toml(s: &str) -> Result<Self> {
+        s.parse().with_context(|| format!("bad float {s:?}"))
+    }
+    fn emit_toml(&self) -> String {
+        if self.fract() == 0.0 {
+            format!("{self:.1}")
+        } else {
+            format!("{self}")
+        }
+    }
+}
+
+impl TomlValue for u64 {
+    fn parse_toml(s: &str) -> Result<Self> {
+        s.parse().with_context(|| format!("bad integer {s:?}"))
+    }
+    fn emit_toml(&self) -> String {
+        format!("{self}")
+    }
+}
+
+impl TomlValue for usize {
+    fn parse_toml(s: &str) -> Result<Self> {
+        s.parse().with_context(|| format!("bad integer {s:?}"))
+    }
+    fn emit_toml(&self) -> String {
+        format!("{self}")
+    }
+}
+
+impl TomlValue for bool {
+    fn parse_toml(s: &str) -> Result<Self> {
+        match s {
+            "true" => Ok(true),
+            "false" => Ok(false),
+            _ => bail!("bad bool {s:?}"),
+        }
+    }
+    fn emit_toml(&self) -> String {
+        format!("{self}")
+    }
+}
+
+/// `(count, latency)` FU descriptors serialize as `[count, latency]`.
+impl TomlValue for (usize, u64) {
+    fn parse_toml(s: &str) -> Result<Self> {
+        let inner = s.trim().strip_prefix('[').and_then(|x| x.strip_suffix(']'));
+        let inner = inner.with_context(|| format!("expected [count, latency], got {s:?}"))?;
+        let mut parts = inner.split(',').map(str::trim);
+        let a = parts.next().context("missing count")?.parse()?;
+        let b = parts.next().context("missing latency")?.parse()?;
+        Ok((a, b))
+    }
+    fn emit_toml(&self) -> String {
+        format!("[{}, {}]", self.0, self.1)
+    }
+}
+
+/// Defines a config struct with Table-I defaults plus TOML-subset get/set.
+macro_rules! cfg_struct {
+    ($(#[$meta:meta])* $name:ident { $($field:ident : $ty:ty = $default:expr),* $(,)? }) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, PartialEq)]
+        pub struct $name {
+            $(pub $field: $ty,)*
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self { $($field: $default,)* }
+            }
+        }
+
+        impl $name {
+            /// Set one field from its TOML representation.
+            pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+                match key {
+                    $(stringify!($field) => {
+                        self.$field = <$ty as TomlValue>::parse_toml(value)
+                            .with_context(|| format!("field {}", key))?;
+                    })*
+                    _ => bail!("unknown key {key:?} in {}", stringify!($name)),
+                }
+                Ok(())
+            }
+
+            fn write_toml(&self, out: &mut String) {
+                $(
+                    out.push_str(stringify!($field));
+                    out.push_str(" = ");
+                    out.push_str(&TomlValue::emit_toml(&self.$field));
+                    out.push('\n');
+                )*
+            }
+        }
+    };
+}
+
+cfg_struct!(
+    /// Out-of-order x86 core (Sandy-Bridge-like, Table I row 1):
+    /// 32 cores @ 2 GHz, 6 W/core, 6-wide issue, 18-entry fetch and
+    /// 28-entry decode buffers, 168-entry ROB, MOB 64-read/36-write,
+    /// 2 load + 1 store units (1-1 cy), int alu/mul/div = 3/1/1 units at
+    /// 1-3-32 cy, fp alu/mul/div = 1/1/1 units at 3-5-10 cy, 1 branch per
+    /// fetch, two-level GAs predictor + 4096-entry BTB.
+    /// `mispredict_penalty` and `bpred_history_bits` are not in the table
+    /// (typical Sandy-Bridge front-end values).
+    CoreConfig {
+        freq_ghz: f64 = 2.0,
+        num_cores: usize = 32,
+        power_w: f64 = 6.0,
+        issue_width: usize = 6,
+        fetch_buffer: usize = 18,
+        decode_buffer: usize = 28,
+        rob_entries: usize = 168,
+        mob_read: usize = 64,
+        mob_write: usize = 36,
+        load_units: usize = 2,
+        load_lat: u64 = 1,
+        store_units: usize = 1,
+        store_lat: u64 = 1,
+        int_alu: (usize, u64) = (3, 1),
+        int_mul: (usize, u64) = (1, 3),
+        int_div: (usize, u64) = (1, 32),
+        fp_alu: (usize, u64) = (1, 3),
+        fp_mul: (usize, u64) = (1, 5),
+        fp_div: (usize, u64) = (1, 10),
+        branch_per_fetch: usize = 1,
+        mispredict_penalty: u64 = 14,
+        bpred_history_bits: usize = 12,
+        btb_entries: usize = 4096,
+        btb_ways: usize = 4,
+    }
+);
+
+cfg_struct!(
+    /// One cache level (Table I rows 2-4). Defaults are the L1 row; use the
+    /// `l2()` / `llc()` constructors for the other levels. `mshrs` is not in
+    /// the table (SiNUCA-like defaults).
+    CacheConfig {
+        size_bytes: usize = 64 << 10,
+        ways: usize = 8,
+        latency: u64 = 2,
+        line_bytes: usize = 64,
+        mshrs: usize = 10,
+        dyn_pj_per_access: f64 = 194.0,
+        static_mw: f64 = 30.0,
+    }
+);
+
+impl CacheConfig {
+    pub fn l1() -> Self {
+        Self::default()
+    }
+
+    /// L2: 256 KB, 8-way, 10 cy, 340 pJ/access, 130 mW.
+    pub fn l2() -> Self {
+        Self {
+            size_bytes: 256 << 10,
+            latency: 10,
+            mshrs: 20,
+            dyn_pj_per_access: 340.0,
+            static_mw: 130.0,
+            ..Self::default()
+        }
+    }
+
+    /// LLC: 16 MB, 16-way, 22 cy, 3.01 nJ/access, 7 W. The MSHR count is
+    /// not in Table I; a 32-core shared LLC is sliced per core (4 misses
+    /// per slice).
+    pub fn llc() -> Self {
+        Self {
+            size_bytes: 16 << 20,
+            ways: 16,
+            latency: 22,
+            mshrs: 128,
+            dyn_pj_per_access: 3010.0,
+            static_mw: 7000.0,
+            ..Self::default()
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.line_bytes * self.ways)
+    }
+}
+
+cfg_struct!(
+    /// 3D-stacked memory (Table I row 5): 32 vaults x 8 banks, 256 B row
+    /// buffer, 4 GB, DRAM @ 1666 MHz, 4 links @ 8 GHz with 8 B bursts at a
+    /// 2.5:1 core-to-bus ratio, closed-row, CAS-RP-RCD-RAS-CWD =
+    /// 9-9-9-24-7, instruction latency 1 CPU cycle, 10.8 / 4.8 pJ/bit on
+    /// the x86 / VIMA paths, 4 W static.
+    Mem3DConfig {
+        vaults: usize = 32,
+        banks_per_vault: usize = 8,
+        row_buffer_bytes: usize = 256,
+        capacity_bytes: u64 = 4 << 30,
+        dram_freq_mhz: f64 = 1666.0,
+        links: usize = 4,
+        link_freq_ghz: f64 = 8.0,
+        burst_bytes: usize = 8,
+        core_to_bus_ratio: f64 = 2.5,
+        t_cas: u64 = 9,
+        t_rp: u64 = 9,
+        t_rcd: u64 = 9,
+        t_ras: u64 = 24,
+        t_cwd: u64 = 7,
+        open_row: bool = false,
+        inst_lat_cycles: u64 = 1,
+        x86_pj_per_bit: f64 = 10.8,
+        vima_pj_per_bit: f64 = 4.8,
+        static_w: f64 = 4.0,
+    }
+);
+
+impl Mem3DConfig {
+    /// Sub-request granularity (= cache line size everywhere in the system).
+    pub fn line_bytes(&self) -> usize {
+        64
+    }
+
+    /// DRAM cycles per CPU cycle (CPU 2 GHz, DRAM 1.666 GHz -> ~0.83).
+    pub fn dram_cycles_per_cpu_cycle(&self, cpu_ghz: f64) -> f64 {
+        self.dram_freq_mhz / 1000.0 / cpu_ghz
+    }
+
+    /// Convert DRAM cycles to CPU cycles (rounded up).
+    pub fn dram_to_cpu(&self, dram_cycles: u64, cpu_ghz: f64) -> u64 {
+        (dram_cycles as f64 / self.dram_cycles_per_cpu_cycle(cpu_ghz)).ceil() as u64
+    }
+
+    /// Closed-row access latency seen by one 64 B sub-request, DRAM cycles:
+    /// activate (RCD) + column read (CAS).
+    pub fn access_dram_cycles(&self) -> u64 {
+        self.t_rcd + self.t_cas
+    }
+
+    /// Bank busy time per closed-row access, DRAM cycles: the bank cannot
+    /// accept the next activate until RAS + RP elapse.
+    pub fn bank_busy_dram_cycles(&self) -> u64 {
+        self.t_ras + self.t_rp
+    }
+
+    /// CPU cycles for one 64 B line crossing the serial links (all links
+    /// aggregated; each transfer is packetized in `burst_bytes` flits).
+    pub fn link_cycles_per_line(&self, cpu_ghz: f64) -> f64 {
+        let bytes_per_ns = self.links as f64 * self.burst_bytes as f64 * self.link_freq_ghz;
+        let ns = 64.0 / bytes_per_ns;
+        ns * cpu_ghz
+    }
+}
+
+cfg_struct!(
+    /// VIMA logic layer (Table I row 6): 1 GHz, 3.2 W, 256 int + 256 fp
+    /// lanes, pipelined 8 KB latencies int alu/mul/div = 8-12-28 and fp =
+    /// 13-13-28 VIMA cycles, 64 KB fully-associative cache (8 lines) at
+    /// 2 cy (1 tag + 1 per transfer) with 2 ports, 194 pJ/access + 134 mW.
+    /// `stop_and_go` / `dispatch_gap_cycles` model the Sec. III-C precise-
+    /// exception dispatch protocol (sweepable for the ablation).
+    VimaConfig {
+        freq_ghz: f64 = 1.0,
+        power_w: f64 = 3.2,
+        lanes: usize = 256,
+        vector_bytes: usize = 8192,
+        int_alu_lat: u64 = 8,
+        int_mul_lat: u64 = 12,
+        int_div_lat: u64 = 28,
+        fp_alu_lat: u64 = 13,
+        fp_mul_lat: u64 = 13,
+        fp_div_lat: u64 = 28,
+        cache_bytes: usize = 64 << 10,
+        cache_tag_lat: u64 = 1,
+        cache_beat_lat: u64 = 1,
+        cache_ports: usize = 2,
+        cache_dyn_pj_per_access: f64 = 194.0,
+        cache_static_mw: f64 = 134.0,
+        stop_and_go: bool = true,
+        // Calibrated so the execution-gap bubble costs 2-4% on the
+        // compute-chained kernels, the band Sec. III-C reports.
+        dispatch_gap_cycles: u64 = 2,
+    }
+);
+
+impl VimaConfig {
+    /// Number of vector lines the VIMA cache holds (8 by default).
+    pub fn cache_lines(&self) -> usize {
+        (self.cache_bytes / self.vector_bytes).max(1)
+    }
+
+    /// 64 B sub-requests per vector fetch (128 for 8 KB vectors).
+    pub fn subrequests_per_vector(&self) -> usize {
+        self.vector_bytes / 64
+    }
+
+    /// Pipelined beats to stream one vector through the lanes
+    /// (8 for 2048 x 32-bit elements over 256 lanes).
+    pub fn beats_per_vector(&self, elem_bytes: usize) -> u64 {
+        let elems = self.vector_bytes / elem_bytes;
+        (elems as f64 / self.lanes as f64).ceil() as u64
+    }
+
+    /// VIMA cycles to CPU cycles.
+    pub fn to_cpu_cycles(&self, vima_cycles: u64, cpu_ghz: f64) -> u64 {
+        (vima_cycles as f64 * cpu_ghz / self.freq_ghz).ceil() as u64
+    }
+}
+
+cfg_struct!(
+    /// HIVE comparator (Alves et al., DATE 2016): 8-register bank of 8 KB
+    /// vectors sharing VIMA's lane array, wrapped in lock/unlock
+    /// transactions with sequential write-back on unlock (Sec. III-E).
+    HiveConfig {
+        registers: usize = 8,
+        vector_bytes: usize = 8192,
+        lanes: usize = 256,
+        freq_ghz: f64 = 1.0,
+        power_w: f64 = 3.2,
+        lock_cycles: u64 = 60,
+        unlock_cycles: u64 = 60,
+        sequential_writeback: bool = true,
+    }
+);
+
+cfg_struct!(
+    /// Host hardware prefetcher (not in Table I, but the baseline is a
+    /// Sandy-Bridge-like core, which ships L2/LLC streamers; the paper's
+    /// intro explicitly positions VIMA against prefetching baselines).
+    /// A per-PC stride detector issues `degree` prefetches into the LLC
+    /// once a stride repeats `min_confidence` times. Prefetch DRAM traffic
+    /// is accounted like any other access.
+    ///
+    /// **Disabled by default**: Table I lists no prefetcher, and the paper's
+    /// kNN/MLP LLC-fit crossover (Fig. 3) only exists against a
+    /// prefetcher-less baseline. Enable for the "stronger baseline"
+    /// ablation (`vima-sim ablation`): streaming speedups drop from ~13x to
+    /// ~7x (VecSum) while the crossover flattens.
+    PrefetchConfig {
+        enabled: bool = false,
+        table_entries: usize = 16,
+        degree: u64 = 4,
+        min_confidence: u64 = 2,
+    }
+);
+
+/// Full-system configuration (baseline CPU + 3D memory + VIMA + HIVE).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub core: CoreConfig,
+    pub l1d: CacheConfig,
+    pub l1i: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+    pub mem: Mem3DConfig,
+    pub vima: VimaConfig,
+    pub hive: HiveConfig,
+    pub prefetch: PrefetchConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            core: CoreConfig::default(),
+            l1d: CacheConfig::l1(),
+            l1i: CacheConfig::l1(),
+            l2: CacheConfig::l2(),
+            llc: CacheConfig::llc(),
+            mem: Mem3DConfig::default(),
+            vima: VimaConfig::default(),
+            hive: HiveConfig::default(),
+            prefetch: PrefetchConfig::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Parse the TOML subset; missing keys keep their Table I values.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let (key, value) = (key.trim(), value.trim());
+            match section.as_str() {
+                "core" => cfg.core.set(key, value)?,
+                "l1d" => cfg.l1d.set(key, value)?,
+                "l1i" => cfg.l1i.set(key, value)?,
+                "l2" => cfg.l2.set(key, value)?,
+                "llc" => cfg.llc.set(key, value)?,
+                "mem" => cfg.mem.set(key, value)?,
+                "vima" => cfg.vima.set(key, value)?,
+                "hive" => cfg.hive.set(key, value)?,
+                "prefetch" => cfg.prefetch.set(key, value)?,
+                other => bail!("unknown section [{other}]"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load a TOML override file.
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        for (name, write) in [
+            ("core", &self.core as &dyn Section),
+            ("l1d", &self.l1d),
+            ("l1i", &self.l1i),
+            ("l2", &self.l2),
+            ("llc", &self.llc),
+            ("mem", &self.mem),
+            ("vima", &self.vima),
+            ("hive", &self.hive),
+            ("prefetch", &self.prefetch),
+        ] {
+            s.push_str(&format!("[{name}]\n"));
+            write.emit(&mut s);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Sanity-check cross-field invariants; call after any mutation.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.core.issue_width > 0, "issue width must be positive");
+        for (name, c) in
+            [("l1d", &self.l1d), ("l1i", &self.l1i), ("l2", &self.l2), ("llc", &self.llc)]
+        {
+            anyhow::ensure!(
+                c.size_bytes % (c.line_bytes * c.ways) == 0,
+                "{name}: size {} not divisible by line*ways",
+                c.size_bytes
+            );
+            anyhow::ensure!(c.sets().is_power_of_two(), "{name}: sets must be a power of two");
+        }
+        anyhow::ensure!(self.mem.vaults.is_power_of_two(), "vault count must be 2^n");
+        anyhow::ensure!(self.mem.banks_per_vault.is_power_of_two(), "bank count must be 2^n");
+        anyhow::ensure!(
+            self.vima.vector_bytes % self.mem.line_bytes() == 0,
+            "VIMA vector must be a multiple of the 64 B sub-request granularity"
+        );
+        anyhow::ensure!(
+            self.vima.cache_bytes % self.vima.vector_bytes == 0,
+            "VIMA cache must hold an integral number of vector lines"
+        );
+        Ok(())
+    }
+}
+
+trait Section {
+    fn emit(&self, out: &mut String);
+}
+
+macro_rules! impl_section {
+    ($($t:ty),*) => {
+        $(impl Section for $t {
+            fn emit(&self, out: &mut String) {
+                self.write_toml(out);
+            }
+        })*
+    };
+}
+
+impl_section!(CoreConfig, CacheConfig, Mem3DConfig, VimaConfig, HiveConfig, PrefetchConfig);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let c = SystemConfig::default();
+        assert_eq!(c.core.num_cores, 32);
+        assert_eq!(c.core.rob_entries, 168);
+        assert_eq!(c.core.int_div, (1, 32));
+        assert_eq!(c.l1d.size_bytes, 64 << 10);
+        assert_eq!(c.l2.size_bytes, 256 << 10);
+        assert_eq!(c.llc.size_bytes, 16 << 20);
+        assert_eq!(c.llc.ways, 16);
+        assert_eq!(c.mem.vaults, 32);
+        assert_eq!(c.mem.banks_per_vault, 8);
+        assert_eq!(c.vima.cache_lines(), 8);
+        assert_eq!(c.vima.subrequests_per_vector(), 128);
+        assert_eq!(c.vima.beats_per_vector(4), 8);
+        assert_eq!(c.vima.beats_per_vector(8), 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn cache_sets() {
+        assert_eq!(CacheConfig::l1().sets(), 128);
+        assert_eq!(CacheConfig::llc().sets(), 16384);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = SystemConfig::default();
+        let text = c.to_toml();
+        let back = SystemConfig::from_toml_str(&text).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn toml_partial_override() {
+        let c = SystemConfig::from_toml_str("[vima]\ncache_bytes = 131072\n").unwrap();
+        assert_eq!(c.vima.cache_bytes, 128 << 10);
+        assert_eq!(c.vima.cache_lines(), 16);
+        // everything else still Table I
+        assert_eq!(c.core.rob_entries, 168);
+    }
+
+    #[test]
+    fn toml_tuple_and_bool_fields() {
+        let c = SystemConfig::from_toml_str(
+            "[core]\nint_alu = [4, 2]\n[vima]\nstop_and_go = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.core.int_alu, (4, 2));
+        assert!(!c.vima.stop_and_go);
+    }
+
+    #[test]
+    fn toml_comments_and_blanks() {
+        let c = SystemConfig::from_toml_str("# comment\n\n[llc]\nsize_bytes = 8388608 # 8MB\n")
+            .unwrap();
+        assert_eq!(c.llc.size_bytes, 8 << 20);
+    }
+
+    #[test]
+    fn toml_rejects_unknown_key() {
+        assert!(SystemConfig::from_toml_str("[core]\nwarp_size = 32\n").is_err());
+        assert!(SystemConfig::from_toml_str("[gpu]\nx = 1\n").is_err());
+    }
+
+    #[test]
+    fn dram_cycle_conversion() {
+        let m = Mem3DConfig::default();
+        // 1666 MHz DRAM vs 2 GHz CPU: 9 DRAM cycles ~ 11 CPU cycles
+        assert_eq!(m.dram_to_cpu(9, 2.0), 11);
+        assert_eq!(m.access_dram_cycles(), 18);
+        assert_eq!(m.bank_busy_dram_cycles(), 33);
+    }
+
+    #[test]
+    fn link_bandwidth() {
+        let m = Mem3DConfig::default();
+        // 4 links x 8 B x 8 GHz = 256 GB/s => 64 B in 0.25 ns = 0.5 CPU cycles
+        let cyc = m.link_cycles_per_line(2.0);
+        assert!((cyc - 0.5).abs() < 1e-9, "{cyc}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_vector() {
+        let mut c = SystemConfig::default();
+        c.vima.vector_bytes = 100;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! The paper's workload matrix (Sec. IV-A): seven kernels, three dataset
+//! sizes each, plus the labels the figures use.
+
+use crate::trace::{Backend, KernelId, TraceParams};
+
+/// One (kernel, size) cell of the evaluation matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    pub kernel: KernelId,
+    /// Total footprint in bytes.
+    pub footprint: u64,
+    /// Paper's axis label for this size (e.g. "64MB" or "512" features).
+    pub size_label: &'static str,
+}
+
+impl Workload {
+    pub fn params(&self, backend: Backend) -> TraceParams {
+        TraceParams::new(self.kernel, backend, self.footprint)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.kernel, self.size_label)
+    }
+}
+
+/// Scale knob: `Paper` runs the full Sec. IV sizes; `Quick` divides
+/// footprints by 16 for smoke tests and CI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeScale {
+    Paper,
+    Quick,
+}
+
+impl SizeScale {
+    fn apply(&self, bytes: u64) -> u64 {
+        match self {
+            SizeScale::Paper => bytes,
+            SizeScale::Quick => (bytes / 16).max(1 << 20),
+        }
+    }
+}
+
+/// The full evaluation matrix.
+pub struct WorkloadSet;
+
+impl WorkloadSet {
+    const MB: u64 = 1 << 20;
+
+    /// Standard three sizes for the streaming/ML kernels (4/16/64 MB).
+    pub fn sizes(kernel: KernelId, scale: SizeScale) -> Vec<Workload> {
+        let mk = |footprint: u64, size_label: &'static str| Workload {
+            kernel,
+            footprint: scale.apply(footprint),
+            size_label,
+        };
+        match kernel {
+            KernelId::MatMul => vec![
+                mk(6 * Self::MB, "6MB"),
+                mk(12 * Self::MB, "12MB"),
+                mk(24 * Self::MB, "24MB"),
+            ],
+            KernelId::Knn => vec![
+                mk(4 * Self::MB, "32"),
+                mk(16 * Self::MB, "128"),
+                mk(64 * Self::MB, "512"),
+            ],
+            KernelId::Mlp => vec![
+                mk(4 * Self::MB, "64"),
+                mk(16 * Self::MB, "256"),
+                mk(64 * Self::MB, "1024"),
+            ],
+            _ => vec![
+                mk(4 * Self::MB, "4MB"),
+                mk(16 * Self::MB, "16MB"),
+                mk(64 * Self::MB, "64MB"),
+            ],
+        }
+    }
+
+    /// All seven kernels (Fig. 3 matrix).
+    pub fn all(scale: SizeScale) -> Vec<Workload> {
+        [
+            KernelId::MemSet,
+            KernelId::MemCopy,
+            KernelId::VecSum,
+            KernelId::Stencil,
+            KernelId::MatMul,
+            KernelId::Knn,
+            KernelId::Mlp,
+        ]
+        .into_iter()
+        .flat_map(|k| Self::sizes(k, scale))
+        .collect()
+    }
+
+    /// Fig. 2's kernels (the HIVE comparison).
+    pub fn fig2(scale: SizeScale) -> Vec<Workload> {
+        [KernelId::MemSet, KernelId::VecSum, KernelId::Stencil]
+            .into_iter()
+            .flat_map(|k| Self::sizes(k, scale))
+            .collect()
+    }
+
+    /// Fig. 4 / Fig. 5 use the largest size of these three kernels.
+    pub fn multithread(scale: SizeScale) -> Vec<Workload> {
+        [KernelId::Stencil, KernelId::VecSum, KernelId::MatMul]
+            .into_iter()
+            .map(|k| *Self::sizes(k, scale).last().unwrap())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_matrix_is_21_cells() {
+        assert_eq!(WorkloadSet::all(SizeScale::Paper).len(), 21);
+    }
+
+    #[test]
+    fn paper_sizes_match_section_4() {
+        let knn = WorkloadSet::sizes(KernelId::Knn, SizeScale::Paper);
+        assert_eq!(knn[2].footprint, 64 << 20);
+        assert_eq!(knn[2].size_label, "512");
+        let mm = WorkloadSet::sizes(KernelId::MatMul, SizeScale::Paper);
+        assert_eq!(mm[0].footprint, 6 << 20);
+    }
+
+    #[test]
+    fn quick_scale_shrinks() {
+        let p = WorkloadSet::sizes(KernelId::VecSum, SizeScale::Paper);
+        let q = WorkloadSet::sizes(KernelId::VecSum, SizeScale::Quick);
+        assert!(q[2].footprint < p[2].footprint);
+        assert!(q[0].footprint >= 1 << 20);
+    }
+
+    #[test]
+    fn multithread_set_uses_largest() {
+        let m = WorkloadSet::multithread(SizeScale::Paper);
+        assert_eq!(m.len(), 3);
+        assert!(m.iter().all(|w| w.size_label == "64MB" || w.size_label == "24MB"));
+    }
+}

@@ -1,0 +1,193 @@
+//! Two-level GAs branch predictor + set-associative BTB (Table I row 1:
+//! "Branch predictor: Two-level GAs. 4096 entry BTB").
+//!
+//! GAs: a global history register indexes per-address pattern history tables
+//! of 2-bit saturating counters (history XOR-folded with the PC — gshare-style
+//! address mixing, the standard GAs realization).
+
+use crate::config::CoreConfig;
+
+pub struct BranchPredictor {
+    history: u64,
+    history_bits: usize,
+    /// 2-bit saturating counters.
+    pht: Vec<u8>,
+    /// BTB tags (direct-mapped within `ways` per set).
+    btb_tags: Vec<u64>,
+    btb_sets: usize,
+    btb_ways: usize,
+    btb_tick: u64,
+    btb_stamp: Vec<u64>,
+    pub lookups: u64,
+    pub mispredicts: u64,
+    pub btb_misses: u64,
+}
+
+impl BranchPredictor {
+    pub fn new(cfg: &CoreConfig) -> Self {
+        let pht_size = 1usize << cfg.bpred_history_bits;
+        let sets = cfg.btb_entries / cfg.btb_ways;
+        assert!(sets.is_power_of_two());
+        Self {
+            history: 0,
+            history_bits: cfg.bpred_history_bits,
+            pht: vec![2; pht_size], // weakly taken
+            btb_tags: vec![u64::MAX; cfg.btb_entries],
+            btb_sets: sets,
+            btb_ways: cfg.btb_ways,
+            btb_tick: 0,
+            btb_stamp: vec![0; cfg.btb_entries],
+            lookups: 0,
+            mispredicts: 0,
+            btb_misses: 0,
+        }
+    }
+
+    #[inline]
+    fn pht_index(&self, pc: u64) -> usize {
+        let mask = (1usize << self.history_bits) - 1;
+        ((self.history as usize) ^ (pc >> 2) as usize) & mask
+    }
+
+    /// Predict + update for one dynamic branch. Returns `true` if the
+    /// prediction (direction AND target availability) was correct.
+    pub fn predict_and_update(&mut self, pc: u64, taken: bool) -> bool {
+        self.lookups += 1;
+        let idx = self.pht_index(pc);
+        let predicted_taken = self.pht[idx] >= 2;
+
+        // Direction update (2-bit saturating).
+        if taken {
+            self.pht[idx] = (self.pht[idx] + 1).min(3);
+        } else {
+            self.pht[idx] = self.pht[idx].saturating_sub(1);
+        }
+        self.history = ((self.history << 1) | taken as u64) & ((1 << self.history_bits) - 1);
+
+        // Target lookup: a taken branch with no BTB entry is a misfetch even
+        // if the direction was right.
+        let btb_ok = if taken { self.btb_touch(pc) } else { true };
+
+        let correct = predicted_taken == taken && btb_ok;
+        if !correct {
+            self.mispredicts += 1;
+        }
+        correct
+    }
+
+    /// Probe/refresh the BTB entry for `pc`, allocating on miss.
+    /// Returns whether it was present.
+    fn btb_touch(&mut self, pc: u64) -> bool {
+        let set = ((pc >> 2) as usize) & (self.btb_sets - 1);
+        let base = set * self.btb_ways;
+        self.btb_tick += 1;
+        for w in 0..self.btb_ways {
+            if self.btb_tags[base + w] == pc {
+                self.btb_stamp[base + w] = self.btb_tick;
+                return true;
+            }
+        }
+        self.btb_misses += 1;
+        // Allocate LRU way.
+        let mut victim = 0;
+        let mut best = u64::MAX;
+        for w in 0..self.btb_ways {
+            if self.btb_stamp[base + w] < best {
+                best = self.btb_stamp[base + w];
+                victim = w;
+            }
+        }
+        self.btb_tags[base + victim] = pc;
+        self.btb_stamp[base + victim] = self.btb_tick;
+        false
+    }
+
+    pub fn reset(&mut self) {
+        self.history = 0;
+        self.pht.fill(2);
+        self.btb_tags.fill(u64::MAX);
+        self.btb_stamp.fill(0);
+        self.btb_tick = 0;
+        self.lookups = 0;
+        self.mispredicts = 0;
+        self.btb_misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bp() -> BranchPredictor {
+        BranchPredictor::new(&CoreConfig::default())
+    }
+
+    #[test]
+    fn learns_always_taken_loop() {
+        let mut p = bp();
+        let pc = 0x400;
+        // warm up
+        for _ in 0..8 {
+            p.predict_and_update(pc, true);
+        }
+        let before = p.mispredicts;
+        for _ in 0..100 {
+            p.predict_and_update(pc, true);
+        }
+        assert_eq!(p.mispredicts, before, "steady taken loop must be perfect");
+    }
+
+    #[test]
+    fn loop_exit_mispredicts_once_per_iteration_set() {
+        let mut p = bp();
+        let pc = 0x400;
+        let mut misses = 0;
+        // 10 runs of (15 taken + 1 not-taken) — classic loop pattern.
+        for _ in 0..10 {
+            for _ in 0..15 {
+                if !p.predict_and_update(pc, true) {
+                    misses += 1;
+                }
+            }
+            if !p.predict_and_update(pc, false) {
+                misses += 1;
+            }
+        }
+        // With 12 bits of history the 16-iteration pattern is learnable;
+        // allow warm-up noise only.
+        assert!(misses < 40, "too many mispredicts: {misses}");
+    }
+
+    #[test]
+    fn btb_miss_counts_first_encounter() {
+        let mut p = bp();
+        p.predict_and_update(0x1000, true);
+        let first = p.btb_misses;
+        assert!(first >= 1);
+        // warm the direction counters so only BTB matters
+        for _ in 0..4 {
+            p.predict_and_update(0x1000, true);
+        }
+        let before = p.btb_misses;
+        p.predict_and_update(0x1000, true);
+        assert_eq!(p.btb_misses, before);
+    }
+
+    #[test]
+    fn not_taken_branches_skip_btb() {
+        let mut p = bp();
+        for i in 0..100u64 {
+            p.predict_and_update(0x2000 + i * 4, false);
+        }
+        assert_eq!(p.btb_misses, 0);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut p = bp();
+        p.predict_and_update(0x400, true);
+        p.reset();
+        assert_eq!(p.lookups, 0);
+        assert_eq!(p.mispredicts, 0);
+    }
+}

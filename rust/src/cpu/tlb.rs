@@ -1,0 +1,135 @@
+//! Data TLB (Sec. III-C: VIMA addresses "are translated by the TLB and go
+//! through permission checks like any memory operation. We assume hardware
+//! support for huge TLB pages").
+//!
+//! A 64-entry fully-associative DTLB over 2 MB huge pages: at the paper's
+//! footprints (<= 64 MB = 32 pages) everything fits, which is exactly the
+//! paper's argument for assuming translation is never the bottleneck. The
+//! model keeps the books (and charges a page-walk penalty when a workload
+//! ever exceeds the reach) so the assumption is *checked*, not silent.
+
+/// Fully-associative TLB with pseudo-LRU (stamp) replacement.
+pub struct Tlb {
+    /// (virtual page number, lru stamp); u64::MAX = invalid.
+    entries: Vec<(u64, u64)>,
+    page_shift: u32,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// CPU cycles per page walk (charged on a miss).
+    pub walk_penalty: u64,
+}
+
+impl Tlb {
+    /// Default per Sec. III-C: 64 entries of 2 MB huge pages, ~30-cycle walk.
+    pub fn huge_page_default() -> Self {
+        Self::new(64, 21, 30)
+    }
+
+    pub fn new(entries: usize, page_shift: u32, walk_penalty: u64) -> Self {
+        assert!(entries >= 1);
+        Self {
+            entries: vec![(u64::MAX, 0); entries],
+            page_shift,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            walk_penalty,
+        }
+    }
+
+    /// Translate one access; returns the added latency (0 on a hit).
+    pub fn access(&mut self, addr: u64) -> u64 {
+        let vpn = addr >> self.page_shift;
+        self.tick += 1;
+        for e in &mut self.entries {
+            if e.0 == vpn {
+                e.1 = self.tick;
+                self.hits += 1;
+                return 0;
+            }
+        }
+        self.misses += 1;
+        // install over LRU
+        let mut victim = 0;
+        let mut best = u64::MAX;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.0 == u64::MAX {
+                victim = i;
+                break;
+            }
+            if e.1 < best {
+                best = e.1;
+                victim = i;
+            }
+        }
+        self.entries[victim] = (vpn, self.tick);
+        self.walk_penalty
+    }
+
+    /// TLB reach in bytes (entries x page size).
+    pub fn reach(&self) -> u64 {
+        self.entries.len() as u64 * (1 << self.page_shift)
+    }
+
+    pub fn reset(&mut self) {
+        self.entries.fill((u64::MAX, 0));
+        self.tick = 0;
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn huge_pages_cover_paper_footprints() {
+        let t = Tlb::huge_page_default();
+        assert_eq!(t.reach(), 64 * 2 * 1024 * 1024); // 128 MB >= 64 MB
+    }
+
+    #[test]
+    fn first_touch_misses_then_hits() {
+        let mut t = Tlb::huge_page_default();
+        assert_eq!(t.access(0x1_0000_0000), 30);
+        assert_eq!(t.access(0x1_0000_0040), 0); // same 2 MB page
+        assert_eq!(t.access(0x1_0020_0000), 30); // next page
+        assert_eq!((t.hits, t.misses), (1, 2));
+    }
+
+    #[test]
+    fn working_set_within_reach_stabilizes() {
+        let mut t = Tlb::huge_page_default();
+        // 32 pages (64 MB), touched twice: second pass all hits.
+        for pass in 0..2 {
+            for p in 0..32u64 {
+                let lat = t.access(p << 21);
+                if pass == 1 {
+                    assert_eq!(lat, 0, "page {p} missed on second pass");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thrashes_beyond_reach() {
+        let mut t = Tlb::new(4, 21, 30);
+        for _ in 0..3 {
+            for p in 0..8u64 {
+                t.access(p << 21);
+            }
+        }
+        assert!(t.misses > 8, "LRU must thrash: {}", t.misses);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut t = Tlb::huge_page_default();
+        t.access(0);
+        t.reset();
+        assert_eq!((t.hits, t.misses), (0, 0));
+        assert_eq!(t.access(0), 30);
+    }
+}

@@ -1,0 +1,170 @@
+//! Energy model — every coefficient from Table I.
+//!
+//! * Cores: 6 W per active core while it runs.
+//! * Caches: dynamic energy per line access (L1 194 pJ, L2 340 pJ,
+//!   LLC 3.01 nJ) + static power (30 mW / 130 mW / 7 W) over the run.
+//! * 3D memory: 10.8 pJ/bit on the host path, 4.8 pJ/bit on the VIMA path,
+//!   4 W static.
+//! * VIMA logic: 3.2 W while the device is busy (the paper assumes the
+//!   cache/FUs can be gated-vdd when idle), + its cache's dynamic/static.
+
+use crate::config::SystemConfig;
+use crate::stats::StatsReport;
+
+/// Joules per component group.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub core_j: f64,
+    pub cache_dynamic_j: f64,
+    pub cache_static_j: f64,
+    pub dram_dynamic_j: f64,
+    pub dram_static_j: f64,
+    pub vima_j: f64,
+    pub total_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn dump_into(&self, report: &mut StatsReport) {
+        report.set("energy.core_j", self.core_j);
+        report.set("energy.cache_dynamic_j", self.cache_dynamic_j);
+        report.set("energy.cache_static_j", self.cache_static_j);
+        report.set("energy.dram_dynamic_j", self.dram_dynamic_j);
+        report.set("energy.dram_static_j", self.dram_static_j);
+        report.set("energy.vima_j", self.vima_j);
+        report.set("energy.total_j", self.total_j);
+    }
+}
+
+pub struct EnergyModel {
+    cfg: SystemConfig,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self { cfg: cfg.clone() }
+    }
+
+    /// Compute the run's energy from the final counter report.
+    pub fn compute(&self, report: &StatsReport, cycles: u64, active_cores: usize) -> EnergyBreakdown {
+        let g = |k: &str| report.get(k).unwrap_or(0.0);
+        let seconds = cycles as f64 / (self.cfg.core.freq_ghz * 1e9);
+
+        // --- cores (active only; idle cores are power-gated / parked) ---
+        let core_j = self.cfg.core.power_w * seconds * active_cores as f64;
+
+        // --- caches: dynamic per access + writeback, static over time ---
+        let pj = 1e-12;
+        let cache_dynamic_j = (g("l1d.accesses") + g("l1d.writebacks"))
+            * self.cfg.l1d.dyn_pj_per_access
+            * pj
+            + (g("l2.accesses") + g("l2.writebacks")) * self.cfg.l2.dyn_pj_per_access * pj
+            + (g("llc.accesses") + g("llc.writebacks")) * self.cfg.llc.dyn_pj_per_access * pj;
+        // L1I mirrors L1D static cost (timing untracked; kernels always hit).
+        let per_core_static_mw =
+            2.0 * self.cfg.l1d.static_mw + self.cfg.l2.static_mw;
+        let cache_static_j = (per_core_static_mw * 1e-3 * active_cores as f64
+            + self.cfg.llc.static_mw * 1e-3)
+            * seconds;
+
+        // --- 3D memory ---
+        let dram_dynamic_j = g("mem.host_bits") * self.cfg.mem.x86_pj_per_bit * pj
+            + g("mem.vima_bits") * self.cfg.mem.vima_pj_per_bit * pj;
+        let dram_static_j = self.cfg.mem.static_w * seconds;
+
+        // --- VIMA logic layer (gated when unused) ---
+        let vima_used = g("vima.instructions") > 0.0 || g("hive.computes") > 0.0;
+        let vima_j = if vima_used {
+            let busy = g("vima.busy_until").max(g("hive.writeback_cycles")).min(cycles as f64);
+            let busy_s = busy / (self.cfg.core.freq_ghz * 1e9);
+            self.cfg.vima.power_w * busy_s
+                + (g("vima.vcache_hits") + g("vima.vcache_misses"))
+                    * self.cfg.vima.cache_dyn_pj_per_access
+                    * pj
+                + self.cfg.vima.cache_static_mw * 1e-3 * busy_s
+        } else {
+            0.0
+        };
+
+        let total_j =
+            core_j + cache_dynamic_j + cache_static_j + dram_dynamic_j + dram_static_j + vima_j;
+        EnergyBreakdown {
+            core_j,
+            cache_dynamic_j,
+            cache_static_j,
+            dram_dynamic_j,
+            dram_static_j,
+            vima_j,
+            total_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(pairs: &[(&str, f64)]) -> StatsReport {
+        let mut r = StatsReport::new();
+        for (k, v) in pairs {
+            r.set(*k, *v);
+        }
+        r
+    }
+
+    #[test]
+    fn core_energy_scales_with_cores_and_time() {
+        let m = EnergyModel::new(&SystemConfig::default());
+        let r = report_with(&[]);
+        let e1 = m.compute(&r, 2_000_000_000, 1); // 1 s at 2 GHz
+        let e4 = m.compute(&r, 2_000_000_000, 4);
+        assert!((e1.core_j - 6.0).abs() < 1e-9);
+        assert!((e4.core_j - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_energy_per_bit_paths_differ() {
+        let m = EnergyModel::new(&SystemConfig::default());
+        let bits = 1e12;
+        let host = m.compute(&report_with(&[("mem.host_bits", bits)]), 1000, 1);
+        let vima = m.compute(&report_with(&[("mem.vima_bits", bits)]), 1000, 1);
+        assert!((host.dram_dynamic_j - 10.8).abs() < 1e-6);
+        assert!((vima.dram_dynamic_j - 4.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vima_power_gated_when_unused() {
+        let m = EnergyModel::new(&SystemConfig::default());
+        let e = m.compute(&report_with(&[("l1d.accesses", 100.0)]), 1000, 1);
+        assert_eq!(e.vima_j, 0.0);
+    }
+
+    #[test]
+    fn llc_access_energy_dominates_l1() {
+        let m = EnergyModel::new(&SystemConfig::default());
+        let l1 = m.compute(&report_with(&[("l1d.accesses", 1e6)]), 1000, 1);
+        let llc = m.compute(&report_with(&[("llc.accesses", 1e6)]), 1000, 1);
+        assert!(llc.cache_dynamic_j > 10.0 * l1.cache_dynamic_j);
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let m = EnergyModel::new(&SystemConfig::default());
+        let e = m.compute(
+            &report_with(&[
+                ("l1d.accesses", 1e6),
+                ("mem.host_bits", 1e9),
+                ("vima.instructions", 10.0),
+                ("vima.busy_until", 500.0),
+            ]),
+            1000,
+            2,
+        );
+        let sum = e.core_j
+            + e.cache_dynamic_j
+            + e.cache_static_j
+            + e.dram_dynamic_j
+            + e.dram_static_j
+            + e.vima_j;
+        assert!((e.total_j - sum).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,317 @@
+//! HIVE comparator (Alves et al., *"Large vector extensions inside the HMC"*,
+//! DATE 2016) — the state-of-the-art the paper compares against in Fig. 2.
+//!
+//! HIVE exposes an 8-entry register bank of 8 KB vectors on the logic layer.
+//! Code runs as *transactions*: the register bank is locked, vectors are
+//! loaded into registers, FU ops execute register-to-register, and the unlock
+//! forces a **sequential** write-back of every dirty register (Sec. III-E).
+//!
+//! Two behavioural differences vs VIMA matter for Fig. 2's shape:
+//!
+//! * no stop-and-go: HIVE ops are posted, so loads for the next vectors
+//!   overlap FU work (HIVE wins on pure streaming like VecSum) — at the cost
+//!   of non-precise exceptions;
+//! * the lock + sequential unlock write-back serializes every 8 vectors
+//!   (HIVE loses on MemSet and on reuse-heavy Stencil).
+
+use crate::config::HiveConfig;
+use crate::isa::{HiveOp, VDtype, VimaFuKind};
+use crate::mem3d::Mem3D;
+use crate::stats::StatsReport;
+
+#[derive(Debug, Default, Clone)]
+pub struct HiveStats {
+    pub transactions: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub computes: u64,
+    pub lock_wait_cycles: u64,
+    pub writeback_cycles: u64,
+    pub busy_until: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct HiveReg {
+    ready: u64,
+    dirty: bool,
+    addr: u64,
+}
+
+/// The HIVE device on the logic layer.
+pub struct HiveDevice {
+    pub cfg: HiveConfig,
+    cpu_ghz: f64,
+    regs: Vec<HiveReg>,
+    /// Transaction state: when the current lock was released last.
+    lock_free_at: u64,
+    /// Outstanding lock acquisitions (multiple host threads may have
+    /// transactions in flight in processing order; the bank serializes
+    /// them through `lock_free_at`).
+    lock_depth: u64,
+    lock_acquired_at: u64,
+    /// FU pipelines as in VIMA: [int_alu, int_mul, int_div, fp_alu, fp_mul, fp_div].
+    fu_free: [u64; 6],
+    /// Sequential write-back chain tail.
+    wb_tail: u64,
+    pub stats: HiveStats,
+}
+
+impl HiveDevice {
+    pub fn new(cfg: &HiveConfig, cpu_ghz: f64) -> Self {
+        Self {
+            regs: vec![HiveReg::default(); cfg.registers],
+            lock_free_at: 0,
+            lock_depth: 0,
+            lock_acquired_at: 0,
+            fu_free: [0; 6],
+            wb_tail: 0,
+            cpu_ghz,
+            stats: HiveStats::default(),
+            cfg: cfg.clone(),
+        }
+    }
+
+    fn subreqs(&self) -> u64 {
+        (self.cfg.vector_bytes / 64) as u64
+    }
+
+    fn fu_index(dtype: VDtype, kind: VimaFuKind) -> usize {
+        let base = if dtype.is_float() { 3 } else { 0 };
+        base + match kind {
+            VimaFuKind::Alu => 0,
+            VimaFuKind::Mul => 1,
+            VimaFuKind::Div => 2,
+        }
+    }
+
+    /// HIVE uses the same FU latencies class as VIMA's array (the designs
+    /// share the 256-lane datapath; HIVE just lacks the cache).
+    fn fu_latency(&self, dtype: VDtype, kind: VimaFuKind) -> u64 {
+        let vima_cycles = match (dtype.is_float(), kind) {
+            (false, VimaFuKind::Alu) => 8,
+            (false, VimaFuKind::Mul) => 12,
+            (false, VimaFuKind::Div) => 28,
+            (true, VimaFuKind::Alu) => 13,
+            (true, VimaFuKind::Mul) => 13,
+            (true, VimaFuKind::Div) => 28,
+        };
+        (vima_cycles as f64 * self.cpu_ghz / self.cfg.freq_ghz).ceil() as u64
+    }
+
+    /// Fetch one vector into register `r` (parallel sub-requests).
+    fn load_reg(&mut self, r: usize, addr: u64, at: u64, mem: &mut Mem3D) -> u64 {
+        self.stats.loads += 1;
+        let mut ready = at;
+        for i in 0..self.subreqs() {
+            ready = ready.max(mem.vima_access(addr + i * 64, false, at).done);
+        }
+        self.regs[r] = HiveReg { ready, dirty: false, addr };
+        ready
+    }
+
+    /// Sequentially write register `r` back (one vector fully, then next).
+    fn store_reg(&mut self, r: usize, addr: u64, at: u64, mem: &mut Mem3D) -> u64 {
+        self.stats.stores += 1;
+        let start = if self.cfg.sequential_writeback {
+            at.max(self.wb_tail).max(self.regs[r].ready)
+        } else {
+            at.max(self.regs[r].ready)
+        };
+        let mut done = start;
+        for i in 0..self.subreqs() {
+            done = done.max(mem.vima_access(addr + i * 64, true, start).done);
+        }
+        self.wb_tail = done;
+        self.regs[r].dirty = false;
+        self.stats.writeback_cycles += done - at;
+        done
+    }
+
+    /// Process one HIVE op arriving at CPU-cycle `at` (posted: the host does
+    /// not wait). Returns the op's internal completion time.
+    pub fn execute(&mut self, op: &HiveOp, at: u64, mem: &mut Mem3D) -> u64 {
+        match *op {
+            HiveOp::Lock => {
+                self.stats.transactions += 1;
+                let start = at.max(self.lock_free_at);
+                self.stats.lock_wait_cycles += start - at;
+                self.lock_acquired_at = start + self.cfg.lock_cycles;
+                self.lock_depth += 1;
+                self.lock_acquired_at
+            }
+            HiveOp::Unlock => {
+                debug_assert!(self.lock_depth > 0, "unlock without lock");
+                // Sequential write-back of every dirty register.
+                let mut t = at.max(self.lock_acquired_at);
+                for r in 0..self.regs.len() {
+                    if self.regs[r].dirty {
+                        let addr = self.regs[r].addr;
+                        t = self.store_reg(r, addr, t, mem);
+                    }
+                }
+                let done = t + self.cfg.unlock_cycles;
+                self.lock_free_at = done;
+                self.lock_depth = self.lock_depth.saturating_sub(1);
+                self.stats.busy_until = self.stats.busy_until.max(done);
+                done
+            }
+            HiveOp::LoadReg { reg, addr } => {
+                let start = at.max(self.lock_acquired_at);
+                let done = self.load_reg(reg as usize, addr, start, mem);
+                self.stats.busy_until = self.stats.busy_until.max(done);
+                done
+            }
+            HiveOp::StoreReg { reg, addr } => {
+                let start = at.max(self.lock_acquired_at);
+                let done = self.store_reg(reg as usize, addr, start, mem);
+                self.stats.busy_until = self.stats.busy_until.max(done);
+                done
+            }
+            HiveOp::Compute { op, dtype, r1, r2, rd } => {
+                self.stats.computes += 1;
+                let deps = self.regs[r1 as usize]
+                    .ready
+                    .max(self.regs[r2 as usize].ready)
+                    .max(self.lock_acquired_at)
+                    .max(at);
+                let fu = Self::fu_index(dtype, op.fu_kind());
+                let start = deps.max(self.fu_free[fu]);
+                let done = start + self.fu_latency(dtype, op.fu_kind());
+                self.fu_free[fu] = done;
+                let dst = &mut self.regs[rd as usize];
+                dst.ready = done;
+                dst.dirty = true;
+                // dst address is bound at StoreReg/unlock time by the trace;
+                // keep the last known target if any.
+                self.stats.busy_until = self.stats.busy_until.max(done);
+                done
+            }
+        }
+    }
+
+    /// Bind the memory address a register will write back to (set by the
+    /// trace generator when a compute result has a known destination).
+    pub fn bind_reg_addr(&mut self, reg: u8, addr: u64) {
+        self.regs[reg as usize].addr = addr;
+    }
+
+    /// All in-flight work completed.
+    pub fn drained_at(&self) -> u64 {
+        self.stats.busy_until.max(self.wb_tail)
+    }
+
+    pub fn dump_stats(&self, report: &mut StatsReport) {
+        let s = &self.stats;
+        report.add("hive.transactions", s.transactions as f64);
+        report.add("hive.loads", s.loads as f64);
+        report.add("hive.stores", s.stores as f64);
+        report.add("hive.computes", s.computes as f64);
+        report.add("hive.lock_wait_cycles", s.lock_wait_cycles as f64);
+        report.add("hive.writeback_cycles", s.writeback_cycles as f64);
+    }
+
+    pub fn reset(&mut self) {
+        for r in &mut self.regs {
+            *r = HiveReg::default();
+        }
+        self.lock_free_at = 0;
+        self.lock_depth = 0;
+        self.lock_acquired_at = 0;
+        self.fu_free = [0; 6];
+        self.wb_tail = 0;
+        self.stats = HiveStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mem3DConfig;
+    use crate::isa::VimaOp;
+
+    fn setup() -> (HiveDevice, Mem3D) {
+        (
+            HiveDevice::new(&HiveConfig::default(), 2.0),
+            Mem3D::new(&Mem3DConfig::default(), 2.0),
+        )
+    }
+
+    #[test]
+    fn lock_costs_cycles() {
+        let (mut h, mut mem) = setup();
+        let t = h.execute(&HiveOp::Lock, 100, &mut mem);
+        assert_eq!(t, 100 + h.cfg.lock_cycles);
+    }
+
+    #[test]
+    fn loads_within_transaction_overlap() {
+        let (mut h, mut mem) = setup();
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
+        let a = h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
+        let b = h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem);
+        // Issued at the same time, different vaults: near-full overlap.
+        assert!(b < a + 100, "loads should overlap: {a} vs {b}");
+    }
+
+    #[test]
+    fn compute_waits_for_registers() {
+        let (mut h, mut mem) = setup();
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
+        let la = h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
+        let lb = h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem);
+        let c = h.execute(
+            &HiveOp::Compute { op: VimaOp::Add, dtype: VDtype::F32, r1: 0, r2: 1, rd: 2 },
+            t0,
+            &mut mem,
+        );
+        assert!(c > la.max(lb), "compute must wait for both loads");
+    }
+
+    #[test]
+    fn unlock_serializes_dirty_writebacks() {
+        let (mut h, mut mem) = setup();
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
+        // Two dirty result registers.
+        for (rd, dst) in [(2u8, 0x8000u64), (3, 0xA000)] {
+            h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
+            h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem);
+            h.execute(
+                &HiveOp::Compute { op: VimaOp::Add, dtype: VDtype::F32, r1: 0, r2: 1, rd },
+                t0,
+                &mut mem,
+            );
+            h.bind_reg_addr(rd, dst);
+        }
+        let writes_before = mem.stats.vima_writes;
+        let t1 = h.execute(&HiveOp::Unlock, t0 + 1000, &mut mem);
+        assert_eq!(mem.stats.vima_writes - writes_before, 256);
+        // Sequential: strictly more than one parallel vector writeback.
+        let (h2, mut mem2) = setup();
+        let mut one = 0;
+        for i in 0..128u64 {
+            one = one.max(mem2.vima_access(0x8000 + i * 64, true, 0).done);
+        }
+        let _ = h2;
+        assert!(t1 - (t0 + 1000) > one, "writeback must serialize");
+    }
+
+    #[test]
+    fn second_lock_waits_for_unlock() {
+        let (mut h, mut mem) = setup();
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
+        let t1 = h.execute(&HiveOp::Unlock, t0 + 10, &mut mem);
+        let t2 = h.execute(&HiveOp::Lock, 5, &mut mem); // arrives "early"
+        assert!(t2 >= t1, "lock must wait for previous unlock");
+        assert!(h.stats.lock_wait_cycles > 0);
+    }
+
+    #[test]
+    fn explicit_store_reg_writes_memory() {
+        let (mut h, mut mem) = setup();
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
+        h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
+        let w = mem.stats.vima_writes;
+        h.execute(&HiveOp::StoreReg { reg: 0, addr: 0x4000 }, t0, &mut mem);
+        assert_eq!(mem.stats.vima_writes - w, 128);
+    }
+}

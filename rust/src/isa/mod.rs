@@ -1,0 +1,295 @@
+//! Instruction-set model: host micro-ops, VIMA vector instructions, and the
+//! HIVE transaction ops, plus the trace-event container the simulator consumes.
+//!
+//! The simulator is trace-driven (the paper used Pin-generated traces; we
+//! generate equivalent synthetic streams in [`crate::trace`]). A trace is a
+//! sequence of [`TraceEvent`]s: ordinary x86-like micro-ops for the baseline
+//! portions, [`VimaInstr`]s for code compiled against Intrinsics-VIMA, and
+//! [`HiveOp`]s for the HIVE comparator.
+
+/// Functional-unit classes of the out-of-order core (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FuType {
+    IntAlu,
+    IntMul,
+    IntDiv,
+    FpAlu,
+    FpMul,
+    FpDiv,
+    Load,
+    Store,
+    Branch,
+    /// Pipeline slot only (e.g. fences); no FU, 1-cycle.
+    Nop,
+}
+
+/// Register id inside the synthetic trace; `NO_REG` means "unused slot".
+pub type Reg = u8;
+pub const NO_REG: Reg = u8::MAX;
+
+/// One host micro-op as produced by the trace generators.
+///
+/// Kept small (fits in 32 bytes) — the simulator streams hundreds of millions
+/// of these through the core model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uop {
+    /// Static program counter (drives the branch predictor and BTB).
+    pub pc: u64,
+    pub fu: FuType,
+    /// Source registers (`NO_REG` = unused).
+    pub srcs: [Reg; 3],
+    /// Destination register (`NO_REG` = none).
+    pub dst: Reg,
+    /// Memory address for loads/stores (ignored otherwise).
+    pub addr: u64,
+    /// Access size in bytes for loads/stores.
+    pub size: u16,
+    /// For branches: actually taken?
+    pub taken: bool,
+}
+
+impl Uop {
+    pub fn alu(pc: u64, fu: FuType, srcs: [Reg; 3], dst: Reg) -> Self {
+        Self { pc, fu, srcs, dst, addr: 0, size: 0, taken: false }
+    }
+
+    pub fn load(pc: u64, addr: u64, size: u16, dst: Reg) -> Self {
+        Self { pc, fu: FuType::Load, srcs: [NO_REG; 3], dst, addr, size, taken: false }
+    }
+
+    pub fn load_dep(pc: u64, addr: u64, size: u16, srcs: [Reg; 3], dst: Reg) -> Self {
+        Self { pc, fu: FuType::Load, srcs, dst, addr, size, taken: false }
+    }
+
+    pub fn store(pc: u64, addr: u64, size: u16, srcs: [Reg; 3]) -> Self {
+        Self { pc, fu: FuType::Store, srcs, dst: NO_REG, addr, size, taken: false }
+    }
+
+    pub fn branch(pc: u64, taken: bool) -> Self {
+        Self { pc, fu: FuType::Branch, srcs: [NO_REG; 3], dst: NO_REG, addr: 0, size: 0, taken }
+    }
+
+    pub fn is_mem(&self) -> bool {
+        matches!(self.fu, FuType::Load | FuType::Store)
+    }
+}
+
+/// VIMA operand element types (Intrinsics-VIMA supports 32/64-bit int + fp).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VDtype {
+    I32,
+    I64,
+    F32,
+    F64,
+}
+
+impl VDtype {
+    pub fn bytes(&self) -> usize {
+        match self {
+            VDtype::I32 | VDtype::F32 => 4,
+            VDtype::I64 | VDtype::F64 => 8,
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, VDtype::F32 | VDtype::F64)
+    }
+}
+
+/// VIMA vector opcodes (NEON-flavoured, Sec. III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VimaOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    /// Fused multiply-add (3 sources).
+    Fma,
+    /// Copy src -> dst (MemCopy primitive).
+    Mov,
+    /// Broadcast an immediate into dst (MemSet primitive); no vector sources.
+    Bcast,
+    /// Dot-product reduction: consumes two vectors, produces a scalar.
+    Dot,
+    /// Horizontal sum, one vector -> scalar.
+    RedSum,
+}
+
+impl VimaOp {
+    /// Which VIMA FU pipeline executes this op (alu / mul / div).
+    pub fn fu_kind(&self) -> VimaFuKind {
+        match self {
+            VimaOp::Mul | VimaOp::Dot | VimaOp::Fma => VimaFuKind::Mul,
+            VimaOp::Div => VimaFuKind::Div,
+            _ => VimaFuKind::Alu,
+        }
+    }
+
+    pub fn num_srcs(&self) -> usize {
+        match self {
+            VimaOp::Bcast => 0,
+            VimaOp::Mov | VimaOp::RedSum => 1,
+            VimaOp::Fma => 3,
+            _ => 2,
+        }
+    }
+
+    /// Does this op write a full vector back to memory (vs a scalar)?
+    pub fn writes_vector(&self) -> bool {
+        !matches!(self, VimaOp::Dot | VimaOp::RedSum)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VimaFuKind {
+    Alu,
+    Mul,
+    Div,
+}
+
+/// "No address" sentinel inside [`VimaInstr`] (kept compact: traces stream
+/// hundreds of millions of events).
+pub const NO_ADDR: u64 = u64::MAX;
+
+/// One VIMA instruction: operates over `vector_bytes` starting at each
+/// operand base address (operands are vector-aligned per Intrinsics-VIMA).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VimaInstr {
+    pub op: VimaOp,
+    pub dtype: VDtype,
+    /// Source vector base addresses (`NO_ADDR` = unused/immediate slot).
+    pub srcs: [u64; 3],
+    /// Destination vector base address; `NO_ADDR` for reductions kept
+    /// on-chip until the scalar result is signalled back.
+    dst: u64,
+    pub vector_bytes: u32,
+}
+
+impl VimaInstr {
+    pub fn new(op: VimaOp, dtype: VDtype, srcs: &[u64], dst: Option<u64>, vector_bytes: u32) -> Self {
+        assert!(srcs.len() <= 3, "VIMA instructions have at most 3 sources");
+        assert_eq!(srcs.len(), op.num_srcs(), "{op:?} expects {} sources", op.num_srcs());
+        let mut s = [NO_ADDR; 3];
+        for (slot, &a) in s.iter_mut().zip(srcs) {
+            *slot = a;
+        }
+        Self { op, dtype, srcs: s, dst: dst.unwrap_or(NO_ADDR), vector_bytes }
+    }
+
+    /// Destination base address, if this op writes one.
+    pub fn dst(&self) -> Option<u64> {
+        (self.dst != NO_ADDR).then_some(self.dst)
+    }
+
+    pub fn src_addrs(&self) -> impl Iterator<Item = u64> + '_ {
+        self.srcs.iter().copied().filter(|&a| a != NO_ADDR)
+    }
+
+    /// Unique vector operands to fetch (sources sharing an address fetch once).
+    pub fn unique_src_addrs(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.src_addrs().collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// HIVE ISA (Alves et al., DATE 2016): explicit register-bank management
+/// wrapped in lock/unlock transactions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HiveOp {
+    /// Acquire the register bank (whole-bank lock; blocks other threads).
+    Lock,
+    /// Release the bank; forces sequential write-back of all dirty registers.
+    Unlock,
+    /// Load one vector from memory into register `reg`.
+    LoadReg { reg: u8, addr: u64 },
+    /// Store register `reg` to memory (explicit, pre-unlock).
+    StoreReg { reg: u8, addr: u64 },
+    /// FU operation on registers: `rd = r1 op r2`.
+    Compute { op: VimaOp, dtype: VDtype, r1: u8, r2: u8, rd: u8 },
+}
+
+/// One element of a simulation trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    Uop(Uop),
+    Vima(VimaInstr),
+    Hive(HiveOp),
+}
+
+impl From<Uop> for TraceEvent {
+    fn from(u: Uop) -> Self {
+        TraceEvent::Uop(u)
+    }
+}
+
+impl From<VimaInstr> for TraceEvent {
+    fn from(v: VimaInstr) -> Self {
+        TraceEvent::Vima(v)
+    }
+}
+
+impl From<HiveOp> for TraceEvent {
+    fn from(h: HiveOp) -> Self {
+        TraceEvent::Hive(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uop_is_small() {
+        // The core model streams ~1e8 of these; keep them cache-friendly.
+        assert!(std::mem::size_of::<Uop>() <= 32, "{}", std::mem::size_of::<Uop>());
+        assert!(
+            std::mem::size_of::<TraceEvent>() <= 56,
+            "{}",
+            std::mem::size_of::<TraceEvent>()
+        );
+    }
+
+    #[test]
+    fn vima_instr_construction() {
+        let i = VimaInstr::new(VimaOp::Add, VDtype::F32, &[0x1000, 0x3000], Some(0x5000), 8192);
+        assert_eq!(i.unique_src_addrs(), vec![0x1000, 0x3000]);
+        assert_eq!(i.op.num_srcs(), 2);
+        assert!(i.op.writes_vector());
+    }
+
+    #[test]
+    fn vima_shared_operand_dedup() {
+        let i = VimaInstr::new(VimaOp::Mul, VDtype::F32, &[0x1000, 0x1000], Some(0x5000), 8192);
+        assert_eq!(i.unique_src_addrs(), vec![0x1000]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects 2 sources")]
+    fn vima_wrong_arity_panics() {
+        VimaInstr::new(VimaOp::Add, VDtype::F32, &[0x1000], Some(0x5000), 8192);
+    }
+
+    #[test]
+    fn fu_kind_mapping() {
+        assert_eq!(VimaOp::Add.fu_kind(), VimaFuKind::Alu);
+        assert_eq!(VimaOp::Dot.fu_kind(), VimaFuKind::Mul);
+        assert_eq!(VimaOp::Div.fu_kind(), VimaFuKind::Div);
+        assert_eq!(VimaOp::Bcast.num_srcs(), 0);
+        assert!(!VimaOp::RedSum.writes_vector());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(VDtype::I32.bytes(), 4);
+        assert_eq!(VDtype::F64.bytes(), 8);
+        assert!(VDtype::F32.is_float());
+        assert!(!VDtype::I64.is_float());
+    }
+}

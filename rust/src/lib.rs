@@ -1,0 +1,49 @@
+//! # vima-sim — Vector-In-Memory Architecture reproduction
+//!
+//! A cycle-level simulator + PJRT functional runtime reproducing the paper
+//! *"Vector In Memory Architecture for simple and high efficiency computing"*
+//! (Alves et al., 2022).
+//!
+//! The stack has three layers (see `DESIGN.md`):
+//!
+//! * **Layer 3 (this crate)** — the Rust coordinator: a trace-driven,
+//!   cycle-level timing model of the whole system of Table I (out-of-order
+//!   core, three-level cache hierarchy, 3D-stacked memory with 32 vaults,
+//!   the VIMA logic layer, and the HIVE comparator), plus the experiment
+//!   drivers that regenerate every figure of the paper.
+//! * **Layer 2 (python/compile/model.py)** — JAX workload graphs, AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels modelling the
+//!   256-lane VIMA vector units.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so simulations can be run *functionally* (real numerics)
+//! as well as *temporally* (cycles/energy). Python is never on the run path.
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod energy;
+pub mod hive;
+pub mod intrinsics;
+pub mod isa;
+pub mod mem3d;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod trace;
+pub mod transpile;
+pub mod util;
+pub mod vima;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::config::SystemConfig;
+    pub use crate::coordinator::{
+        workloads::{Workload, WorkloadSet},
+        Experiment, RunSpec,
+    };
+    pub use crate::sim::{Machine, SimResult};
+    pub use crate::trace::{Backend, KernelId};
+}

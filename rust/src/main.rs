@@ -1,0 +1,213 @@
+//! vima-sim CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands regenerate each of the paper's figures/tables, run single
+//! workloads, dump the Table-I configuration, and run the functional
+//! (PJRT-backed) smoke check.
+//!
+//! ```text
+//! vima-sim fig2|fig3|fig4|fig5|ablation|headline|all [--quick] [--out DIR]
+//! vima-sim run <kernel> <backend> [--mb N] [--threads N] [--stats]
+//! vima-sim config [--config FILE]
+//! vima-sim selftest
+//! ```
+
+use anyhow::{bail, Result};
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::SizeScale;
+use vima_sim::coordinator::{Experiment, FigTable};
+use vima_sim::runtime::{default_artifacts_dir, Engine};
+use vima_sim::sim::simulate_threads;
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+use vima_sim::util::cli::Args;
+
+const USAGE: &str = "\
+vima-sim — VIMA (Vector-In-Memory Architecture) paper-reproduction simulator
+
+USAGE:
+  vima-sim <COMMAND> [OPTIONS]
+
+COMMANDS:
+  fig2        Reproduce Fig. 2 (HIVE vs VIMA vs AVX, MemSet/VecSum/Stencil)
+  fig3        Reproduce Fig. 3 (single-thread speedup, 7 kernels x 3 sizes)
+  fig4        Reproduce Fig. 4 (multithreaded AVX vs VIMA, speedup + energy)
+  fig5        Reproduce Fig. 5 (VIMA cache-size sweep)
+  ablation    Sec. III-C ablations (vector size, stop-and-go)
+  headline    Max speedup / energy saving (paper: 26x, 93%)
+  all         Everything above in sequence
+  run         Run one workload: vima-sim run <kernel> <backend> [--mb N]
+              kernels: memset memcopy vecsum stencil matmul knn mlp
+              backends: avx vima hive
+  transpile   Future-work demo: auto-convert an AVX trace to VIMA
+              (vima-sim transpile <kernel> [--mb N])
+  config      Print the effective configuration (Table I + overrides)
+  selftest    Execute every f32 PJRT artifact once (requires `make artifacts`)
+
+OPTIONS:
+  --quick          1/16 dataset sizes (smoke runs)
+  --config FILE    TOML overrides for Table I
+  --out DIR        also write each table as CSV into DIR
+  --threads N      (run) data-parallel cores
+  --mb N           (run) footprint in MiB
+  --stats          (run) dump the full counter report
+  --verbose        progress lines on stderr
+";
+
+fn parse_kernel(s: &str) -> Result<KernelId> {
+    Ok(match s {
+        "memset" => KernelId::MemSet,
+        "memcopy" => KernelId::MemCopy,
+        "vecsum" => KernelId::VecSum,
+        "stencil" => KernelId::Stencil,
+        "matmul" => KernelId::MatMul,
+        "knn" => KernelId::Knn,
+        "mlp" => KernelId::Mlp,
+        _ => bail!("unknown kernel {s:?}"),
+    })
+}
+
+fn parse_backend(s: &str) -> Result<Backend> {
+    Ok(match s {
+        "avx" => Backend::Avx,
+        "vima" => Backend::Vima,
+        "hive" => Backend::Hive,
+        _ => bail!("unknown backend {s:?}"),
+    })
+}
+
+fn emit(table: &FigTable, out: Option<&str>) -> Result<()> {
+    println!("{}", table.to_markdown());
+    if let Some(dir) = out {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = table
+            .title
+            .chars()
+            .take_while(|c| *c != ':')
+            .filter(|c| c.is_alphanumeric())
+            .collect::<String>()
+            .to_lowercase();
+        let path = format!("{dir}/{slug}.csv");
+        std::fs::write(&path, table.to_csv())?;
+        eprintln!("[vima-sim] wrote {path}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+
+    let cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_toml_file(path)?,
+        None => SystemConfig::default(),
+    };
+    cfg.validate()?;
+    let scale = if args.flag("quick") { SizeScale::Quick } else { SizeScale::Paper };
+    let mut exp = Experiment::new(cfg.clone(), scale);
+    exp.verbose = args.flag("verbose");
+    let out = args.get("out");
+
+    match cmd {
+        "fig2" => emit(&exp.fig2(), out)?,
+        "fig3" => emit(&exp.fig3(), out)?,
+        "fig4" => emit(&exp.fig4(), out)?,
+        "fig5" => emit(&exp.fig5(), out)?,
+        "ablation" => {
+            emit(&exp.ablation_vector_size(), out)?;
+            emit(&exp.ablation_stop_and_go(), out)?;
+            emit(&exp.ablation_prefetcher(), out)?;
+        }
+        "headline" => emit(&exp.headline(), out)?,
+        "all" => {
+            emit(&exp.fig2(), out)?;
+            emit(&exp.fig3(), out)?;
+            emit(&exp.fig4(), out)?;
+            emit(&exp.fig5(), out)?;
+            emit(&exp.ablation_vector_size(), out)?;
+            emit(&exp.ablation_stop_and_go(), out)?;
+            emit(&exp.ablation_prefetcher(), out)?;
+            emit(&exp.headline(), out)?;
+        }
+        "config" => print!("{}", cfg.to_toml()),
+        "transpile" => {
+            let kernel = parse_kernel(
+                args.positional.get(1).map(String::as_str).unwrap_or("vecsum"),
+            )?;
+            let mb = args.get_u64("mb", 4);
+            let p = TraceParams::new(kernel, Backend::Avx, mb << 20);
+            let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+            let native = m.run(vec![p.stream()]);
+            let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+            let auto = m.run(vec![vima_sim::transpile::transpile(p.stream())]);
+            let hand = simulate_threads(
+                &cfg,
+                TraceParams::new(kernel, Backend::Vima, mb << 20),
+                1,
+            );
+            println!("{kernel:?} {mb} MiB:");
+            println!("  native AVX trace      : {:>12} cycles", native.cycles);
+            println!(
+                "  auto-transpiled VIMA  : {:>12} cycles ({:.2}x)",
+                auto.cycles,
+                native.cycles as f64 / auto.cycles as f64
+            );
+            println!(
+                "  hand-written VIMA     : {:>12} cycles ({:.2}x)",
+                hand.cycles,
+                native.cycles as f64 / hand.cycles as f64
+            );
+            println!(
+                "  VIMA instrs emitted by the pass: {}",
+                auto.report.get("vima.instructions").unwrap_or(0.0)
+            );
+        }
+        "run" => {
+            let kernel = parse_kernel(
+                args.positional.get(1).map(String::as_str).unwrap_or_default(),
+            )?;
+            let backend = parse_backend(
+                args.positional.get(2).map(String::as_str).unwrap_or_default(),
+            )?;
+            let mb = args.get_u64("mb", 4);
+            let threads = args.get_usize("threads", 1);
+            let p = TraceParams::new(kernel, backend, mb << 20);
+            let r = simulate_threads(&cfg, p, threads);
+            println!(
+                "cycles={} seconds={:.6} energy_j={:.6}",
+                r.cycles, r.seconds, r.energy.total_j
+            );
+            if args.flag("stats") {
+                print!("{}", r.report);
+            }
+        }
+        "selftest" => {
+            let mut engine = Engine::new(default_artifacts_dir())?;
+            let mut names: Vec<String> = engine.names().map(String::from).collect();
+            names.sort();
+            let mut ran = 0;
+            for name in &names {
+                let meta = engine.meta(name).unwrap().clone();
+                let all_f32 = meta.inputs.iter().chain(meta.outputs.iter()).all(|s| s.dtype == "float32");
+                if !all_f32 {
+                    continue; // f32 smoke only; int paths covered by pytest
+                }
+                let inputs: Vec<Vec<f32>> =
+                    meta.inputs.iter().map(|s| vec![1.0f32; s.elements()]).collect();
+                let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                let out = engine.execute_f32(name, &refs)?;
+                anyhow::ensure!(
+                    !meta.outputs.is_empty() && out.len() == meta.outputs[0].elements(),
+                    "{name}: wrong output size"
+                );
+                ran += 1;
+                println!("ok {name} ({} inputs -> {} elems)", refs.len(), out.len());
+            }
+            println!("selftest: {ran}/{} f32 artifacts executed", names.len());
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command {other:?}; see `vima-sim help`"),
+    }
+    Ok(())
+}

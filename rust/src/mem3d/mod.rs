@@ -1,0 +1,383 @@
+//! 3D-stacked memory model (Table I row 5).
+//!
+//! 32 vaults x 8 banks, 256 B row buffers, closed-row policy, DRAM @ 1666 MHz,
+//! 4 serial links @ 8 GHz with 8 B bursts towards the host. All timestamps are
+//! in **CPU cycles** (the host clock); DRAM/link cycles are converted through
+//! the configured frequency ratios.
+//!
+//! The model is latency-forwarding rather than per-cycle: each request
+//! reserves its resources (vault command slot, bank busy window, data bus,
+//! link slots) by advancing per-resource `next_free` clocks, which yields the
+//! same queueing behaviour as a cycle-stepped model for in-order resource
+//! reservation at a fraction of the simulation cost.
+//!
+//! Two ports exist, matching the paper's two data paths:
+//! * [`Mem3D::host_access`] — misses from the host LLC cross the serial
+//!   links, touch one vault/bank, and return over the links.
+//! * [`Mem3D::vima_access`] — VIMA sub-requests are issued *inside* the cube
+//!   by the sequencer (Sec. III-D): no link crossing, full vault parallelism.
+
+use crate::config::Mem3DConfig;
+use crate::stats::StatsReport;
+
+/// Per-request resource usage summary (returned for testing/inspection).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemCompletion {
+    /// Cycle at which data is available at the requester.
+    pub done: u64,
+    pub vault: usize,
+    pub bank: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct MemStats {
+    pub host_reads: u64,
+    pub host_writes: u64,
+    pub vima_reads: u64,
+    pub vima_writes: u64,
+    /// Bits moved on each path (drives the pJ/bit energy numbers).
+    pub host_bits: u64,
+    pub vima_bits: u64,
+    /// Sum of queueing delays (cycles spent waiting for bank/vault/link).
+    pub host_queue_cycles: u64,
+    pub vima_queue_cycles: u64,
+}
+
+/// The stacked-memory cube.
+pub struct Mem3D {
+    cfg: Mem3DConfig,
+    /// `next_free` per bank (vault-major: `vault * banks_per_vault + bank`).
+    bank_free: Vec<u64>,
+    /// Open row per bank (open-row policy ablation; u64::MAX = closed).
+    bank_open_row: Vec<u64>,
+    /// Vault command-issue slot (one command per DRAM cycle).
+    vault_cmd_free: Vec<u64>,
+    /// Vault internal data bus (TSV column) occupancy.
+    vault_data_free: Vec<u64>,
+    /// Serial links, one aggregate channel per direction, in half-cycles
+    /// (64 B occupies the aggregated links for 0.5 CPU cycles at Table I rates).
+    link_to_mem_free_x2: u64,
+    link_from_mem_free_x2: u64,
+    /// Precomputed CPU-cycle latencies.
+    lat_access: u64,
+    lat_cas: u64,
+    lat_row_miss: u64,
+    lat_bank_busy: u64,
+    lat_cmd: u64,
+    lat_data_burst: u64,
+    lat_write: u64,
+    link_halfcycles_per_line: u64,
+    pub stats: MemStats,
+}
+
+impl Mem3D {
+    pub fn new(cfg: &Mem3DConfig, cpu_ghz: f64) -> Self {
+        let n_banks = cfg.vaults * cfg.banks_per_vault;
+        // 64 B line over an 8 B-wide internal bank bus (one flit per DRAM cycle).
+        let data_burst_dram = (64 / 8) as u64;
+        let link_cyc = cfg.link_cycles_per_line(cpu_ghz);
+        Self {
+            bank_free: vec![0; n_banks],
+            bank_open_row: vec![u64::MAX; n_banks],
+            vault_cmd_free: vec![0; cfg.vaults],
+            vault_data_free: vec![0; cfg.vaults],
+            link_to_mem_free_x2: 0,
+            link_from_mem_free_x2: 0,
+            lat_access: cfg.dram_to_cpu(cfg.access_dram_cycles(), cpu_ghz),
+            lat_cas: cfg.dram_to_cpu(cfg.t_cas, cpu_ghz),
+            lat_row_miss: cfg.dram_to_cpu(cfg.t_rp + cfg.t_rcd + cfg.t_cas, cpu_ghz),
+            lat_bank_busy: cfg.dram_to_cpu(cfg.bank_busy_dram_cycles(), cpu_ghz),
+            lat_cmd: cfg.dram_to_cpu(1, cpu_ghz).max(1),
+            lat_data_burst: cfg.dram_to_cpu(data_burst_dram, cpu_ghz),
+            lat_write: cfg.dram_to_cpu(cfg.t_cwd + cfg.t_rcd, cpu_ghz),
+            link_halfcycles_per_line: (link_cyc * 2.0).ceil() as u64,
+            cfg: cfg.clone(),
+            stats: MemStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &Mem3DConfig {
+        &self.cfg
+    }
+
+    /// Latency of one uncontended host read (activate + column + burst +
+    /// link), used e.g. as the prefetch fill-time estimate.
+    pub fn uncontended_read_latency(&self) -> u64 {
+        self.lat_cmd + self.lat_access + self.lat_data_burst + self.link_halfcycles_per_line
+    }
+
+    /// Line-interleaved address mapping with XOR-folded bank/vault hashing:
+    /// consecutive 64 B lines hit consecutive vaults (full stream
+    /// parallelism, Sec. III-D: sub-requests "are issued to different vaults
+    /// and banks"), while higher address bits are folded in so that distinct
+    /// arrays and thread slices land on decorrelated vault/bank phases —
+    /// the standard channel-hash memory controllers use to avoid pathological
+    /// multi-stream bank conflicts.
+    pub fn map(&self, addr: u64) -> (usize, usize, u64) {
+        let line = addr >> 6;
+        let mix = line ^ (line >> 5) ^ (line >> 10) ^ (line >> 15) ^ (line >> 20) ^ (line >> 25);
+        let vault = (mix as usize) & (self.cfg.vaults - 1);
+        let line_in_vault = mix >> self.cfg.vaults.trailing_zeros();
+        let bank = (line_in_vault as usize) & (self.cfg.banks_per_vault - 1);
+        let row = line >> (self.cfg.vaults.trailing_zeros() + self.cfg.banks_per_vault.trailing_zeros() + 2);
+        (vault, bank, row)
+    }
+
+    /// Schedule the DRAM-side portion (vault command + bank + data bus).
+    /// Returns (data_ready_at_vault, queue_delay).
+    fn dram_access(&mut self, addr: u64, is_write: bool, at: u64) -> (u64, u64, usize, usize) {
+        let (vault, bank, row) = self.map(addr);
+        let bank_idx = vault * self.cfg.banks_per_vault + bank;
+
+        // Vault controller issues one command per DRAM cycle.
+        let cmd_start = at.max(self.vault_cmd_free[vault]);
+        self.vault_cmd_free[vault] = cmd_start + self.lat_cmd;
+
+        let bank_start = cmd_start.max(self.bank_free[bank_idx]);
+        let (busy, access) = if self.cfg.open_row {
+            // Open-row ablation: a row-buffer hit pays CAS only; a miss pays
+            // precharge + activate + column and keeps the row open.
+            if self.bank_open_row[bank_idx] == row {
+                (self.lat_cas, self.lat_cas)
+            } else {
+                self.bank_open_row[bank_idx] = row;
+                (self.lat_row_miss, self.lat_row_miss)
+            }
+        } else {
+            // Table I: closed-row policy — every access activates; the bank
+            // is busy for RAS + RP.
+            (self.lat_bank_busy, if is_write { self.lat_write } else { self.lat_access })
+        };
+        self.bank_free[bank_idx] = bank_start + busy;
+        let array_done = bank_start + access;
+
+        // Data crosses the vault's internal bus (shared by its 8 banks).
+        let bus_start = array_done.max(self.vault_data_free[vault]);
+        self.vault_data_free[vault] = bus_start + self.lat_data_burst;
+        let done = bus_start + self.lat_data_burst;
+
+        let queue = (bank_start - at) + (bus_start - array_done);
+        (done, queue, vault, bank)
+    }
+
+    /// Reserve one 64 B slot on a link direction; returns transfer-done time.
+    fn link_transfer(free_x2: &mut u64, at: u64, occupancy_x2: u64) -> u64 {
+        let start_x2 = (at * 2).max(*free_x2);
+        *free_x2 = start_x2 + occupancy_x2;
+        (start_x2 + occupancy_x2).div_ceil(2)
+    }
+
+    /// Host-side access for one 64 B line (issued on an LLC miss/writeback).
+    ///
+    /// Reads: command crosses the links, DRAM access, data returns over the
+    /// links. Writes: data crosses the links and is posted; completion is the
+    /// DRAM accept time.
+    pub fn host_access(&mut self, addr: u64, is_write: bool, now: u64) -> MemCompletion {
+        let occ = self.link_halfcycles_per_line;
+        let at_mem = if is_write {
+            // command + 64 B payload to the cube
+            Self::link_transfer(&mut self.link_to_mem_free_x2, now, occ)
+        } else {
+            // command packet: negligible payload, 1 half-cycle slot
+            Self::link_transfer(&mut self.link_to_mem_free_x2, now, 1)
+        };
+        let (dram_done, queue, vault, bank) = self.dram_access(addr, is_write, at_mem);
+        let done = if is_write {
+            dram_done
+        } else {
+            Self::link_transfer(&mut self.link_from_mem_free_x2, dram_done, occ)
+        };
+        if is_write {
+            self.stats.host_writes += 1;
+        } else {
+            self.stats.host_reads += 1;
+        }
+        self.stats.host_bits += 64 * 8;
+        self.stats.host_queue_cycles += queue;
+        MemCompletion { done, vault, bank }
+    }
+
+    /// VIMA-side access for one 64 B sub-request: no link crossing, the
+    /// requester sits on the logic layer under the vaults.
+    pub fn vima_access(&mut self, addr: u64, is_write: bool, now: u64) -> MemCompletion {
+        let (done, queue, vault, bank) = self.dram_access(addr, is_write, now);
+        if is_write {
+            self.stats.vima_writes += 1;
+        } else {
+            self.stats.vima_reads += 1;
+        }
+        self.stats.vima_bits += 64 * 8;
+        self.stats.vima_queue_cycles += queue;
+        MemCompletion { done, vault, bank }
+    }
+
+    /// Earliest cycle at which every bank/bus is idle (drain point).
+    pub fn drained_at(&self) -> u64 {
+        let b = self.bank_free.iter().copied().max().unwrap_or(0);
+        let v = self.vault_data_free.iter().copied().max().unwrap_or(0);
+        b.max(v)
+            .max(self.link_from_mem_free_x2.div_ceil(2))
+            .max(self.link_to_mem_free_x2.div_ceil(2))
+    }
+
+    pub fn dump_stats(&self, report: &mut StatsReport) {
+        let s = &self.stats;
+        report.add("mem.host_reads", s.host_reads as f64);
+        report.add("mem.host_writes", s.host_writes as f64);
+        report.add("mem.vima_reads", s.vima_reads as f64);
+        report.add("mem.vima_writes", s.vima_writes as f64);
+        report.add("mem.host_bits", s.host_bits as f64);
+        report.add("mem.vima_bits", s.vima_bits as f64);
+        report.add("mem.host_queue_cycles", s.host_queue_cycles as f64);
+        report.add("mem.vima_queue_cycles", s.vima_queue_cycles as f64);
+    }
+
+    /// Reset all resource clocks and stats (reuse across runs).
+    pub fn reset(&mut self) {
+        self.bank_free.fill(0);
+        self.bank_open_row.fill(u64::MAX);
+        self.vault_cmd_free.fill(0);
+        self.vault_data_free.fill(0);
+        self.link_to_mem_free_x2 = 0;
+        self.link_from_mem_free_x2 = 0;
+        self.stats = MemStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem() -> Mem3D {
+        Mem3D::new(&Mem3DConfig::default(), 2.0)
+    }
+
+    #[test]
+    fn map_interleaves_lines_across_vaults() {
+        let m = mem();
+        // 32 consecutive lines must cover all 32 vaults.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..32u64 {
+            seen.insert(m.map(i * 64).0);
+        }
+        assert_eq!(seen.len(), 32);
+    }
+
+    #[test]
+    fn map_decorrelates_array_bases() {
+        // The trace layout puts arrays 1 GB apart; equal offsets into
+        // different arrays must not collide on the same (vault, bank).
+        let m = mem();
+        let a = m.map(0x1_0000_0000);
+        let b = m.map(0x2_0000_0000);
+        let c = m.map(0x3_0000_0000);
+        assert!(a != b || b != c, "array streams alias: {a:?} {b:?} {c:?}");
+    }
+
+    #[test]
+    fn single_read_latency() {
+        let mut m = mem();
+        let c = m.vima_access(0, false, 0);
+        // RCD+CAS = 18 DRAM cycles ~ 22 CPU cycles + burst ~ 10 + cmd slot
+        assert!(c.done >= 22 && c.done <= 45, "latency {}", c.done);
+        assert_eq!(m.stats.vima_reads, 1);
+    }
+
+    #[test]
+    fn same_bank_serializes_different_banks_overlap() {
+        let mut m = mem();
+        // Two accesses to the same line -> same bank: second waits.
+        let a = m.vima_access(0, false, 0);
+        let b = m.vima_access(0, false, 0);
+        assert!(b.done > a.done);
+
+        let mut m2 = mem();
+        // Different vaults: near-perfect overlap.
+        let a2 = m2.vima_access(0, false, 0);
+        let b2 = m2.vima_access(64, false, 0);
+        assert!(b2.done <= a2.done + m2.lat_cmd, "{} vs {}", b2.done, a2.done);
+    }
+
+    #[test]
+    fn host_read_pays_link_crossing() {
+        let mut host = mem();
+        let mut vima = mem();
+        let h = host.host_access(0, false, 0);
+        let v = vima.vima_access(0, false, 0);
+        assert!(h.done > v.done, "host {} vs vima {}", h.done, v.done);
+    }
+
+    #[test]
+    fn link_contention_throttles_host_streams() {
+        let mut m = mem();
+        // Saturate: 1000 reads to distinct vaults/banks at cycle 0.
+        let mut last = 0;
+        for i in 0..1000u64 {
+            last = m.host_access(i * 64, false, 0).done;
+        }
+        // Aggregate link BW = 128 B/cycle => 1000 lines need >= 500 cycles.
+        assert!(last >= 500, "links not throttling: {last}");
+    }
+
+    #[test]
+    fn vima_parallel_vector_fetch_is_fast() {
+        let mut m = mem();
+        // One 8 KB vector = 128 sub-requests, line-interleaved.
+        let mut done = 0;
+        for i in 0..128u64 {
+            done = done.max(m.vima_access(i * 64, false, 0).done);
+        }
+        // 128 lines over 32 vaults = 4 per vault: burst-pipelined, far faster
+        // than 128 serial accesses (~128*30 cycles).
+        assert!(done < 150, "vector fetch too slow: {done}");
+        assert_eq!(m.stats.vima_reads, 128);
+    }
+
+    #[test]
+    fn writes_post_faster_than_reads_return() {
+        let mut m = mem();
+        let w = m.host_access(0, true, 0);
+        let mut m2 = mem();
+        let r = m2.host_access(0, false, 0);
+        assert!(w.done <= r.done);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut m = mem();
+        m.host_access(0, false, 0);
+        m.reset();
+        assert_eq!(m.stats.host_reads, 0);
+        assert_eq!(m.drained_at(), 0);
+    }
+
+    #[test]
+    fn open_row_policy_rewards_locality() {
+        let mut cfg = Mem3DConfig::default();
+        cfg.open_row = true;
+        let mut open = Mem3D::new(&cfg, 2.0);
+        let mut closed = mem();
+        // 4 consecutive lines share a 256 B row: sequential same-row hits.
+        let mut t_open = 0;
+        let mut t_closed = 0;
+        for rep in 0..64u64 {
+            let addr = (rep / 4) * 32 * 64 * 8 + (rep % 4) * 64; // same vault/bank row walk
+            let _ = addr;
+        }
+        // simpler: hammer one bank with the same row
+        for _ in 0..32 {
+            t_open = open.vima_access(0, false, t_open).done;
+            t_closed = closed.vima_access(0, false, t_closed).done;
+        }
+        assert!(t_open < t_closed, "open-row must win on locality: {t_open} vs {t_closed}");
+    }
+
+    #[test]
+    fn queueing_stats_accumulate() {
+        let mut m = mem();
+        for _ in 0..10 {
+            m.vima_access(0, false, 0); // same bank, forced queueing
+        }
+        assert!(m.stats.vima_queue_cycles > 0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Functional VIMA: executes the *same* [`VimaInstr`] stream the timing
+//! model consumes, but computes real values through the PJRT artifacts —
+//! the per-instruction HLO modules lowered from the Layer-1 Pallas kernels.
+//!
+//! This is how the end-to-end examples prove the three layers compose: one
+//! trace drives both the cycle model (time/energy) and this functional
+//! executor (numerics), and the numerics are asserted against a pure-Rust
+//! oracle.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::Engine;
+use crate::isa::{VDtype, VimaInstr, VimaOp};
+
+/// Sparse vector memory: base address -> f32 vector contents.
+pub struct FunctionalVima {
+    engine: Engine,
+    memory: HashMap<u64, Vec<f32>>,
+    /// Value used for `Bcast` instructions (the trace carries no immediates;
+    /// the driver sets it before executing a broadcast).
+    pub bcast_value: f32,
+    pub executed: u64,
+}
+
+impl FunctionalVima {
+    pub fn new(engine: Engine) -> Self {
+        Self { engine, memory: HashMap::new(), bcast_value: 0.0, executed: 0 }
+    }
+
+    /// Pre-load a vector into functional memory.
+    pub fn write_vector(&mut self, base: u64, data: Vec<f32>) {
+        self.memory.insert(base, data);
+    }
+
+    pub fn read_vector(&self, base: u64) -> Option<&[f32]> {
+        self.memory.get(&base).map(|v| v.as_slice())
+    }
+
+    fn fetch(&self, base: u64, elems: usize) -> Result<Vec<f32>> {
+        let v = self
+            .memory
+            .get(&base)
+            .ok_or_else(|| anyhow::anyhow!("functional memory miss at {base:#x}"))?;
+        anyhow::ensure!(v.len() == elems, "vector at {base:#x} has {} elems, want {elems}", v.len());
+        Ok(v.clone())
+    }
+
+    /// Execute one f32 VIMA instruction through the PJRT artifacts.
+    pub fn execute(&mut self, instr: &VimaInstr) -> Result<()> {
+        anyhow::ensure!(instr.dtype == VDtype::F32, "functional path supports f32 traces");
+        let elems = instr.vector_bytes as usize / 4;
+        anyhow::ensure!(elems == 2048, "per-instruction artifacts are 8 KB vectors");
+        self.executed += 1;
+
+        let artifact = match instr.op {
+            VimaOp::Add => "vadd_f32",
+            VimaOp::Sub => "vsub_f32",
+            VimaOp::Mul => "vmul_f32",
+            VimaOp::Div => "vdiv_f32",
+            VimaOp::Min => "vmin_f32",
+            VimaOp::Max => "vmax_f32",
+            VimaOp::Fma => "vfma_f32",
+            VimaOp::Mov => "vmov_f32",
+            VimaOp::Bcast => "vbcast_f32",
+            VimaOp::Dot => "vdot_f32",
+            VimaOp::RedSum => "vredsum_f32",
+            op => anyhow::bail!("no f32 artifact for {op:?}"),
+        };
+
+        let mut inputs: Vec<Vec<f32>> = Vec::new();
+        if instr.op == VimaOp::Bcast {
+            inputs.push(vec![self.bcast_value]);
+        } else {
+            for a in instr.src_addrs() {
+                inputs.push(self.fetch(a, elems)?);
+            }
+        }
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = self.engine.execute_f32(artifact, &refs)?;
+
+        if let Some(dst) = instr.dst() {
+            self.memory.insert(dst, out);
+        } else {
+            // reductions: stash the scalar at a well-known slot
+            self.memory.insert(u64::MAX, out);
+        }
+        Ok(())
+    }
+
+    /// Last reduction result (Dot/RedSum with no destination).
+    pub fn last_scalar(&self) -> Option<f32> {
+        self.memory.get(&u64::MAX).and_then(|v| v.first().copied())
+    }
+
+    pub fn into_engine(self) -> Engine {
+        self.engine
+    }
+}

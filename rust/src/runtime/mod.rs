@@ -1,0 +1,228 @@
+//! PJRT functional runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust.
+//!
+//! This is the *functional* half of the simulator: the cycle model (L3)
+//! answers "how long / how much energy", this module answers "what values",
+//! by running the very HLO the Layer-2 JAX graphs (and their Layer-1 Pallas
+//! kernels) lower to. Python is never on this path: artifacts are HLO
+//! **text** files compiled by the PJRT CPU client at load time
+//! (see /opt/xla-example/README.md for why text, not serialized protos).
+//!
+//! The artifact registry is `artifacts/manifest.tsv`:
+//! `name<TAB>inputs<TAB>outputs`, each side `dtype:dim,dim,...` joined by
+//! `;` (scalar shapes use an empty dim list: `float32:`).
+
+pub mod functional;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One artifact's signature from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims) = s.split_once(':').with_context(|| format!("bad spec {s:?}"))?;
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| d.parse::<usize>().with_context(|| format!("bad dim {d:?}")))
+                .collect::<Result<_>>()?
+        };
+        Ok(Self { shape, dtype: dtype.to_string() })
+    }
+}
+
+fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactMeta>> {
+    let mut out = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut cols = line.split('\t');
+        let name = cols.next().context("missing name")?;
+        let ins = cols.next().with_context(|| format!("line {}: missing inputs", lineno + 1))?;
+        let outs = cols.next().with_context(|| format!("line {}: missing outputs", lineno + 1))?;
+        let parse_side = |side: &str| -> Result<Vec<TensorSpec>> {
+            if side == "-" {
+                return Ok(vec![]);
+            }
+            side.split(';').map(TensorSpec::parse).collect()
+        };
+        out.insert(
+            name.to_string(),
+            ArtifactMeta { inputs: parse_side(ins)?, outputs: parse_side(outs)? },
+        );
+    }
+    Ok(out)
+}
+
+/// PJRT engine: artifact registry + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Open the artifacts directory (default `artifacts/` at the repo root).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("missing {manifest_path:?}; run `make artifacts`"))?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e:?}"))?;
+        Ok(Self { client, dir, manifest, compiled: HashMap::new() })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.manifest.keys().map(|s| s.as_str())
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        anyhow::ensure!(self.manifest.contains_key(name), "unknown artifact {name}");
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with the given input literals; returns the
+    /// single output literal (all our entry points return one array,
+    /// lowered as a 1-tuple).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        self.compile(name)?;
+        let meta = &self.manifest[name];
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        let exe = &self.compiled[name];
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        result.to_tuple1().map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Execute with f32 slices in/out (shape checked against the manifest).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let meta =
+            self.meta(name).with_context(|| format!("unknown artifact {name}"))?.clone();
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (spec, data) in meta.inputs.iter().zip(inputs) {
+            anyhow::ensure!(
+                spec.dtype == "float32",
+                "{name}: input is {}, use execute() for non-f32",
+                spec.dtype
+            );
+            anyhow::ensure!(
+                spec.elements() == data.len(),
+                "{name}: expected {} elements, got {}",
+                spec.elements(),
+                data.len()
+            );
+            lits.push(literal_f32(data, &spec.shape)?);
+        }
+        let out = self.execute(name, &lits)?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec {name}: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() <= 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() <= 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Default artifacts directory: `$VIMA_ARTIFACTS` or `artifacts/`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("VIMA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = "vadd_f32\tfloat32:2048;float32:2048\tfloat32:2048\n\
+                    mlp\tfloat32:32,256;float32:256\tint32:32\n\
+                    scalar\tfloat32:\tfloat32:\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m["vadd_f32"].inputs.len(), 2);
+        assert_eq!(m["vadd_f32"].inputs[0].elements(), 2048);
+        assert_eq!(m["mlp"].inputs[0].shape, vec![32, 256]);
+        assert_eq!(m["mlp"].outputs[0].dtype, "int32");
+        assert_eq!(m["scalar"].inputs[0].elements(), 1); // empty shape = scalar
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("name-only-line\n").is_err());
+        assert!(parse_manifest("n\tfloat32-2048\tfloat32:1\n").is_err());
+    }
+
+    #[test]
+    fn manifest_skips_comments() {
+        let m = parse_manifest("# header\n\nvadd\tfloat32:4\tfloat32:4\n").unwrap();
+        assert_eq!(m.len(), 1);
+    }
+}

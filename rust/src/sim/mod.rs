@@ -1,0 +1,343 @@
+//! Full-machine simulation: cores + cache hierarchy + 3D memory + the VIMA
+//! and HIVE logic layers, driven by per-thread trace streams.
+//!
+//! The simulator is deterministic and single-threaded (like SiNUCA): cores
+//! are interleaved in bounded time windows so shared resources (LLC, DRAM
+//! banks, links, the VIMA FUs) observe requests in approximately global time
+//! order.
+
+use crate::cache::MemorySystem;
+use crate::config::SystemConfig;
+use crate::cpu::Core;
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::hive::HiveDevice;
+use crate::isa::TraceEvent;
+use crate::stats::StatsReport;
+use crate::trace::TraceStream;
+use crate::vima::VimaDevice;
+
+/// Outcome of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// End-to-end execution time in CPU cycles (all cores + devices drained).
+    pub cycles: u64,
+    /// Wall-clock seconds at the configured core frequency.
+    pub seconds: f64,
+    /// Total dynamic+static energy, joules.
+    pub energy: EnergyBreakdown,
+    /// Raw counters from every component.
+    pub report: StatsReport,
+}
+
+impl SimResult {
+    /// Speedup of `self` relative to a baseline run.
+    pub fn speedup_vs(&self, baseline: &SimResult) -> f64 {
+        baseline.cycles as f64 / self.cycles as f64
+    }
+
+    /// Energy of `self` relative to a baseline run (1.0 = same).
+    pub fn energy_ratio_vs(&self, baseline: &SimResult) -> f64 {
+        self.energy.total_j / baseline.energy.total_j
+    }
+}
+
+/// The simulated machine.
+pub struct Machine {
+    pub cfg: SystemConfig,
+    cores: Vec<Core>,
+    pub mem: MemorySystem,
+    pub vima: VimaDevice,
+    pub hive: HiveDevice,
+    /// Optional multiplier applied to the final cycle count (trace sampling
+    /// extrapolation; see DESIGN.md §Sampling). Stats scale linearly too.
+    scale: f64,
+}
+
+/// Interleaving window: a core may run at most this far (in cycles) past the
+/// slowest core before yielding. The shared-resource model reserves
+/// bandwidth with monotonic `next_free` clocks (no backfill), so cross-core
+/// request disorder must stay small or later-processed cores queue behind
+/// earlier-processed ones' whole timelines; 4 cycles keeps the skew small
+/// relative to a DRAM round-trip (~70 cycles).
+const WINDOW: u64 = 4;
+
+impl Machine {
+    pub fn new(cfg: &SystemConfig, threads: usize) -> Self {
+        assert!(threads >= 1 && threads <= cfg.core.num_cores, "thread count out of range");
+        Self {
+            cores: (0..threads).map(|i| Core::new(i, &cfg.core)).collect(),
+            mem: MemorySystem::new(cfg, threads),
+            vima: VimaDevice::new(&cfg.vima, cfg.mem.inst_lat_cycles, cfg.core.freq_ghz),
+            hive: HiveDevice::new(&cfg.hive, cfg.core.freq_ghz),
+            scale: 1.0,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Set the sampling extrapolation factor (cycles & energy multiply).
+    pub fn set_scale(&mut self, scale: f64) {
+        assert!(scale >= 1.0);
+        self.scale = scale;
+    }
+
+    /// Process one trace event on core `c`. Returns the core-local time.
+    fn step(&mut self, c: usize, ev: &TraceEvent) -> u64 {
+        match ev {
+            TraceEvent::Uop(u) => self.cores[c].run_uop(u, &mut self.mem),
+            TraceEvent::Vima(v) => {
+                // Stop-and-go dispatch (Sec. III-C): the VIMA instruction
+                // leaves only after everything before it has committed.
+                let t = self.cores[c].drain();
+                // VIMA-aware coherence: write back + invalidate host-cached
+                // lines of every operand range before execution.
+                let mut settle = t;
+                for a in v.src_addrs() {
+                    let (s, _) = self.mem.flush_range(a, v.vector_bytes as usize, t);
+                    settle = settle.max(s);
+                }
+                if let Some(d) = v.dst() {
+                    let (s, _) = self.mem.flush_range(d, v.vector_bytes as usize, t);
+                    settle = settle.max(s);
+                }
+                let done = self.vima.execute(v, settle, &mut self.mem.mem);
+                if self.cfg.vima.stop_and_go {
+                    // Wait for the completion signal + dispatch gap.
+                    self.cores[c].serialize_until(done + self.cfg.vima.dispatch_gap_cycles);
+                    self.cores[c].drain()
+                } else {
+                    // Ablation: fire-and-forget (non-precise exceptions).
+                    t
+                }
+            }
+            TraceEvent::Hive(h) => {
+                // HIVE ops are posted (non-precise): the host continues.
+                let t = self.cores[c].now();
+                self.hive.execute(h, t, &mut self.mem.mem);
+                t
+            }
+        }
+    }
+
+    /// Run one trace stream per thread to completion.
+    pub fn run(&mut self, traces: Vec<TraceStream>) -> SimResult {
+        assert_eq!(traces.len(), self.cores.len(), "one trace per core");
+        let mut streams: Vec<_> = traces.into_iter().map(Some).collect();
+        let mut done = vec![false; streams.len()];
+
+        // Single-core fast path: no windowing/watermark bookkeeping needed.
+        if streams.len() == 1 {
+            let stream = streams[0].as_mut().expect("stream");
+            let mut buf = Vec::new();
+            while {
+                buf.clear();
+                buf.extend(stream.by_ref().take(4096));
+                !buf.is_empty()
+            } {
+                for ev in &buf {
+                    self.step(0, ev);
+                }
+            }
+            done[0] = true;
+        }
+
+        // Interleave cores in bounded windows of simulated time. The start
+        // position rotates every round: whoever issues first in a window gets
+        // the shared resources first, and a fixed order would systematically
+        // starve the last core.
+        let mut round = 0usize;
+        while !done.iter().all(|&d| d) {
+            let watermark = self
+                .cores
+                .iter()
+                .zip(&done)
+                .filter(|(_, &d)| !d)
+                .map(|(c, _)| c.now())
+                .min();
+            let Some(watermark) = watermark else { break };
+            let limit = watermark + WINDOW;
+            round += 1;
+            for i in 0..self.cores.len() {
+                let c = (i + round) % self.cores.len();
+                if done[c] {
+                    continue;
+                }
+                let stream = streams[c].as_mut().expect("stream");
+                while self.cores[c].now() <= limit {
+                    match stream.next() {
+                        Some(ev) => {
+                            self.step(c, &ev);
+                        }
+                        None => {
+                            done[c] = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+        }
+
+        // Drain devices (dirty VIMA cache lines, HIVE write-backs, posted
+        // stores, DRAM).
+        self.mem.drain_pending();
+        let core_end = self.cores.iter().map(|c| c.now()).max().unwrap_or(0);
+        let vima_end = self.vima.drain(core_end, &mut self.mem.mem);
+        let hive_end = self.hive.drained_at();
+        if std::env::var_os("VIMA_DEBUG_SIM").is_some() {
+            let ends: Vec<u64> = self.cores.iter().map(|c| c.now()).collect();
+            eprintln!(
+                "core_ends={ends:?} vima_end={vima_end} hive_end={hive_end} mem_drained={}",
+                self.mem.mem.drained_at()
+            );
+        }
+        let cycles_raw = core_end.max(vima_end).max(hive_end).max(self.mem.mem.drained_at());
+        let cycles = (cycles_raw as f64 * self.scale) as u64;
+
+        let mut report = StatsReport::new();
+        for core in &self.cores {
+            core.dump_stats(&mut report);
+        }
+        self.mem.dump_stats(&mut report);
+        self.vima.dump_stats(&mut report);
+        self.hive.dump_stats(&mut report);
+        if self.scale != 1.0 {
+            // Linear extrapolation of event counters (uniform sampled work).
+            let scaled: Vec<(String, f64)> =
+                report.iter().map(|(k, v)| (k.to_string(), v * self.scale)).collect();
+            let mut r2 = StatsReport::new();
+            for (k, v) in scaled {
+                r2.set(k, v);
+            }
+            report = r2;
+        }
+        report.set("sim.cycles", cycles as f64);
+        report.set("sim.threads", self.cores.len() as f64);
+        report.set("sim.scale", self.scale);
+
+        let energy = EnergyModel::new(&self.cfg).compute(&report, cycles, self.cores.len());
+        let seconds = cycles as f64 / (self.cfg.core.freq_ghz * 1e9);
+        SimResult { cycles, seconds, energy, report }
+    }
+
+    /// Reset every component for a fresh run with the same configuration.
+    pub fn reset(&mut self) {
+        for c in &mut self.cores {
+            c.reset();
+        }
+        self.mem.reset();
+        self.vima.reset();
+        self.hive.reset();
+        self.scale = 1.0;
+    }
+}
+
+/// Convenience: simulate one workload end to end.
+pub fn simulate(cfg: &SystemConfig, params: crate::trace::TraceParams) -> SimResult {
+    simulate_threads(cfg, params, 1)
+}
+
+/// Simulate a data-parallel workload over `threads` cores.
+pub fn simulate_threads(
+    cfg: &SystemConfig,
+    params: crate::trace::TraceParams,
+    threads: usize,
+) -> SimResult {
+    let mut machine = Machine::new(cfg, threads);
+    // Sampling extrapolation for the sub-sampled kernels.
+    let scale = match params.kernel {
+        crate::trace::KernelId::MatMul => {
+            let s = crate::trace::matmul::sampling_for(&params);
+            s.rows_total as f64 / s.rows_simulated as f64
+        }
+        crate::trace::KernelId::Knn => crate::trace::knn::scale_factor(),
+        crate::trace::KernelId::Mlp => crate::trace::mlp::scale_factor(),
+        _ => 1.0,
+    };
+    machine.set_scale(scale.max(1.0));
+    let traces: Vec<_> =
+        (0..threads).map(|t| params.with_threads(t, threads).stream()).collect();
+    machine.run(traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Backend, KernelId, TraceParams};
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn vecsum_vima_beats_avx() {
+        let c = cfg();
+        let avx = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20));
+        let vima = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Vima, 3 << 20));
+        let speedup = vima.speedup_vs(&avx);
+        assert!(speedup > 1.5, "VecSum VIMA speedup {speedup}");
+        assert!(vima.energy_ratio_vs(&avx) < 0.7, "VIMA must save energy");
+    }
+
+    #[test]
+    fn memset_vima_large_speedup() {
+        let c = cfg();
+        let avx = simulate(&c, TraceParams::new(KernelId::MemSet, Backend::Avx, 4 << 20));
+        let vima = simulate(&c, TraceParams::new(KernelId::MemSet, Backend::Vima, 4 << 20));
+        let speedup = vima.speedup_vs(&avx);
+        assert!(speedup > 4.0, "MemSet VIMA speedup {speedup}");
+    }
+
+    #[test]
+    fn multithreading_speeds_up_avx() {
+        let c = cfg();
+        let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20);
+        let t1 = simulate_threads(&c, p, 1);
+        let t4 = simulate_threads(&c, p, 4);
+        let speedup = t1.cycles as f64 / t4.cycles as f64;
+        assert!(speedup > 1.5, "4-thread speedup {speedup}");
+        assert!(speedup <= 4.5);
+    }
+
+    #[test]
+    fn stop_and_go_ablation_changes_time() {
+        let mut c = cfg();
+        let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20);
+        let with = simulate(&c, p);
+        c.vima.stop_and_go = false;
+        let without = simulate(&c, p);
+        assert!(
+            without.cycles < with.cycles,
+            "removing stop-and-go must help: {} vs {}",
+            without.cycles,
+            with.cycles
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let c = cfg();
+        let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20);
+        let a = simulate(&c, p);
+        let b = simulate(&c, p);
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn hive_runs_and_drains() {
+        let c = cfg();
+        let r = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Hive, 1 << 20));
+        assert!(r.cycles > 0);
+        assert!(r.report.get("hive.transactions").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_contains_core_and_memory_keys() {
+        let c = cfg();
+        let r = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20));
+        for key in ["core.uops", "l1d.accesses", "llc.accesses", "mem.host_reads", "sim.cycles"] {
+            assert!(r.report.get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Simulation statistics: typed counters on the hot path, a generic table
+//! for reporting.
+//!
+//! Components own plain-`u64` counter structs (no hashing while simulating);
+//! [`StatsReport`] collects everything at the end of a run for printing and
+//! for the energy model.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A named bag of counters/gauges collected from all components after a run.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct StatsReport {
+    entries: BTreeMap<String, f64>,
+}
+
+impl StatsReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, key: impl Into<String>, value: f64) {
+        self.entries.insert(key.into(), value);
+    }
+
+    pub fn add(&mut self, key: impl Into<String>, value: f64) {
+        *self.entries.entry(key.into()).or_insert(0.0) += value;
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.entries.get(key).copied()
+    }
+
+    /// All keys with a given prefix (e.g. `"l1d."`).
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = (&'a str, f64)> {
+        self.entries
+            .iter()
+            .filter(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Merge another report into this one, summing overlapping keys.
+    pub fn merge(&mut self, other: &StatsReport) {
+        for (k, v) in &other.entries {
+            self.add(k.clone(), *v);
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl fmt::Display for StatsReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.entries {
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                writeln!(f, "{k:<48} {:>16}", *v as i64)?;
+            } else {
+                writeln!(f, "{k:<48} {v:>16.4}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Ratio helper that tolerates zero denominators.
+pub fn ratio(num: f64, den: f64) -> f64 {
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Simple fixed-bucket histogram for latency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Histogram {
+    /// Power-of-two buckets up to `max_exp` (e.g. 16 -> buckets 1,2,4..65536,+inf).
+    pub fn pow2(max_exp: u32) -> Self {
+        let bounds: Vec<u64> = (0..=max_exp).map(|e| 1u64 << e).collect();
+        let n = bounds.len() + 1;
+        Self { bounds, counts: vec![0; n], total: 0, sum: 0, max: 0 }
+    }
+
+    pub fn record(&mut self, value: u64) {
+        let idx = self.bounds.partition_point(|&b| b < value);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        ratio(self.sum as f64, self.total as f64)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile from bucket upper bounds.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.bounds.get(i).copied().unwrap_or(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn dump_into(&self, report: &mut StatsReport, prefix: &str) {
+        report.set(format!("{prefix}.count"), self.total as f64);
+        report.set(format!("{prefix}.mean"), self.mean());
+        report.set(format!("{prefix}.max"), self.max as f64);
+        report.set(format!("{prefix}.p50"), self.percentile(50.0) as f64);
+        report.set(format!("{prefix}.p99"), self.percentile(99.0) as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_merge_and_prefix() {
+        let mut a = StatsReport::new();
+        a.set("l1d.hits", 10.0);
+        a.set("l1d.misses", 2.0);
+        a.set("l2.hits", 1.0);
+        let mut b = StatsReport::new();
+        b.set("l1d.hits", 5.0);
+        a.merge(&b);
+        assert_eq!(a.get("l1d.hits"), Some(15.0));
+        assert_eq!(a.with_prefix("l1d.").count(), 2);
+    }
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::pow2(10);
+        for v in [1, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 221.2).abs() < 1e-9);
+        assert!(h.percentile(50.0) <= 4);
+        assert!(h.percentile(99.0) >= 512);
+    }
+
+    #[test]
+    fn ratio_zero_denominator() {
+        assert_eq!(ratio(5.0, 0.0), 0.0);
+        assert_eq!(ratio(6.0, 3.0), 2.0);
+    }
+}

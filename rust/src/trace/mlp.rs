@@ -1,0 +1,212 @@
+//! MLP inference kernel traces (Sec. IV-A): 16384 test instances with F
+//! features (F in {64, 256, 1024} = 4/16/64 MB instance data), H hidden
+//! neurons.
+//!
+//! Both backends run neuron-major (for each neuron, stream the instance
+//! matrix), which re-reads the instance data H times — the access pattern
+//! that makes LLC fit the deciding factor, matching Fig. 3's kNN/MLP
+//! discussion.
+//!
+//! * **AVX**: per (neuron, instance): AVX-512 dot product over F features.
+//! * **VIMA**: feature-major instance matrix; per (neuron, chunk-of-2048
+//!   instances, feature): broadcast the weight, FMA the instance column
+//!   into a resident accumulator; ReLU at the end; host reads activations.
+
+use super::{emit, layout, TraceChunker, TraceParams};
+use crate::isa::{FuType, TraceEvent, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
+
+pub const INSTANCES: u64 = 16384;
+pub const NEURONS: u64 = 32;
+/// Neurons actually simulated (uniform work; harness extrapolates).
+pub const SIM_NEURONS: u64 = 4;
+
+pub fn features_for(footprint: u64) -> u64 {
+    (footprint / (INSTANCES * 4)).max(4)
+}
+
+pub fn scale_factor() -> f64 {
+    NEURONS as f64 / SIM_NEURONS as f64
+}
+
+// ------------------------------------------------------------------- AVX ----
+
+pub struct MlpAvx {
+    f: u64,
+    neuron: u64,
+    end_neuron: u64,
+    inst: u64,
+}
+
+impl MlpAvx {
+    pub fn new(p: &TraceParams) -> Self {
+        let f = features_for(p.footprint);
+        let (lo, hi) = p.slice(SIM_NEURONS);
+        Self { f, neuron: lo, end_neuron: hi, inst: 0 }
+    }
+}
+
+impl TraceChunker for MlpAvx {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.neuron >= self.end_neuron {
+            return false;
+        }
+        // One chunk = dot(weights[neuron], x[inst]) + relu + store. Four
+        // rotating accumulators break the FMA chain (unrolled reduction).
+        let x = layout::A + self.inst * self.f * 4;
+        let w = layout::B + self.neuron * self.f * 4; // L1/L2-resident
+        // zero-idiom accumulator clears (rename-stage, dependency-breaking)
+        for a in 0..(self.f / 16).min(4) {
+            buf.push(Uop::alu(0xAF0 + a * 4, FuType::Nop, [NO_REG; 3], (12 + a) as u8).into());
+        }
+        for c in 0..self.f / 16 {
+            let rx = (c % 4) as u8;
+            let rw = (4 + c % 4) as u8;
+            let acc = (12 + c % 4) as u8;
+            buf.push(Uop::load(0xB00, x + c * 64, 64, rx).into());
+            buf.push(Uop::load(0xB08, w + c * 64, 64, rw).into());
+            buf.push(Uop::alu(0xB10, FuType::FpMul, [rx, rw, acc], acc).into()); // fma
+        }
+        // combine accumulators (log-tree), shuffle-based horizontal reduce,
+        // relu (max), store activation
+        let acc = 15u8;
+        let accs = (self.f / 16).min(4);
+        if accs >= 2 {
+            buf.push(Uop::alu(0xB20, FuType::FpAlu, [12, 13, NO_REG], 12).into());
+        }
+        if accs >= 4 {
+            buf.push(Uop::alu(0xB24, FuType::FpAlu, [14, 15, NO_REG], 14).into());
+            buf.push(Uop::alu(0xB28, FuType::FpAlu, [12, 14, NO_REG], 12).into());
+        }
+        buf.push(Uop::alu(0xB30, FuType::IntAlu, [12, NO_REG, NO_REG], 13).into()); // shuffle
+        buf.push(Uop::alu(0xB34, FuType::FpAlu, [12, 13, NO_REG], 12).into());
+        buf.push(Uop::alu(0xB38, FuType::IntAlu, [12, NO_REG, NO_REG], 13).into()); // shuffle
+        buf.push(Uop::alu(0xB3C, FuType::FpAlu, [12, 13, NO_REG], acc).into());
+        buf.push(Uop::alu(0xB40, FuType::FpAlu, [acc, NO_REG, NO_REG], acc).into()); // relu
+        let out = layout::C + (self.neuron * INSTANCES + self.inst) * 4;
+        buf.push(Uop::store(0xB48, out, 4, [acc, NO_REG, NO_REG]).into());
+
+        self.inst += 1;
+        if self.inst >= INSTANCES {
+            self.inst = 0;
+            self.neuron += 1;
+        }
+        emit::loop_ctl(buf, 0xB50, 16, self.neuron < self.end_neuron);
+        true
+    }
+}
+
+// ------------------------------------------------------------------ VIMA ----
+
+/// Feature-major VIMA MLP. Instance column for (feature f, chunk c) lives at
+/// `A + (f * chunks + c) * 8192`.
+pub struct MlpVima {
+    f: u64,
+    chunks: u64,
+    neuron: u64,
+    end_neuron: u64,
+    chunk: u64,
+    feat: u64,
+    vb: u32,
+    scratch: u64,
+}
+
+impl MlpVima {
+    pub fn new(p: &TraceParams) -> Self {
+        let f = features_for(p.footprint);
+        let vb = p.vector_bytes;
+        let chunks = INSTANCES / (vb / 4) as u64;
+        let (lo, hi) = p.slice(SIM_NEURONS);
+        Self {
+            f,
+            chunks: chunks.max(1),
+            neuron: lo,
+            end_neuron: hi,
+            chunk: 0,
+            feat: 0,
+            vb,
+            scratch: layout::SCRATCH + p.thread as u64 * (1 << 20),
+        }
+    }
+}
+
+impl TraceChunker for MlpVima {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.neuron >= self.end_neuron {
+            return false;
+        }
+        let vb = self.vb;
+        let acc = self.scratch;
+        let wb = self.scratch + vb as u64;
+
+        if self.feat == 0 {
+            buf.push(VimaInstr::new(VimaOp::Bcast, VDtype::F32, &[], Some(acc), vb).into());
+        }
+        // scalar weight load + broadcast + FMA with the instance column
+        let w_addr = layout::B + (self.neuron * self.f + self.feat) * 4;
+        let col = layout::A + (self.feat * self.chunks + self.chunk) * 8192;
+        buf.push(Uop::load(0xB80, w_addr, 4, 0).into());
+        buf.push(VimaInstr::new(VimaOp::Bcast, VDtype::F32, &[], Some(wb), vb).into());
+        buf.push(VimaInstr::new(VimaOp::Fma, VDtype::F32, &[wb, col, acc], Some(acc), vb).into());
+        emit::loop_ctl(buf, 0xBA0, 16, true);
+
+        self.feat += 1;
+        if self.feat >= self.f {
+            self.feat = 0;
+            // ReLU on the accumulated activations, then write result vector
+            let out = layout::C + (self.neuron * self.chunks + self.chunk) * 8192;
+            buf.push(VimaInstr::new(VimaOp::Max, VDtype::F32, &[acc, wb], Some(out), vb).into());
+            self.chunk += 1;
+            if self.chunk >= self.chunks {
+                self.chunk = 0;
+                self.neuron += 1;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Backend, KernelId};
+
+    #[test]
+    fn features_match_paper_footprints() {
+        assert_eq!(features_for(4 << 20), 64);
+        assert_eq!(features_for(16 << 20), 256);
+        assert_eq!(features_for(64 << 20), 1024);
+    }
+
+    #[test]
+    fn avx_instance_loads_dominate() {
+        let p = TraceParams::new(KernelId::Mlp, Backend::Avx, 4 << 20);
+        let loads = p
+            .stream()
+            .filter(|e| {
+                matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load && u.addr < layout::B)
+            })
+            .count() as u64;
+        assert_eq!(loads, SIM_NEURONS * INSTANCES * (64 / 16));
+    }
+
+    #[test]
+    fn vima_fma_count() {
+        let p = TraceParams::new(KernelId::Mlp, Backend::Vima, 4 << 20);
+        let fmas = p
+            .stream()
+            .filter(|e| matches!(e, TraceEvent::Vima(v) if v.op == VimaOp::Fma))
+            .count() as u64;
+        // chunks = 16384/2048 = 8, F = 64
+        assert_eq!(fmas, SIM_NEURONS * 8 * 64);
+    }
+
+    #[test]
+    fn vima_emits_relu_per_chunk() {
+        let p = TraceParams::new(KernelId::Mlp, Backend::Vima, 4 << 20);
+        let relus = p
+            .stream()
+            .filter(|e| matches!(e, TraceEvent::Vima(v) if v.op == VimaOp::Max))
+            .count() as u64;
+        assert_eq!(relus, SIM_NEURONS * 8);
+    }
+}

@@ -1,0 +1,287 @@
+//! Synthetic trace generation — the Pin replacement (Sec. IV-A).
+//!
+//! The paper traced real binaries with Pin + Intrinsics-VIMA; the simulator
+//! consumes *dynamic* instruction streams, and the seven kernels are tiny,
+//! fully-specified loops, so we regenerate equivalent streams directly:
+//!
+//! * **AVX backend** — the µop stream an x86-64 + AVX-512 compiler emits for
+//!   the kernel (64 B vector loads/stores, FMAs, pointer bumps, loop
+//!   branches, the same unrolling a `-O3` build uses).
+//! * **VIMA backend** — the same kernel compiled against Intrinsics-VIMA:
+//!   one 8 KB vector instruction where AVX needs 128 iterations, plus the
+//!   scalar loop-control µops that remain on the host.
+//! * **HIVE backend** — the kernel written as HIVE transactions
+//!   (lock / explicit register loads / compute / unlock).
+//!
+//! Streams are generated lazily in chunks (one outer-loop iteration per
+//! refill) so multi-gigabyte-footprint workloads never materialize a trace.
+
+pub mod knn;
+pub mod matmul;
+pub mod mlp;
+pub mod stencil;
+pub mod streaming;
+
+use crate::isa::TraceEvent;
+
+/// Which ISA the kernel was "compiled" for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    Avx,
+    Vima,
+    Hive,
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Avx => write!(f, "AVX"),
+            Backend::Vima => write!(f, "VIMA"),
+            Backend::Hive => write!(f, "HIVE"),
+        }
+    }
+}
+
+/// The paper's seven kernels (Sec. IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    MemSet,
+    MemCopy,
+    VecSum,
+    Stencil,
+    MatMul,
+    Knn,
+    Mlp,
+}
+
+impl std::fmt::Display for KernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            KernelId::MemSet => "MemSet",
+            KernelId::MemCopy => "MemCopy",
+            KernelId::VecSum => "VecSum",
+            KernelId::Stencil => "Stencil",
+            KernelId::MatMul => "MatMul",
+            KernelId::Knn => "kNN",
+            KernelId::Mlp => "MLP",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Array base addresses used by every generator (1 GB apart, vector-aligned).
+pub mod layout {
+    pub const A: u64 = 0x1_0000_0000;
+    pub const B: u64 = 0x2_0000_0000;
+    pub const C: u64 = 0x3_0000_0000;
+    /// Scratch temporaries (stencil partials, kNN accumulators...).
+    pub const SCRATCH: u64 = 0x0_4000_0000;
+}
+
+/// A chunk-refilled trace producer. One `refill` = one outer-loop iteration;
+/// returning `false` means the stream ended (nothing was appended).
+pub trait TraceChunker {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool;
+}
+
+/// Pull-based event stream over a [`TraceChunker`].
+pub struct TraceStream {
+    chunker: Box<dyn TraceChunker>,
+    buf: Vec<TraceEvent>,
+    pos: usize,
+}
+
+impl TraceStream {
+    pub fn new(chunker: Box<dyn TraceChunker>) -> Self {
+        Self { chunker, buf: Vec::with_capacity(4096), pos: 0 }
+    }
+}
+
+impl Iterator for TraceStream {
+    type Item = TraceEvent;
+
+    fn next(&mut self) -> Option<TraceEvent> {
+        while self.pos >= self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+            if !self.chunker.refill(&mut self.buf) {
+                return None;
+            }
+        }
+        let e = self.buf[self.pos];
+        self.pos += 1;
+        Some(e)
+    }
+}
+
+/// Workload parameters handed to the generators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceParams {
+    pub kernel: KernelId,
+    pub backend: Backend,
+    /// Total data footprint in bytes (the paper's "dataset" axis).
+    pub footprint: u64,
+    /// VIMA/HIVE vector size (8192 default; swept by the ablation).
+    pub vector_bytes: u32,
+    /// This thread's index and the total thread count (data-parallel slice).
+    pub thread: usize,
+    pub threads: usize,
+}
+
+impl TraceParams {
+    pub fn new(kernel: KernelId, backend: Backend, footprint: u64) -> Self {
+        Self { kernel, backend, footprint, vector_bytes: 8192, thread: 0, threads: 1 }
+    }
+
+    pub fn with_threads(mut self, thread: usize, threads: usize) -> Self {
+        assert!(thread < threads);
+        self.thread = thread;
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_vector_bytes(mut self, vb: u32) -> Self {
+        self.vector_bytes = vb;
+        self
+    }
+
+    /// Slice `[0, n)` into `threads` contiguous ranges; returns this
+    /// thread's `[lo, hi)`.
+    pub fn slice(&self, n: u64) -> (u64, u64) {
+        let per = n.div_ceil(self.threads as u64);
+        let lo = (self.thread as u64 * per).min(n);
+        let hi = (lo + per).min(n);
+        (lo, hi)
+    }
+
+    /// Build the event stream for these parameters.
+    pub fn stream(&self) -> TraceStream {
+        let c: Box<dyn TraceChunker> = match (self.kernel, self.backend) {
+            (KernelId::MemSet, Backend::Avx) => Box::new(streaming::MemSetAvx::new(self)),
+            (KernelId::MemSet, Backend::Vima) => Box::new(streaming::MemSetVima::new(self)),
+            (KernelId::MemSet, Backend::Hive) => Box::new(streaming::MemSetHive::new(self)),
+            (KernelId::MemCopy, Backend::Avx) => Box::new(streaming::MemCopyAvx::new(self)),
+            (KernelId::MemCopy, Backend::Vima) => Box::new(streaming::MemCopyVima::new(self)),
+            (KernelId::MemCopy, Backend::Hive) => Box::new(streaming::MemCopyHive::new(self)),
+            (KernelId::VecSum, Backend::Avx) => Box::new(streaming::VecSumAvx::new(self)),
+            (KernelId::VecSum, Backend::Vima) => Box::new(streaming::VecSumVima::new(self)),
+            (KernelId::VecSum, Backend::Hive) => Box::new(streaming::VecSumHive::new(self)),
+            (KernelId::Stencil, Backend::Avx) => Box::new(stencil::StencilAvx::new(self)),
+            (KernelId::Stencil, Backend::Vima) => Box::new(stencil::StencilVima::new(self)),
+            (KernelId::Stencil, Backend::Hive) => Box::new(stencil::StencilHive::new(self)),
+            (KernelId::MatMul, Backend::Avx) => Box::new(matmul::MatMulAvx::new(self)),
+            (KernelId::MatMul, Backend::Vima) => Box::new(matmul::MatMulVima::new(self)),
+            (KernelId::Knn, Backend::Avx) => Box::new(knn::KnnAvx::new(self)),
+            (KernelId::Knn, Backend::Vima) => Box::new(knn::KnnVima::new(self)),
+            (KernelId::Mlp, Backend::Avx) => Box::new(mlp::MlpAvx::new(self)),
+            (KernelId::Mlp, Backend::Vima) => Box::new(mlp::MlpVima::new(self)),
+            (k, b) => panic!("no {b} trace generator for {k}"),
+        };
+        TraceStream::new(c)
+    }
+}
+
+/// Emission helpers shared by the generators.
+pub(crate) mod emit {
+    use crate::isa::{FuType, Reg, TraceEvent, Uop, NO_REG};
+
+    /// AVX-512 vector width in bytes.
+    pub const ZMM: u64 = 64;
+
+    /// Scalar loop control: pointer bump + compare&branch (macro-fused).
+    /// `taken` should be false on the final iteration.
+    pub fn loop_ctl(buf: &mut Vec<TraceEvent>, pc: u64, ptr_reg: Reg, taken: bool) {
+        buf.push(Uop::alu(pc, FuType::IntAlu, [ptr_reg, NO_REG, NO_REG], ptr_reg).into());
+        buf.push(Uop::branch(pc + 4, taken).into());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::TraceEvent;
+
+    fn count(params: TraceParams) -> (u64, u64, u64) {
+        let (mut uops, mut vima, mut hive) = (0, 0, 0);
+        for e in params.stream() {
+            match e {
+                TraceEvent::Uop(_) => uops += 1,
+                TraceEvent::Vima(_) => vima += 1,
+                TraceEvent::Hive(_) => hive += 1,
+            }
+        }
+        (uops, vima, hive)
+    }
+
+    #[test]
+    fn every_generator_produces_events() {
+        for kernel in [
+            KernelId::MemSet,
+            KernelId::MemCopy,
+            KernelId::VecSum,
+            KernelId::Stencil,
+            KernelId::MatMul,
+            KernelId::Knn,
+            KernelId::Mlp,
+        ] {
+            for backend in [Backend::Avx, Backend::Vima] {
+                let p = TraceParams::new(kernel, backend, 256 << 10);
+                let (u, v, h) = count(p);
+                assert!(u + v + h > 0, "{kernel}/{backend} empty");
+                if backend == Backend::Vima {
+                    assert!(v > 0, "{kernel}/VIMA produced no VIMA instructions");
+                } else {
+                    assert_eq!(v, 0, "{kernel}/AVX must not produce VIMA instrs");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hive_generators_for_fig2_kernels() {
+        for kernel in [KernelId::MemSet, KernelId::MemCopy, KernelId::VecSum, KernelId::Stencil] {
+            let p = TraceParams::new(kernel, Backend::Hive, 256 << 10);
+            let (_, v, h) = count(p);
+            assert!(h > 0, "{kernel}/HIVE produced no HIVE ops");
+            assert_eq!(v, 0);
+        }
+    }
+
+    #[test]
+    fn vima_moves_same_data_with_fewer_instructions() {
+        let avx = count(TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20));
+        let vima = count(TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20));
+        // One 8 KB VIMA instr covers 128 AVX iterations.
+        assert!(avx.0 > 50 * vima.1, "avx {avx:?} vs vima {vima:?}");
+    }
+
+    #[test]
+    fn thread_slices_partition_the_stream() {
+        let total = count(TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20));
+        let mut sum = 0;
+        for t in 0..4 {
+            let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20).with_threads(t, 4);
+            sum += count(p).0;
+        }
+        // Slices cover the same work within loop-overhead rounding.
+        let diff = (sum as i64 - total.0 as i64).abs();
+        assert!(diff < total.0 as i64 / 20, "sum {sum} vs total {}", total.0);
+    }
+
+    #[test]
+    fn vector_size_scales_instruction_count() {
+        let big = count(TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20));
+        let small = count(
+            TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20).with_vector_bytes(256),
+        );
+        assert!(small.1 >= 30 * big.1, "256 B vectors need ~32x instrs: {small:?} vs {big:?}");
+    }
+
+    #[test]
+    fn footprint_scales_stream_length() {
+        let small = count(TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20)).0;
+        let large = count(TraceParams::new(KernelId::MemCopy, Backend::Avx, 4 << 20)).0;
+        let ratio = large as f64 / small as f64;
+        assert!((3.5..4.5).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,445 @@
+//! Streaming kernels: MemSet, MemCopy, VecSum (Sec. IV-A).
+//!
+//! These have zero data reuse — the pure bandwidth workloads the paper's
+//! intro motivates. Footprint convention (total bytes touched = `footprint`):
+//! MemSet: one array; MemCopy: src+dst halves; VecSum: three equal arrays.
+
+use super::{emit, layout, TraceChunker, TraceParams};
+use crate::isa::{FuType, HiveOp, TraceEvent, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
+
+// ---------------------------------------------------------------- MemSet ----
+
+/// AVX-512 memset: 4x-unrolled 64 B stores from a pre-broadcast register.
+pub struct MemSetAvx {
+    pos: u64,
+    end: u64,
+}
+
+impl MemSetAvx {
+    pub fn new(p: &TraceParams) -> Self {
+        let lines = p.footprint / emit::ZMM;
+        let (lo, hi) = p.slice(lines);
+        Self { pos: lo * emit::ZMM, end: hi * emit::ZMM }
+    }
+}
+
+impl TraceChunker for MemSetAvx {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        // zmm0 holds the fill value (set once outside the loop; negligible).
+        for u in 0..4 {
+            if self.pos >= self.end {
+                break;
+            }
+            buf.push(Uop::store(0x400 + u * 8, layout::A + self.pos, 64, [0, NO_REG, NO_REG]).into());
+            self.pos += emit::ZMM;
+        }
+        emit::loop_ctl(buf, 0x440, 16, self.pos < self.end);
+        true
+    }
+}
+
+/// Intrinsics-VIMA memset: one broadcast instruction per vector.
+pub struct MemSetVima {
+    pos: u64,
+    end: u64,
+    vb: u64,
+}
+
+impl MemSetVima {
+    pub fn new(p: &TraceParams) -> Self {
+        let vecs = p.footprint / p.vector_bytes as u64;
+        let (lo, hi) = p.slice(vecs);
+        let vb = p.vector_bytes as u64;
+        Self { pos: lo * vb, end: hi * vb, vb }
+    }
+}
+
+impl TraceChunker for MemSetVima {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        buf.push(
+            VimaInstr::new(VimaOp::Bcast, VDtype::I32, &[], Some(layout::A + self.pos), self.vb as u32)
+                .into(),
+        );
+        self.pos += self.vb;
+        emit::loop_ctl(buf, 0x480, 16, self.pos < self.end);
+        true
+    }
+}
+
+/// HIVE memset: transactions of 8 broadcast-computes + sequential write-back.
+pub struct MemSetHive {
+    pos: u64,
+    end: u64,
+    vb: u64,
+    regs: u8,
+}
+
+impl MemSetHive {
+    pub fn new(p: &TraceParams) -> Self {
+        let vecs = p.footprint / p.vector_bytes as u64;
+        let (lo, hi) = p.slice(vecs);
+        let vb = p.vector_bytes as u64;
+        Self { pos: lo * vb, end: hi * vb, vb, regs: 8 }
+    }
+}
+
+impl TraceChunker for MemSetHive {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        buf.push(HiveOp::Lock.into());
+        for r in 0..self.regs {
+            if self.pos >= self.end {
+                break;
+            }
+            // Broadcast the immediate into register r, then store it.
+            buf.push(
+                HiveOp::Compute { op: VimaOp::Bcast, dtype: VDtype::I32, r1: r, r2: r, rd: r }
+                    .into(),
+            );
+            buf.push(HiveOp::StoreReg { reg: r, addr: layout::A + self.pos }.into());
+            self.pos += self.vb;
+            emit::loop_ctl(buf, 0x4C0, 16, true);
+        }
+        buf.push(HiveOp::Unlock.into());
+        true
+    }
+}
+
+// --------------------------------------------------------------- MemCopy ----
+
+/// AVX memcopy: 4x-unrolled load+store pairs.
+pub struct MemCopyAvx {
+    pos: u64,
+    end: u64,
+}
+
+impl MemCopyAvx {
+    pub fn new(p: &TraceParams) -> Self {
+        let half = p.footprint / 2;
+        let lines = half / emit::ZMM;
+        let (lo, hi) = p.slice(lines);
+        Self { pos: lo * emit::ZMM, end: hi * emit::ZMM }
+    }
+}
+
+impl TraceChunker for MemCopyAvx {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        for u in 0..4u64 {
+            if self.pos >= self.end {
+                break;
+            }
+            let reg = (u % 4) as u8; // rotate zmm0-3 for ILP
+            buf.push(Uop::load(0x500 + u * 16, layout::A + self.pos, 64, reg).into());
+            buf.push(
+                Uop::store(0x508 + u * 16, layout::B + self.pos, 64, [reg, NO_REG, NO_REG]).into(),
+            );
+            self.pos += emit::ZMM;
+        }
+        emit::loop_ctl(buf, 0x580, 16, self.pos < self.end);
+        true
+    }
+}
+
+/// Intrinsics-VIMA memcopy: one `_vim_mov` per vector.
+pub struct MemCopyVima {
+    pos: u64,
+    end: u64,
+    vb: u64,
+}
+
+impl MemCopyVima {
+    pub fn new(p: &TraceParams) -> Self {
+        let half = p.footprint / 2;
+        let vecs = half / p.vector_bytes as u64;
+        let (lo, hi) = p.slice(vecs);
+        let vb = p.vector_bytes as u64;
+        Self { pos: lo * vb, end: hi * vb, vb }
+    }
+}
+
+impl TraceChunker for MemCopyVima {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        buf.push(
+            VimaInstr::new(
+                VimaOp::Mov,
+                VDtype::I32,
+                &[layout::A + self.pos],
+                Some(layout::B + self.pos),
+                self.vb as u32,
+            )
+            .into(),
+        );
+        self.pos += self.vb;
+        emit::loop_ctl(buf, 0x5C0, 16, self.pos < self.end);
+        true
+    }
+}
+
+/// HIVE memcopy: per transaction, 4 loads then 4 (sequential) stores.
+pub struct MemCopyHive {
+    pos: u64,
+    end: u64,
+    vb: u64,
+}
+
+impl MemCopyHive {
+    pub fn new(p: &TraceParams) -> Self {
+        let half = p.footprint / 2;
+        let vecs = half / p.vector_bytes as u64;
+        let (lo, hi) = p.slice(vecs);
+        let vb = p.vector_bytes as u64;
+        Self { pos: lo * vb, end: hi * vb, vb }
+    }
+}
+
+impl TraceChunker for MemCopyHive {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        buf.push(HiveOp::Lock.into());
+        let mut staged = Vec::new();
+        for r in 0..4u8 {
+            if self.pos >= self.end {
+                break;
+            }
+            buf.push(HiveOp::LoadReg { reg: r, addr: layout::A + self.pos }.into());
+            staged.push((r, layout::B + self.pos));
+            self.pos += self.vb;
+            emit::loop_ctl(buf, 0x600, 16, true);
+        }
+        for (r, dst) in staged {
+            buf.push(HiveOp::StoreReg { reg: r, addr: dst }.into());
+        }
+        buf.push(HiveOp::Unlock.into());
+        true
+    }
+}
+
+// ---------------------------------------------------------------- VecSum ----
+
+/// AVX vecsum: c[i] = a[i] + b[i], 2x-unrolled (2 loads + add + store).
+pub struct VecSumAvx {
+    pos: u64,
+    end: u64,
+}
+
+impl VecSumAvx {
+    pub fn new(p: &TraceParams) -> Self {
+        let third = p.footprint / 3;
+        let lines = third / emit::ZMM;
+        let (lo, hi) = p.slice(lines);
+        Self { pos: lo * emit::ZMM, end: hi * emit::ZMM }
+    }
+}
+
+impl TraceChunker for VecSumAvx {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        for u in 0..2u64 {
+            if self.pos >= self.end {
+                break;
+            }
+            let (ra, rb, rc) = ((u * 3) as u8, (u * 3 + 1) as u8, (u * 3 + 2) as u8);
+            buf.push(Uop::load(0x700 + u * 24, layout::A + self.pos, 64, ra).into());
+            buf.push(Uop::load(0x708 + u * 24, layout::B + self.pos, 64, rb).into());
+            buf.push(
+                Uop::alu(0x710 + u * 24, FuType::FpAlu, [ra, rb, NO_REG], rc).into(),
+            );
+            buf.push(
+                Uop::store(0x718 + u * 24, layout::C + self.pos, 64, [rc, NO_REG, NO_REG]).into(),
+            );
+            self.pos += emit::ZMM;
+        }
+        emit::loop_ctl(buf, 0x740, 16, self.pos < self.end);
+        true
+    }
+}
+
+/// Intrinsics-VIMA vecsum: one `_vim_add` per 8 KB triple.
+pub struct VecSumVima {
+    pos: u64,
+    end: u64,
+    vb: u64,
+}
+
+impl VecSumVima {
+    pub fn new(p: &TraceParams) -> Self {
+        let third = p.footprint / 3;
+        let vecs = third / p.vector_bytes as u64;
+        let (lo, hi) = p.slice(vecs);
+        let vb = p.vector_bytes as u64;
+        Self { pos: lo * vb, end: hi * vb, vb }
+    }
+}
+
+impl TraceChunker for VecSumVima {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        buf.push(
+            VimaInstr::new(
+                VimaOp::Add,
+                VDtype::F32,
+                &[layout::A + self.pos, layout::B + self.pos],
+                Some(layout::C + self.pos),
+                self.vb as u32,
+            )
+            .into(),
+        );
+        self.pos += self.vb;
+        emit::loop_ctl(buf, 0x780, 16, self.pos < self.end);
+        true
+    }
+}
+
+/// HIVE vecsum: per transaction 2x (load, load, add) then unlock write-back.
+pub struct VecSumHive {
+    pos: u64,
+    end: u64,
+    vb: u64,
+}
+
+impl VecSumHive {
+    pub fn new(p: &TraceParams) -> Self {
+        let third = p.footprint / 3;
+        let vecs = third / p.vector_bytes as u64;
+        let (lo, hi) = p.slice(vecs);
+        let vb = p.vector_bytes as u64;
+        Self { pos: lo * vb, end: hi * vb, vb }
+    }
+}
+
+impl TraceChunker for VecSumHive {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        if self.pos >= self.end {
+            return false;
+        }
+        buf.push(HiveOp::Lock.into());
+        for u in 0..2u8 {
+            if self.pos >= self.end {
+                break;
+            }
+            let (ra, rb, rd) = (u * 2, u * 2 + 1, 4 + u);
+            buf.push(HiveOp::LoadReg { reg: ra, addr: layout::A + self.pos }.into());
+            buf.push(HiveOp::LoadReg { reg: rb, addr: layout::B + self.pos }.into());
+            buf.push(
+                HiveOp::Compute { op: VimaOp::Add, dtype: VDtype::F32, r1: ra, r2: rb, rd }.into(),
+            );
+            buf.push(HiveOp::StoreReg { reg: rd, addr: layout::C + self.pos }.into());
+            self.pos += self.vb;
+            emit::loop_ctl(buf, 0x7C0, 16, true);
+        }
+        buf.push(HiveOp::Unlock.into());
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Backend, KernelId};
+
+    fn events(p: TraceParams) -> Vec<TraceEvent> {
+        p.stream().collect()
+    }
+
+    #[test]
+    fn memset_avx_touches_whole_array_once() {
+        let p = TraceParams::new(KernelId::MemSet, Backend::Avx, 64 << 10);
+        let stores: Vec<u64> = events(p)
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Uop(u) if u.fu == FuType::Store => Some(u.addr),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(stores.len(), 1024); // 64 KB / 64 B
+        assert_eq!(stores[0], layout::A);
+        assert_eq!(*stores.last().unwrap(), layout::A + (64 << 10) - 64);
+    }
+
+    #[test]
+    fn memset_vima_one_bcast_per_vector() {
+        let p = TraceParams::new(KernelId::MemSet, Backend::Vima, 64 << 10);
+        let vimas: Vec<VimaInstr> = events(p)
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Vima(v) => Some(*v),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(vimas.len(), 8); // 64 KB / 8 KB
+        assert!(vimas.iter().all(|v| v.op == VimaOp::Bcast));
+    }
+
+    #[test]
+    fn memcopy_avx_loads_match_stores() {
+        let p = TraceParams::new(KernelId::MemCopy, Backend::Avx, 128 << 10);
+        let evs = events(p);
+        let loads = evs
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load))
+            .count();
+        let stores = evs
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Store))
+            .count();
+        assert_eq!(loads, stores);
+        assert_eq!(loads, 1024); // half the footprint
+    }
+
+    #[test]
+    fn vecsum_vima_operands_line_up() {
+        let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 48 << 10);
+        for e in events(p) {
+            if let TraceEvent::Vima(v) = e {
+                let off = v.srcs[0] - layout::A;
+                assert_eq!(v.srcs[1] - layout::B, off);
+                assert_eq!(v.dst().unwrap() - layout::C, off);
+            }
+        }
+    }
+
+    #[test]
+    fn vecsum_hive_transaction_structure() {
+        let p = TraceParams::new(KernelId::VecSum, Backend::Hive, 48 << 10);
+        let evs = events(p);
+        let locks = evs.iter().filter(|e| matches!(e, TraceEvent::Hive(HiveOp::Lock))).count();
+        let unlocks =
+            evs.iter().filter(|e| matches!(e, TraceEvent::Hive(HiveOp::Unlock))).count();
+        assert_eq!(locks, unlocks);
+        assert!(locks >= 1);
+    }
+
+    #[test]
+    fn last_branch_is_not_taken() {
+        let p = TraceParams::new(KernelId::MemSet, Backend::Avx, 16 << 10);
+        let branches: Vec<bool> = events(p)
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Uop(u) if u.fu == FuType::Branch => Some(u.taken),
+                _ => None,
+            })
+            .collect();
+        assert!(!branches.last().unwrap());
+        assert!(branches[..branches.len() - 1].iter().all(|&t| t));
+    }
+}

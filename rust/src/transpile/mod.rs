@@ -1,0 +1,391 @@
+//! AVX -> VIMA trace transpiler — the paper's future-work item
+//! ("Planning also a compiler pass for automatic conversion of AVX into
+//! VIMA instructions, creating a transparent programming interface",
+//! Sec. VI), realized at the trace level, where PRIMO-style NDP compilers
+//! operate on the same information (memory streams + operation mix).
+//!
+//! The pass consumes an AVX µop stream in windows and recognizes
+//! *streaming idioms*: groups of unit-stride memory streams (one per array)
+//! plus the elementwise FP/int operation connecting them. Windows that
+//! cover whole 8 KB spans of every stream are rewritten into VIMA
+//! instructions; anything that does not match (irregular strides, reuse
+//! patterns, partial vectors) passes through untouched, so transpilation is
+//! always sound with respect to the memory traffic simulated.
+//!
+//! Recognized idioms (Sec. IV-A kernels that are pure streams):
+//!
+//! | loads | stores | FP ops       | rewrite            |
+//! |-------|--------|--------------|--------------------|
+//! | 0     | 1      | none         | `Bcast`  (MemSet)  |
+//! | 1     | 1      | none         | `Mov`    (MemCopy) |
+//! | 2     | 1      | add only     | `Add`    (VecSum)  |
+//! | 2     | 1      | mul only     | `Mul`              |
+
+use crate::isa::{FuType, TraceEvent, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
+use crate::trace::{TraceChunker, TraceStream};
+
+/// Bytes per emitted VIMA instruction.
+const VECTOR_BYTES: u64 = 8192;
+/// Hard cap on events buffered per transpilation window.
+const WINDOW_EVENTS: usize = 65536;
+/// Store lines per window (8 vectors' worth): windows end on a vector
+/// boundary so a matching stream covers whole 8 KB spans.
+const WINDOW_STORE_LINES: u64 = 1024;
+
+/// Statistics of one transpilation run.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TranspileStats {
+    pub windows: u64,
+    pub windows_rewritten: u64,
+    pub uops_consumed: u64,
+    pub vima_emitted: u64,
+    pub passthrough_events: u64,
+}
+
+/// One unit-stride memory stream found in a window.
+#[derive(Debug)]
+struct Stream {
+    /// Array region (arrays live 4 GB apart in the trace layout).
+    region: u64,
+    base: u64,
+    lines: u64,
+}
+
+/// Scan a window for per-region unit-stride streams.
+///
+/// Returns `(load_streams, store_streams, fp_adds, fp_muls, other_fp,
+/// other_mem)` or `None` if any region's accesses are not one contiguous
+/// 64 B-stride run.
+fn analyze(window: &[TraceEvent]) -> Option<(Vec<Stream>, Vec<Stream>, u64, u64, u64)> {
+    use std::collections::BTreeMap;
+    let mut loads: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    let mut stores: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    let (mut adds, mut muls, mut other_fp) = (0u64, 0u64, 0u64);
+    for ev in window {
+        match ev {
+            TraceEvent::Uop(u) => match u.fu {
+                FuType::Load => loads.entry(u.addr >> 32).or_default().push(u.addr & !63),
+                FuType::Store => stores.entry(u.addr >> 32).or_default().push(u.addr & !63),
+                FuType::FpAlu => adds += 1,
+                FuType::FpMul => muls += 1,
+                FuType::FpDiv | FuType::IntMul | FuType::IntDiv => other_fp += 1,
+                _ => {}
+            },
+            // already-VIMA or HIVE events: not an AVX window
+            _ => return None,
+        }
+    }
+    let to_streams = |m: BTreeMap<u64, Vec<u64>>| -> Option<Vec<Stream>> {
+        let mut out = Vec::new();
+        for (region, mut addrs) in m {
+            addrs.dedup(); // unrolled bodies revisit the same line
+            let base = *addrs.first()?;
+            for (i, &a) in addrs.iter().enumerate() {
+                if a != base + i as u64 * 64 {
+                    return None; // not a unit-stride run
+                }
+            }
+            out.push(Stream { region, base, lines: addrs.len() as u64 });
+        }
+        Some(out)
+    };
+    Some((to_streams(loads)?, to_streams(stores)?, adds, muls, other_fp))
+}
+
+/// Classify a window's streams into a VIMA opcode.
+fn classify(loads: &[Stream], stores: &[Stream], adds: u64, muls: u64, other: u64) -> Option<VimaOp> {
+    if stores.len() != 1 || other > 0 {
+        return None;
+    }
+    match (loads.len(), adds > 0, muls > 0) {
+        (0, false, false) => Some(VimaOp::Bcast),
+        (1, false, false) => Some(VimaOp::Mov),
+        (2, true, false) => Some(VimaOp::Add),
+        (2, false, true) => Some(VimaOp::Mul),
+        _ => None,
+    }
+}
+
+/// The transpiling stream adaptor.
+pub struct Transpiler {
+    inner: TraceStream,
+    out: Vec<TraceEvent>,
+    pos: usize,
+    window: Vec<TraceEvent>,
+    window_store_lines: u64,
+    exhausted: bool,
+    pub stats: TranspileStats,
+}
+
+impl Transpiler {
+    pub fn new(inner: TraceStream) -> Self {
+        Self {
+            inner,
+            out: Vec::new(),
+            pos: 0,
+            window: Vec::with_capacity(4096),
+            window_store_lines: 0,
+            exhausted: false,
+            stats: TranspileStats::default(),
+        }
+    }
+
+    /// Transpile a full stream into an event vector (tests/inspection).
+    pub fn run(inner: TraceStream) -> (Vec<TraceEvent>, TranspileStats) {
+        let mut t = Self::new(inner);
+        let mut v = Vec::new();
+        for e in t.by_ref() {
+            v.push(e);
+        }
+        (v, t.stats)
+    }
+
+    fn flush_window(&mut self) {
+        self.window_store_lines = 0;
+        self.stats.windows += 1;
+        let rewritten = self.try_rewrite();
+        if !rewritten {
+            self.stats.passthrough_events += self.window.len() as u64;
+            self.out.append(&mut self.window);
+        }
+        self.window.clear();
+    }
+
+    /// Attempt the idiom rewrite; on success fills `self.out` and returns true.
+    fn try_rewrite(&mut self) -> bool {
+        let Some((loads, stores, adds, muls, other)) = analyze(&self.window) else {
+            return false;
+        };
+        let Some(op) = classify(&loads, &stores, adds, muls, other) else {
+            return false;
+        };
+        let dst = &stores[0];
+        // every stream must cover the same whole number of 8 KB vectors
+        let vectors = dst.lines * 64 / VECTOR_BYTES;
+        if vectors == 0 || dst.lines * 64 % VECTOR_BYTES != 0 || dst.base % VECTOR_BYTES != 0 {
+            return false;
+        }
+        for l in &loads {
+            if l.lines != dst.lines || l.base % VECTOR_BYTES != 0 || l.region == dst.region {
+                return false;
+            }
+        }
+        self.stats.windows_rewritten += 1;
+        self.stats.uops_consumed += self.window.len() as u64;
+        let dtype = if op == VimaOp::Mov || op == VimaOp::Bcast { VDtype::I32 } else { VDtype::F32 };
+        for v in 0..vectors {
+            let off = v * VECTOR_BYTES;
+            let srcs: Vec<u64> = loads.iter().map(|l| l.base + off).collect();
+            self.out.push(
+                VimaInstr::new(op, dtype, &srcs, Some(dst.base + off), VECTOR_BYTES as u32).into(),
+            );
+            // keep the loop-control overhead the scalar core still executes
+            self.out.push(Uop::alu(0xE00, FuType::IntAlu, [16, NO_REG, NO_REG], 16).into());
+            self.out.push(Uop::branch(0xE04, true).into());
+            self.stats.vima_emitted += 1;
+        }
+        true
+    }
+}
+
+impl Iterator for Transpiler {
+    type Item = TraceEvent;
+
+    fn next(&mut self) -> Option<TraceEvent> {
+        loop {
+            if self.pos < self.out.len() {
+                let e = self.out[self.pos];
+                self.pos += 1;
+                return Some(e);
+            }
+            self.out.clear();
+            self.pos = 0;
+            if self.exhausted {
+                return None;
+            }
+            // Fill until the window covers a whole number of 8 KB vectors
+            // of store traffic (or the stream/cap ends) so matching streams
+            // align to vector boundaries.
+            while self.window.len() < WINDOW_EVENTS {
+                match self.inner.next() {
+                    Some(e) => {
+                        if let TraceEvent::Uop(u) = &e {
+                            if u.fu == FuType::Store {
+                                self.window_store_lines += 1;
+                            }
+                        }
+                        self.window.push(e);
+                        if self.window_store_lines >= WINDOW_STORE_LINES {
+                            break;
+                        }
+                    }
+                    None => {
+                        self.exhausted = true;
+                        break;
+                    }
+                }
+            }
+            if self.window.is_empty() {
+                return None;
+            }
+            self.flush_window();
+        }
+    }
+}
+
+/// Transpile an AVX trace and wrap it back into a [`TraceStream`].
+pub fn transpile(inner: TraceStream) -> TraceStream {
+    struct C(Transpiler, bool);
+    impl TraceChunker for C {
+        fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+            if self.1 {
+                return false;
+            }
+            buf.extend(self.0.by_ref().take(4096));
+            if buf.is_empty() {
+                self.1 = true;
+                return false;
+            }
+            true
+        }
+    }
+    TraceStream::new(Box::new(C(Transpiler::new(inner), false)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::sim::Machine;
+    use crate::trace::{Backend, KernelId, TraceParams};
+
+    fn count_kinds(events: &[TraceEvent]) -> (u64, u64) {
+        let mut uops = 0;
+        let mut vima = 0;
+        for e in events {
+            match e {
+                TraceEvent::Uop(_) => uops += 1,
+                TraceEvent::Vima(_) => vima += 1,
+                _ => {}
+            }
+        }
+        (uops, vima)
+    }
+
+    #[test]
+    fn vecsum_avx_transpiles_to_vima_adds() {
+        let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20);
+        let (events, stats) = Transpiler::run(p.stream());
+        let (_, vima) = count_kinds(&events);
+        assert!(vima > 0, "no VIMA instructions emitted");
+        assert!(stats.windows_rewritten > 0);
+        // 1 MB per array = 128 vectors
+        assert_eq!(stats.vima_emitted, 128);
+        for e in &events {
+            if let TraceEvent::Vima(v) = e {
+                assert_eq!(v.op, VimaOp::Add);
+            }
+        }
+    }
+
+    #[test]
+    fn memset_avx_transpiles_to_bcast() {
+        let p = TraceParams::new(KernelId::MemSet, Backend::Avx, 1 << 20);
+        let (events, stats) = Transpiler::run(p.stream());
+        assert_eq!(stats.vima_emitted, 128);
+        assert!(events.iter().any(|e| matches!(e, TraceEvent::Vima(v) if v.op == VimaOp::Bcast)));
+    }
+
+    #[test]
+    fn memcopy_avx_transpiles_to_mov() {
+        let p = TraceParams::new(KernelId::MemCopy, Backend::Avx, 2 << 20);
+        let (_, stats) = Transpiler::run(p.stream());
+        assert_eq!(stats.vima_emitted, 128);
+    }
+
+    #[test]
+    fn stencil_does_not_transpile() {
+        // Overlapping row reuse is not a pure stream: the pass must leave
+        // the trace byte-identical.
+        let p = TraceParams::new(KernelId::Stencil, Backend::Avx, 1 << 20);
+        let original: Vec<TraceEvent> = p.stream().collect();
+        let (events, stats) = Transpiler::run(p.stream());
+        assert_eq!(stats.vima_emitted, 0);
+        assert_eq!(events.len(), original.len());
+        assert_eq!(events, original);
+    }
+
+    #[test]
+    fn matmul_does_not_transpile() {
+        let p = TraceParams::new(KernelId::MatMul, Backend::Avx, 3 << 20);
+        let (events, stats) = Transpiler::run(p.stream());
+        let _ = events;
+        assert_eq!(stats.vima_emitted, 0, "strided column walks must pass through");
+    }
+
+    #[test]
+    fn transpiled_vecsum_approaches_handwritten_vima() {
+        let cfg = SystemConfig::default();
+        let footprint = 6u64 << 20;
+        let avx = TraceParams::new(KernelId::VecSum, Backend::Avx, footprint);
+        let vima = TraceParams::new(KernelId::VecSum, Backend::Vima, footprint);
+
+        let mut m = Machine::new(&cfg, 1);
+        let base = m.run(vec![avx.stream()]);
+        let mut m = Machine::new(&cfg, 1);
+        let auto = m.run(vec![transpile(avx.stream())]);
+        let mut m = Machine::new(&cfg, 1);
+        let hand = m.run(vec![vima.stream()]);
+
+        let auto_speedup = base.cycles as f64 / auto.cycles as f64;
+        let hand_speedup = base.cycles as f64 / hand.cycles as f64;
+        assert!(auto_speedup > 0.7 * hand_speedup,
+            "transpiled {auto_speedup:.2}x vs handwritten {hand_speedup:.2}x");
+    }
+
+    #[test]
+    fn empty_stream_produces_nothing() {
+        let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 0);
+        let (events, stats) = Transpiler::run(p.stream());
+        assert!(events.is_empty());
+        assert_eq!(stats.vima_emitted, 0);
+    }
+
+    #[test]
+    fn vima_input_passes_through_untouched() {
+        // Feeding an already-VIMA trace must be a no-op rewrite.
+        let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20);
+        let original: Vec<TraceEvent> = p.stream().collect();
+        let (events, stats) = Transpiler::run(p.stream());
+        assert_eq!(events, original);
+        assert_eq!(stats.windows_rewritten, 0);
+    }
+
+    #[test]
+    fn mixed_trace_transpiles_only_streaming_windows() {
+        // VecSum (transpilable) followed by Stencil (not): the pass must
+        // rewrite the first and keep the second.
+        let vs = TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20);
+        let st = TraceParams::new(KernelId::Stencil, Backend::Avx, 1 << 20);
+        let mixed: Vec<TraceEvent> = vs.stream().chain(st.stream()).collect();
+        struct VecChunker(std::vec::IntoIter<TraceEvent>, bool);
+        impl TraceChunker for VecChunker {
+            fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+                if self.1 {
+                    return false;
+                }
+                buf.extend(self.0.by_ref());
+                self.1 = true;
+                !buf.is_empty()
+            }
+        }
+        let stream = TraceStream::new(Box::new(VecChunker(mixed.into_iter(), false)));
+        let (events, stats) = Transpiler::run(stream);
+        assert!(stats.vima_emitted > 0);
+        assert!(stats.passthrough_events > 0);
+        // stencil FpMul ops survive
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, TraceEvent::Uop(u) if u.fu == FuType::FpMul)));
+    }
+}

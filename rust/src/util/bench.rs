@@ -1,0 +1,47 @@
+//! Minimal benchmark harness for the `cargo bench` targets (criterion is
+//! unavailable offline). Reports min/mean/max wall time per iteration and
+//! a derived throughput column.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// Time `f` over `iters` iterations after one warm-up run.
+pub fn bench<T>(name: &str, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    std::hint::black_box(f()); // warm-up
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    let min_s = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_s = times.iter().cloned().fold(0.0, f64::max);
+    let r = BenchResult { name: name.to_string(), iters, mean_s, min_s, max_s };
+    println!(
+        "bench {:<44} iters={:<3} mean={:>10.4} ms  min={:>10.4} ms  max={:>10.4} ms",
+        r.name,
+        r.iters,
+        r.mean_s * 1e3,
+        r.min_s * 1e3,
+        r.max_s * 1e3
+    );
+    r
+}
+
+/// Print a named scalar metric in a stable, grep-friendly format.
+pub fn metric(name: &str, value: f64, unit: &str) {
+    println!("metric {name:<48} {value:>14.4} {unit}");
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

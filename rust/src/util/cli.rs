@@ -1,0 +1,85 @@
+//! Tiny CLI argument helper (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "<set>";
+
+impl Args {
+    /// Parse from an explicit argument list (excluding argv[0]).
+    pub fn parse_from(args: impl IntoIterator<Item = String>) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(stripped.to_string(), FLAG_SET.to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { positional, flags }
+    }
+
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str()).filter(|s| *s != FLAG_SET)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).map(|v| v.parse().expect("numeric flag")).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().expect("numeric flag")).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = args(&["fig3", "--quick", "--out", "results", "--mb=16"]);
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.get_u64("mb", 4), 16);
+        assert_eq!(a.get_u64("threads", 1), 1);
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        // "--quick fig3": "fig3" is consumed as quick's value by design;
+        // callers pass flags after the subcommand.
+        let a = args(&["run", "vecsum", "--stats"]);
+        assert_eq!(a.positional, vec!["run", "vecsum"]);
+        assert!(a.flag("stats"));
+        assert_eq!(a.get("stats"), None); // bare flag has no value
+    }
+}

@@ -1,0 +1,324 @@
+//! The VIMA logic layer (Sec. III-D): instruction sequencer, vector cache,
+//! fill buffer, and the 256-lane vector functional units.
+//!
+//! Timing protocol per instruction (all converted to CPU cycles):
+//!
+//! 1. The instruction arrives from the processor (`inst_lat` cycles).
+//! 2. The sequencer checks the VIMA cache for each unique source vector.
+//!    Misses split into 128 x 64 B sub-requests issued across vaults/banks
+//!    ([`Mem3D::vima_access`]); *both* operands of a two-source instruction
+//!    fetch in parallel (Sec. IV-B1). A hit costs one tag-check cycle.
+//! 3. Operand vectors stream from the cache to the FUs over the 2 cache
+//!    ports in `beats` pipelined transfers; the FU array adds its remaining
+//!    pipeline depth (Table I: int alu/mul/div 8-12-28, fp 13-13-28 for a
+//!    full 8 KB vector).
+//! 4. The result lands in the fill buffer; its write into the VIMA cache is
+//!    hidden inside the stop-and-go gap (Sec. III-D), so only dirty
+//!    *evictions* cost DRAM writes.
+//! 5. A status signal returns to the processor (`inst_lat` cycles).
+
+pub mod vcache;
+
+pub use vcache::VCache;
+
+use crate::config::VimaConfig;
+use crate::isa::{VDtype, VimaFuKind, VimaInstr};
+use crate::mem3d::Mem3D;
+use crate::stats::StatsReport;
+
+#[derive(Debug, Default, Clone)]
+pub struct VimaStats {
+    pub instructions: u64,
+    pub vector_fetches: u64,
+    pub fetch_cycles_sum: u64,
+    pub compute_cycles_sum: u64,
+    pub busy_until: u64,
+    pub writeback_vectors: u64,
+}
+
+/// The VIMA device on the 3D-stack logic layer.
+pub struct VimaDevice {
+    pub cfg: VimaConfig,
+    cpu_ghz: f64,
+    inst_lat: u64,
+    pub vcache: VCache,
+    /// Next-free per FU pipeline: [int_alu, int_mul, int_div, fp_alu, fp_mul, fp_div].
+    fu_free: [u64; 6],
+    pub stats: VimaStats,
+}
+
+impl VimaDevice {
+    pub fn new(cfg: &VimaConfig, inst_lat: u64, cpu_ghz: f64) -> Self {
+        Self {
+            vcache: VCache::new(cfg.cache_lines(), cfg.vector_bytes),
+            fu_free: [0; 6],
+            cpu_ghz,
+            inst_lat,
+            stats: VimaStats::default(),
+            cfg: cfg.clone(),
+        }
+    }
+
+    fn fu_index(dtype: VDtype, kind: VimaFuKind) -> usize {
+        let base = if dtype.is_float() { 3 } else { 0 };
+        base + match kind {
+            VimaFuKind::Alu => 0,
+            VimaFuKind::Mul => 1,
+            VimaFuKind::Div => 2,
+        }
+    }
+
+    /// Table-I pipelined latency for a full vector of this class, VIMA cycles.
+    fn fu_total_lat(&self, dtype: VDtype, kind: VimaFuKind) -> u64 {
+        match (dtype.is_float(), kind) {
+            (false, VimaFuKind::Alu) => self.cfg.int_alu_lat,
+            (false, VimaFuKind::Mul) => self.cfg.int_mul_lat,
+            (false, VimaFuKind::Div) => self.cfg.int_div_lat,
+            (true, VimaFuKind::Alu) => self.cfg.fp_alu_lat,
+            (true, VimaFuKind::Mul) => self.cfg.fp_mul_lat,
+            (true, VimaFuKind::Div) => self.cfg.fp_div_lat,
+        }
+    }
+
+    /// Fetch one vector (or partial vector of `bytes`) into the VIMA cache.
+    /// Returns the cycle its data is available to the FUs.
+    fn fetch_vector(&mut self, base: u64, bytes: u32, at: u64, mem: &mut Mem3D) -> u64 {
+        self.stats.vector_fetches += 1;
+        if self.vcache.lookup(base) {
+            // Tag check only; data streams during the compute beats.
+            return at + self.cfg.to_cpu_cycles(self.cfg.cache_tag_lat, self.cpu_ghz);
+        }
+        // Miss: split into 64 B sub-requests over vaults and banks.
+        let subs = (bytes as u64).div_ceil(64);
+        let mut ready = at;
+        for i in 0..subs {
+            let c = mem.vima_access(base + i * 64, false, at);
+            ready = ready.max(c.done);
+        }
+        if let Some((victim, vbytes)) = self.vcache.insert_sized(base, false, bytes) {
+            self.writeback_vector(victim, vbytes, ready, mem);
+        }
+        self.stats.fetch_cycles_sum += ready - at;
+        ready
+    }
+
+    /// Posted write-back of a dirty vector (sub-requests across vaults).
+    fn writeback_vector(&mut self, base: u64, bytes: u32, at: u64, mem: &mut Mem3D) {
+        self.stats.writeback_vectors += 1;
+        let subs = (bytes as u64).div_ceil(64);
+        for i in 0..subs {
+            mem.vima_access(base + i * 64, true, at);
+        }
+    }
+
+    /// Execute one VIMA instruction dispatched by the processor at
+    /// `dispatch`. Returns the cycle the completion signal reaches the CPU.
+    pub fn execute(&mut self, instr: &VimaInstr, dispatch: u64, mem: &mut Mem3D) -> u64 {
+        debug_assert!(
+            instr.vector_bytes as usize <= self.cfg.vector_bytes,
+            "trace vector larger than configured VIMA vector"
+        );
+        self.stats.instructions += 1;
+        let arrive = dispatch + self.inst_lat;
+
+        // 1. Operand fetch: unique sources fetch in parallel.
+        let mut operands_ready = arrive;
+        let srcs = instr.unique_src_addrs();
+        for &s in &srcs {
+            let r = self.fetch_vector(s, instr.vector_bytes, arrive, mem);
+            operands_ready = operands_ready.max(r);
+        }
+
+        // 2. FU schedule: tag + ported transfer beats + remaining pipe depth.
+        let kind = instr.op.fu_kind();
+        let elems = instr.vector_bytes as u64 / instr.dtype.bytes() as u64;
+        let beats = elems.div_ceil(self.cfg.lanes as u64).max(1);
+        let port_rounds = (instr.op.num_srcs().max(1) as u64).div_ceil(self.cfg.cache_ports as u64);
+        let transfer = beats * port_rounds;
+        let depth = self.fu_total_lat(instr.dtype, kind).saturating_sub(8);
+        let duration_vima = self.cfg.cache_tag_lat + transfer + depth + self.cfg.cache_beat_lat;
+        let duration = self.cfg.to_cpu_cycles(duration_vima, self.cpu_ghz);
+
+        let fu = Self::fu_index(instr.dtype, kind);
+        let start = operands_ready.max(self.fu_free[fu]);
+        let done = start + duration;
+        self.fu_free[fu] = done;
+        self.stats.compute_cycles_sum += duration;
+        self.stats.busy_until = self.stats.busy_until.max(done);
+
+        // 3. Result to fill buffer -> VIMA cache (hidden in the dispatch gap).
+        if instr.op.writes_vector() {
+            if let Some(dst) = instr.dst() {
+                if let Some((victim, vbytes)) = self.vcache.insert_sized(dst, true, instr.vector_bytes)
+                {
+                    self.writeback_vector(victim, vbytes, done, mem);
+                }
+            }
+        }
+
+        // 4. Status signal back to the processor.
+        done + self.inst_lat
+    }
+
+    /// Host-coherence invalidation of one vector (processor wrote to it).
+    pub fn invalidate(&mut self, base: u64, at: u64, mem: &mut Mem3D) {
+        if self.vcache.invalidate(base) {
+            self.writeback_vector(base, self.cfg.vector_bytes as u32, at, mem);
+        }
+    }
+
+    /// End-of-run drain: write back every dirty resident vector.
+    /// Returns when memory settles.
+    pub fn drain(&mut self, at: u64, mem: &mut Mem3D) -> u64 {
+        for (base, bytes) in self.vcache.dirty_lines() {
+            self.writeback_vector(base, bytes, at, mem);
+            self.vcache.invalidate(base);
+        }
+        mem.drained_at().max(at)
+    }
+
+    pub fn dump_stats(&self, report: &mut StatsReport) {
+        let s = &self.stats;
+        report.add("vima.instructions", s.instructions as f64);
+        report.add("vima.vector_fetches", s.vector_fetches as f64);
+        report.add("vima.vcache_hits", self.vcache.hits as f64);
+        report.add("vima.vcache_misses", self.vcache.misses as f64);
+        report.add("vima.vcache_dirty_evictions", self.vcache.dirty_evictions as f64);
+        report.add("vima.writeback_vectors", s.writeback_vectors as f64);
+        report.add("vima.fetch_cycles_sum", s.fetch_cycles_sum as f64);
+        report.add("vima.compute_cycles_sum", s.compute_cycles_sum as f64);
+        report.add("vima.busy_until", s.busy_until as f64);
+    }
+
+    pub fn reset(&mut self) {
+        self.vcache.reset();
+        self.fu_free = [0; 6];
+        self.stats = VimaStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mem3DConfig, VimaConfig};
+    use crate::isa::VimaOp;
+
+    fn setup() -> (VimaDevice, Mem3D) {
+        let vcfg = VimaConfig::default();
+        let mcfg = Mem3DConfig::default();
+        (VimaDevice::new(&vcfg, 1, 2.0), Mem3D::new(&mcfg, 2.0))
+    }
+
+    fn add_instr(a: u64, b: u64, dst: u64) -> VimaInstr {
+        VimaInstr::new(VimaOp::Add, VDtype::F32, &[a, b], Some(dst), 8192)
+    }
+
+    #[test]
+    fn cold_instruction_pays_fetch_plus_compute() {
+        let (mut v, mut mem) = setup();
+        let done = v.execute(&add_instr(0x0000, 0x4000, 0x8000), 0, &mut mem);
+        // fetch (~60-150 cycles for 128 parallel subreqs) + compute (~28).
+        assert!(done > 50 && done < 400, "cold add latency {done}");
+        assert_eq!(v.vcache.misses, 2);
+        assert_eq!(mem.stats.vima_reads, 256);
+    }
+
+    #[test]
+    fn cache_hit_skips_dram() {
+        let (mut v, mut mem) = setup();
+        let t1 = v.execute(&add_instr(0x0000, 0x4000, 0x8000), 0, &mut mem);
+        let reads = mem.stats.vima_reads;
+        // Same operands again: both hit, no new DRAM reads.
+        let t2 = v.execute(&add_instr(0x0000, 0x4000, 0xA000), t1, &mut mem);
+        assert_eq!(mem.stats.vima_reads, reads);
+        assert!(t2 - t1 < 60, "hit latency {}", t2 - t1);
+    }
+
+    #[test]
+    fn result_reuse_hits_fill_buffer_line() {
+        let (mut v, mut mem) = setup();
+        // c = a + b; d = c + a -> c must hit (it was filled by instr 1).
+        let t1 = v.execute(&add_instr(0x0000, 0x2000, 0x4000), 0, &mut mem);
+        let reads = mem.stats.vima_reads;
+        v.execute(&add_instr(0x4000, 0x0000, 0x6000), t1, &mut mem);
+        assert_eq!(mem.stats.vima_reads, reads, "result vector should be cache-resident");
+    }
+
+    #[test]
+    fn streaming_evicts_dirty_results() {
+        let (mut v, mut mem) = setup();
+        let mut t = 0;
+        // 20 distinct adds: 40 source vectors + 20 results >> 8 lines.
+        for i in 0..20u64 {
+            let base = i * 0x6000;
+            t = v.execute(&add_instr(base, base + 0x2000, base + 0x4000), t, &mut mem);
+        }
+        assert!(v.vcache.dirty_evictions > 0, "results must evict as dirty");
+        assert!(mem.stats.vima_writes > 0);
+    }
+
+    #[test]
+    fn dot_writes_no_vector() {
+        let (mut v, mut mem) = setup();
+        let i = VimaInstr::new(VimaOp::Dot, VDtype::F32, &[0x0, 0x2000], None, 8192);
+        v.execute(&i, 0, &mut mem);
+        assert_eq!(v.vcache.dirty_lines().len(), 0);
+    }
+
+    #[test]
+    fn bcast_needs_no_fetch() {
+        let (mut v, mut mem) = setup();
+        let i = VimaInstr::new(VimaOp::Bcast, VDtype::I32, &[], Some(0x2000), 8192);
+        let done = v.execute(&i, 0, &mut mem);
+        assert_eq!(mem.stats.vima_reads, 0);
+        assert!(done < 50, "memset instr is compute-only: {done}");
+        assert_eq!(v.vcache.dirty_lines(), vec![(0x2000, 8192)]);
+    }
+
+    #[test]
+    fn int_alu_faster_than_fp_div() {
+        let (mut v1, mut m1) = setup();
+        let (mut v2, mut m2) = setup();
+        let add = VimaInstr::new(VimaOp::Add, VDtype::I32, &[0x0, 0x2000], Some(0x4000), 8192);
+        let div = VimaInstr::new(VimaOp::Div, VDtype::F32, &[0x0, 0x2000], Some(0x4000), 8192);
+        let t_add = v1.execute(&add, 0, &mut m1);
+        let t_div = v2.execute(&div, 0, &mut m2);
+        assert!(t_div > t_add, "div {t_div} vs add {t_add}");
+    }
+
+    #[test]
+    fn smaller_vectors_lose_parallelism_per_byte() {
+        let mut cfg = VimaConfig::default();
+        cfg.vector_bytes = 256;
+        let mut v = VimaDevice::new(&cfg, 1, 2.0);
+        let mut mem = Mem3D::new(&Mem3DConfig::default(), 2.0);
+        // 32 x 256 B instructions move the same 8 KB as one big one...
+        let mut t = 0;
+        for i in 0..32u64 {
+            let instr =
+                VimaInstr::new(VimaOp::Add, VDtype::F32, &[i * 256, 0x20000 + i * 256], Some(0x40000 + i * 256), 256);
+            t = v.execute(&instr, t, &mut mem);
+        }
+        // ...but serially: much slower than the ~150-cycle 8 KB instruction.
+        assert!(t > 400, "256 B vectors must underuse the memory: {t}");
+    }
+
+    #[test]
+    fn drain_writes_back_dirty() {
+        let (mut v, mut mem) = setup();
+        let t = v.execute(&add_instr(0x0, 0x2000, 0x4000), 0, &mut mem);
+        let w_before = mem.stats.vima_writes;
+        v.drain(t, &mut mem);
+        assert!(mem.stats.vima_writes > w_before);
+        assert_eq!(v.vcache.dirty_lines().len(), 0);
+    }
+
+    #[test]
+    fn host_invalidate_forces_writeback() {
+        let (mut v, mut mem) = setup();
+        let t = v.execute(&add_instr(0x0, 0x2000, 0x4000), 0, &mut mem);
+        let w = mem.stats.vima_writes;
+        v.invalidate(0x4000, t, &mut mem);
+        assert!(mem.stats.vima_writes > w);
+    }
+}

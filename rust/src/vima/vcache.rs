@@ -1,0 +1,239 @@
+//! The VIMA cache (Sec. III-D): 64 KB, fully associative, 8 lines of one
+//! 8 KB vector each, LRU replacement, write-allocate from the fill buffer.
+//!
+//! This small cache is the paper's key physical addition over prior NDP work:
+//! it turns the register bank of HIVE-class designs into an address-tagged
+//! store, enabling short-term reuse of vector operands without lock/unlock
+//! transactions.
+
+/// Fully-associative vector cache. Lines are whole VIMA vectors; partial
+/// vectors (e.g. MatMul rows shorter than 8 KB) occupy a full line but
+/// remember their touched size for write-back accounting.
+pub struct VCache {
+    /// (base address, dirty, lru stamp, touched bytes); tag == u64::MAX = invalid.
+    lines: Vec<(u64, bool, u64, u32)>,
+    vector_bytes: u64,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub dirty_evictions: u64,
+}
+
+const INVALID: u64 = u64::MAX;
+
+impl VCache {
+    pub fn new(num_lines: usize, vector_bytes: usize) -> Self {
+        assert!(num_lines >= 1, "VIMA cache needs at least one line");
+        Self {
+            lines: vec![(INVALID, false, 0, 0); num_lines],
+            vector_bytes: vector_bytes as u64,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            dirty_evictions: 0,
+        }
+    }
+
+    #[inline]
+    fn tag(&self, addr: u64) -> u64 {
+        addr / self.vector_bytes * self.vector_bytes
+    }
+
+    /// Probe for the vector containing `addr`; refresh LRU on hit.
+    pub fn lookup(&mut self, addr: u64) -> bool {
+        let tag = self.tag(addr);
+        self.tick += 1;
+        for l in &mut self.lines {
+            if l.0 == tag {
+                l.2 = self.tick;
+                self.hits += 1;
+                return true;
+            }
+        }
+        self.misses += 1;
+        false
+    }
+
+    /// Install the vector at `addr` (LRU eviction). Returns the base address
+    /// and touched size of an evicted dirty vector that must be written back.
+    pub fn insert(&mut self, addr: u64, dirty: bool) -> Option<(u64, u32)> {
+        self.insert_sized(addr, dirty, self.vector_bytes as u32)
+    }
+
+    /// As [`insert`](Self::insert) with an explicit touched-bytes size
+    /// (partial vectors, e.g. matrix rows shorter than one full vector).
+    pub fn insert_sized(&mut self, addr: u64, dirty: bool, bytes: u32) -> Option<(u64, u32)> {
+        let tag = self.tag(addr);
+        self.tick += 1;
+        // Already present (e.g. fill-buffer write to a resident line)?
+        for l in &mut self.lines {
+            if l.0 == tag {
+                l.1 |= dirty;
+                l.2 = self.tick;
+                l.3 = l.3.max(bytes);
+                return None;
+            }
+        }
+        let mut victim = 0;
+        let mut best = u64::MAX;
+        for (i, l) in self.lines.iter().enumerate() {
+            if l.0 == INVALID {
+                victim = i;
+                break;
+            }
+            if l.2 < best {
+                best = l.2;
+                victim = i;
+            }
+        }
+        let evicted = self.lines[victim];
+        let result = if evicted.0 != INVALID {
+            self.evictions += 1;
+            if evicted.1 {
+                self.dirty_evictions += 1;
+                Some((evicted.0, evicted.3))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        self.lines[victim] = (tag, dirty, self.tick, bytes);
+        result
+    }
+
+    /// Mark the vector at `addr` dirty (fill-buffer write of a result).
+    pub fn mark_dirty(&mut self, addr: u64) {
+        let tag = self.tag(addr);
+        for l in &mut self.lines {
+            if l.0 == tag {
+                l.1 = true;
+                return;
+            }
+        }
+    }
+
+    /// Host-coherence hook (Sec. III-D): on a processor write to a cached
+    /// vector, VIMA writes the line back and invalidates it. Returns whether
+    /// the line was present and dirty.
+    pub fn invalidate(&mut self, addr: u64) -> bool {
+        let tag = self.tag(addr);
+        for l in &mut self.lines {
+            if l.0 == tag {
+                let was_dirty = l.1;
+                *l = (INVALID, false, 0, 0);
+                return was_dirty;
+            }
+        }
+        false
+    }
+
+    /// All dirty vector (base address, touched bytes) pairs (end-of-run drain).
+    pub fn dirty_lines(&self) -> Vec<(u64, u32)> {
+        self.lines.iter().filter(|l| l.0 != INVALID && l.1).map(|l| (l.0, l.3)).collect()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.lines.iter().filter(|l| l.0 != INVALID).count()
+    }
+
+    pub fn num_lines(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.lines {
+            *l = (INVALID, false, 0, 0);
+        }
+        self.tick = 0;
+        self.hits = 0;
+        self.misses = 0;
+        self.evictions = 0;
+        self.dirty_evictions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_lines_of_8kb() {
+        let c = VCache::new(8, 8192);
+        assert_eq!(c.num_lines(), 8);
+        assert_eq!(c.occupancy(), 0);
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = VCache::new(8, 8192);
+        assert!(!c.lookup(0x10000));
+        c.insert(0x10000, false);
+        assert!(c.lookup(0x10000));
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn sub_vector_addresses_alias_to_line() {
+        let mut c = VCache::new(8, 8192);
+        c.insert(0x4000, false); // vector [0x4000, 0x6000)
+        assert!(c.lookup(0x4000 + 4096));
+        assert!(!c.lookup(0x6000));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = VCache::new(2, 8192);
+        c.insert(0x0000, false);
+        c.insert(0x2000, false);
+        c.lookup(0x0000); // refresh
+        c.insert(0x4000, false); // evicts 0x2000
+        assert!(c.lookup(0x0000));
+        assert!(!c.lookup(0x2000));
+    }
+
+    #[test]
+    fn dirty_eviction_returns_base() {
+        let mut c = VCache::new(1, 8192);
+        c.insert(0x2000, true);
+        assert_eq!(c.insert(0x6000, false), Some((0x2000, 8192)));
+        assert_eq!(c.dirty_evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_resident_line_updates_dirty_without_eviction() {
+        let mut c = VCache::new(2, 8192);
+        c.insert(0x2000, false);
+        assert_eq!(c.insert(0x2000, true), None);
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.dirty_lines(), vec![(0x2000, 8192)]);
+    }
+
+    #[test]
+    fn invalidate_reports_dirty() {
+        let mut c = VCache::new(4, 8192);
+        c.insert(0x2000, true);
+        assert!(c.invalidate(0x2000));
+        assert!(!c.invalidate(0x2000));
+        assert_eq!(c.occupancy(), 0);
+    }
+
+    #[test]
+    fn mark_dirty_after_fill() {
+        let mut c = VCache::new(4, 8192);
+        c.insert(0x8000, false);
+        c.mark_dirty(0x8000);
+        assert_eq!(c.dirty_lines(), vec![(0x8000, 8192)]);
+    }
+
+    #[test]
+    fn configurable_vector_size() {
+        // 256 B vectors (the Sec. III-C ablation): 64 KB cache = 256 lines.
+        let mut c = VCache::new(256, 256);
+        c.insert(0x100, false);
+        assert!(c.lookup(0x1FF));
+        assert!(!c.lookup(0x200));
+    }
+}

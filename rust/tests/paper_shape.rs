@@ -1,0 +1,179 @@
+//! Integration tests asserting the paper's qualitative result *shapes*
+//! (who wins, crossovers, rough factors) at reduced-but-meaningful sizes.
+//! These are the acceptance criteria of DESIGN.md §5.
+
+use vima_sim::config::SystemConfig;
+use vima_sim::sim::{simulate, simulate_threads};
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+
+fn cfg() -> SystemConfig {
+    SystemConfig::default()
+}
+
+fn speedup(kernel: KernelId, bytes: u64) -> f64 {
+    let avx = simulate(&cfg(), TraceParams::new(kernel, Backend::Avx, bytes));
+    let vima = simulate(&cfg(), TraceParams::new(kernel, Backend::Vima, bytes));
+    vima.speedup_vs(&avx)
+}
+
+#[test]
+fn streaming_kernels_show_large_vima_speedup() {
+    // Fig. 3: streaming kernels gain integer factors.
+    assert!(speedup(KernelId::MemSet, 8 << 20) > 3.0);
+    assert!(speedup(KernelId::MemCopy, 8 << 20) > 3.0);
+    assert!(speedup(KernelId::VecSum, 12 << 20) > 4.0);
+}
+
+#[test]
+fn stencil_benefits_from_vector_reuse() {
+    let avx = simulate(&cfg(), TraceParams::new(KernelId::Stencil, Backend::Avx, 16 << 20));
+    let vima = simulate(&cfg(), TraceParams::new(KernelId::Stencil, Backend::Vima, 16 << 20));
+    assert!(vima.speedup_vs(&avx) > 1.3, "stencil speedup {}", vima.speedup_vs(&avx));
+    // The VIMA cache must be doing real work: rows are reused.
+    let hits = vima.report.get("vima.vcache_hits").unwrap();
+    let misses = vima.report.get("vima.vcache_misses").unwrap();
+    assert!(hits > misses, "expected reuse: {hits} hits vs {misses} misses");
+}
+
+#[test]
+fn knn_crossover_with_llc_capacity() {
+    // Fig. 3 discussion: no/low speedup while the training set fits the LLC,
+    // large speedup once it exceeds it (64 MB > 16 MB LLC).
+    let small = speedup(KernelId::Knn, 4 << 20);
+    let large = speedup(KernelId::Knn, 64 << 20);
+    assert!(
+        large > small * 1.5,
+        "expected LLC crossover: 4MB -> {small:.2}x, 64MB -> {large:.2}x"
+    );
+}
+
+#[test]
+fn mlp_crossover_with_llc_capacity() {
+    let small = speedup(KernelId::Mlp, 4 << 20);
+    let large = speedup(KernelId::Mlp, 64 << 20);
+    assert!(
+        large > small,
+        "expected LLC crossover: 4MB -> {small:.2}x, 64MB -> {large:.2}x"
+    );
+}
+
+#[test]
+fn matmul_vima_wins_with_same_algorithm() {
+    // Sec. IV-B1: same straightforward algorithm on both systems.
+    let s = speedup(KernelId::MatMul, 6 << 20);
+    assert!(s > 3.0, "MatMul speedup {s}");
+}
+
+#[test]
+fn avx_multithread_catches_vima_on_vecsum() {
+    // Fig. 4: AVX needs on the order of 16 cores to reach VIMA on VecSum.
+    let c = cfg();
+    let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 24 << 20);
+    let base = simulate(&c, p);
+    let vima = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Vima, 24 << 20));
+    let avx2 = simulate_threads(&c, p, 2);
+    let avx16 = simulate_threads(&c, p, 16);
+    let vima_speedup = vima.speedup_vs(&base);
+    assert!(
+        avx2.speedup_vs(&base) < vima_speedup,
+        "2 AVX cores must not reach VIMA"
+    );
+    assert!(
+        avx16.speedup_vs(&base) > 0.4 * vima_speedup,
+        "16 AVX cores should approach VIMA: {:.2}x vs {:.2}x",
+        avx16.speedup_vs(&base),
+        vima_speedup
+    );
+}
+
+#[test]
+fn avx_multithread_scaling_is_monotone() {
+    let c = cfg();
+    let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 12 << 20);
+    let mut prev = u64::MAX;
+    for th in [1, 2, 4, 8] {
+        let r = simulate_threads(&c, p, th);
+        assert!(r.cycles <= prev, "{th} threads slower than {}", prev);
+        prev = r.cycles;
+    }
+}
+
+#[test]
+fn vima_saves_energy() {
+    // Headline: up to 93% energy saving; any streaming kernel must save >50%.
+    let c = cfg();
+    for kernel in [KernelId::VecSum, KernelId::MemCopy] {
+        let avx = simulate(&c, TraceParams::new(kernel, Backend::Avx, 8 << 20));
+        let vima = simulate(&c, TraceParams::new(kernel, Backend::Vima, 8 << 20));
+        let ratio = vima.energy_ratio_vs(&avx);
+        assert!(ratio < 0.5, "{kernel}: energy ratio {ratio}");
+    }
+}
+
+#[test]
+fn vima_dram_energy_per_bit_is_lower() {
+    let c = cfg();
+    let avx = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Avx, 4 << 20));
+    let vima = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Vima, 4 << 20));
+    // Both move the same payload, but VIMA pays 4.8 pJ/bit vs 10.8.
+    let avx_bits = avx.report.get("mem.host_bits").unwrap();
+    let vima_bits = vima.report.get("mem.vima_bits").unwrap();
+    assert!(vima_bits > 0.0 && avx_bits > 0.0);
+    assert!(vima.energy.dram_dynamic_j < avx.energy.dram_dynamic_j);
+}
+
+#[test]
+fn vector_size_ablation_matches_sec3c() {
+    // Sec. III-C: 256 B vectors perform much worse than 8 KB (paper: ~74%).
+    let mut small_cfg = cfg();
+    small_cfg.vima.vector_bytes = 256;
+    let small = simulate(
+        &small_cfg,
+        TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20).with_vector_bytes(256),
+    );
+    let big = simulate(&cfg(), TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20));
+    let penalty = small.cycles as f64 / big.cycles as f64;
+    assert!(penalty > 1.5, "256 B vectors must underperform: {penalty:.2}x slower");
+}
+
+#[test]
+fn stop_and_go_overhead_is_small_but_real() {
+    // Sec. III-C: the dispatch bubble costs a few percent.
+    let with = simulate(&cfg(), TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20));
+    let mut nc = cfg();
+    nc.vima.stop_and_go = false;
+    nc.vima.dispatch_gap_cycles = 0;
+    let without = simulate(&nc, TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20));
+    let overhead = with.cycles as f64 / without.cycles as f64 - 1.0;
+    assert!(overhead >= 0.0, "negative overhead {overhead}");
+    assert!(overhead < 2.0, "stop-and-go should not dominate: {overhead}");
+}
+
+#[test]
+fn hive_beats_baseline_but_not_vima_on_reuse() {
+    // Fig. 2: HIVE > AVX on streaming; VIMA > HIVE on Stencil (reuse).
+    let c = cfg();
+    let bytes = 8 << 20;
+    let avx = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Avx, bytes));
+    let hive = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Hive, bytes));
+    let vima = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Vima, bytes));
+    assert!(hive.cycles < avx.cycles, "HIVE must beat the baseline");
+    assert!(vima.cycles < hive.cycles, "VIMA must beat HIVE on stencil reuse");
+}
+
+#[test]
+fn bigger_vima_cache_never_hurts_stencil() {
+    let base = cfg();
+    let mut prev = u64::MAX;
+    for kb in [16usize, 64, 256] {
+        let mut c = base.clone();
+        c.vima.cache_bytes = kb << 10;
+        let r = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Vima, 8 << 20));
+        assert!(
+            r.cycles <= prev.saturating_add(prev / 50),
+            "{kb}KB hurt: {} vs {prev}",
+            r.cycles
+        );
+        prev = r.cycles;
+    }
+}

@@ -1,0 +1,189 @@
+//! Property-based tests on simulator invariants (in-tree `util::proptest`
+//! driver — the offline build has no proptest crate, the methodology is the
+//! same: randomized cases with reproducible seeds).
+
+use std::collections::VecDeque;
+
+use vima_sim::config::SystemConfig;
+use vima_sim::sim::{simulate, simulate_threads};
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+use vima_sim::util::{proptest, Rng};
+use vima_sim::vima::VCache;
+
+const KERNELS: [KernelId; 7] = [
+    KernelId::MemSet,
+    KernelId::MemCopy,
+    KernelId::VecSum,
+    KernelId::Stencil,
+    KernelId::MatMul,
+    KernelId::Knn,
+    KernelId::Mlp,
+];
+
+fn random_params(rng: &mut Rng) -> TraceParams {
+    let kernel = *rng.pick(&KERNELS);
+    let backend = if rng.bool() { Backend::Avx } else { Backend::Vima };
+    let footprint = (1 << 20) << rng.below(3); // 1..4 MB
+    TraceParams::new(kernel, backend, footprint)
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    proptest(8, |rng| {
+        let p = random_params(rng);
+        let cfg = SystemConfig::default();
+        let a = simulate(&cfg, p);
+        let b = simulate(&cfg, p);
+        assert_eq!(a.cycles, b.cycles, "{p:?}");
+        assert_eq!(a.report, b.report, "{p:?}");
+    });
+}
+
+#[test]
+fn cycles_and_energy_are_positive_and_consistent() {
+    proptest(10, |rng| {
+        let p = random_params(rng);
+        let r = simulate(&SystemConfig::default(), p);
+        assert!(r.cycles > 0, "{p:?}");
+        assert!(r.energy.total_j > 0.0, "{p:?}");
+        let sum = r.energy.core_j
+            + r.energy.cache_dynamic_j
+            + r.energy.cache_static_j
+            + r.energy.dram_dynamic_j
+            + r.energy.dram_static_j
+            + r.energy.vima_j;
+        assert!((r.energy.total_j - sum).abs() < 1e-9, "{p:?}");
+    });
+}
+
+#[test]
+fn cache_counters_are_coherent() {
+    proptest(10, |rng| {
+        let p = random_params(rng);
+        let r = simulate(&SystemConfig::default(), p);
+        let g = |k: &str| r.report.get(k).unwrap_or(0.0);
+        // hits + misses == accesses at every level
+        for lvl in ["l1d", "l2", "llc"] {
+            let acc = g(&format!("{lvl}.accesses"));
+            let h = g(&format!("{lvl}.hits"));
+            let m = g(&format!("{lvl}.misses"));
+            assert!((h + m - acc).abs() < 0.5, "{p:?}: {lvl} {h}+{m} != {acc}");
+        }
+        // loads on an AVX run reach the hierarchy
+        if p.backend == Backend::Avx {
+            assert!(g("l1d.accesses") >= g("core.loads"), "{p:?}");
+        }
+    });
+}
+
+#[test]
+fn thread_slicing_conserves_memory_traffic() {
+    proptest(6, |rng| {
+        let kernel = *rng.pick(&[KernelId::MemCopy, KernelId::VecSum, KernelId::Stencil]);
+        let p = TraceParams::new(kernel, Backend::Avx, 4 << 20);
+        let cfg = SystemConfig::default();
+        let one = simulate(&cfg, p);
+        let threads = 1 + rng.below(7) as usize;
+        let many = simulate_threads(&cfg, p, threads);
+        let (a, b) = (
+            one.report.get("l1d.misses").unwrap_or(0.0),
+            many.report.get("l1d.misses").unwrap_or(0.0),
+        );
+        // Cold misses are identical work regardless of the thread split
+        // (within a few % of boundary effects).
+        assert!((a - b).abs() / a.max(1.0) < 0.1, "{kernel}: {a} vs {b} ({threads} thr)");
+    });
+}
+
+#[test]
+fn more_threads_never_substantially_hurt() {
+    proptest(4, |rng| {
+        let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 4 << 20);
+        let cfg = SystemConfig::default();
+        let t1 = simulate_threads(&cfg, p, 1);
+        let tn = simulate_threads(&cfg, p, 2 + rng.below(14) as usize);
+        assert!(tn.cycles <= t1.cycles + t1.cycles / 10);
+    });
+}
+
+/// Reference model for the VIMA cache: LRU over full vectors, via VecDeque.
+struct RefVCache {
+    lines: VecDeque<(u64, bool)>, // front = MRU
+    capacity: usize,
+}
+
+impl RefVCache {
+    fn lookup(&mut self, tag: u64) -> bool {
+        if let Some(pos) = self.lines.iter().position(|&(t, _)| t == tag) {
+            let e = self.lines.remove(pos).unwrap();
+            self.lines.push_front(e);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn insert(&mut self, tag: u64, dirty: bool) -> Option<u64> {
+        if let Some(pos) = self.lines.iter().position(|&(t, _)| t == tag) {
+            let mut e = self.lines.remove(pos).unwrap();
+            e.1 |= dirty;
+            self.lines.push_front(e);
+            return None;
+        }
+        let evicted = if self.lines.len() == self.capacity {
+            self.lines.pop_back().filter(|&(_, d)| d).map(|(t, _)| t)
+        } else {
+            None
+        };
+        self.lines.push_front((tag, dirty));
+        evicted
+    }
+}
+
+#[test]
+fn vcache_matches_reference_lru_model() {
+    proptest(25, |rng| {
+        let lines = 1 + rng.below(8) as usize;
+        let vb = 8192u64;
+        let mut dut = VCache::new(lines, vb as usize);
+        let mut reference = RefVCache { lines: VecDeque::new(), capacity: lines };
+        for _ in 0..300 {
+            let tag = rng.below(12) * vb;
+            if rng.bool() {
+                assert_eq!(dut.lookup(tag), reference.lookup(tag), "lookup({tag:#x})");
+            } else {
+                let dirty = rng.bool();
+                let got = dut.insert(tag, dirty).map(|(a, _)| a);
+                let want = reference.insert(tag, dirty);
+                assert_eq!(got, want, "insert({tag:#x}, {dirty})");
+            }
+        }
+    });
+}
+
+#[test]
+fn config_toml_roundtrip_under_random_mutation() {
+    proptest(20, |rng| {
+        let mut cfg = SystemConfig::default();
+        cfg.vima.cache_bytes = (1usize << rng.range(13, 19)) * 8; // 64K..4M
+        cfg.vima.vector_bytes = 1 << rng.range(8, 14);
+        cfg.llc.mshrs = rng.range(1, 300) as usize;
+        cfg.core.rob_entries = rng.range(16, 512) as usize;
+        cfg.vima.stop_and_go = rng.bool();
+        let text = cfg.to_toml();
+        let back = SystemConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    });
+}
+
+#[test]
+fn sampling_extrapolation_scales_cycles() {
+    // MatMul sampled rows scale: doubling footprint must not *reduce*
+    // extrapolated cycles on either backend.
+    let cfg = SystemConfig::default();
+    for backend in [Backend::Avx, Backend::Vima] {
+        let small = simulate(&cfg, TraceParams::new(KernelId::MatMul, backend, 3 << 20));
+        let big = simulate(&cfg, TraceParams::new(KernelId::MatMul, backend, 6 << 20));
+        assert!(big.cycles > small.cycles, "{backend}: {} !> {}", big.cycles, small.cycles);
+    }
+}
