@@ -13,7 +13,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example mlp_e2e`
 
-use anyhow::Result;
+use vima_sim::util::error::Result;
 use vima_sim::config::SystemConfig;
 use vima_sim::runtime::{default_artifacts_dir, literal_f32, Engine};
 use vima_sim::sim::simulate;
@@ -76,7 +76,7 @@ fn main() -> Result<()> {
         "[functional] mlp_logits_f32 via PJRT: {} logits, max |err| vs oracle = {max_err:.2e}",
         logits.len()
     );
-    anyhow::ensure!(max_err < 1e-3, "numeric mismatch vs oracle");
+    vima_sim::ensure!(max_err < 1e-3, "numeric mismatch vs oracle");
 
     // predicted classes through the int artifact
     let preds_lit = engine.execute(
@@ -89,7 +89,7 @@ fn main() -> Result<()> {
             literal_f32(&b2, &[C])?,
         ],
     )?;
-    let preds = preds_lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let preds = preds_lit.to_vec::<i32>().map_err(|e| vima_sim::util::error::Error::msg(format!("{e:?}")))?;
     let oracle_preds: Vec<i32> = (0..B)
         .map(|i| {
             (0..C)
@@ -99,7 +99,7 @@ fn main() -> Result<()> {
         .collect();
     let agree = preds.iter().zip(&oracle_preds).filter(|(a, b)| a == b).count();
     println!("[functional] mlp_inference_i32: {agree}/{B} class predictions match the oracle");
-    anyhow::ensure!(agree == B, "classification mismatch");
+    vima_sim::ensure!(agree == B, "classification mismatch");
 
     // ---------- temporal half: cycle-level simulation ----------
     println!("\n[temporal] paper MLP workload (16384 instances), AVX vs VIMA:");

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anyhow::Result;
+use vima_sim::util::error::Result;
 use vima_sim::config::SystemConfig;
 use vima_sim::isa::TraceEvent;
 use vima_sim::runtime::functional::FunctionalVima;

@@ -16,14 +16,21 @@ fn scale() -> SizeScale {
     }
 }
 
+/// Sweep worker threads: `VIMA_BENCH_JOBS` (0/unset = all cores).
+fn jobs() -> usize {
+    std::env::var("VIMA_BENCH_JOBS").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
 fn main() {
     bench::section("Fig. 4 reproduction (VIMA vs multithreaded AVX)");
-    let exp = Experiment::new(SystemConfig::default(), scale());
+    // Fresh Experiment per iteration: the persistent result cache would
+    // otherwise turn every timed run after the warm-up into pure cache hits.
     let mut last = None;
     bench::bench("fig4_full_experiment", 1, || {
-        last = Some(exp.fig4());
+        let exp = Experiment::with_jobs(SystemConfig::default(), scale(), jobs());
+        last = Some((exp.fig4(), exp.sweep_stats()));
     });
-    let table = last.unwrap();
+    let (table, st) = last.unwrap();
     println!("\n{}", table.to_markdown());
     for (label, _) in &table.rows {
         let vima = table.get(label, "vima_speedup").unwrap();
@@ -38,4 +45,8 @@ fn main() {
             "% of AVX-1T",
         );
     }
+
+    bench::metric("sweep.cells", st.cells as f64, "planned");
+    bench::metric("sweep.unique_runs", st.unique_runs as f64, "simulated (deduped)");
+    bench::metric("sweep.cache_hits", st.cache_hits as f64, "served from cache");
 }

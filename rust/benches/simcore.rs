@@ -4,10 +4,12 @@
 
 use vima_sim::cache::MemorySystem;
 use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::{SizeScale, WorkloadSet};
 use vima_sim::cpu::Core;
 use vima_sim::isa::{FuType, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
 use vima_sim::mem3d::Mem3D;
 use vima_sim::sim::simulate;
+use vima_sim::sweep::{RunCell, SweepPlan, SweepRunner};
 use vima_sim::trace::{Backend, KernelId, TraceParams};
 use vima_sim::util::bench;
 use vima_sim::vima::VimaDevice;
@@ -90,4 +92,16 @@ fn main() {
     bench::metric("sim.end_to_end_events_per_sec", events / r.mean_s, "ev/s");
     let sim_cycles = simulate(&cfg, p).cycles as f64;
     bench::metric("sim.simulated_cycles_per_sec", sim_cycles / r.mean_s, "cy/s");
+
+    bench::section("sweep engine (fig2 grid: 27 cells, deduped + parallel)");
+    let mut plan = SweepPlan::new();
+    for w in WorkloadSet::fig2(SizeScale::Quick) {
+        for b in [Backend::Avx, Backend::Hive, Backend::Vima] {
+            plan.push(RunCell::new(w, b));
+        }
+    }
+    // fresh runner per iteration: measures real simulation throughput, not
+    // cache lookups
+    let r = bench::bench("sweep_fig2_grid", 1, || SweepRunner::new(0).run(&cfg, &plan).len());
+    bench::metric("sweep.cells_per_sec", plan.len() as f64 / r.mean_s, "cells/s");
 }

@@ -17,7 +17,8 @@
 //! size_bytes = 8388608
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
 
 /// Value conversion for the TOML subset.
 pub trait TomlValue: Sized {
@@ -25,9 +26,65 @@ pub trait TomlValue: Sized {
     fn emit_toml(&self) -> String;
 }
 
+/// Stable per-field hashing for sweep-cache keys.
+///
+/// `f64` fields hash by bit pattern with `±0.0` normalized so `Hash` stays
+/// consistent with the derived `PartialEq`. NaN would still break the
+/// reflexive `Eq` claim below, so non-finite floats are rejected twice: at
+/// the TOML parse boundary and by [`SystemConfig::validate`] (via
+/// `all_finite`, for programmatically built configs).
+pub trait FieldHash {
+    fn field_hash<H: std::hash::Hasher>(&self, state: &mut H);
+
+    /// Finiteness of float fields (non-float fields are trivially finite).
+    fn field_finite(&self) -> bool {
+        true
+    }
+}
+
+impl FieldHash for f64 {
+    fn field_hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        let normalized = if *self == 0.0 { 0.0f64 } else { *self };
+        state.write_u64(normalized.to_bits());
+    }
+
+    fn field_finite(&self) -> bool {
+        self.is_finite()
+    }
+}
+
+impl FieldHash for u64 {
+    fn field_hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u64(*self);
+    }
+}
+
+impl FieldHash for usize {
+    fn field_hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u64(*self as u64);
+    }
+}
+
+impl FieldHash for bool {
+    fn field_hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u8(*self as u8);
+    }
+}
+
+impl FieldHash for (usize, u64) {
+    fn field_hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u64(self.0 as u64);
+        state.write_u64(self.1);
+    }
+}
+
 impl TomlValue for f64 {
     fn parse_toml(s: &str) -> Result<Self> {
-        s.parse().with_context(|| format!("bad float {s:?}"))
+        let v: f64 = s.parse().with_context(|| format!("bad float {s:?}"))?;
+        // `"nan".parse::<f64>()` succeeds; NaN would break the Eq/Hash
+        // contract the sweep cache keys rely on.
+        ensure!(v.is_finite(), "non-finite float {s:?}");
+        Ok(v)
     }
     fn emit_toml(&self) -> String {
         if self.fract() == 0.0 {
@@ -120,7 +177,24 @@ macro_rules! cfg_struct {
                     out.push('\n');
                 )*
             }
+
+            /// True when every float field is finite — NaN would break the
+            /// `Eq`/`Hash` contract the sweep cache relies on.
+            pub fn all_finite(&self) -> bool {
+                $(FieldHash::field_finite(&self.$field) &&)* true
+            }
         }
+
+        // Sweep-cache identity: configs key the result cache, so every
+        // section hashes all of its fields (consistent with the derived
+        // `PartialEq`; see `FieldHash` for the f64 treatment).
+        impl std::hash::Hash for $name {
+            fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+                $(FieldHash::field_hash(&self.$field, state);)*
+            }
+        }
+
+        impl Eq for $name {}
     };
 }
 
@@ -372,7 +446,11 @@ cfg_struct!(
 );
 
 /// Full-system configuration (baseline CPU + 3D memory + VIMA + HIVE).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Implements `Hash`/`Eq` (every section does) so a full config can key the
+/// sweep engine's result cache: two cells agree on identity only if every
+/// Table-I parameter agrees.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SystemConfig {
     pub core: CoreConfig,
     pub l1d: CacheConfig,
@@ -463,24 +541,34 @@ impl SystemConfig {
 
     /// Sanity-check cross-field invariants; call after any mutation.
     pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(self.core.issue_width > 0, "issue width must be positive");
+        let finite = self.core.all_finite()
+            && self.l1d.all_finite()
+            && self.l1i.all_finite()
+            && self.l2.all_finite()
+            && self.llc.all_finite()
+            && self.mem.all_finite()
+            && self.vima.all_finite()
+            && self.hive.all_finite()
+            && self.prefetch.all_finite();
+        ensure!(finite, "non-finite float field (breaks sweep-cache hashing)");
+        ensure!(self.core.issue_width > 0, "issue width must be positive");
         for (name, c) in
             [("l1d", &self.l1d), ("l1i", &self.l1i), ("l2", &self.l2), ("llc", &self.llc)]
         {
-            anyhow::ensure!(
+            ensure!(
                 c.size_bytes % (c.line_bytes * c.ways) == 0,
                 "{name}: size {} not divisible by line*ways",
                 c.size_bytes
             );
-            anyhow::ensure!(c.sets().is_power_of_two(), "{name}: sets must be a power of two");
+            ensure!(c.sets().is_power_of_two(), "{name}: sets must be a power of two");
         }
-        anyhow::ensure!(self.mem.vaults.is_power_of_two(), "vault count must be 2^n");
-        anyhow::ensure!(self.mem.banks_per_vault.is_power_of_two(), "bank count must be 2^n");
-        anyhow::ensure!(
+        ensure!(self.mem.vaults.is_power_of_two(), "vault count must be 2^n");
+        ensure!(self.mem.banks_per_vault.is_power_of_two(), "bank count must be 2^n");
+        ensure!(
             self.vima.vector_bytes % self.mem.line_bytes() == 0,
             "VIMA vector must be a multiple of the 64 B sub-request granularity"
         );
-        anyhow::ensure!(
+        ensure!(
             self.vima.cache_bytes % self.vima.vector_bytes == 0,
             "VIMA cache must hold an integral number of vector lines"
         );
@@ -595,5 +683,17 @@ mod tests {
         let mut c = SystemConfig::default();
         c.vima.vector_bytes = 100;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn non_finite_floats_rejected() {
+        // TOML boundary: "nan"/"inf" parse as f64 but must be refused.
+        assert!(SystemConfig::from_toml_str("[core]\nfreq_ghz = nan\n").is_err());
+        assert!(SystemConfig::from_toml_str("[core]\nfreq_ghz = inf\n").is_err());
+        // Programmatic configs are caught by validate().
+        let mut c = SystemConfig::default();
+        c.vima.power_w = f64::NAN;
+        assert!(c.validate().is_err());
+        assert!(!c.vima.all_finite());
     }
 }

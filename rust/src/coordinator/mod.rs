@@ -1,18 +1,25 @@
 //! Experiment coordinator: regenerates every table and figure of the paper.
 //!
-//! Each `fig*` function returns a [`FigTable`] whose rows mirror the paper's
-//! plot series; the CLI prints them as markdown and optionally CSV. The
-//! acceptance criterion is *shape* (who wins, crossover points, rough
-//! factors), not absolute cycle counts — see EXPERIMENTS.md.
+//! Each `fig*` function *declares* its grid as a [`SweepPlan`] of
+//! [`RunCell`]s and assembles a [`FigTable`] from the results; the
+//! [`SweepRunner`] executes plans on a worker pool behind a persistent
+//! result cache, so the AVX baselines every figure normalizes against
+//! simulate exactly once per [`Experiment`], no matter how many figures ask
+//! for them (`vima-sim sweep` prints the dedup accounting). The acceptance
+//! criterion is *shape* (who wins, crossover points, rough factors), not
+//! absolute cycle counts — see EXPERIMENTS.md.
 
 pub mod workloads;
 
 use crate::config::SystemConfig;
-use crate::sim::{simulate, simulate_threads, SimResult};
-use crate::trace::{Backend, KernelId, TraceParams};
+use crate::sim::{simulate_threads, SimResult};
+use crate::sweep::{RunCell, SweepPlan, SweepRunner, SweepStats};
+use crate::trace::{Backend, KernelId};
 use workloads::{SizeScale, Workload, WorkloadSet};
 
 /// One experiment cell: a workload run on a backend with some threads.
+/// Standalone convenience (one-off runs); the figure drivers use
+/// [`RunCell`]s so results dedup and parallelize.
 #[derive(Debug, Clone, Copy)]
 pub struct RunSpec {
     pub workload: Workload,
@@ -90,65 +97,99 @@ impl FigTable {
     }
 }
 
-/// The experiment driver.
+/// The experiment driver. Holds the sweep runner (worker pool + result
+/// cache), so figures requested from the same `Experiment` share baseline
+/// simulations.
 pub struct Experiment {
     pub cfg: SystemConfig,
     pub scale: SizeScale,
     /// Print progress lines while running.
     pub verbose: bool,
+    runner: SweepRunner,
 }
 
 impl Experiment {
+    /// Worker count defaults to `available_parallelism()`.
     pub fn new(cfg: SystemConfig, scale: SizeScale) -> Self {
-        Self { cfg, scale, verbose: false }
+        Self::with_jobs(cfg, scale, 0)
     }
 
-    fn log(&self, msg: &str) {
-        if self.verbose {
-            eprintln!("[vima-sim] {msg}");
-        }
+    /// Explicit worker count (`jobs = 0` means `available_parallelism()`,
+    /// `jobs = 1` is fully serial).
+    pub fn with_jobs(cfg: SystemConfig, scale: SizeScale, jobs: usize) -> Self {
+        Self { cfg, scale, verbose: false, runner: SweepRunner::new(jobs) }
     }
 
-    fn baseline(&self, w: &Workload) -> SimResult {
-        self.log(&format!("  baseline AVX {}", w.label()));
-        simulate(&self.cfg, w.params(Backend::Avx))
+    /// Dedup accounting across every figure this experiment has produced.
+    pub fn sweep_stats(&self) -> SweepStats {
+        self.runner.stats()
+    }
+
+    /// Worker-pool width.
+    pub fn jobs(&self) -> usize {
+        self.runner.jobs()
+    }
+
+    fn run_plan(&self, plan: &SweepPlan) -> Vec<SimResult> {
+        self.runner.run_verbose(&self.cfg, plan, self.verbose)
     }
 
     /// **Fig. 2** — HIVE vs VIMA speedup over single-thread AVX for
     /// MemSet / VecSum / Stencil.
     pub fn fig2(&self) -> FigTable {
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = WorkloadSet::fig2(self.scale)
+            .into_iter()
+            .map(|w| {
+                (
+                    w.label(),
+                    plan.push(RunCell::new(w, Backend::Avx)),
+                    plan.push(RunCell::new(w, Backend::Hive)),
+                    plan.push(RunCell::new(w, Backend::Vima)),
+                )
+            })
+            .collect();
+        let res = self.run_plan(&plan);
         let mut t = FigTable::new(
             "Fig. 2: HIVE and VIMA speedup vs AVX single-thread",
             &["hive", "vima"],
         );
-        for w in WorkloadSet::fig2(self.scale) {
-            let base = self.baseline(&w);
-            self.log(&format!("  HIVE {}", w.label()));
-            let hive = simulate(&self.cfg, w.params(Backend::Hive));
-            self.log(&format!("  VIMA {}", w.label()));
-            let vima = simulate(&self.cfg, w.params(Backend::Vima));
-            t.push(w.label(), vec![hive.speedup_vs(&base), vima.speedup_vs(&base)]);
+        for (label, base, hive, vima) in rows {
+            t.push(
+                label,
+                vec![res[hive].speedup_vs(&res[base]), res[vima].speedup_vs(&res[base])],
+            );
         }
         t
     }
 
     /// **Fig. 3** — VIMA speedup over single-thread AVX, all 7 kernels x 3 sizes.
     pub fn fig3(&self) -> FigTable {
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = WorkloadSet::all(self.scale)
+            .into_iter()
+            .map(|w| {
+                (
+                    w.label(),
+                    plan.push(RunCell::new(w, Backend::Avx)),
+                    plan.push(RunCell::new(w, Backend::Vima)),
+                )
+            })
+            .collect();
+        let res = self.run_plan(&plan);
         let mut t = FigTable::new(
             "Fig. 3: VIMA speedup vs AVX single-thread",
             &["speedup", "avx_cycles", "vima_cycles", "energy_ratio"],
         );
-        for w in WorkloadSet::all(self.scale) {
-            let base = self.baseline(&w);
-            self.log(&format!("  VIMA {}", w.label()));
-            let vima = simulate(&self.cfg, w.params(Backend::Vima));
+        for (label, base, vima) in rows {
+            let (base, vima) = (&res[base], &res[vima]);
             t.push(
-                w.label(),
+                label,
                 vec![
-                    vima.speedup_vs(&base),
+                    vima.speedup_vs(base),
                     base.cycles as f64,
                     vima.cycles as f64,
-                    vima.energy_ratio_vs(&base),
+                    vima.energy_ratio_vs(base),
                 ],
             );
         }
@@ -157,7 +198,8 @@ impl Experiment {
 
     /// **Fig. 4** — multithreaded AVX (1..32 cores) vs single VIMA device on
     /// the largest Stencil / VecSum / MatMul; speedup and energy, both
-    /// normalized to single-thread AVX.
+    /// normalized to single-thread AVX. (The AVX-1T column *is* the
+    /// baseline cell — the cache runs it once.)
     pub fn fig4(&self) -> FigTable {
         let threads = [1usize, 2, 4, 8, 16, 32];
         let mut cols: Vec<String> = vec!["vima_speedup".into(), "vima_energy".into()];
@@ -166,22 +208,34 @@ impl Experiment {
             cols.push(format!("avx{th}_energy"));
         }
         let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = WorkloadSet::multithread(self.scale)
+            .into_iter()
+            .map(|w| {
+                let base = plan.push(RunCell::new(w, Backend::Avx));
+                let vima = plan.push(RunCell::new(w, Backend::Vima));
+                let avx: Vec<usize> = threads
+                    .iter()
+                    .map(|&th| plan.push(RunCell::new(w, Backend::Avx).with_threads(th)))
+                    .collect();
+                (w.label(), base, vima, avx)
+            })
+            .collect();
+        let res = self.run_plan(&plan);
+
         let mut t = FigTable::new(
             "Fig. 4: VIMA vs multithreaded AVX (largest datasets), both normalized to AVX-1T",
             &cols_ref,
         );
-        for w in WorkloadSet::multithread(self.scale) {
-            let base = self.baseline(&w);
-            self.log(&format!("  VIMA {}", w.label()));
-            let vima = simulate(&self.cfg, w.params(Backend::Vima));
-            let mut row = vec![vima.speedup_vs(&base), vima.energy_ratio_vs(&base)];
-            for th in threads {
-                self.log(&format!("  AVX x{th} {}", w.label()));
-                let r = simulate_threads(&self.cfg, w.params(Backend::Avx), th);
-                row.push(r.speedup_vs(&base));
-                row.push(r.energy_ratio_vs(&base));
+        for (label, base, vima, avx) in rows {
+            let base = &res[base];
+            let mut row = vec![res[vima].speedup_vs(base), res[vima].energy_ratio_vs(base)];
+            for i in avx {
+                row.push(res[i].speedup_vs(base));
+                row.push(res[i].energy_ratio_vs(base));
             }
-            t.push(w.label(), row);
+            t.push(label, row);
         }
         t
     }
@@ -192,19 +246,30 @@ impl Experiment {
         let sizes_kb = [16usize, 32, 64, 128, 256];
         let cols: Vec<String> = sizes_kb.iter().map(|k| format!("{k}KB")).collect();
         let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = WorkloadSet::multithread(self.scale)
+            .into_iter()
+            .map(|w| {
+                let base = plan.push(RunCell::new(w, Backend::Avx));
+                let sweep: Vec<usize> = sizes_kb
+                    .iter()
+                    .map(|&kb| {
+                        let mut cfg = self.cfg.clone();
+                        cfg.vima.cache_bytes = kb << 10;
+                        plan.push(RunCell::new(w, Backend::Vima).with_cfg(cfg))
+                    })
+                    .collect();
+                (w.label(), base, sweep)
+            })
+            .collect();
+        let res = self.run_plan(&plan);
+
         let mut t =
             FigTable::new("Fig. 5: VIMA speedup vs AVX for different VIMA cache sizes", &cols_ref);
-        for w in WorkloadSet::multithread(self.scale) {
-            let base = self.baseline(&w);
-            let mut row = Vec::new();
-            for kb in sizes_kb {
-                let mut cfg = self.cfg.clone();
-                cfg.vima.cache_bytes = kb << 10;
-                self.log(&format!("  VIMA {}KB {}", kb, w.label()));
-                let vima = simulate(&cfg, w.params(Backend::Vima));
-                row.push(vima.speedup_vs(&base));
-            }
-            t.push(w.label(), row);
+        for (label, base, sweep) in rows {
+            let row = sweep.iter().map(|&i| res[i].speedup_vs(&res[base])).collect();
+            t.push(label, row);
         }
         t
     }
@@ -215,24 +280,36 @@ impl Experiment {
         let sizes: [u32; 6] = [256, 512, 1024, 2048, 4096, 8192];
         let cols: Vec<String> = sizes.iter().map(|b| format!("{b}B")).collect();
         let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = [KernelId::MemSet, KernelId::VecSum]
+            .into_iter()
+            .map(|kernel| {
+                let w = *WorkloadSet::sizes(kernel, self.scale).last().unwrap();
+                let base = plan.push(RunCell::new(w, Backend::Avx));
+                let sweep: Vec<usize> = sizes
+                    .iter()
+                    .map(|&vb| {
+                        let mut cfg = self.cfg.clone();
+                        cfg.vima.vector_bytes = vb as usize;
+                        // cache stays 64 KB; lines = 64 KB / vb
+                        plan.push(
+                            RunCell::new(w, Backend::Vima).with_cfg(cfg).with_vector_bytes(vb),
+                        )
+                    })
+                    .collect();
+                (w.label(), base, sweep)
+            })
+            .collect();
+        let res = self.run_plan(&plan);
+
         let mut t = FigTable::new(
             "Ablation: VIMA vector size (speedup vs AVX single-thread)",
             &cols_ref,
         );
-        for kernel in [KernelId::MemSet, KernelId::VecSum] {
-            let w = *WorkloadSet::sizes(kernel, self.scale).last().unwrap();
-            let base = self.baseline(&w);
-            let mut row = Vec::new();
-            for vb in sizes {
-                let mut cfg = self.cfg.clone();
-                cfg.vima.vector_bytes = vb as usize;
-                // cache stays 64 KB; lines = 64 KB / vb
-                let p = TraceParams::new(kernel, Backend::Vima, w.footprint).with_vector_bytes(vb);
-                self.log(&format!("  VIMA vb={vb} {}", w.label()));
-                let r = simulate(&cfg, p);
-                row.push(r.speedup_vs(&base));
-            }
-            t.push(w.label(), row);
+        for (label, base, sweep) in rows {
+            let row = sweep.iter().map(|&i| res[i].speedup_vs(&res[base])).collect();
+            t.push(label, row);
         }
         t
     }
@@ -247,22 +324,35 @@ impl Experiment {
     ///   HIVE-like fire-and-forget pipeline (non-precise exceptions); this
     ///   is the upper bound the paper trades for precise exceptions.
     pub fn ablation_stop_and_go(&self) -> FigTable {
+        let mut no_gap = self.cfg.clone();
+        no_gap.vima.dispatch_gap_cycles = 0;
+        let mut pipe = self.cfg.clone();
+        pipe.vima.stop_and_go = false;
+        pipe.vima.dispatch_gap_cycles = 0;
+
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = WorkloadSet::multithread(self.scale)
+            .into_iter()
+            .map(|w| {
+                (
+                    w.label(),
+                    plan.push(RunCell::new(w, Backend::Vima)),
+                    plan.push(RunCell::new(w, Backend::Vima).with_cfg(no_gap.clone())),
+                    plan.push(RunCell::new(w, Backend::Vima).with_cfg(pipe.clone())),
+                )
+            })
+            .collect();
+        let res = self.run_plan(&plan);
+
         let mut t = FigTable::new(
             "Ablation: stop-and-go dispatch (gap bubble %, full pipelining %)",
             &["default_cycles", "gap_pct", "pipelined_pct"],
         );
-        for w in WorkloadSet::multithread(self.scale) {
-            let with = simulate(&self.cfg, w.params(Backend::Vima));
-            let mut no_gap = self.cfg.clone();
-            no_gap.vima.dispatch_gap_cycles = 0;
-            let gapless = simulate(&no_gap, w.params(Backend::Vima));
-            let mut pipe = self.cfg.clone();
-            pipe.vima.stop_and_go = false;
-            pipe.vima.dispatch_gap_cycles = 0;
-            let pipelined = simulate(&pipe, w.params(Backend::Vima));
-            let gap_pct = (with.cycles as f64 / gapless.cycles as f64 - 1.0) * 100.0;
-            let pipelined_pct = (with.cycles as f64 / pipelined.cycles as f64 - 1.0) * 100.0;
-            t.push(w.label(), vec![with.cycles as f64, gap_pct, pipelined_pct]);
+        for (label, with, gapless, pipelined) in rows {
+            let with = &res[with];
+            let gap_pct = (with.cycles as f64 / res[gapless].cycles as f64 - 1.0) * 100.0;
+            let pipelined_pct = (with.cycles as f64 / res[pipelined].cycles as f64 - 1.0) * 100.0;
+            t.push(label, vec![with.cycles as f64, gap_pct, pipelined_pct]);
         }
         t
     }
@@ -271,28 +361,43 @@ impl Experiment {
     /// vs a Sandy-Bridge-class LLC stride streamer. Shows which paper claims
     /// depend on the prefetcher-less baseline.
     pub fn ablation_prefetcher(&self) -> FigTable {
-        let mut t = FigTable::new(
-            "Ablation: baseline prefetcher (VIMA speedup vs AVX, without / with LLC streamer)",
-            &["no_prefetch", "with_prefetch"],
-        );
         let mut pf_cfg = self.cfg.clone();
         pf_cfg.prefetch.enabled = true;
         let mut base_cfg = self.cfg.clone();
         base_cfg.prefetch.enabled = false;
-        for kernel in [KernelId::VecSum, KernelId::MemCopy, KernelId::Knn, KernelId::Mlp] {
-            let w = *WorkloadSet::sizes(kernel, self.scale).last().unwrap();
-            let mut row = Vec::new();
-            for cfg in [&base_cfg, &pf_cfg] {
-                let avx = simulate(cfg, w.params(Backend::Avx));
-                let vima = simulate(cfg, w.params(Backend::Vima));
-                row.push(vima.speedup_vs(&avx));
-            }
-            t.push(w.label(), row);
+
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = [KernelId::VecSum, KernelId::MemCopy, KernelId::Knn, KernelId::Mlp]
+            .into_iter()
+            .map(|kernel| {
+                let w = *WorkloadSet::sizes(kernel, self.scale).last().unwrap();
+                let cells: Vec<(usize, usize)> = [&base_cfg, &pf_cfg]
+                    .into_iter()
+                    .map(|cfg| {
+                        (
+                            plan.push(RunCell::new(w, Backend::Avx).with_cfg(cfg.clone())),
+                            plan.push(RunCell::new(w, Backend::Vima).with_cfg(cfg.clone())),
+                        )
+                    })
+                    .collect();
+                (w.label(), cells)
+            })
+            .collect();
+        let res = self.run_plan(&plan);
+
+        let mut t = FigTable::new(
+            "Ablation: baseline prefetcher (VIMA speedup vs AVX, without / with LLC streamer)",
+            &["no_prefetch", "with_prefetch"],
+        );
+        for (label, cells) in rows {
+            let row = cells.iter().map(|&(avx, vima)| res[vima].speedup_vs(&res[avx])).collect();
+            t.push(label, row);
         }
         t
     }
 
-    /// **Headline numbers** — max speedup and max energy saving across Fig. 3.
+    /// **Headline numbers** — max speedup and max energy saving across
+    /// Fig. 3 (all cells cached if `fig3` already ran).
     pub fn headline(&self) -> FigTable {
         let fig3 = self.fig3();
         let mut best_speedup: f64 = 0.0;
@@ -347,5 +452,15 @@ mod tests {
         for (label, vals) in &t.rows {
             assert!(vals[2] >= 0.0, "{label}: negative overhead {}", vals[2]);
         }
+    }
+
+    #[test]
+    fn repeated_figures_are_free() {
+        let e = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 2);
+        let a = e.fig2();
+        let runs_after_first = e.sweep_stats().unique_runs;
+        let b = e.fig2();
+        assert_eq!(e.sweep_stats().unique_runs, runs_after_first, "second fig2 must be all hits");
+        assert_eq!(a.rows, b.rows);
     }
 }

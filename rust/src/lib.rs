@@ -10,15 +10,19 @@
 //!   cycle-level timing model of the whole system of Table I (out-of-order
 //!   core, three-level cache hierarchy, 3D-stacked memory with 32 vaults,
 //!   the VIMA logic layer, and the HIVE comparator), plus the experiment
-//!   drivers that regenerate every figure of the paper.
+//!   drivers that regenerate every figure of the paper through the
+//!   [`sweep`] engine (a declarative, deduplicating, multi-threaded run
+//!   grid — see EXPERIMENTS.md).
 //! * **Layer 2 (python/compile/model.py)** — JAX workload graphs, AOT-lowered
 //!   to HLO text in `artifacts/`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels modelling the
 //!   256-lane VIMA vector units.
 //!
-//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so simulations can be run *functionally* (real numerics)
-//! as well as *temporally* (cycles/energy). Python is never on the run path.
+//! The `runtime` module (behind the off-by-default `pjrt` feature — it
+//! needs the `xla` crate, see `Cargo.toml`) loads the AOT artifacts through
+//! the PJRT C API so simulations can be run *functionally* (real numerics)
+//! as well as *temporally* (cycles/energy). Python is never on the run
+//! path, and the default build has no dependencies at all.
 
 pub mod cache;
 pub mod config;
@@ -29,9 +33,11 @@ pub mod hive;
 pub mod intrinsics;
 pub mod isa;
 pub mod mem3d;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod sweep;
 pub mod trace;
 pub mod transpile;
 pub mod util;
@@ -42,8 +48,9 @@ pub mod prelude {
     pub use crate::config::SystemConfig;
     pub use crate::coordinator::{
         workloads::{Workload, WorkloadSet},
-        Experiment, RunSpec,
+        Experiment, FigTable, RunSpec,
     };
     pub use crate::sim::{Machine, SimResult};
+    pub use crate::sweep::{RunCell, SweepPlan, SweepRunner};
     pub use crate::trace::{Backend, KernelId};
 }

@@ -1,24 +1,27 @@
 //! vima-sim CLI — the Layer-3 leader entrypoint.
 //!
-//! Subcommands regenerate each of the paper's figures/tables, run single
-//! workloads, dump the Table-I configuration, and run the functional
-//! (PJRT-backed) smoke check.
+//! Subcommands regenerate each of the paper's figures/tables, run the whole
+//! suite as one deduplicated parallel sweep, run single workloads, dump the
+//! Table-I configuration, and run the functional (PJRT-backed) smoke check.
 //!
 //! ```text
+//! vima-sim sweep [--jobs N] [--figs fig2,fig3] [--csv DIR] [--quick]
 //! vima-sim fig2|fig3|fig4|fig5|ablation|headline|all [--quick] [--out DIR]
 //! vima-sim run <kernel> <backend> [--mb N] [--threads N] [--stats]
 //! vima-sim config [--config FILE]
-//! vima-sim selftest
+//! vima-sim selftest           (requires a build with --features pjrt)
 //! ```
 
-use anyhow::{bail, Result};
+use vima_sim::bail;
 use vima_sim::config::SystemConfig;
 use vima_sim::coordinator::workloads::SizeScale;
 use vima_sim::coordinator::{Experiment, FigTable};
+#[cfg(feature = "pjrt")]
 use vima_sim::runtime::{default_artifacts_dir, Engine};
 use vima_sim::sim::simulate_threads;
 use vima_sim::trace::{Backend, KernelId, TraceParams};
 use vima_sim::util::cli::Args;
+use vima_sim::util::error::Result;
 
 const USAGE: &str = "\
 vima-sim — VIMA (Vector-In-Memory Architecture) paper-reproduction simulator
@@ -27,25 +30,32 @@ USAGE:
   vima-sim <COMMAND> [OPTIONS]
 
 COMMANDS:
+  sweep       Reproduce the whole suite (fig2-fig5 + ablations + headline)
+              as one deduplicated, multi-threaded run grid — shared AVX
+              baselines simulate once; restrict with --figs
   fig2        Reproduce Fig. 2 (HIVE vs VIMA vs AVX, MemSet/VecSum/Stencil)
   fig3        Reproduce Fig. 3 (single-thread speedup, 7 kernels x 3 sizes)
   fig4        Reproduce Fig. 4 (multithreaded AVX vs VIMA, speedup + energy)
   fig5        Reproduce Fig. 5 (VIMA cache-size sweep)
   ablation    Sec. III-C ablations (vector size, stop-and-go)
   headline    Max speedup / energy saving (paper: 26x, 93%)
-  all         Everything above in sequence
+  all         Everything above in sequence (one shared result cache)
   run         Run one workload: vima-sim run <kernel> <backend> [--mb N]
               kernels: memset memcopy vecsum stencil matmul knn mlp
               backends: avx vima hive
   transpile   Future-work demo: auto-convert an AVX trace to VIMA
               (vima-sim transpile <kernel> [--mb N])
   config      Print the effective configuration (Table I + overrides)
-  selftest    Execute every f32 PJRT artifact once (requires `make artifacts`)
+  selftest    Execute every f32 PJRT artifact once (needs `make artifacts`
+              and a binary built with `--features pjrt`)
 
 OPTIONS:
+  --jobs N         sweep worker threads (default: all cores; 1 = serial)
   --quick          1/16 dataset sizes (smoke runs)
   --config FILE    TOML overrides for Table I
   --out DIR        also write each table as CSV into DIR
+  --csv DIR        (sweep) same as --out
+  --figs LIST      (sweep) comma-separated subset, e.g. fig2,fig5,ablation
   --threads N      (run) data-parallel cores
   --mb N           (run) footprint in MiB
   --stats          (run) dump the full counter report
@@ -92,6 +102,23 @@ fn emit(table: &FigTable, out: Option<&str>) -> Result<()> {
     Ok(())
 }
 
+/// Produce the named figure's tables through the shared-cache experiment.
+fn figure_tables(exp: &Experiment, name: &str) -> Result<Vec<FigTable>> {
+    Ok(match name {
+        "fig2" => vec![exp.fig2()],
+        "fig3" => vec![exp.fig3()],
+        "fig4" => vec![exp.fig4()],
+        "fig5" => vec![exp.fig5()],
+        "ablation" => vec![
+            exp.ablation_vector_size(),
+            exp.ablation_stop_and_go(),
+            exp.ablation_prefetcher(),
+        ],
+        "headline" => vec![exp.headline()],
+        other => bail!("unknown figure {other:?}; expected fig2..fig5, ablation, headline"),
+    })
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
     let Some(cmd) = args.positional.first().map(String::as_str) else {
@@ -105,30 +132,47 @@ fn main() -> Result<()> {
     };
     cfg.validate()?;
     let scale = if args.flag("quick") { SizeScale::Quick } else { SizeScale::Paper };
-    let mut exp = Experiment::new(cfg.clone(), scale);
+    let jobs = args.get_usize("jobs", 0);
+    let mut exp = Experiment::with_jobs(cfg.clone(), scale, jobs);
     exp.verbose = args.flag("verbose");
     let out = args.get("out");
 
     match cmd {
-        "fig2" => emit(&exp.fig2(), out)?,
-        "fig3" => emit(&exp.fig3(), out)?,
-        "fig4" => emit(&exp.fig4(), out)?,
-        "fig5" => emit(&exp.fig5(), out)?,
-        "ablation" => {
-            emit(&exp.ablation_vector_size(), out)?;
-            emit(&exp.ablation_stop_and_go(), out)?;
-            emit(&exp.ablation_prefetcher(), out)?;
+        "sweep" => {
+            let figs = args.get_list("figs").unwrap_or_else(|| {
+                ["fig2", "fig3", "fig4", "fig5", "ablation", "headline"]
+                    .map(String::from)
+                    .to_vec()
+            });
+            let out = args.get("csv").or(out);
+            let before = vima_sim::sim::run_invocations();
+            for fig in &figs {
+                for table in figure_tables(&exp, fig)? {
+                    emit(&table, out)?;
+                }
+            }
+            let stats = exp.sweep_stats();
+            eprintln!(
+                "[vima-sim] sweep: {} cells -> {} unique simulations \
+                 ({} machine runs), {} cache hits, {} worker(s)",
+                stats.cells,
+                stats.unique_runs,
+                vima_sim::sim::run_invocations() - before,
+                stats.cache_hits,
+                exp.jobs(),
+            );
         }
-        "headline" => emit(&exp.headline(), out)?,
+        "fig2" | "fig3" | "fig4" | "fig5" | "headline" | "ablation" => {
+            for table in figure_tables(&exp, cmd)? {
+                emit(&table, out)?;
+            }
+        }
         "all" => {
-            emit(&exp.fig2(), out)?;
-            emit(&exp.fig3(), out)?;
-            emit(&exp.fig4(), out)?;
-            emit(&exp.fig5(), out)?;
-            emit(&exp.ablation_vector_size(), out)?;
-            emit(&exp.ablation_stop_and_go(), out)?;
-            emit(&exp.ablation_prefetcher(), out)?;
-            emit(&exp.headline(), out)?;
+            for fig in ["fig2", "fig3", "fig4", "fig5", "ablation", "headline"] {
+                for table in figure_tables(&exp, fig)? {
+                    emit(&table, out)?;
+                }
+            }
         }
         "config" => print!("{}", cfg.to_toml()),
         "transpile" => {
@@ -182,6 +226,7 @@ fn main() -> Result<()> {
                 print!("{}", r.report);
             }
         }
+        #[cfg(feature = "pjrt")]
         "selftest" => {
             let mut engine = Engine::new(default_artifacts_dir())?;
             let mut names: Vec<String> = engine.names().map(String::from).collect();
@@ -189,22 +234,28 @@ fn main() -> Result<()> {
             let mut ran = 0;
             for name in &names {
                 let meta = engine.meta(name).unwrap().clone();
-                let all_f32 = meta.inputs.iter().chain(meta.outputs.iter()).all(|s| s.dtype == "float32");
+                let all_f32 =
+                    meta.inputs.iter().chain(meta.outputs.iter()).all(|s| s.dtype == "float32");
                 if !all_f32 {
                     continue; // f32 smoke only; int paths covered by pytest
                 }
                 let inputs: Vec<Vec<f32>> =
                     meta.inputs.iter().map(|s| vec![1.0f32; s.elements()]).collect();
                 let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-                let out = engine.execute_f32(name, &refs)?;
-                anyhow::ensure!(
-                    !meta.outputs.is_empty() && out.len() == meta.outputs[0].elements(),
+                let output = engine.execute_f32(name, &refs)?;
+                vima_sim::ensure!(
+                    !meta.outputs.is_empty() && output.len() == meta.outputs[0].elements(),
                     "{name}: wrong output size"
                 );
                 ran += 1;
-                println!("ok {name} ({} inputs -> {} elems)", refs.len(), out.len());
+                println!("ok {name} ({} inputs -> {} elems)", refs.len(), output.len());
             }
             println!("selftest: {ran}/{} f32 artifacts executed", names.len());
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "selftest" => {
+            bail!("this binary was built without the `pjrt` feature; rebuild with \
+                   `cargo build --features pjrt` (requires the xla crate)")
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!("unknown command {other:?}; see `vima-sim help`"),

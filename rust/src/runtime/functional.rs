@@ -9,7 +9,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::Result;
+use crate::ensure;
+use crate::util::error::{Error, Result};
 
 use super::Engine;
 use crate::isa::{VDtype, VimaInstr, VimaOp};
@@ -42,16 +43,16 @@ impl FunctionalVima {
         let v = self
             .memory
             .get(&base)
-            .ok_or_else(|| anyhow::anyhow!("functional memory miss at {base:#x}"))?;
-        anyhow::ensure!(v.len() == elems, "vector at {base:#x} has {} elems, want {elems}", v.len());
+            .ok_or_else(|| Error::msg(format!("functional memory miss at {base:#x}")))?;
+        ensure!(v.len() == elems, "vector at {base:#x} has {} elems, want {elems}", v.len());
         Ok(v.clone())
     }
 
     /// Execute one f32 VIMA instruction through the PJRT artifacts.
     pub fn execute(&mut self, instr: &VimaInstr) -> Result<()> {
-        anyhow::ensure!(instr.dtype == VDtype::F32, "functional path supports f32 traces");
+        ensure!(instr.dtype == VDtype::F32, "functional path supports f32 traces");
         let elems = instr.vector_bytes as usize / 4;
-        anyhow::ensure!(elems == 2048, "per-instruction artifacts are 8 KB vectors");
+        ensure!(elems == 2048, "per-instruction artifacts are 8 KB vectors");
         self.executed += 1;
 
         let artifact = match instr.op {
@@ -66,7 +67,7 @@ impl FunctionalVima {
             VimaOp::Bcast => "vbcast_f32",
             VimaOp::Dot => "vdot_f32",
             VimaOp::RedSum => "vredsum_f32",
-            op => anyhow::bail!("no f32 artifact for {op:?}"),
+            op => crate::bail!("no f32 artifact for {op:?}"),
         };
 
         let mut inputs: Vec<Vec<f32>> = Vec::new();

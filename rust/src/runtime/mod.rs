@@ -17,7 +17,8 @@ pub mod functional;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::util::error::{Context, Error, Result};
 
 /// One artifact's signature from the manifest.
 #[derive(Debug, Clone, PartialEq)]
@@ -91,7 +92,7 @@ impl Engine {
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("missing {manifest_path:?}; run `make artifacts`"))?;
         let manifest = parse_manifest(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::msg(format!("PJRT: {e:?}")))?;
         Ok(Self { client, dir, manifest, compiled: HashMap::new() })
     }
 
@@ -108,13 +109,13 @@ impl Engine {
         if self.compiled.contains_key(name) {
             return Ok(());
         }
-        anyhow::ensure!(self.manifest.contains_key(name), "unknown artifact {name}");
+        ensure!(self.manifest.contains_key(name), "unknown artifact {name}");
         let path = self.dir.join(format!("{name}.hlo.txt"));
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+            .map_err(|e| Error::msg(format!("parse {path:?}: {e:?}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe =
-            self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            self.client.compile(&comp).map_err(|e| Error::msg(format!("compile {name}: {e:?}")))?;
         self.compiled.insert(name.to_string(), exe);
         Ok(())
     }
@@ -125,7 +126,7 @@ impl Engine {
     pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
         self.compile(name)?;
         let meta = &self.manifest[name];
-        anyhow::ensure!(
+        ensure!(
             inputs.len() == meta.inputs.len(),
             "{name}: expected {} inputs, got {}",
             meta.inputs.len(),
@@ -134,10 +135,10 @@ impl Engine {
         let exe = &self.compiled[name];
         let result = exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .map_err(|e| Error::msg(format!("execute {name}: {e:?}")))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        result.to_tuple1().map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+            .map_err(|e| Error::msg(format!("fetch {name}: {e:?}")))?;
+        result.to_tuple1().map_err(|e| Error::msg(format!("untuple {name}: {e:?}")))
     }
 
     /// Execute with f32 slices in/out (shape checked against the manifest).
@@ -146,12 +147,12 @@ impl Engine {
             self.meta(name).with_context(|| format!("unknown artifact {name}"))?.clone();
         let mut lits = Vec::with_capacity(inputs.len());
         for (spec, data) in meta.inputs.iter().zip(inputs) {
-            anyhow::ensure!(
+            ensure!(
                 spec.dtype == "float32",
                 "{name}: input is {}, use execute() for non-f32",
                 spec.dtype
             );
-            anyhow::ensure!(
+            ensure!(
                 spec.elements() == data.len(),
                 "{name}: expected {} elements, got {}",
                 spec.elements(),
@@ -160,7 +161,7 @@ impl Engine {
             lits.push(literal_f32(data, &spec.shape)?);
         }
         let out = self.execute(name, &lits)?;
-        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec {name}: {e:?}"))
+        out.to_vec::<f32>().map_err(|e| Error::msg(format!("to_vec {name}: {e:?}")))
     }
 
     /// Number of compiled executables currently cached.
@@ -176,7 +177,7 @@ pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
         return Ok(lit);
     }
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    lit.reshape(&dims).map_err(|e| Error::msg(format!("reshape: {e:?}")))
 }
 
 /// Build an i32 literal of the given shape.
@@ -186,7 +187,7 @@ pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
         return Ok(lit);
     }
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    lit.reshape(&dims).map_err(|e| Error::msg(format!("reshape: {e:?}")))
 }
 
 /// Default artifacts directory: `$VIMA_ARTIFACTS` or `artifacts/`.

@@ -6,6 +6,8 @@
 //! banks, links, the VIMA FUs) observe requests in approximately global time
 //! order.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::cache::MemorySystem;
 use crate::config::SystemConfig;
 use crate::cpu::Core;
@@ -13,8 +15,18 @@ use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::hive::HiveDevice;
 use crate::isa::TraceEvent;
 use crate::stats::StatsReport;
-use crate::trace::TraceStream;
+use crate::trace::{TraceParams, TraceStream};
 use crate::vima::VimaDevice;
+
+/// Process-wide count of [`Machine::run`] invocations. The sweep engine's
+/// result cache exists to minimize this number; the `sweep` CLI summary and
+/// the dedup tests read it.
+static RUN_INVOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Total `Machine::run` calls since process start (all threads).
+pub fn run_invocations() -> u64 {
+    RUN_INVOCATIONS.load(Ordering::Relaxed)
+}
 
 /// Outcome of one simulation run.
 #[derive(Debug, Clone)]
@@ -80,6 +92,11 @@ impl Machine {
         self.scale = scale;
     }
 
+    /// Number of simulated cores this machine was built for.
+    pub fn threads(&self) -> usize {
+        self.cores.len()
+    }
+
     /// Process one trace event on core `c`. Returns the core-local time.
     fn step(&mut self, c: usize, ev: &TraceEvent) -> u64 {
         match ev {
@@ -120,6 +137,7 @@ impl Machine {
 
     /// Run one trace stream per thread to completion.
     pub fn run(&mut self, traces: Vec<TraceStream>) -> SimResult {
+        RUN_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
         assert_eq!(traces.len(), self.cores.len(), "one trace per core");
         let mut streams: Vec<_> = traces.into_iter().map(Some).collect();
         let mut done = vec![false; streams.len()];
@@ -203,14 +221,9 @@ impl Machine {
         self.vima.dump_stats(&mut report);
         self.hive.dump_stats(&mut report);
         if self.scale != 1.0 {
-            // Linear extrapolation of event counters (uniform sampled work).
-            let scaled: Vec<(String, f64)> =
-                report.iter().map(|(k, v)| (k.to_string(), v * self.scale)).collect();
-            let mut r2 = StatsReport::new();
-            for (k, v) in scaled {
-                r2.set(k, v);
-            }
-            report = r2;
+            // Linear extrapolation of event counters (uniform sampled work),
+            // in place — no clone/rebuild of the whole report.
+            report.scale_all(self.scale);
         }
         report.set("sim.cycles", cycles as f64);
         report.set("sim.threads", self.cores.len() as f64);
@@ -238,27 +251,38 @@ pub fn simulate(cfg: &SystemConfig, params: crate::trace::TraceParams) -> SimRes
     simulate_threads(cfg, params, 1)
 }
 
-/// Simulate a data-parallel workload over `threads` cores.
-pub fn simulate_threads(
-    cfg: &SystemConfig,
-    params: crate::trace::TraceParams,
-    threads: usize,
-) -> SimResult {
-    let mut machine = Machine::new(cfg, threads);
-    // Sampling extrapolation for the sub-sampled kernels.
-    let scale = match params.kernel {
+/// Sampling extrapolation factor for the sub-sampled kernels
+/// (DESIGN.md §Sampling): MatMul simulates a row slice, kNN/MLP simulate a
+/// fixed instance subset; cycles and counters scale linearly.
+pub fn sampling_scale(params: &TraceParams) -> f64 {
+    match params.kernel {
         crate::trace::KernelId::MatMul => {
-            let s = crate::trace::matmul::sampling_for(&params);
+            let s = crate::trace::matmul::sampling_for(params);
             s.rows_total as f64 / s.rows_simulated as f64
         }
         crate::trace::KernelId::Knn => crate::trace::knn::scale_factor(),
         crate::trace::KernelId::Mlp => crate::trace::mlp::scale_factor(),
         _ => 1.0,
-    };
-    machine.set_scale(scale.max(1.0));
+    }
+}
+
+/// Run one data-parallel workload on an existing (fresh or just-reset)
+/// machine. This is the sweep engine's entry point: workers keep a machine
+/// alive across cells with the same `(config, threads)` shape and call
+/// [`Machine::reset`] between runs instead of reallocating the whole
+/// hierarchy.
+pub fn run_on(machine: &mut Machine, params: TraceParams, threads: usize) -> SimResult {
+    assert_eq!(machine.threads(), threads, "machine was built for a different thread count");
+    machine.set_scale(sampling_scale(&params).max(1.0));
     let traces: Vec<_> =
         (0..threads).map(|t| params.with_threads(t, threads).stream()).collect();
     machine.run(traces)
+}
+
+/// Simulate a data-parallel workload over `threads` cores.
+pub fn simulate_threads(cfg: &SystemConfig, params: TraceParams, threads: usize) -> SimResult {
+    let mut machine = Machine::new(cfg, threads);
+    run_on(&mut machine, params, threads)
 }
 
 #[cfg(test)]
@@ -313,6 +337,24 @@ mod tests {
             without.cycles,
             with.cycles
         );
+    }
+
+    #[test]
+    fn machine_reuse_matches_fresh_runs() {
+        // Reset-and-reuse (the sweep engine's fast path) must be
+        // indistinguishable from a freshly allocated machine.
+        let c = cfg();
+        let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20);
+        let q = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20);
+        let mut m = Machine::new(&c, 1);
+        let first = run_on(&mut m, p, 1);
+        m.reset();
+        let second = run_on(&mut m, q, 1);
+        assert_eq!(second.cycles, simulate(&c, q).cycles);
+        m.reset();
+        let again = run_on(&mut m, p, 1);
+        assert_eq!(first.cycles, again.cycles);
+        assert_eq!(first.report, again.report);
     }
 
     #[test]

@@ -39,6 +39,15 @@ impl StatsReport {
             .map(|(k, v)| (k.as_str(), *v))
     }
 
+    /// Scale every entry in place by `f` — the §Sampling extrapolation
+    /// contract: event counters of a uniformly sub-sampled run extrapolate
+    /// linearly, without rebuilding the report.
+    pub fn scale_all(&mut self, f: f64) {
+        for v in self.entries.values_mut() {
+            *v *= f;
+        }
+    }
+
     /// Merge another report into this one, summing overlapping keys.
     pub fn merge(&mut self, other: &StatsReport) {
         for (k, v) in &other.entries {
@@ -159,6 +168,17 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.get("l1d.hits"), Some(15.0));
         assert_eq!(a.with_prefix("l1d.").count(), 2);
+    }
+
+    #[test]
+    fn scale_all_in_place() {
+        let mut r = StatsReport::new();
+        r.set("core.uops", 100.0);
+        r.set("mem.reads", 8.0);
+        r.scale_all(2.5);
+        assert_eq!(r.get("core.uops"), Some(250.0));
+        assert_eq!(r.get("mem.reads"), Some(20.0));
+        assert_eq!(r.len(), 2);
     }
 
     #[test]

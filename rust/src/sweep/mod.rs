@@ -1,0 +1,409 @@
+//! Declarative sweep engine — the experiment path's run grid.
+//!
+//! The paper's figures are grids of `(kernel × backend × threads × size ×
+//! config)` simulation cells, and many cells recur across figures (every
+//! figure normalizes to the same single-thread AVX baselines). Instead of
+//! hand-rolled serial loops per figure, the coordinator now *declares* a
+//! [`SweepPlan`] of [`RunCell`]s and hands it to a [`SweepRunner`], which:
+//!
+//! * **deduplicates** — cells are keyed by their full identity
+//!   ([`CellKey`]: kernel, backend, footprint, threads, vector size, and
+//!   the complete [`SystemConfig`]) in a persistent result cache, so a cell
+//!   shared by fig3/fig4/fig5 simulates exactly once per runner (across
+//!   *sequential* `run` calls — two `run`s racing on the same runner may
+//!   both simulate a cell neither has cached yet; results are unaffected,
+//!   the work is just duplicated);
+//! * **parallelizes** — unique cells execute on a `std::thread::scope`
+//!   worker pool (default `available_parallelism()`, `--jobs N` override;
+//!   no extra dependencies). Each simulation is single-threaded and
+//!   deterministic, so scheduling order cannot change any result: serial
+//!   (`jobs = 1`) and parallel runs produce bit-identical tables;
+//! * **reuses machines** — each worker keeps its [`Machine`] alive across
+//!   cells with the same `(config, threads)` shape and calls
+//!   [`Machine::reset`] instead of reallocating the cache hierarchy
+//!   (see [`MachineCache`]).
+//!
+//! Results come back in plan order, so callers assemble figure tables by
+//! the indices [`SweepPlan::push`] returned.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::SystemConfig;
+use crate::coordinator::workloads::Workload;
+use crate::sim::{run_on, Machine, SimResult};
+use crate::trace::{Backend, KernelId, TraceParams};
+
+/// One cell of the run grid: a workload on a backend with a thread count
+/// and an optional configuration override.
+#[derive(Debug, Clone)]
+pub struct RunCell {
+    pub kernel: KernelId,
+    /// Total data footprint in bytes.
+    pub footprint: u64,
+    pub backend: Backend,
+    /// Data-parallel host cores driving the run.
+    pub threads: usize,
+    /// VIMA/HIVE vector size in bytes (8192 default; the ablation sweeps it).
+    pub vector_bytes: u32,
+    /// Full-config override; `None` inherits the sweep's base config.
+    pub cfg_override: Option<SystemConfig>,
+}
+
+impl RunCell {
+    pub fn new(w: Workload, backend: Backend) -> Self {
+        Self {
+            kernel: w.kernel,
+            footprint: w.footprint,
+            backend,
+            threads: 1,
+            vector_bytes: 8192,
+            cfg_override: None,
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_vector_bytes(mut self, vb: u32) -> Self {
+        self.vector_bytes = vb;
+        self
+    }
+
+    pub fn with_cfg(mut self, cfg: SystemConfig) -> Self {
+        self.cfg_override = Some(cfg);
+        self
+    }
+
+    /// Trace-generator parameters for this cell (per-thread slicing happens
+    /// inside [`run_on`]).
+    pub fn params(&self) -> TraceParams {
+        TraceParams::new(self.kernel, self.backend, self.footprint)
+            .with_vector_bytes(self.vector_bytes)
+    }
+
+    fn effective_cfg<'a>(&'a self, base: &'a SystemConfig) -> &'a SystemConfig {
+        self.cfg_override.as_ref().unwrap_or(base)
+    }
+
+    /// Cache identity under a base config. An override equal to the base
+    /// hashes identically to no override — identity is by value, not by
+    /// provenance.
+    pub fn key(&self, base: &SystemConfig) -> CellKey {
+        CellKey {
+            kernel: self.kernel,
+            backend: self.backend,
+            footprint: self.footprint,
+            threads: self.threads,
+            vector_bytes: self.vector_bytes,
+            cfg: self.effective_cfg(base).clone(),
+        }
+    }
+
+    /// Progress label for verbose runs.
+    pub fn label(&self) -> String {
+        let mut s = format!(
+            "{}/{} {:.1}MB x{}",
+            self.kernel,
+            self.backend,
+            self.footprint as f64 / (1 << 20) as f64,
+            self.threads
+        );
+        if self.vector_bytes != 8192 {
+            s += &format!(" vb={}", self.vector_bytes);
+        }
+        if self.cfg_override.is_some() {
+            s += " [cfg]";
+        }
+        s
+    }
+}
+
+/// Full identity of a simulation cell — the result-cache key. The simulator
+/// is deterministic, so equal keys imply bit-identical [`SimResult`]s and
+/// the second occurrence never runs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CellKey {
+    kernel: KernelId,
+    backend: Backend,
+    footprint: u64,
+    threads: usize,
+    vector_bytes: u32,
+    cfg: SystemConfig,
+}
+
+/// An ordered list of cells; [`push`](Self::push) returns the index used to
+/// look up that cell's result in the runner's output.
+#[derive(Debug, Clone, Default)]
+pub struct SweepPlan {
+    cells: Vec<RunCell>,
+}
+
+impl SweepPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a cell; returns its result index.
+    pub fn push(&mut self, cell: RunCell) -> usize {
+        self.cells.push(cell);
+        self.cells.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn cells(&self) -> &[RunCell] {
+        &self.cells
+    }
+}
+
+/// Per-worker machine reuse: consecutive cells sharing a `(config,
+/// threads)` shape re-run on a [`Machine::reset`] machine instead of a
+/// fresh allocation.
+#[derive(Default)]
+pub struct MachineCache {
+    machine: Option<Machine>,
+    pub reuses: u64,
+    pub builds: u64,
+}
+
+impl MachineCache {
+    pub fn get(&mut self, cfg: &SystemConfig, threads: usize) -> &mut Machine {
+        let reusable =
+            self.machine.as_ref().is_some_and(|m| m.threads() == threads && m.cfg == *cfg);
+        if reusable {
+            self.reuses += 1;
+            let m = self.machine.as_mut().unwrap();
+            m.reset();
+            m
+        } else {
+            self.builds += 1;
+            self.machine = Some(Machine::new(cfg, threads));
+            self.machine.as_mut().unwrap()
+        }
+    }
+}
+
+/// Dedup accounting across every plan a runner has executed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Cells requested across all plans (before dedup).
+    pub cells: u64,
+    /// Cells that actually simulated (`Machine::run` invocations).
+    pub unique_runs: u64,
+    /// Cells answered from the result cache (or deduped within a plan).
+    pub cache_hits: u64,
+}
+
+/// Executes [`SweepPlan`]s against a persistent, thread-safe result cache.
+///
+/// Dedup is exact across sequential `run` calls. The runner is `Sync`, but
+/// concurrent `run` calls do not coordinate in-flight work: cells neither
+/// call has cached yet may simulate in both (results identical — the
+/// simulator is deterministic — only wall-clock and the stats counters
+/// notice). The coordinator only issues sequential runs.
+pub struct SweepRunner {
+    jobs: usize,
+    cache: Mutex<HashMap<CellKey, SimResult>>,
+    stats: Mutex<SweepStats>,
+}
+
+impl SweepRunner {
+    /// `jobs = 0` means `available_parallelism()`.
+    pub fn new(jobs: usize) -> Self {
+        Self {
+            jobs: resolve_jobs(jobs),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(SweepStats::default()),
+        }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    pub fn stats(&self) -> SweepStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Number of distinct cells currently cached.
+    pub fn cached_cells(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute a plan; results are returned in plan order.
+    pub fn run(&self, base: &SystemConfig, plan: &SweepPlan) -> Vec<SimResult> {
+        self.run_verbose(base, plan, false)
+    }
+
+    /// Execute a plan, optionally logging one line per simulated cell.
+    pub fn run_verbose(
+        &self,
+        base: &SystemConfig,
+        plan: &SweepPlan,
+        verbose: bool,
+    ) -> Vec<SimResult> {
+        let keys: Vec<CellKey> = plan.cells().iter().map(|c| c.key(base)).collect();
+
+        // First occurrence of each not-yet-cached key gets simulated; later
+        // occurrences (and cached keys) are hits.
+        let todo: Vec<usize> = {
+            let cache = self.cache.lock().unwrap();
+            let mut claimed: HashSet<&CellKey> = HashSet::new();
+            let mut todo = Vec::new();
+            for (i, k) in keys.iter().enumerate() {
+                if !cache.contains_key(k) && claimed.insert(k) {
+                    todo.push(i);
+                }
+            }
+            let mut stats = self.stats.lock().unwrap();
+            stats.cells += keys.len() as u64;
+            stats.unique_runs += todo.len() as u64;
+            stats.cache_hits += (keys.len() - todo.len()) as u64;
+            todo
+        };
+
+        if !todo.is_empty() {
+            let workers = self.jobs.min(todo.len()).max(1);
+            let next = AtomicUsize::new(0);
+            let done: Mutex<Vec<(usize, SimResult)>> = Mutex::new(Vec::with_capacity(todo.len()));
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| {
+                        let mut machines = MachineCache::default();
+                        loop {
+                            let j = next.fetch_add(1, Ordering::Relaxed);
+                            let Some(&i) = todo.get(j) else { break };
+                            let cell = &plan.cells()[i];
+                            let cfg = cell.effective_cfg(base);
+                            if verbose {
+                                eprintln!("[vima-sim] run {}", cell.label());
+                            }
+                            let machine = machines.get(cfg, cell.threads);
+                            let result = run_on(machine, cell.params(), cell.threads);
+                            done.lock().unwrap().push((i, result));
+                        }
+                    });
+                }
+            });
+            let mut cache = self.cache.lock().unwrap();
+            for (i, result) in done.into_inner().unwrap() {
+                cache.insert(keys[i].clone(), result);
+            }
+        }
+
+        let cache = self.cache.lock().unwrap();
+        keys.iter().map(|k| cache[k].clone()).collect()
+    }
+}
+
+fn resolve_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workloads::{SizeScale, WorkloadSet};
+
+    fn small_workload() -> Workload {
+        // Quick-scale MemSet, smallest size (1 MB floor).
+        WorkloadSet::sizes(KernelId::MemSet, SizeScale::Quick)[0]
+    }
+
+    #[test]
+    fn identical_cells_simulate_once() {
+        let cfg = SystemConfig::default();
+        let runner = SweepRunner::new(2);
+        let mut plan = SweepPlan::new();
+        let a = plan.push(RunCell::new(small_workload(), Backend::Avx));
+        let b = plan.push(RunCell::new(small_workload(), Backend::Avx));
+        let res = runner.run(&cfg, &plan);
+        assert_eq!(res[a].cycles, res[b].cycles);
+        let stats = runner.stats();
+        assert_eq!(stats.cells, 2);
+        assert_eq!(stats.unique_runs, 1);
+        assert_eq!(stats.cache_hits, 1);
+    }
+
+    #[test]
+    fn cache_persists_across_plans() {
+        let cfg = SystemConfig::default();
+        let runner = SweepRunner::new(1);
+        let mut plan = SweepPlan::new();
+        plan.push(RunCell::new(small_workload(), Backend::Vima));
+        runner.run(&cfg, &plan);
+        runner.run(&cfg, &plan);
+        let stats = runner.stats();
+        assert_eq!(stats.unique_runs, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(runner.cached_cells(), 1);
+    }
+
+    #[test]
+    fn config_override_changes_identity_by_value() {
+        let base = SystemConfig::default();
+        let w = small_workload();
+        // Override equal to the base config: same key as no override.
+        assert_eq!(
+            RunCell::new(w, Backend::Vima).with_cfg(base.clone()).key(&base),
+            RunCell::new(w, Backend::Vima).key(&base),
+        );
+        // A real difference separates the keys.
+        let mut small_cache = base.clone();
+        small_cache.vima.cache_bytes = 16 << 10;
+        assert_ne!(
+            RunCell::new(w, Backend::Vima).with_cfg(small_cache).key(&base),
+            RunCell::new(w, Backend::Vima).key(&base),
+        );
+        // So do threads and vector size.
+        assert_ne!(
+            RunCell::new(w, Backend::Avx).with_threads(2).key(&base),
+            RunCell::new(w, Backend::Avx).key(&base),
+        );
+        assert_ne!(
+            RunCell::new(w, Backend::Vima).with_vector_bytes(256).key(&base),
+            RunCell::new(w, Backend::Vima).key(&base),
+        );
+    }
+
+    #[test]
+    fn machine_cache_reuses_on_matching_shape() {
+        let cfg = SystemConfig::default();
+        let mut mc = MachineCache::default();
+        mc.get(&cfg, 1);
+        mc.get(&cfg, 1);
+        assert_eq!((mc.builds, mc.reuses), (1, 1));
+        mc.get(&cfg, 2); // different thread count: rebuild
+        let mut other = cfg.clone();
+        other.vima.cache_bytes = 16 << 10;
+        mc.get(&other, 2); // different config: rebuild
+        assert_eq!((mc.builds, mc.reuses), (3, 1));
+    }
+
+    #[test]
+    fn results_match_direct_simulation() {
+        let cfg = SystemConfig::default();
+        let runner = SweepRunner::new(2);
+        let mut plan = SweepPlan::new();
+        let w = small_workload();
+        let i = plan.push(RunCell::new(w, Backend::Vima));
+        let res = runner.run(&cfg, &plan);
+        let direct = crate::sim::simulate(&cfg, RunCell::new(w, Backend::Vima).params());
+        assert_eq!(res[i].cycles, direct.cycles);
+        assert_eq!(res[i].report, direct.report);
+    }
+}

@@ -80,7 +80,11 @@ pub mod layout {
 
 /// A chunk-refilled trace producer. One `refill` = one outer-loop iteration;
 /// returning `false` means the stream ended (nothing was appended).
-pub trait TraceChunker {
+///
+/// `Send` is a supertrait so [`TraceStream`]s can cross into the sweep
+/// engine's worker threads; every generator is plain owned data, so the
+/// bound is free.
+pub trait TraceChunker: Send {
     fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool;
 }
 

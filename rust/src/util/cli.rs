@@ -46,6 +46,16 @@ impl Args {
         self.flags.get(name).map(|s| s.as_str()).filter(|s| *s != FLAG_SET)
     }
 
+    /// Comma-separated list flag: `--figs fig2,fig3` -> `["fig2", "fig3"]`.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name).map(|v| v.parse().expect("numeric flag")).unwrap_or(default)
     }
@@ -71,6 +81,15 @@ mod tests {
         assert_eq!(a.get("out"), Some("results"));
         assert_eq!(a.get_u64("mb", 4), 16);
         assert_eq!(a.get_u64("threads", 1), 1);
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = args(&["sweep", "--figs", "fig2, fig5,", "--jobs=4"]);
+        let figs = a.get_list("figs").unwrap();
+        assert_eq!(figs, vec!["fig2", "fig5"]);
+        assert_eq!(a.get_usize("jobs", 0), 4);
+        assert_eq!(a.get_list("missing"), None);
     }
 
     #[test]

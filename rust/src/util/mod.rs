@@ -1,9 +1,11 @@
 //! In-tree replacements for crates unavailable in the offline build
 //! environment: a deterministic RNG (property tests), a micro-benchmark
-//! harness (`cargo bench` targets), and a tiny CLI argument helper.
+//! harness (`cargo bench` targets), a tiny CLI argument helper, and the
+//! `anyhow`-shaped error plumbing in [`error`].
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 
 /// SplitMix64 — tiny, deterministic, high-quality 64-bit generator.
 /// Used by the property-based tests and workload randomization.

@@ -1,0 +1,95 @@
+//! Integration tests of the sweep engine: parallel execution must be
+//! bit-identical to serial execution (the simulator is deterministic per
+//! cell; only scheduling changes), and the result cache must dedup the
+//! baseline cells the figures share (EXPERIMENTS.md §Dedup).
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::{SizeScale, WorkloadSet};
+use vima_sim::coordinator::Experiment;
+use vima_sim::sim::SimResult;
+use vima_sim::sweep::{RunCell, SweepPlan, SweepRunner};
+use vima_sim::trace::{Backend, TraceStream};
+
+/// Compile-time proof that trace streams (and results) can cross into the
+/// worker pool.
+#[test]
+fn trace_streams_are_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<TraceStream>();
+    assert_send::<SimResult>();
+}
+
+#[test]
+fn parallel_and_serial_runs_are_bit_identical() {
+    let cfg = SystemConfig::default();
+    let mut plan = SweepPlan::new();
+    // Reduced grid: first four fig2 workloads on all three backends.
+    for w in WorkloadSet::fig2(SizeScale::Quick).into_iter().take(4) {
+        for b in [Backend::Avx, Backend::Hive, Backend::Vima] {
+            plan.push(RunCell::new(w, b));
+        }
+    }
+    let serial = SweepRunner::new(1).run(&cfg, &plan);
+    let parallel = SweepRunner::new(8).run(&cfg, &plan);
+    assert_eq!(serial.len(), parallel.len());
+    for ((a, b), cell) in serial.iter().zip(&parallel).zip(plan.cells()) {
+        assert_eq!(a.cycles, b.cycles, "{}", cell.label());
+        assert_eq!(a.report, b.report, "{}", cell.label());
+        assert_eq!(a.energy.total_j.to_bits(), b.energy.total_j.to_bits(), "{}", cell.label());
+    }
+}
+
+#[test]
+fn figure_tables_identical_serial_vs_parallel() {
+    let a = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 1).fig2();
+    let b = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 4).fig2();
+    assert_eq!(a.columns, b.columns);
+    assert_eq!(a.rows, b.rows);
+}
+
+/// The acceptance criterion of ISSUE 1: a full figure-suite run performs
+/// strictly fewer simulations than the seed's per-figure serial loops,
+/// because shared cells (AVX baselines, default-config VIMA runs) hit the
+/// result cache.
+#[test]
+fn full_suite_dedup_accounting() {
+    let exp = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 0);
+    exp.fig2();
+    exp.fig3();
+    let after_fig3 = exp.sweep_stats();
+    exp.fig4();
+    let after_fig4 = exp.sweep_stats();
+    exp.fig5();
+    let stats = exp.sweep_stats();
+
+    // The seed's loops simulated every cell: 27 (fig2) + 42 (fig3) +
+    // 24 (fig4) + 18 (fig5).
+    assert_eq!(stats.cells, 111);
+    assert!(
+        stats.unique_runs < stats.cells,
+        "dedup must shrink the grid: {} of {}",
+        stats.unique_runs,
+        stats.cells
+    );
+    assert_eq!(stats.cache_hits, stats.cells - stats.unique_runs);
+
+    // fig4 declares 24 cells; its AVX-1T column is the baseline cell, its
+    // baselines/VIMA runs are fig3 cells, so only the 2..32-thread AVX runs
+    // (5 x 3 workloads) are new.
+    assert_eq!(after_fig4.cells - after_fig3.cells, 24);
+    assert_eq!(after_fig4.unique_runs - after_fig3.unique_runs, 15);
+
+    // fig5 declares 18 cells; baselines are cached and the 64 KB point is
+    // the Table-I default VIMA config, so 4 sizes x 3 workloads are new.
+    assert_eq!(stats.cells - after_fig4.cells, 18);
+    assert_eq!(stats.unique_runs - after_fig4.unique_runs, 12);
+
+    // Quick-scale footprints clamp to >= 1 MB, which collapses the two
+    // smallest sizes of every kernel; with cross-figure sharing on top the
+    // whole 111-cell suite needs exactly 61 simulations.
+    assert_eq!(stats.unique_runs, 61);
+
+    // A repeated figure is fully served from the cache.
+    exp.fig3();
+    assert_eq!(exp.sweep_stats().unique_runs, stats.unique_runs);
+}
