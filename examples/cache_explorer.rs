@@ -19,11 +19,13 @@ fn main() {
         "{:<9} {:>7} {:>14} {:>10} {:>10} {:>9}",
         "cache", "lines", "vima cycles", "hits", "misses", "speedup"
     );
-    let avx = simulate(&base_cfg, TraceParams::new(KernelId::Stencil, Backend::Avx, footprint));
+    let avx =
+        simulate(&base_cfg, TraceParams::new(KernelId::Stencil, Backend::Avx, footprint)).unwrap();
     for kb in [8usize, 16, 32, 64, 128, 256] {
         let mut cfg = base_cfg.clone();
         cfg.vima.cache_bytes = kb << 10;
-        let r = simulate(&cfg, TraceParams::new(KernelId::Stencil, Backend::Vima, footprint));
+        let r =
+            simulate(&cfg, TraceParams::new(KernelId::Stencil, Backend::Vima, footprint)).unwrap();
         println!(
             "{:<9} {:>7} {:>14} {:>10} {:>10} {:>8.2}x",
             format!("{kb}KB"),
@@ -37,14 +39,15 @@ fn main() {
 
     println!("\n== Vector size ablation (VecSum, {} MB; Sec. III-C) ==", footprint >> 20);
     println!("{:<9} {:>14} {:>10} {:>22}", "vector", "vima cycles", "speedup", "vs 8KB configuration");
-    let avx = simulate(&base_cfg, TraceParams::new(KernelId::VecSum, Backend::Avx, footprint));
+    let avx =
+        simulate(&base_cfg, TraceParams::new(KernelId::VecSum, Backend::Avx, footprint)).unwrap();
     let mut best = None;
     let mut rows = Vec::new();
     for vb in [256u32, 512, 1024, 2048, 4096, 8192] {
         let mut cfg = base_cfg.clone();
         cfg.vima.vector_bytes = vb as usize;
         let p = TraceParams::new(KernelId::VecSum, Backend::Vima, footprint).with_vector_bytes(vb);
-        let r = simulate(&cfg, p);
+        let r = simulate(&cfg, p).unwrap();
         if vb == 8192 {
             best = Some(r.cycles);
         }

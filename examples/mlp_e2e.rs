@@ -109,8 +109,8 @@ fn main() -> Result<()> {
     );
     let cfg = SystemConfig::default();
     for (mb, label) in [(4u64, "64"), (16, "256"), (64, "1024")] {
-        let avx = simulate(&cfg, TraceParams::new(KernelId::Mlp, Backend::Avx, mb << 20));
-        let vima = simulate(&cfg, TraceParams::new(KernelId::Mlp, Backend::Vima, mb << 20));
+        let avx = simulate(&cfg, TraceParams::new(KernelId::Mlp, Backend::Avx, mb << 20))?;
+        let vima = simulate(&cfg, TraceParams::new(KernelId::Mlp, Backend::Vima, mb << 20))?;
         println!(
             "{label:<10} {:>14} {:>14} {:>8.2}x {:>12.1}%",
             avx.cycles,

@@ -17,8 +17,8 @@ fn main() -> Result<()> {
     let footprint = 12u64 << 20; // 12 MB total (three 4 MB arrays)
 
     // --- timing: VecSum on both backends --------------------------------
-    let avx = simulate(&cfg, TraceParams::new(KernelId::VecSum, Backend::Avx, footprint));
-    let vima = simulate(&cfg, TraceParams::new(KernelId::VecSum, Backend::Vima, footprint));
+    let avx = simulate(&cfg, TraceParams::new(KernelId::VecSum, Backend::Avx, footprint))?;
+    let vima = simulate(&cfg, TraceParams::new(KernelId::VecSum, Backend::Vima, footprint))?;
     println!("VecSum, {} MB total footprint:", footprint >> 20);
     println!("  AVX  baseline: {:>12} cycles  {:>10.6} J", avx.cycles, avx.energy.total_j);
     println!("  VIMA         : {:>12} cycles  {:>10.6} J", vima.cycles, vima.energy.total_j);
@@ -42,7 +42,7 @@ fn main() -> Result<()> {
                 fx.write_vector(layout::B + base, b);
             }
             let trace = TraceParams::new(KernelId::VecSum, Backend::Vima, 4 * 3 * 8192);
-            for ev in trace.stream() {
+            for ev in trace.stream()? {
                 if let TraceEvent::Vima(instr) = ev {
                     fx.execute(&instr)?;
                 }

@@ -24,9 +24,9 @@ fn main() {
     );
     for kernel in [KernelId::MemSet, KernelId::MemCopy, KernelId::VecSum] {
         for &bytes in sizes {
-            let avx = simulate(&cfg, TraceParams::new(kernel, Backend::Avx, bytes));
-            let hive = simulate(&cfg, TraceParams::new(kernel, Backend::Hive, bytes));
-            let vima = simulate(&cfg, TraceParams::new(kernel, Backend::Vima, bytes));
+            let avx = simulate(&cfg, TraceParams::new(kernel, Backend::Avx, bytes)).unwrap();
+            let hive = simulate(&cfg, TraceParams::new(kernel, Backend::Hive, bytes)).unwrap();
+            let vima = simulate(&cfg, TraceParams::new(kernel, Backend::Vima, bytes)).unwrap();
             println!(
                 "{:<10} {:>6} {:>14} {:>14} {:>14} {:>11.2}x {:>11.2}x",
                 kernel.to_string(),
@@ -43,7 +43,7 @@ fn main() {
     println!("\nEnergy breakdown for VecSum at {} MB:", sizes[sizes.len() - 1] >> 20);
     let bytes = sizes[sizes.len() - 1];
     for (name, backend) in [("AVX", Backend::Avx), ("VIMA", Backend::Vima)] {
-        let r = simulate(&cfg, TraceParams::new(KernelId::VecSum, backend, bytes));
+        let r = simulate(&cfg, TraceParams::new(KernelId::VecSum, backend, bytes)).unwrap();
         let e = &r.energy;
         println!(
             "  {name:<5} total={:.6} J  core={:.6}  caches={:.6}  dram={:.6}  vima={:.6}",

@@ -28,7 +28,7 @@ fn main() {
     let mut last = None;
     bench::bench("fig3_full_experiment", 1, || {
         let exp = Experiment::with_jobs(SystemConfig::default(), scale(), jobs());
-        last = Some((exp.fig3(), exp.sweep_stats()));
+        last = Some((exp.fig3().unwrap(), exp.sweep_stats()));
     });
     let (table, st) = last.unwrap();
     println!("\n{}", table.to_markdown());

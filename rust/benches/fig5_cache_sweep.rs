@@ -28,7 +28,7 @@ fn main() {
     let mut last = None;
     bench::bench("fig5_cache_sweep", 1, || {
         let exp = Experiment::with_jobs(SystemConfig::default(), scale(), jobs());
-        last = Some((exp.fig5(), exp.sweep_stats()));
+        last = Some((exp.fig5().unwrap(), exp.sweep_stats()));
     });
     let (fig5, st) = last.unwrap();
     println!("\n{}", fig5.to_markdown());
@@ -36,14 +36,14 @@ fn main() {
     let mut ab1 = None;
     bench::bench("ablation_vector_size", 1, || {
         let exp = Experiment::with_jobs(SystemConfig::default(), scale(), jobs());
-        ab1 = Some(exp.ablation_vector_size());
+        ab1 = Some(exp.ablation_vector_size().unwrap());
     });
     println!("\n{}", ab1.unwrap().to_markdown());
 
     let mut ab2 = None;
     bench::bench("ablation_stop_and_go", 1, || {
         let exp = Experiment::with_jobs(SystemConfig::default(), scale(), jobs());
-        ab2 = Some(exp.ablation_stop_and_go());
+        ab2 = Some(exp.ablation_stop_and_go().unwrap());
     });
     let ab2 = ab2.unwrap();
     println!("\n{}", ab2.to_markdown());

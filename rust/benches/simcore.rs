@@ -18,9 +18,9 @@ fn main() {
     let cfg = SystemConfig::default();
 
     bench::section("trace generation");
-    let n_events = TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20).stream().count();
+    let n_events = TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20).stream().unwrap().count();
     let r = bench::bench("trace_gen_vecsum_avx_8mb", 5, || {
-        TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20).stream().count()
+        TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20).stream().unwrap().count()
     });
     bench::metric("trace_gen.events_per_sec", n_events as f64 / r.mean_s, "ev/s");
 
@@ -87,10 +87,10 @@ fn main() {
 
     bench::section("whole stack (end-to-end simulate)");
     let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20);
-    let events = p.stream().count() as f64;
-    let r = bench::bench("simulate_vecsum_avx_8mb", 5, || simulate(&cfg, p).cycles);
+    let events = p.stream().unwrap().count() as f64;
+    let r = bench::bench("simulate_vecsum_avx_8mb", 5, || simulate(&cfg, p).unwrap().cycles);
     bench::metric("sim.end_to_end_events_per_sec", events / r.mean_s, "ev/s");
-    let sim_cycles = simulate(&cfg, p).cycles as f64;
+    let sim_cycles = simulate(&cfg, p).unwrap().cycles as f64;
     bench::metric("sim.simulated_cycles_per_sec", sim_cycles / r.mean_s, "cy/s");
 
     bench::section("sweep engine (fig2 grid: 27 cells, deduped + parallel)");
@@ -102,6 +102,6 @@ fn main() {
     }
     // fresh runner per iteration: measures real simulation throughput, not
     // cache lookups
-    let r = bench::bench("sweep_fig2_grid", 1, || SweepRunner::new(0).run(&cfg, &plan).len());
+    let r = bench::bench("sweep_fig2_grid", 1, || SweepRunner::new(0).run(&cfg, &plan).unwrap().len());
     bench::metric("sweep.cells_per_sec", plan.len() as f64 / r.mean_s, "cells/s");
 }

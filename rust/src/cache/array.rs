@@ -2,7 +2,7 @@
 
 /// Tag storage for one cache. Data values are never stored — the simulator
 /// is timing-only on this path (functional values flow through
-/// [`crate::runtime`] instead).
+/// `crate::runtime` instead, when built with the `pjrt` feature).
 pub struct CacheArray {
     sets: usize,
     ways: usize,

@@ -15,20 +15,21 @@ use crate::config::SystemConfig;
 use crate::sim::{simulate_threads, SimResult};
 use crate::sweep::{RunCell, SweepPlan, SweepRunner, SweepStats};
 use crate::trace::{Backend, KernelId};
-use workloads::{SizeScale, Workload, WorkloadSet};
+use crate::util::error::Result;
+use workloads::{SizeScale, SizedWorkload, WorkloadSet};
 
 /// One experiment cell: a workload run on a backend with some threads.
 /// Standalone convenience (one-off runs); the figure drivers use
 /// [`RunCell`]s so results dedup and parallelize.
 #[derive(Debug, Clone, Copy)]
 pub struct RunSpec {
-    pub workload: Workload,
+    pub workload: SizedWorkload,
     pub backend: Backend,
     pub threads: usize,
 }
 
 impl RunSpec {
-    pub fn run(&self, cfg: &SystemConfig) -> SimResult {
+    pub fn run(&self, cfg: &SystemConfig) -> Result<SimResult> {
         simulate_threads(cfg, self.workload.params(self.backend), self.threads)
     }
 }
@@ -130,13 +131,13 @@ impl Experiment {
         self.runner.jobs()
     }
 
-    fn run_plan(&self, plan: &SweepPlan) -> Vec<SimResult> {
+    fn run_plan(&self, plan: &SweepPlan) -> Result<Vec<SimResult>> {
         self.runner.run_verbose(&self.cfg, plan, self.verbose)
     }
 
     /// **Fig. 2** — HIVE vs VIMA speedup over single-thread AVX for
     /// MemSet / VecSum / Stencil.
-    pub fn fig2(&self) -> FigTable {
+    pub fn fig2(&self) -> Result<FigTable> {
         let mut plan = SweepPlan::new();
         let rows: Vec<_> = WorkloadSet::fig2(self.scale)
             .into_iter()
@@ -149,7 +150,7 @@ impl Experiment {
                 )
             })
             .collect();
-        let res = self.run_plan(&plan);
+        let res = self.run_plan(&plan)?;
         let mut t = FigTable::new(
             "Fig. 2: HIVE and VIMA speedup vs AVX single-thread",
             &["hive", "vima"],
@@ -160,11 +161,11 @@ impl Experiment {
                 vec![res[hive].speedup_vs(&res[base]), res[vima].speedup_vs(&res[base])],
             );
         }
-        t
+        Ok(t)
     }
 
     /// **Fig. 3** — VIMA speedup over single-thread AVX, all 7 kernels x 3 sizes.
-    pub fn fig3(&self) -> FigTable {
+    pub fn fig3(&self) -> Result<FigTable> {
         let mut plan = SweepPlan::new();
         let rows: Vec<_> = WorkloadSet::all(self.scale)
             .into_iter()
@@ -176,7 +177,7 @@ impl Experiment {
                 )
             })
             .collect();
-        let res = self.run_plan(&plan);
+        let res = self.run_plan(&plan)?;
         let mut t = FigTable::new(
             "Fig. 3: VIMA speedup vs AVX single-thread",
             &["speedup", "avx_cycles", "vima_cycles", "energy_ratio"],
@@ -193,14 +194,14 @@ impl Experiment {
                 ],
             );
         }
-        t
+        Ok(t)
     }
 
     /// **Fig. 4** — multithreaded AVX (1..32 cores) vs single VIMA device on
     /// the largest Stencil / VecSum / MatMul; speedup and energy, both
     /// normalized to single-thread AVX. (The AVX-1T column *is* the
     /// baseline cell — the cache runs it once.)
-    pub fn fig4(&self) -> FigTable {
+    pub fn fig4(&self) -> Result<FigTable> {
         let threads = [1usize, 2, 4, 8, 16, 32];
         let mut cols: Vec<String> = vec!["vima_speedup".into(), "vima_energy".into()];
         for th in threads {
@@ -222,7 +223,7 @@ impl Experiment {
                 (w.label(), base, vima, avx)
             })
             .collect();
-        let res = self.run_plan(&plan);
+        let res = self.run_plan(&plan)?;
 
         let mut t = FigTable::new(
             "Fig. 4: VIMA vs multithreaded AVX (largest datasets), both normalized to AVX-1T",
@@ -237,12 +238,12 @@ impl Experiment {
             }
             t.push(label, row);
         }
-        t
+        Ok(t)
     }
 
     /// **Fig. 5** — VIMA cache-size sweep (16..256 KB) on the largest
     /// Stencil / VecSum / MatMul, speedup vs single-thread AVX.
-    pub fn fig5(&self) -> FigTable {
+    pub fn fig5(&self) -> Result<FigTable> {
         let sizes_kb = [16usize, 32, 64, 128, 256];
         let cols: Vec<String> = sizes_kb.iter().map(|k| format!("{k}KB")).collect();
         let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
@@ -263,7 +264,7 @@ impl Experiment {
                 (w.label(), base, sweep)
             })
             .collect();
-        let res = self.run_plan(&plan);
+        let res = self.run_plan(&plan)?;
 
         let mut t =
             FigTable::new("Fig. 5: VIMA speedup vs AVX for different VIMA cache sizes", &cols_ref);
@@ -271,12 +272,12 @@ impl Experiment {
             let row = sweep.iter().map(|&i| res[i].speedup_vs(&res[base])).collect();
             t.push(label, row);
         }
-        t
+        Ok(t)
     }
 
     /// **Sec. III-C ablation** — vector size: 256 B performs ~74% worse than
     /// 8 KB on streaming kernels.
-    pub fn ablation_vector_size(&self) -> FigTable {
+    pub fn ablation_vector_size(&self) -> Result<FigTable> {
         let sizes: [u32; 6] = [256, 512, 1024, 2048, 4096, 8192];
         let cols: Vec<String> = sizes.iter().map(|b| format!("{b}B")).collect();
         let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
@@ -301,7 +302,7 @@ impl Experiment {
                 (w.label(), base, sweep)
             })
             .collect();
-        let res = self.run_plan(&plan);
+        let res = self.run_plan(&plan)?;
 
         let mut t = FigTable::new(
             "Ablation: VIMA vector size (speedup vs AVX single-thread)",
@@ -311,7 +312,7 @@ impl Experiment {
             let row = sweep.iter().map(|&i| res[i].speedup_vs(&res[base])).collect();
             t.push(label, row);
         }
-        t
+        Ok(t)
     }
 
     /// **Sec. III-C ablation** — precise-exception dispatch cost, split in
@@ -323,7 +324,7 @@ impl Experiment {
     /// * `pipelined_pct` — the full cost of one-at-a-time dispatch vs a
     ///   HIVE-like fire-and-forget pipeline (non-precise exceptions); this
     ///   is the upper bound the paper trades for precise exceptions.
-    pub fn ablation_stop_and_go(&self) -> FigTable {
+    pub fn ablation_stop_and_go(&self) -> Result<FigTable> {
         let mut no_gap = self.cfg.clone();
         no_gap.vima.dispatch_gap_cycles = 0;
         let mut pipe = self.cfg.clone();
@@ -342,7 +343,7 @@ impl Experiment {
                 )
             })
             .collect();
-        let res = self.run_plan(&plan);
+        let res = self.run_plan(&plan)?;
 
         let mut t = FigTable::new(
             "Ablation: stop-and-go dispatch (gap bubble %, full pipelining %)",
@@ -354,13 +355,13 @@ impl Experiment {
             let pipelined_pct = (with.cycles as f64 / res[pipelined].cycles as f64 - 1.0) * 100.0;
             t.push(label, vec![with.cycles as f64, gap_pct, pipelined_pct]);
         }
-        t
+        Ok(t)
     }
 
     /// **Extension ablation** — baseline strength: Table-I (no prefetcher)
     /// vs a Sandy-Bridge-class LLC stride streamer. Shows which paper claims
     /// depend on the prefetcher-less baseline.
-    pub fn ablation_prefetcher(&self) -> FigTable {
+    pub fn ablation_prefetcher(&self) -> Result<FigTable> {
         let mut pf_cfg = self.cfg.clone();
         pf_cfg.prefetch.enabled = true;
         let mut base_cfg = self.cfg.clone();
@@ -383,7 +384,7 @@ impl Experiment {
                 (w.label(), cells)
             })
             .collect();
-        let res = self.run_plan(&plan);
+        let res = self.run_plan(&plan)?;
 
         let mut t = FigTable::new(
             "Ablation: baseline prefetcher (VIMA speedup vs AVX, without / with LLC streamer)",
@@ -393,13 +394,13 @@ impl Experiment {
             let row = cells.iter().map(|&(avx, vima)| res[vima].speedup_vs(&res[avx])).collect();
             t.push(label, row);
         }
-        t
+        Ok(t)
     }
 
     /// **Headline numbers** — max speedup and max energy saving across
     /// Fig. 3 (all cells cached if `fig3` already ran).
-    pub fn headline(&self) -> FigTable {
-        let fig3 = self.fig3();
+    pub fn headline(&self) -> Result<FigTable> {
+        let fig3 = self.fig3()?;
         let mut best_speedup: f64 = 0.0;
         let mut best_energy: f64 = 1.0;
         for (_, vals) in &fig3.rows {
@@ -412,7 +413,48 @@ impl Experiment {
         );
         t.push("max_speedup", vec![best_speedup]);
         t.push("max_energy_saving_pct", vec![(1.0 - best_energy) * 100.0]);
-        t
+        Ok(t)
+    }
+
+    /// **Custom workloads** — registered Intrinsics-VIMA programs (anything
+    /// beyond the paper's seven kernels), each program's VIMA stream vs the
+    /// AVX lowering of the *same* program. Runs through the shared result
+    /// cache like every paper figure, so repeated cells dedup.
+    pub fn custom_programs(&self) -> Result<FigTable> {
+        self.custom_workloads(&["saxpy", "softmax"])
+    }
+
+    /// Same as [`custom_programs`](Self::custom_programs) for an arbitrary
+    /// list of registered workload names.
+    pub fn custom_workloads(&self, names: &[&str]) -> Result<FigTable> {
+        let mut plan = SweepPlan::new();
+        let mut rows = Vec::new();
+        for name in names {
+            let w = SizedWorkload::custom(name)?;
+            rows.push((
+                w.label(),
+                plan.push(RunCell::new(w, Backend::Avx)),
+                plan.push(RunCell::new(w, Backend::Vima)),
+            ));
+        }
+        let res = self.run_plan(&plan)?;
+        let mut t = FigTable::new(
+            "Custom workloads: registered Intrinsics-VIMA programs, VIMA vs AVX lowering",
+            &["speedup", "avx_cycles", "vima_cycles", "energy_ratio"],
+        );
+        for (label, avx, vima) in rows {
+            let (avx, vima) = (&res[avx], &res[vima]);
+            t.push(
+                label,
+                vec![
+                    vima.speedup_vs(avx),
+                    avx.cycles as f64,
+                    vima.cycles as f64,
+                    vima.energy_ratio_vs(avx),
+                ],
+            );
+        }
+        Ok(t)
     }
 }
 
@@ -435,7 +477,7 @@ mod tests {
     #[test]
     fn fig2_quick_shape() {
         let e = Experiment::new(SystemConfig::default(), SizeScale::Quick);
-        let t = e.fig2();
+        let t = e.fig2().unwrap();
         assert_eq!(t.rows.len(), 9); // 3 kernels x 3 sizes
         // VIMA must beat the baseline on streaming kernels.
         for (label, vals) in &t.rows {
@@ -448,18 +490,32 @@ mod tests {
     #[test]
     fn ablation_stop_and_go_has_positive_overhead() {
         let e = Experiment::new(SystemConfig::default(), SizeScale::Quick);
-        let t = e.ablation_stop_and_go();
+        let t = e.ablation_stop_and_go().unwrap();
         for (label, vals) in &t.rows {
             assert!(vals[2] >= 0.0, "{label}: negative overhead {}", vals[2]);
         }
     }
 
     #[test]
+    fn custom_figure_runs_registered_programs() {
+        let e = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 2);
+        let t = e.custom_programs().unwrap();
+        assert_eq!(t.rows.len(), 2); // saxpy + softmax
+        for (label, vals) in &t.rows {
+            assert!(vals[1] > 0.0 && vals[2] > 0.0, "{label}: zero cycles");
+        }
+        // Re-running the figure is pure cache hits.
+        let runs = e.sweep_stats().unique_runs;
+        e.custom_programs().unwrap();
+        assert_eq!(e.sweep_stats().unique_runs, runs);
+    }
+
+    #[test]
     fn repeated_figures_are_free() {
         let e = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 2);
-        let a = e.fig2();
+        let a = e.fig2().unwrap();
         let runs_after_first = e.sweep_stats().unique_runs;
-        let b = e.fig2();
+        let b = e.fig2().unwrap();
         assert_eq!(e.sweep_stats().unique_runs, runs_after_first, "second fig2 must be all hits");
         assert_eq!(a.rows, b.rows);
     }

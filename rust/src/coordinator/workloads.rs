@@ -1,25 +1,37 @@
 //! The paper's workload matrix (Sec. IV-A): seven kernels, three dataset
-//! sizes each, plus the labels the figures use.
+//! sizes each, plus the labels the figures use. Since the open-workload
+//! redesign a matrix cell is a *registry id* + footprint, so the same
+//! machinery sizes custom workloads (see [`SizedWorkload::custom`]).
 
 use crate::trace::{Backend, KernelId, TraceParams};
+use crate::util::error::Result;
+use crate::workload::{self, WorkloadId};
 
-/// One (kernel, size) cell of the evaluation matrix.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Workload {
-    pub kernel: KernelId,
+/// One (workload, size) cell of the evaluation matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SizedWorkload {
+    /// Registry identity (paper kernel or registered custom workload).
+    pub workload: WorkloadId,
     /// Total footprint in bytes.
     pub footprint: u64,
     /// Paper's axis label for this size (e.g. "64MB" or "512" features).
     pub size_label: &'static str,
 }
 
-impl Workload {
+impl SizedWorkload {
+    /// A registered custom workload at its own default footprint.
+    pub fn custom(name: &str) -> Result<Self> {
+        let id = workload::resolve(name)?;
+        let footprint = workload::get(id)?.default_footprint();
+        Ok(Self { workload: id, footprint, size_label: "default" })
+    }
+
     pub fn params(&self, backend: Backend) -> TraceParams {
-        TraceParams::new(self.kernel, backend, self.footprint)
+        TraceParams::new(self.workload, backend, self.footprint)
     }
 
     pub fn label(&self) -> String {
-        format!("{}-{}", self.kernel, self.size_label)
+        format!("{}-{}", workload::name(self.workload), self.size_label)
     }
 }
 
@@ -47,9 +59,9 @@ impl WorkloadSet {
     const MB: u64 = 1 << 20;
 
     /// Standard three sizes for the streaming/ML kernels (4/16/64 MB).
-    pub fn sizes(kernel: KernelId, scale: SizeScale) -> Vec<Workload> {
-        let mk = |footprint: u64, size_label: &'static str| Workload {
-            kernel,
+    pub fn sizes(kernel: KernelId, scale: SizeScale) -> Vec<SizedWorkload> {
+        let mk = |footprint: u64, size_label: &'static str| SizedWorkload {
+            workload: kernel.into(),
             footprint: scale.apply(footprint),
             size_label,
         };
@@ -78,7 +90,7 @@ impl WorkloadSet {
     }
 
     /// All seven kernels (Fig. 3 matrix).
-    pub fn all(scale: SizeScale) -> Vec<Workload> {
+    pub fn all(scale: SizeScale) -> Vec<SizedWorkload> {
         [
             KernelId::MemSet,
             KernelId::MemCopy,
@@ -94,7 +106,7 @@ impl WorkloadSet {
     }
 
     /// Fig. 2's kernels (the HIVE comparison).
-    pub fn fig2(scale: SizeScale) -> Vec<Workload> {
+    pub fn fig2(scale: SizeScale) -> Vec<SizedWorkload> {
         [KernelId::MemSet, KernelId::VecSum, KernelId::Stencil]
             .into_iter()
             .flat_map(|k| Self::sizes(k, scale))
@@ -102,7 +114,7 @@ impl WorkloadSet {
     }
 
     /// Fig. 4 / Fig. 5 use the largest size of these three kernels.
-    pub fn multithread(scale: SizeScale) -> Vec<Workload> {
+    pub fn multithread(scale: SizeScale) -> Vec<SizedWorkload> {
         [KernelId::Stencil, KernelId::VecSum, KernelId::MatMul]
             .into_iter()
             .map(|k| *Self::sizes(k, scale).last().unwrap())

@@ -1,52 +1,131 @@
-//! Intrinsics-VIMA (Sec. III-B) as a Rust trace-builder API.
+//! Intrinsics-VIMA (Sec. III-B) as a Rust program-builder DSL.
 //!
 //! The paper ships a C/C++ intrinsics library (`_vim2K_adds`,
 //! `_vim1K_fmadd`, ...) so programmers can emit VIMA instructions from
 //! ordinary code. This module is the same interface for this repository's
-//! users: a [`VimaProgram`] builder that produces a simulator-ready
-//! [`TraceStream`] *and* (through [`crate::runtime::functional`]) a
-//! functionally executable instruction list — custom workloads beyond the
-//! paper's seven kernels in a few lines:
+//! users — and since the open-workload redesign it is a *streaming program
+//! DSL*, not an eager event buffer:
+//!
+//! * programs are a statement tree ([`vloop`](VimaProgram::vloop) vector
+//!   loops over [`Operand`]s that stride through allocations), lowered
+//!   lazily through a [`TraceChunker`] — a million-iteration loop costs a
+//!   few statements of memory, never a materialized trace;
+//! * one program lowers to **multiple backends**: the VIMA stream *and* an
+//!   honest AVX baseline (each vector instruction becomes the 64 B
+//!   load/compute/store loop a `-O3` AVX-512 build would run), so custom
+//!   workloads get real speedup numbers, not self-comparisons;
+//! * [`VimaProgram::register`] turns a program into a first-class
+//!   [`Workload`](crate::workload::Workload): runnable via
+//!   `simulate`/`run_on`, deduped in sweep plans, addressable from the
+//!   `vima-sim run`/`sweep` CLI by name.
 //!
 //! ```no_run
 //! # // no_run: doctest binaries don't inherit the xla_extension rpath
 //! use vima_sim::intrinsics::VimaProgram;
 //! let mut p = VimaProgram::new();
-//! let a = p.alloc(8192);
-//! let b = p.alloc(8192);
-//! let c = p.alloc(8192);
-//! p.vim2k_adds(a, b, c);          // c = a + b over one 8 KB vector
-//! let events = p.build();
-//! assert_eq!(events.len(), 3);    // instruction + loop-control µops
+//! let vb = 8192;
+//! let a = p.alloc(16 * vb);
+//! let b = p.alloc(16 * vb);
+//! let c = p.alloc(16 * vb);
+//! p.vloop(16, |l| {
+//!     l.vim2k_adds(a.walk(vb), b.walk(vb), c.walk(vb)); // c = a + b per vector
+//! });
+//! assert_eq!(p.instructions(), 16); // VIMA instructions, loops expanded
+//! assert_eq!(p.events(), 48);       // + loop-control µops
+//! let id = p.register("my-vecsum").unwrap();
+//! # let _ = id;
 //! ```
 
 use crate::isa::{FuType, TraceEvent, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
-use crate::trace::{TraceChunker, TraceStream};
+use crate::trace::{emit, Backend, TraceChunker, TraceStream};
+use crate::util::error::Result;
+use crate::workload::WorkloadId;
+
+/// Base of the simulated heap [`VimaProgram::alloc`] carves from.
+const HEAP_BASE: u64 = 0x5_0000_0000;
 
 /// Handle to a vector-aligned allocation in the simulated address space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VecPtr(pub u64);
 
-/// Builder for VIMA instruction sequences (the Intrinsics-VIMA surface).
-#[derive(Default)]
+impl VecPtr {
+    /// Strided operand: inside a [`VimaProgram::vloop`] body the effective
+    /// address advances by `stride_bytes` per iteration (use the vector size
+    /// to walk an array one vector at a time). Outside a loop the stride is
+    /// inert.
+    pub fn walk(self, stride_bytes: u64) -> Operand {
+        Operand { base: self.0, stride: stride_bytes }
+    }
+}
+
+/// An instruction operand: a base address plus a per-iteration stride
+/// (resolved against the innermost enclosing loop's induction variable).
+/// A bare [`VecPtr`] converts to a stride-0 operand, so scalars/broadcast
+/// vectors stay pinned while `walk`ed operands stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Operand {
+    base: u64,
+    stride: u64,
+}
+
+impl Operand {
+    fn at(self, iter: u64) -> u64 {
+        self.base + iter * self.stride
+    }
+}
+
+impl From<VecPtr> for Operand {
+    fn from(p: VecPtr) -> Self {
+        Operand { base: p.0, stride: 0 }
+    }
+}
+
+/// One program statement. Loops carry an iteration *range* so the chunker
+/// can slice them across data-parallel threads without rewriting bodies.
+#[derive(Debug, Clone, PartialEq)]
+enum Stmt {
+    Instr { op: VimaOp, dtype: VDtype, srcs: Vec<Operand>, dst: Option<Operand> },
+    HostLoad { addr: Operand, bytes: u16 },
+    Loop { start: u64, end: u64, body: Vec<Stmt> },
+}
+
+/// Builder for VIMA programs (the Intrinsics-VIMA surface). Cloneable so a
+/// registered workload can hand out fresh trace streams forever.
+#[derive(Debug, Clone)]
 pub struct VimaProgram {
-    events: Vec<TraceEvent>,
+    stmts: Vec<Stmt>,
     heap: u64,
     vector_bytes: u32,
-    /// Emit host-side loop-control µops between instructions (mirrors the
+    /// Emit host-side loop-control µops after each instruction (mirrors the
     /// compiled intrinsics call overhead). On by default.
     pub loop_overhead: bool,
 }
 
+impl Default for VimaProgram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl VimaProgram {
     pub fn new() -> Self {
-        Self { events: Vec::new(), heap: 0x5_0000_0000, vector_bytes: 8192, loop_overhead: true }
+        Self { stmts: Vec::new(), heap: HEAP_BASE, vector_bytes: 8192, loop_overhead: true }
     }
 
     /// Use a non-default vector size (design-space exploration).
     pub fn with_vector_bytes(mut self, vb: u32) -> Self {
         self.vector_bytes = vb;
         self
+    }
+
+    /// Vector size this program was built for.
+    pub fn vector_bytes(&self) -> u32 {
+        self.vector_bytes
+    }
+
+    /// Total bytes allocated so far (the workload's data footprint).
+    pub fn footprint(&self) -> u64 {
+        self.heap - HEAP_BASE
     }
 
     /// Allocate `bytes` of vector-aligned simulated memory.
@@ -57,106 +136,441 @@ impl VimaProgram {
         p
     }
 
-    fn push_instr(&mut self, op: VimaOp, dtype: VDtype, srcs: &[u64], dst: Option<u64>) {
-        self.events.push(VimaInstr::new(op, dtype, srcs, dst, self.vector_bytes).into());
-        if self.loop_overhead {
-            self.events.push(Uop::alu(0xF00, FuType::IntAlu, [16, NO_REG, NO_REG], 16).into());
-            self.events.push(Uop::branch(0xF04, true).into());
-        }
+    /// Vector loop: run `body` `iters` times. Operands built with
+    /// [`VecPtr::walk`] advance by their stride each iteration; plain
+    /// [`VecPtr`] operands stay fixed. Loops nest (strides bind to the
+    /// innermost enclosing loop), and the trace is generated lazily — the
+    /// loop is never unrolled in memory.
+    ///
+    /// The closure receives the same builder (allocations made inside the
+    /// body persist), and builder-level settings such as
+    /// [`loop_overhead`](Self::loop_overhead) carry through — the flag is a
+    /// whole-program property, so flipping it inside a body affects the
+    /// entire lowering, not just that loop.
+    pub fn vloop(&mut self, iters: u64, f: impl FnOnce(&mut VimaProgram)) {
+        let mut body = VimaProgram {
+            stmts: Vec::new(),
+            heap: self.heap,
+            vector_bytes: self.vector_bytes,
+            loop_overhead: self.loop_overhead,
+        };
+        f(&mut body);
+        self.heap = body.heap;
+        self.loop_overhead = body.loop_overhead;
+        self.stmts.push(Stmt::Loop { start: 0, end: iters, body: body.stmts });
+    }
+
+    fn push_instr(&mut self, op: VimaOp, dtype: VDtype, srcs: &[Operand], dst: Option<Operand>) {
+        self.stmts.push(Stmt::Instr { op, dtype, srcs: srcs.to_vec(), dst });
     }
 
     // --- the Intrinsics-VIMA operation set (Sec. III-B naming) -----------
 
     /// `_vim2K_adds`: c = a + b (f32).
-    pub fn vim2k_adds(&mut self, a: VecPtr, b: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::Add, VDtype::F32, &[a.0, b.0], Some(c.0));
+    pub fn vim2k_adds(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+    ) {
+        self.push_instr(VimaOp::Add, VDtype::F32, &[a.into(), b.into()], Some(c.into()));
     }
 
     /// `_vim2K_subs`: c = a - b (f32).
-    pub fn vim2k_subs(&mut self, a: VecPtr, b: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::Sub, VDtype::F32, &[a.0, b.0], Some(c.0));
+    pub fn vim2k_subs(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+    ) {
+        self.push_instr(VimaOp::Sub, VDtype::F32, &[a.into(), b.into()], Some(c.into()));
     }
 
     /// `_vim2K_muls`: c = a * b (f32).
-    pub fn vim2k_muls(&mut self, a: VecPtr, b: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::Mul, VDtype::F32, &[a.0, b.0], Some(c.0));
+    pub fn vim2k_muls(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+    ) {
+        self.push_instr(VimaOp::Mul, VDtype::F32, &[a.into(), b.into()], Some(c.into()));
     }
 
     /// `_vim2K_divs`: c = a / b (f32).
-    pub fn vim2k_divs(&mut self, a: VecPtr, b: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::Div, VDtype::F32, &[a.0, b.0], Some(c.0));
+    pub fn vim2k_divs(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+    ) {
+        self.push_instr(VimaOp::Div, VDtype::F32, &[a.into(), b.into()], Some(c.into()));
     }
 
     /// `_vim2K_fmadds`: d = a * b + c (f32).
-    pub fn vim2k_fmadds(&mut self, a: VecPtr, b: VecPtr, c: VecPtr, d: VecPtr) {
-        self.push_instr(VimaOp::Fma, VDtype::F32, &[a.0, b.0, c.0], Some(d.0));
+    pub fn vim2k_fmadds(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+        d: impl Into<Operand>,
+    ) {
+        self.push_instr(
+            VimaOp::Fma,
+            VDtype::F32,
+            &[a.into(), b.into(), c.into()],
+            Some(d.into()),
+        );
     }
 
     /// `_vim2K_movs`: copy a -> c.
-    pub fn vim2k_movs(&mut self, a: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::Mov, VDtype::I32, &[a.0], Some(c.0));
+    pub fn vim2k_movs(&mut self, a: impl Into<Operand>, c: impl Into<Operand>) {
+        self.push_instr(VimaOp::Mov, VDtype::I32, &[a.into()], Some(c.into()));
     }
 
-    /// `_vim2K_mods` (broadcast/set): c[:] = immediate.
-    pub fn vim2k_sets(&mut self, c: VecPtr) {
-        self.push_instr(VimaOp::Bcast, VDtype::F32, &[], Some(c.0));
+    /// `_vim2K_sets` (broadcast): c[:] = immediate. (Earlier revisions
+    /// mislabelled this `_vim2K_mods`; the paper's intrinsic for filling a
+    /// vector with a scalar is the set/broadcast form modelled here.)
+    pub fn vim2k_sets(&mut self, c: impl Into<Operand>) {
+        self.push_instr(VimaOp::Bcast, VDtype::F32, &[], Some(c.into()));
     }
 
     /// `_vim2K_idots`: dot-product reduction of a . b (scalar result
     /// returned via the status signal).
-    pub fn vim2k_dots(&mut self, a: VecPtr, b: VecPtr) {
-        self.push_instr(VimaOp::Dot, VDtype::F32, &[a.0, b.0], None);
+    pub fn vim2k_dots(&mut self, a: impl Into<Operand>, b: impl Into<Operand>) {
+        self.push_instr(VimaOp::Dot, VDtype::F32, &[a.into(), b.into()], None);
     }
 
     /// Integer variants (`_vim2K_addu` etc.).
-    pub fn vim2k_addu(&mut self, a: VecPtr, b: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::Add, VDtype::I32, &[a.0, b.0], Some(c.0));
+    pub fn vim2k_addu(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+    ) {
+        self.push_instr(VimaOp::Add, VDtype::I32, &[a.into(), b.into()], Some(c.into()));
     }
 
-    pub fn vim2k_andu(&mut self, a: VecPtr, b: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::And, VDtype::I32, &[a.0, b.0], Some(c.0));
+    pub fn vim2k_andu(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+    ) {
+        self.push_instr(VimaOp::And, VDtype::I32, &[a.into(), b.into()], Some(c.into()));
     }
 
     /// 64-bit element variants (`_vim1K_*`, 1024 elements per 8 KB vector).
-    pub fn vim1k_addd(&mut self, a: VecPtr, b: VecPtr, c: VecPtr) {
-        self.push_instr(VimaOp::Add, VDtype::F64, &[a.0, b.0], Some(c.0));
+    pub fn vim1k_addd(
+        &mut self,
+        a: impl Into<Operand>,
+        b: impl Into<Operand>,
+        c: impl Into<Operand>,
+    ) {
+        self.push_instr(VimaOp::Add, VDtype::F64, &[a.into(), b.into()], Some(c.into()));
     }
 
     /// Host-side scalar work between VIMA calls (e.g. reading a reduction).
-    pub fn host_load(&mut self, addr: VecPtr, bytes: u16) {
-        self.events.push(Uop::load(0xF10, addr.0, bytes, 1).into());
+    pub fn host_load(&mut self, addr: impl Into<Operand>, bytes: u16) {
+        self.stmts.push(Stmt::HostLoad { addr: addr.into(), bytes });
     }
 
-    /// Number of instructions queued so far.
-    pub fn len(&self) -> usize {
-        self.events.len()
+    /// Number of vector *instructions* this program emits (loops expanded).
+    /// Loop-control µops and host loads are not instructions — count those
+    /// via [`events`](Self::events).
+    pub fn instructions(&self) -> u64 {
+        fn walk(stmts: &[Stmt]) -> u64 {
+            stmts
+                .iter()
+                .map(|s| match s {
+                    Stmt::Instr { .. } => 1,
+                    Stmt::HostLoad { .. } => 0,
+                    Stmt::Loop { start, end, body } => {
+                        end.saturating_sub(*start) * walk(body)
+                    }
+                })
+                .sum()
+        }
+        walk(&self.stmts)
+    }
+
+    /// Total trace events of the VIMA lowering (instructions **plus**
+    /// loop-control µops and host loads) — the stream length a
+    /// [`Machine`](crate::sim::Machine) will consume.
+    pub fn events(&self) -> u64 {
+        let per_instr = if self.loop_overhead { 3 } else { 1 };
+        fn walk(stmts: &[Stmt], per_instr: u64) -> u64 {
+            stmts
+                .iter()
+                .map(|s| match s {
+                    Stmt::Instr { .. } => per_instr,
+                    Stmt::HostLoad { .. } => 1,
+                    Stmt::Loop { start, end, body } => {
+                        end.saturating_sub(*start) * walk(body, per_instr)
+                    }
+                })
+                .sum()
+        }
+        walk(&self.stmts, per_instr)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.stmts.is_empty()
     }
 
-    /// Finish: the raw event list (e.g. for [`FunctionalVima`] replay).
-    ///
-    /// [`FunctionalVima`]: crate::runtime::functional::FunctionalVima
-    pub fn build(self) -> Vec<TraceEvent> {
-        self.events
+    /// Register this program as a named [`Workload`](crate::workload::Workload):
+    /// afterwards it runs everywhere the paper kernels do (simulate, sweep
+    /// plans with cache dedup, the CLI).
+    pub fn register(self, name: impl Into<String>) -> Result<WorkloadId> {
+        crate::workload::register(std::sync::Arc::new(
+            crate::workload::ProgramWorkload::new(name, self),
+        ))
     }
 
-    /// Finish: a simulator-ready stream.
+    /// Lazy trace producer for one backend and one data-parallel slice.
+    /// Top-level loops are sliced across `threads`; straight-line setup
+    /// statements run on thread 0 only.
+    pub fn chunker(
+        &self,
+        backend: Backend,
+        thread: usize,
+        threads: usize,
+    ) -> Result<Box<dyn TraceChunker>> {
+        crate::ensure!(
+            matches!(backend, Backend::Avx | Backend::Vima),
+            "VimaProgram has no {backend} lowering (supported: AVX, VIMA)"
+        );
+        crate::ensure!(threads >= 1 && thread < threads, "thread {thread}/{threads} out of range");
+        let stmts = if threads == 1 {
+            self.stmts.clone()
+        } else {
+            self.stmts
+                .iter()
+                .filter_map(|s| match s {
+                    Stmt::Loop { start, end, body } => {
+                        let n = end.saturating_sub(*start);
+                        let per = n.div_ceil(threads as u64);
+                        let lo = start + (thread as u64 * per).min(n);
+                        let hi = (lo + per).min(*end);
+                        Some(Stmt::Loop { start: lo, end: hi, body: body.clone() })
+                    }
+                    other => (thread == 0).then(|| other.clone()),
+                })
+                .collect()
+        };
+        Ok(Box::new(ProgramChunker {
+            stmts,
+            backend,
+            vector_bytes: self.vector_bytes,
+            loop_overhead: self.loop_overhead,
+            stack: vec![Frame { loop_idx: usize::MAX, next: 0, iter: 0, end: 1 }],
+        }))
+    }
+
+    /// Lazy stream for any supported backend.
+    pub fn stream_for(&self, backend: Backend) -> Result<TraceStream> {
+        Ok(TraceStream::new(self.chunker(backend, 0, 1)?))
+    }
+
+    /// Finish: a simulator-ready VIMA stream (lazy; loops never unroll in
+    /// memory).
     pub fn into_stream(self) -> TraceStream {
-        struct VecChunker(std::vec::IntoIter<TraceEvent>, bool);
-        impl TraceChunker for VecChunker {
-            fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
-                if self.1 {
-                    return false;
+        self.stream_for(Backend::Vima).expect("VIMA lowering is always available")
+    }
+
+    /// Finish: the fully expanded VIMA event list (e.g. for
+    /// `runtime::functional::FunctionalVima` replay — `pjrt` feature).
+    /// Prefer [`into_stream`](Self::into_stream) for simulation — `build`
+    /// materializes every loop iteration.
+    pub fn build(self) -> Vec<TraceEvent> {
+        self.stream_for(Backend::Vima).expect("VIMA lowering is always available").collect()
+    }
+
+    /// Fully expanded event list for any supported backend.
+    pub fn build_for(&self, backend: Backend) -> Result<Vec<TraceEvent>> {
+        Ok(self.stream_for(backend)?.collect())
+    }
+}
+
+/// One level of the lazy statement-tree walk: a body being executed.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    /// Index of the `Stmt::Loop` in the *parent* body (unused for the root).
+    loop_idx: usize,
+    /// Next statement index within this body.
+    next: usize,
+    /// Current iteration (loops carry global iteration numbers so strided
+    /// operands resolve identically under thread slicing).
+    iter: u64,
+    /// One past the last iteration.
+    end: u64,
+}
+
+/// Streaming lowering of a [`VimaProgram`]: one leaf statement instance per
+/// refill, so even unbounded loops use O(program text) memory.
+struct ProgramChunker {
+    stmts: Vec<Stmt>,
+    backend: Backend,
+    vector_bytes: u32,
+    loop_overhead: bool,
+    stack: Vec<Frame>,
+}
+
+fn body_of<'a>(stmts: &'a [Stmt], stack: &[Frame], depth: usize) -> &'a [Stmt] {
+    let mut body = stmts;
+    for f in &stack[1..=depth] {
+        match &body[f.loop_idx] {
+            Stmt::Loop { body: b, .. } => body = b,
+            _ => unreachable!("frame loop_idx must point at a loop"),
+        }
+    }
+    body
+}
+
+impl TraceChunker for ProgramChunker {
+    fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {
+        // Fill the chunk buffer to about this many events per refill
+        // (matches TraceStream's buffer sizing).
+        const TARGET: usize = 4096;
+        let start_len = buf.len();
+        while buf.len() - start_len < TARGET && !self.stack.is_empty() {
+            let depth = self.stack.len() - 1;
+            let f = self.stack[depth];
+            let body_len = body_of(&self.stmts, &self.stack, depth).len();
+            if f.next >= body_len {
+                if f.iter + 1 < f.end {
+                    self.stack[depth].iter += 1;
+                    self.stack[depth].next = 0;
+                } else if depth == 0 {
+                    self.stack.pop(); // program exhausted
+                } else {
+                    self.stack.pop();
+                    let d = self.stack.len() - 1;
+                    self.stack[d].next += 1;
                 }
-                buf.extend(self.0.by_ref());
-                self.1 = true;
-                !buf.is_empty()
+                continue;
+            }
+            // Emitting borrows `self` only immutably, so the leaf is lowered
+            // in place (no per-iteration statement clone); the stack is
+            // mutated strictly after the borrow ends.
+            let descend = {
+                let body = body_of(&self.stmts, &self.stack, depth);
+                match &body[f.next] {
+                    Stmt::Loop { start, end, body } => {
+                        Some((*start, *end, body.is_empty()))
+                    }
+                    leaf => {
+                        self.emit(leaf, f.iter, buf);
+                        None
+                    }
+                }
+            };
+            match descend {
+                Some((start, end, empty)) => {
+                    if start >= end || empty {
+                        self.stack[depth].next += 1;
+                    } else {
+                        self.stack.push(Frame { loop_idx: f.next, next: 0, iter: start, end });
+                    }
+                }
+                None => self.stack[depth].next += 1,
             }
         }
-        TraceStream::new(Box::new(VecChunker(self.events.into_iter(), false)))
+        buf.len() > start_len
+    }
+}
+
+impl ProgramChunker {
+    fn emit(&self, stmt: &Stmt, iter: u64, buf: &mut Vec<TraceEvent>) {
+        match stmt {
+            Stmt::Instr { op, dtype, srcs, dst } => {
+                let srcs: Vec<u64> = srcs.iter().map(|o| o.at(iter)).collect();
+                let dst = dst.map(|o| o.at(iter));
+                match self.backend {
+                    Backend::Vima => {
+                        buf.push(
+                            VimaInstr::new(*op, *dtype, &srcs, dst, self.vector_bytes).into(),
+                        );
+                        if self.loop_overhead {
+                            buf.push(
+                                Uop::alu(0xF00, FuType::IntAlu, [16, NO_REG, NO_REG], 16).into(),
+                            );
+                            buf.push(Uop::branch(0xF04, true).into());
+                        }
+                    }
+                    Backend::Avx => self.emit_avx(*op, *dtype, &srcs, dst, buf),
+                    Backend::Hive => unreachable!("rejected at chunker construction"),
+                }
+            }
+            Stmt::HostLoad { addr, bytes } => {
+                buf.push(Uop::load(0xF10, addr.at(iter), *bytes, 1).into());
+            }
+            Stmt::Loop { .. } => unreachable!("loops are walked, not emitted"),
+        }
+    }
+
+    /// Honest AVX-512 baseline for one vector instruction: the 64 B
+    /// load/compute/store loop a `-O3` compiled scalar source would run.
+    fn emit_avx(
+        &self,
+        op: VimaOp,
+        dtype: VDtype,
+        srcs: &[u64],
+        dst: Option<u64>,
+        buf: &mut Vec<TraceEvent>,
+    ) {
+        let chunks = (self.vector_bytes as u64 / emit::ZMM).max(1);
+        let fu = avx_fu(op, dtype);
+        for c in 0..chunks {
+            let off = c * emit::ZMM;
+            let mut in_regs = [NO_REG; 3];
+            for (k, &s) in srcs.iter().enumerate().take(3) {
+                buf.push(Uop::load(0xF20 + k as u64 * 8, s + off, 64, k as u8).into());
+                in_regs[k] = k as u8;
+            }
+            let out_reg = if matches!(op, VimaOp::Mov | VimaOp::Bcast) {
+                // Pure data movement: no compute µop; stores re-use the
+                // loaded register (or the pre-broadcast zmm0 for Bcast).
+                if srcs.is_empty() {
+                    0
+                } else {
+                    in_regs[0]
+                }
+            } else {
+                buf.push(Uop::alu(0xF40, fu, in_regs, 4).into());
+                4
+            };
+            if let Some(d) = dst {
+                buf.push(Uop::store(0xF48, d + off, 64, [out_reg, NO_REG, NO_REG]).into());
+            }
+            emit::loop_ctl(buf, 0xF50, 16, c + 1 < chunks);
+        }
+    }
+}
+
+fn avx_fu(op: VimaOp, dtype: VDtype) -> FuType {
+    let fp = matches!(dtype, VDtype::F32 | VDtype::F64);
+    match op {
+        VimaOp::Mul | VimaOp::Fma | VimaOp::Dot => {
+            if fp {
+                FuType::FpMul
+            } else {
+                FuType::IntMul
+            }
+        }
+        VimaOp::Div => {
+            if fp {
+                FuType::FpDiv
+            } else {
+                FuType::IntDiv
+            }
+        }
+        _ => {
+            if fp {
+                FuType::FpAlu
+            } else {
+                FuType::IntAlu
+            }
+        }
     }
 }
 
@@ -171,8 +585,10 @@ mod tests {
         let mut p = VimaProgram::new();
         let (a, b, c) = (p.alloc(8192), p.alloc(8192), p.alloc(8192));
         p.vim2k_adds(a, b, c);
+        assert_eq!(p.instructions(), 1);
+        assert_eq!(p.events(), 3); // instr + 2 loop-control µops
         let ev = p.build();
-        assert_eq!(ev.len(), 3); // instr + 2 loop-control µops
+        assert_eq!(ev.len(), 3);
         assert!(matches!(ev[0], TraceEvent::Vima(v) if v.op == VimaOp::Add));
     }
 
@@ -183,6 +599,121 @@ mod tests {
         let b = p.alloc(8192);
         assert_eq!(a.0 % 8192, 0);
         assert_eq!(b.0 - a.0, 8192);
+        assert_eq!(p.footprint(), 2 * 8192);
+    }
+
+    #[test]
+    fn vloop_streams_lazily_and_matches_manual_unroll() {
+        let vb = 8192u64;
+        let mut looped = VimaProgram::new();
+        let a = looped.alloc(8 * vb);
+        let b = looped.alloc(8 * vb);
+        let c = looped.alloc(8 * vb);
+        looped.vloop(8, |l| l.vim2k_adds(a.walk(vb), b.walk(vb), c.walk(vb)));
+
+        let mut unrolled = VimaProgram::new();
+        let (ua, ub, uc) = (unrolled.alloc(8 * vb), unrolled.alloc(8 * vb), unrolled.alloc(8 * vb));
+        for i in 0..8 {
+            unrolled.vim2k_adds(
+                VecPtr(ua.0 + i * vb),
+                VecPtr(ub.0 + i * vb),
+                VecPtr(uc.0 + i * vb),
+            );
+        }
+
+        assert_eq!(looped.instructions(), unrolled.instructions());
+        let lv: Vec<TraceEvent> = looped.stream_for(Backend::Vima).unwrap().collect();
+        let uv: Vec<TraceEvent> = unrolled.build();
+        assert_eq!(lv, uv, "streamed loop must equal the eager unroll");
+    }
+
+    #[test]
+    fn nested_loops_bind_strides_to_innermost() {
+        let vb = 8192u64;
+        let mut p = VimaProgram::new();
+        let a = p.alloc(4 * vb);
+        let c = p.alloc(4 * vb);
+        p.vloop(2, |outer| {
+            outer.vloop(4, |inner| inner.vim2k_movs(a.walk(vb), c.walk(vb)));
+        });
+        let instrs: Vec<VimaInstr> = p
+            .stream_for(Backend::Vima)
+            .unwrap()
+            .filter_map(|e| match e {
+                TraceEvent::Vima(v) => Some(v),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(instrs.len(), 8);
+        // Both outer iterations sweep the same 4 inner addresses.
+        assert_eq!(instrs[0].srcs[0], instrs[4].srcs[0]);
+        assert_eq!(instrs[3].srcs[0], a.0 + 3 * vb);
+    }
+
+    #[test]
+    fn avx_lowering_is_an_honest_baseline() {
+        let vb = 8192u64;
+        let mut p = VimaProgram::new();
+        let a = p.alloc(4 * vb);
+        let b = p.alloc(4 * vb);
+        let c = p.alloc(4 * vb);
+        p.vloop(4, |l| l.vim2k_adds(a.walk(vb), b.walk(vb), c.walk(vb)));
+
+        let avx: Vec<TraceEvent> = p.build_for(Backend::Avx).unwrap();
+        let loads = avx
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load))
+            .count();
+        let stores = avx
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Store))
+            .count();
+        // 4 vectors x 128 chunks: 2 loads + 1 store each, no VIMA instrs.
+        assert_eq!(loads, 4 * 128 * 2);
+        assert_eq!(stores, 4 * 128);
+        assert!(avx.iter().all(|e| !matches!(e, TraceEvent::Vima(_))));
+        // Same data moved with far fewer VIMA events.
+        assert!(avx.len() as u64 > 50 * p.instructions());
+    }
+
+    #[test]
+    fn hive_lowering_is_a_typed_error() {
+        let p = VimaProgram::new();
+        let e = p.stream_for(Backend::Hive).unwrap_err().to_string();
+        assert!(e.contains("HIVE"), "{e}");
+    }
+
+    #[test]
+    fn thread_slicing_partitions_top_level_loops() {
+        let vb = 8192u64;
+        let mut p = VimaProgram::new();
+        let alpha = p.alloc(vb);
+        let x = p.alloc(10 * vb);
+        let y = p.alloc(10 * vb);
+        p.vim2k_sets(alpha);
+        p.vloop(10, |l| l.vim2k_fmadds(alpha, x.walk(vb), y.walk(vb), y.walk(vb)));
+
+        let whole: Vec<TraceEvent> = p.build_for(Backend::Vima).unwrap();
+        let mut sliced = Vec::new();
+        for t in 0..3 {
+            let mut s = TraceStream::new(p.chunker(Backend::Vima, t, 3).unwrap());
+            sliced.extend(s.by_ref());
+        }
+        // Setup (thread 0 only) + a partition of the loop: same multiset of
+        // VIMA instructions, same total event count.
+        assert_eq!(sliced.len(), whole.len());
+        let addrs = |evs: &[TraceEvent]| {
+            let mut v: Vec<u64> = evs
+                .iter()
+                .filter_map(|e| match e {
+                    TraceEvent::Vima(i) => Some(i.srcs[1]),
+                    _ => None,
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(addrs(&sliced), addrs(&whole));
     }
 
     #[test]
@@ -203,14 +734,13 @@ mod tests {
     #[test]
     fn saxpy_via_intrinsics_reuses_cache() {
         // y = a*x + y over 16 vectors: the broadcast vector stays resident.
+        let vb = 8192u64;
         let mut p = VimaProgram::new();
-        let alpha = p.alloc(8192);
+        let alpha = p.alloc(vb);
+        let x = p.alloc(16 * vb);
+        let y = p.alloc(16 * vb);
         p.vim2k_sets(alpha);
-        for _ in 0..16 {
-            let x = p.alloc(8192);
-            let y = p.alloc(8192);
-            p.vim2k_fmadds(alpha, x, y, y);
-        }
+        p.vloop(16, |l| l.vim2k_fmadds(alpha, x.walk(vb), y.walk(vb), y.walk(vb)));
         let mut m = Machine::new(&SystemConfig::default(), 1);
         let r = m.run(vec![p.into_stream()]);
         let hits = r.report.get("vima.vcache_hits").unwrap();

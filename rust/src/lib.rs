@@ -12,7 +12,13 @@
 //!   the VIMA logic layer, and the HIVE comparator), plus the experiment
 //!   drivers that regenerate every figure of the paper through the
 //!   [`sweep`] engine (a declarative, deduplicating, multi-threaded run
-//!   grid — see EXPERIMENTS.md).
+//!   grid — see EXPERIMENTS.md). The workload surface is *open*: the
+//!   [`workload`] registry serves the paper's seven kernels and any
+//!   user-registered workload — notably [`intrinsics::VimaProgram`]s, the
+//!   streaming Intrinsics-VIMA DSL that lowers one program to both a VIMA
+//!   stream and an honest AVX baseline — through the same
+//!   `simulate`/sweep/CLI paths, with typed errors instead of panics on
+//!   unsupported combinations.
 //! * **Layer 2 (python/compile/model.py)** — JAX workload graphs, AOT-lowered
 //!   to HLO text in `artifacts/`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels modelling the
@@ -42,15 +48,18 @@ pub mod trace;
 pub mod transpile;
 pub mod util;
 pub mod vima;
+pub mod workload;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
     pub use crate::config::SystemConfig;
     pub use crate::coordinator::{
-        workloads::{Workload, WorkloadSet},
+        workloads::{SizedWorkload, WorkloadSet},
         Experiment, FigTable, RunSpec,
     };
+    pub use crate::intrinsics::{VecPtr, VimaProgram};
     pub use crate::sim::{Machine, SimResult};
     pub use crate::sweep::{RunCell, SweepPlan, SweepRunner};
-    pub use crate::trace::{Backend, KernelId};
+    pub use crate::trace::{Backend, KernelId, TraceParams};
+    pub use crate::workload::{ProgramWorkload, Workload, WorkloadId};
 }

@@ -5,9 +5,10 @@
 //! Table-I configuration, and run the functional (PJRT-backed) smoke check.
 //!
 //! ```text
-//! vima-sim sweep [--jobs N] [--figs fig2,fig3] [--csv DIR] [--quick]
-//! vima-sim fig2|fig3|fig4|fig5|ablation|headline|all [--quick] [--out DIR]
-//! vima-sim run <kernel> <backend> [--mb N] [--threads N] [--stats]
+//! vima-sim sweep [--jobs N] [--figs fig2,custom] [--csv DIR] [--quick]
+//! vima-sim fig2|fig3|fig4|fig5|ablation|headline|custom|all [--quick]
+//! vima-sim run <workload> <backend> [--mb N] [--threads N] [--stats]
+//! vima-sim workloads          (list the registry: kernels + programs)
 //! vima-sim config [--config FILE]
 //! vima-sim selftest           (requires a build with --features pjrt)
 //! ```
@@ -19,9 +20,10 @@ use vima_sim::coordinator::{Experiment, FigTable};
 #[cfg(feature = "pjrt")]
 use vima_sim::runtime::{default_artifacts_dir, Engine};
 use vima_sim::sim::simulate_threads;
-use vima_sim::trace::{Backend, KernelId, TraceParams};
+use vima_sim::trace::{Backend, TraceParams};
 use vima_sim::util::cli::Args;
 use vima_sim::util::error::Result;
+use vima_sim::workload;
 
 const USAGE: &str = "\
 vima-sim — VIMA (Vector-In-Memory Architecture) paper-reproduction simulator
@@ -40,11 +42,15 @@ COMMANDS:
   ablation    Sec. III-C ablations (vector size, stop-and-go)
   headline    Max speedup / energy saving (paper: 26x, 93%)
   all         Everything above in sequence (one shared result cache)
-  run         Run one workload: vima-sim run <kernel> <backend> [--mb N]
-              kernels: memset memcopy vecsum stencil matmul knn mlp
-              backends: avx vima hive
+  run         Run one workload: vima-sim run <workload> <backend> [--mb N]
+              workload: any registered name (see `vima-sim workloads`) —
+              the 7 paper kernels plus Intrinsics-VIMA programs like
+              saxpy / softmax; backends: avx vima hive
+  custom      Custom-workload figure: each registered Intrinsics-VIMA
+              program, VIMA vs the AVX lowering of the same program
+  workloads   List every workload in the registry (name, backends, size)
   transpile   Future-work demo: auto-convert an AVX trace to VIMA
-              (vima-sim transpile <kernel> [--mb N])
+              (vima-sim transpile <workload> [--mb N])
   config      Print the effective configuration (Table I + overrides)
   selftest    Execute every f32 PJRT artifact once (needs `make artifacts`
               and a binary built with `--features pjrt`)
@@ -55,25 +61,12 @@ OPTIONS:
   --config FILE    TOML overrides for Table I
   --out DIR        also write each table as CSV into DIR
   --csv DIR        (sweep) same as --out
-  --figs LIST      (sweep) comma-separated subset, e.g. fig2,fig5,ablation
+  --figs LIST      (sweep) comma-separated subset, e.g. fig2,fig5,custom
   --threads N      (run) data-parallel cores
   --mb N           (run) footprint in MiB
   --stats          (run) dump the full counter report
   --verbose        progress lines on stderr
 ";
-
-fn parse_kernel(s: &str) -> Result<KernelId> {
-    Ok(match s {
-        "memset" => KernelId::MemSet,
-        "memcopy" => KernelId::MemCopy,
-        "vecsum" => KernelId::VecSum,
-        "stencil" => KernelId::Stencil,
-        "matmul" => KernelId::MatMul,
-        "knn" => KernelId::Knn,
-        "mlp" => KernelId::Mlp,
-        _ => bail!("unknown kernel {s:?}"),
-    })
-}
 
 fn parse_backend(s: &str) -> Result<Backend> {
     Ok(match s {
@@ -105,17 +98,20 @@ fn emit(table: &FigTable, out: Option<&str>) -> Result<()> {
 /// Produce the named figure's tables through the shared-cache experiment.
 fn figure_tables(exp: &Experiment, name: &str) -> Result<Vec<FigTable>> {
     Ok(match name {
-        "fig2" => vec![exp.fig2()],
-        "fig3" => vec![exp.fig3()],
-        "fig4" => vec![exp.fig4()],
-        "fig5" => vec![exp.fig5()],
+        "fig2" => vec![exp.fig2()?],
+        "fig3" => vec![exp.fig3()?],
+        "fig4" => vec![exp.fig4()?],
+        "fig5" => vec![exp.fig5()?],
         "ablation" => vec![
-            exp.ablation_vector_size(),
-            exp.ablation_stop_and_go(),
-            exp.ablation_prefetcher(),
+            exp.ablation_vector_size()?,
+            exp.ablation_stop_and_go()?,
+            exp.ablation_prefetcher()?,
         ],
-        "headline" => vec![exp.headline()],
-        other => bail!("unknown figure {other:?}; expected fig2..fig5, ablation, headline"),
+        "headline" => vec![exp.headline()?],
+        "custom" => vec![exp.custom_programs()?],
+        other => {
+            bail!("unknown figure {other:?}; expected fig2..fig5, ablation, headline, custom")
+        }
     })
 }
 
@@ -162,7 +158,7 @@ fn main() -> Result<()> {
                 exp.jobs(),
             );
         }
-        "fig2" | "fig3" | "fig4" | "fig5" | "headline" | "ablation" => {
+        "fig2" | "fig3" | "fig4" | "fig5" | "headline" | "ablation" | "custom" => {
             for table in figure_tables(&exp, cmd)? {
                 emit(&table, out)?;
             }
@@ -176,21 +172,25 @@ fn main() -> Result<()> {
         }
         "config" => print!("{}", cfg.to_toml()),
         "transpile" => {
-            let kernel = parse_kernel(
-                args.positional.get(1).map(String::as_str).unwrap_or("vecsum"),
-            )?;
-            let mb = args.get_u64("mb", 4);
-            let p = TraceParams::new(kernel, Backend::Avx, mb << 20);
+            let name = args.positional.get(1).map(String::as_str).unwrap_or("vecsum");
+            let id = workload::resolve(name)?;
+            // Programs carry their own (non-MiB-aligned) footprint; --mb
+            // overrides where the workload allows it.
+            let footprint = match args.get("mb") {
+                Some(mb) => mb.parse::<u64>()? << 20,
+                None => workload::get(id)?.default_footprint(),
+            };
+            let p = TraceParams::new(id, Backend::Avx, footprint);
             let mut m = vima_sim::sim::Machine::new(&cfg, 1);
-            let native = m.run(vec![p.stream()]);
+            let native = m.run(vec![p.stream()?]);
             let mut m = vima_sim::sim::Machine::new(&cfg, 1);
-            let auto = m.run(vec![vima_sim::transpile::transpile(p.stream())]);
+            let auto = m.run(vec![vima_sim::transpile::transpile(p.stream()?)]);
             let hand = simulate_threads(
                 &cfg,
-                TraceParams::new(kernel, Backend::Vima, mb << 20),
+                TraceParams::new(id, Backend::Vima, footprint),
                 1,
-            );
-            println!("{kernel:?} {mb} MiB:");
+            )?;
+            println!("{} {:.1} MiB:", workload::name(id), footprint as f64 / (1 << 20) as f64);
             println!("  native AVX trace      : {:>12} cycles", native.cycles);
             println!(
                 "  auto-transpiled VIMA  : {:>12} cycles ({:.2}x)",
@@ -208,22 +208,45 @@ fn main() -> Result<()> {
             );
         }
         "run" => {
-            let kernel = parse_kernel(
+            let id = workload::resolve(
                 args.positional.get(1).map(String::as_str).unwrap_or_default(),
             )?;
             let backend = parse_backend(
                 args.positional.get(2).map(String::as_str).unwrap_or_default(),
             )?;
-            let mb = args.get_u64("mb", 4);
+            // Programs carry their own footprint; --mb overrides where the
+            // workload allows it.
+            let footprint = match args.get("mb") {
+                Some(mb) => mb.parse::<u64>()? << 20,
+                None => workload::get(id)?.default_footprint(),
+            };
             let threads = args.get_usize("threads", 1);
-            let p = TraceParams::new(kernel, backend, mb << 20);
-            let r = simulate_threads(&cfg, p, threads);
+            let p = TraceParams::new(id, backend, footprint);
+            let r = simulate_threads(&cfg, p, threads)?;
             println!(
                 "cycles={} seconds={:.6} energy_j={:.6}",
                 r.cycles, r.seconds, r.energy.total_j
             );
             if args.flag("stats") {
                 print!("{}", r.report);
+            }
+        }
+        "workloads" => {
+            println!(
+                "{:<10} {:>15} {:>10}  {}",
+                "name", "backends", "default", "description"
+            );
+            for id in workload::all_ids() {
+                let w = workload::get(id)?;
+                let backends: Vec<String> =
+                    w.backends().iter().map(|b| b.to_string()).collect();
+                println!(
+                    "{:<10} {:>15} {:>8}MB  {}",
+                    w.name(),
+                    backends.join(","),
+                    w.default_footprint() >> 20,
+                    w.description(),
+                );
             }
         }
         #[cfg(feature = "pjrt")]

@@ -16,6 +16,7 @@ use crate::hive::HiveDevice;
 use crate::isa::TraceEvent;
 use crate::stats::StatsReport;
 use crate::trace::{TraceParams, TraceStream};
+use crate::util::error::Result;
 use crate::vima::VimaDevice;
 
 /// Process-wide count of [`Machine::run`] invocations. The sweep engine's
@@ -246,43 +247,52 @@ impl Machine {
     }
 }
 
-/// Convenience: simulate one workload end to end.
-pub fn simulate(cfg: &SystemConfig, params: crate::trace::TraceParams) -> SimResult {
-    simulate_threads(cfg, params, 1)
+/// Convenience: simulate one workload end to end, honoring the thread
+/// count already carried in `params` (1 for freshly built params) — so a
+/// multi-threaded `RunCell::params()` simulated directly agrees with the
+/// sweep result for the same cache key.
+pub fn simulate(cfg: &SystemConfig, params: crate::trace::TraceParams) -> Result<SimResult> {
+    simulate_threads(cfg, params, params.threads)
 }
 
-/// Sampling extrapolation factor for the sub-sampled kernels
-/// (DESIGN.md §Sampling): MatMul simulates a row slice, kNN/MLP simulate a
-/// fixed instance subset; cycles and counters scale linearly.
-pub fn sampling_scale(params: &TraceParams) -> f64 {
-    match params.kernel {
-        crate::trace::KernelId::MatMul => {
-            let s = crate::trace::matmul::sampling_for(params);
-            s.rows_total as f64 / s.rows_simulated as f64
-        }
-        crate::trace::KernelId::Knn => crate::trace::knn::scale_factor(),
-        crate::trace::KernelId::Mlp => crate::trace::mlp::scale_factor(),
-        _ => 1.0,
-    }
-}
-
-/// Run one data-parallel workload on an existing (fresh or just-reset)
-/// machine. This is the sweep engine's entry point: workers keep a machine
-/// alive across cells with the same `(config, threads)` shape and call
-/// [`Machine::reset`] between runs instead of reallocating the whole
-/// hierarchy.
-pub fn run_on(machine: &mut Machine, params: TraceParams, threads: usize) -> SimResult {
-    assert_eq!(machine.threads(), threads, "machine was built for a different thread count");
-    machine.set_scale(sampling_scale(&params).max(1.0));
-    let traces: Vec<_> =
-        (0..threads).map(|t| params.with_threads(t, threads).stream()).collect();
-    machine.run(traces)
-}
-
-/// Simulate a data-parallel workload over `threads` cores.
-pub fn simulate_threads(cfg: &SystemConfig, params: TraceParams, threads: usize) -> SimResult {
+/// Simulate a data-parallel workload over an explicit `threads` override
+/// (replaces whatever thread count `params` carries).
+pub fn simulate_threads(
+    cfg: &SystemConfig,
+    params: TraceParams,
+    threads: usize,
+) -> Result<SimResult> {
     let mut machine = Machine::new(cfg, threads);
-    run_on(&mut machine, params, threads)
+    run_on(&mut machine, params.with_threads(0, threads))
+}
+
+/// Run one data-parallel workload (`params.threads` cores) on an existing
+/// (fresh or just-reset) machine. This is the sweep engine's entry point:
+/// workers keep a machine alive across cells with the same `(config,
+/// threads)` shape and call [`Machine::reset`] between runs instead of
+/// reallocating the whole hierarchy.
+///
+/// The workload comes from the registry: its sampling-extrapolation factor
+/// (DESIGN.md §Sampling) is applied, and unknown workloads / unsupported
+/// backends / invalid parameters are typed errors, never panics.
+pub fn run_on(machine: &mut Machine, params: TraceParams) -> Result<SimResult> {
+    crate::ensure!(
+        machine.threads() == params.threads,
+        "machine was built for {} threads, params want {}",
+        machine.threads(),
+        params.threads
+    );
+    let workload = crate::workload::get(params.workload)?;
+    // The extrapolation factor is a property of the *cell*, computed from
+    // the single-thread view of the parameters (the per-thread generators
+    // divide their sampling caps by the thread count themselves; see
+    // matmul::sampling_for) — this keeps sweep output identical whether a
+    // cell was declared threaded or not.
+    machine.set_scale(workload.sampling_scale(&params.with_threads(0, 1)).max(1.0));
+    let traces = (0..params.threads)
+        .map(|t| params.with_threads(t, params.threads).stream())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(machine.run(traces))
 }
 
 #[cfg(test)]
@@ -297,8 +307,9 @@ mod tests {
     #[test]
     fn vecsum_vima_beats_avx() {
         let c = cfg();
-        let avx = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20));
-        let vima = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Vima, 3 << 20));
+        let avx = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20)).unwrap();
+        let vima =
+            simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Vima, 3 << 20)).unwrap();
         let speedup = vima.speedup_vs(&avx);
         assert!(speedup > 1.5, "VecSum VIMA speedup {speedup}");
         assert!(vima.energy_ratio_vs(&avx) < 0.7, "VIMA must save energy");
@@ -307,8 +318,9 @@ mod tests {
     #[test]
     fn memset_vima_large_speedup() {
         let c = cfg();
-        let avx = simulate(&c, TraceParams::new(KernelId::MemSet, Backend::Avx, 4 << 20));
-        let vima = simulate(&c, TraceParams::new(KernelId::MemSet, Backend::Vima, 4 << 20));
+        let avx = simulate(&c, TraceParams::new(KernelId::MemSet, Backend::Avx, 4 << 20)).unwrap();
+        let vima =
+            simulate(&c, TraceParams::new(KernelId::MemSet, Backend::Vima, 4 << 20)).unwrap();
         let speedup = vima.speedup_vs(&avx);
         assert!(speedup > 4.0, "MemSet VIMA speedup {speedup}");
     }
@@ -317,8 +329,8 @@ mod tests {
     fn multithreading_speeds_up_avx() {
         let c = cfg();
         let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20);
-        let t1 = simulate_threads(&c, p, 1);
-        let t4 = simulate_threads(&c, p, 4);
+        let t1 = simulate_threads(&c, p, 1).unwrap();
+        let t4 = simulate_threads(&c, p, 4).unwrap();
         let speedup = t1.cycles as f64 / t4.cycles as f64;
         assert!(speedup > 1.5, "4-thread speedup {speedup}");
         assert!(speedup <= 4.5);
@@ -328,9 +340,9 @@ mod tests {
     fn stop_and_go_ablation_changes_time() {
         let mut c = cfg();
         let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20);
-        let with = simulate(&c, p);
+        let with = simulate(&c, p).unwrap();
         c.vima.stop_and_go = false;
-        let without = simulate(&c, p);
+        let without = simulate(&c, p).unwrap();
         assert!(
             without.cycles < with.cycles,
             "removing stop-and-go must help: {} vs {}",
@@ -347,12 +359,12 @@ mod tests {
         let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20);
         let q = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20);
         let mut m = Machine::new(&c, 1);
-        let first = run_on(&mut m, p, 1);
+        let first = run_on(&mut m, p).unwrap();
         m.reset();
-        let second = run_on(&mut m, q, 1);
-        assert_eq!(second.cycles, simulate(&c, q).cycles);
+        let second = run_on(&mut m, q).unwrap();
+        assert_eq!(second.cycles, simulate(&c, q).unwrap().cycles);
         m.reset();
-        let again = run_on(&mut m, p, 1);
+        let again = run_on(&mut m, p).unwrap();
         assert_eq!(first.cycles, again.cycles);
         assert_eq!(first.report, again.report);
     }
@@ -361,15 +373,15 @@ mod tests {
     fn deterministic_runs() {
         let c = cfg();
         let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20);
-        let a = simulate(&c, p);
-        let b = simulate(&c, p);
+        let a = simulate(&c, p).unwrap();
+        let b = simulate(&c, p).unwrap();
         assert_eq!(a.cycles, b.cycles);
     }
 
     #[test]
     fn hive_runs_and_drains() {
         let c = cfg();
-        let r = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Hive, 1 << 20));
+        let r = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Hive, 1 << 20)).unwrap();
         assert!(r.cycles > 0);
         assert!(r.report.get("hive.transactions").unwrap() > 0.0);
     }
@@ -377,7 +389,7 @@ mod tests {
     #[test]
     fn report_contains_core_and_memory_keys() {
         let c = cfg();
-        let r = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20));
+        let r = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20)).unwrap();
         for key in ["core.uops", "l1d.accesses", "llc.accesses", "mem.host_reads", "sim.cycles"] {
             assert!(r.report.get(key).is_some(), "missing {key}");
         }

@@ -7,8 +7,9 @@
 //! [`SweepPlan`] of [`RunCell`]s and hands it to a [`SweepRunner`], which:
 //!
 //! * **deduplicates** — cells are keyed by their full identity
-//!   ([`CellKey`]: kernel, backend, footprint, threads, vector size, and
-//!   the complete [`SystemConfig`]) in a persistent result cache, so a cell
+//!   ([`CellKey`]: the cell's `Eq + Hash` [`TraceParams`] — workload,
+//!   backend, footprint, threads, vector size — plus the complete
+//!   [`SystemConfig`]) in a persistent result cache, so a cell
 //!   shared by fig3/fig4/fig5 simulates exactly once per runner (across
 //!   *sequential* `run` calls — two `run`s racing on the same runner may
 //!   both simulate a cell neither has cached yet; results are unaffected,
@@ -31,15 +32,18 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::SystemConfig;
-use crate::coordinator::workloads::Workload;
+use crate::coordinator::workloads::SizedWorkload;
 use crate::sim::{run_on, Machine, SimResult};
-use crate::trace::{Backend, KernelId, TraceParams};
+use crate::trace::{Backend, TraceParams};
+use crate::util::error::Result;
+use crate::workload::{self, WorkloadId};
 
 /// One cell of the run grid: a workload on a backend with a thread count
 /// and an optional configuration override.
 #[derive(Debug, Clone)]
 pub struct RunCell {
-    pub kernel: KernelId,
+    /// Registry identity — any registered workload, paper kernel or custom.
+    pub workload: WorkloadId,
     /// Total data footprint in bytes.
     pub footprint: u64,
     pub backend: Backend,
@@ -52,9 +56,9 @@ pub struct RunCell {
 }
 
 impl RunCell {
-    pub fn new(w: Workload, backend: Backend) -> Self {
+    pub fn new(w: SizedWorkload, backend: Backend) -> Self {
         Self {
-            kernel: w.kernel,
+            workload: w.workload,
             footprint: w.footprint,
             backend,
             threads: 1,
@@ -81,8 +85,9 @@ impl RunCell {
     /// Trace-generator parameters for this cell (per-thread slicing happens
     /// inside [`run_on`]).
     pub fn params(&self) -> TraceParams {
-        TraceParams::new(self.kernel, self.backend, self.footprint)
+        TraceParams::new(self.workload, self.backend, self.footprint)
             .with_vector_bytes(self.vector_bytes)
+            .with_threads(0, self.threads)
     }
 
     fn effective_cfg<'a>(&'a self, base: &'a SystemConfig) -> &'a SystemConfig {
@@ -93,21 +98,14 @@ impl RunCell {
     /// hashes identically to no override — identity is by value, not by
     /// provenance.
     pub fn key(&self, base: &SystemConfig) -> CellKey {
-        CellKey {
-            kernel: self.kernel,
-            backend: self.backend,
-            footprint: self.footprint,
-            threads: self.threads,
-            vector_bytes: self.vector_bytes,
-            cfg: self.effective_cfg(base).clone(),
-        }
+        CellKey { params: self.params(), cfg: self.effective_cfg(base).clone() }
     }
 
     /// Progress label for verbose runs.
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{} {:.1}MB x{}",
-            self.kernel,
+            workload::name(self.workload),
             self.backend,
             self.footprint as f64 / (1 << 20) as f64,
             self.threads
@@ -122,16 +120,14 @@ impl RunCell {
     }
 }
 
-/// Full identity of a simulation cell — the result-cache key. The simulator
-/// is deterministic, so equal keys imply bit-identical [`SimResult`]s and
-/// the second occurrence never runs.
+/// Full identity of a simulation cell — the result-cache key: the cell's
+/// [`TraceParams`] (workload identity, backend, footprint, threads, vector
+/// size — all-integer and `Hash`) plus the effective [`SystemConfig`]. The
+/// simulator is deterministic, so equal keys imply bit-identical
+/// [`SimResult`]s and the second occurrence never runs.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CellKey {
-    kernel: KernelId,
-    backend: Backend,
-    footprint: u64,
-    threads: usize,
-    vector_bytes: u32,
+    params: TraceParams,
     cfg: SystemConfig,
 }
 
@@ -240,8 +236,10 @@ impl SweepRunner {
         self.cache.lock().unwrap().len()
     }
 
-    /// Execute a plan; results are returned in plan order.
-    pub fn run(&self, base: &SystemConfig, plan: &SweepPlan) -> Vec<SimResult> {
+    /// Execute a plan; results are returned in plan order. Every cell is
+    /// validated against the workload registry up front, so a bad cell
+    /// fails fast (typed error) before any simulation starts.
+    pub fn run(&self, base: &SystemConfig, plan: &SweepPlan) -> Result<Vec<SimResult>> {
         self.run_verbose(base, plan, false)
     }
 
@@ -251,7 +249,12 @@ impl SweepRunner {
         base: &SystemConfig,
         plan: &SweepPlan,
         verbose: bool,
-    ) -> Vec<SimResult> {
+    ) -> Result<Vec<SimResult>> {
+        for cell in plan.cells() {
+            cell.params()
+                .check()
+                .map_err(|e| e.context(format!("sweep cell {}", cell.label())))?;
+        }
         let keys: Vec<CellKey> = plan.cells().iter().map(|c| c.key(base)).collect();
 
         // First occurrence of each not-yet-cached key gets simulated; later
@@ -275,7 +278,8 @@ impl SweepRunner {
         if !todo.is_empty() {
             let workers = self.jobs.min(todo.len()).max(1);
             let next = AtomicUsize::new(0);
-            let done: Mutex<Vec<(usize, SimResult)>> = Mutex::new(Vec::with_capacity(todo.len()));
+            let done: Mutex<Vec<(usize, Result<SimResult>)>> =
+                Mutex::new(Vec::with_capacity(todo.len()));
             std::thread::scope(|s| {
                 for _ in 0..workers {
                     s.spawn(|| {
@@ -289,20 +293,36 @@ impl SweepRunner {
                                 eprintln!("[vima-sim] run {}", cell.label());
                             }
                             let machine = machines.get(cfg, cell.threads);
-                            let result = run_on(machine, cell.params(), cell.threads);
+                            // Pre-validation catches registry/parameter
+                            // errors; a custom workload's chunker can still
+                            // fail here, so errors propagate, never panic.
+                            let result = run_on(machine, cell.params());
                             done.lock().unwrap().push((i, result));
                         }
                     });
                 }
             });
             let mut cache = self.cache.lock().unwrap();
+            let mut first_err = None;
             for (i, result) in done.into_inner().unwrap() {
-                cache.insert(keys[i].clone(), result);
+                match result {
+                    Ok(r) => {
+                        cache.insert(keys[i].clone(), r);
+                    }
+                    Err(e) if first_err.is_none() => {
+                        first_err =
+                            Some(e.context(format!("sweep cell {}", plan.cells()[i].label())));
+                    }
+                    Err(_) => {}
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
             }
         }
 
         let cache = self.cache.lock().unwrap();
-        keys.iter().map(|k| cache[k].clone()).collect()
+        Ok(keys.iter().map(|k| cache[k].clone()).collect())
     }
 }
 
@@ -318,8 +338,9 @@ fn resolve_jobs(jobs: usize) -> usize {
 mod tests {
     use super::*;
     use crate::coordinator::workloads::{SizeScale, WorkloadSet};
+    use crate::trace::KernelId;
 
-    fn small_workload() -> Workload {
+    fn small_workload() -> SizedWorkload {
         // Quick-scale MemSet, smallest size (1 MB floor).
         WorkloadSet::sizes(KernelId::MemSet, SizeScale::Quick)[0]
     }
@@ -331,7 +352,7 @@ mod tests {
         let mut plan = SweepPlan::new();
         let a = plan.push(RunCell::new(small_workload(), Backend::Avx));
         let b = plan.push(RunCell::new(small_workload(), Backend::Avx));
-        let res = runner.run(&cfg, &plan);
+        let res = runner.run(&cfg, &plan).unwrap();
         assert_eq!(res[a].cycles, res[b].cycles);
         let stats = runner.stats();
         assert_eq!(stats.cells, 2);
@@ -345,8 +366,8 @@ mod tests {
         let runner = SweepRunner::new(1);
         let mut plan = SweepPlan::new();
         plan.push(RunCell::new(small_workload(), Backend::Vima));
-        runner.run(&cfg, &plan);
-        runner.run(&cfg, &plan);
+        runner.run(&cfg, &plan).unwrap();
+        runner.run(&cfg, &plan).unwrap();
         let stats = runner.stats();
         assert_eq!(stats.unique_runs, 1);
         assert_eq!(stats.cache_hits, 1);
@@ -401,8 +422,9 @@ mod tests {
         let mut plan = SweepPlan::new();
         let w = small_workload();
         let i = plan.push(RunCell::new(w, Backend::Vima));
-        let res = runner.run(&cfg, &plan);
-        let direct = crate::sim::simulate(&cfg, RunCell::new(w, Backend::Vima).params());
+        let res = runner.run(&cfg, &plan).unwrap();
+        let direct =
+            crate::sim::simulate(&cfg, RunCell::new(w, Backend::Vima).params()).unwrap();
         assert_eq!(res[i].cycles, direct.cycles);
         assert_eq!(res[i].report, direct.report);
     }

@@ -211,7 +211,7 @@ mod tests {
         let p = TraceParams::new(KernelId::Knn, Backend::Avx, 1 << 20);
         let f = features_for(1 << 20); // 8 features
         let loads = p
-            .stream()
+            .stream().unwrap()
             .filter(|e| {
                 matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load && u.addr < layout::B)
             })
@@ -220,7 +220,7 @@ mod tests {
         let _ = (f, loads);
         let p = TraceParams::new(KernelId::Knn, Backend::Avx, 4 << 20);
         let loads = p
-            .stream()
+            .stream().unwrap()
             .filter(|e| {
                 matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load && u.addr < layout::B)
             })
@@ -233,7 +233,7 @@ mod tests {
         let p = TraceParams::new(KernelId::Knn, Backend::Vima, 4 << 20);
         let mut acc_writes = 0u64;
         let mut fmas = 0u64;
-        for e in p.stream() {
+        for e in p.stream().unwrap() {
             if let TraceEvent::Vima(v) = e {
                 match v.op {
                     VimaOp::Fma => fmas += 1,
@@ -251,7 +251,7 @@ mod tests {
     fn vima_host_scans_distances() {
         let p = TraceParams::new(KernelId::Knn, Backend::Vima, 4 << 20);
         let scans = p
-            .stream()
+            .stream().unwrap()
             .filter(|e| {
                 matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load && u.addr >= layout::SCRATCH && u.addr < layout::SCRATCH + 8192)
             })

@@ -187,7 +187,7 @@ mod tests {
     fn avx_b_loads_are_strided() {
         let p = TraceParams::new(KernelId::MatMul, Backend::Avx, 3 << 20);
         let mut b_addrs = vec![];
-        for e in p.stream().take(4000) {
+        for e in p.stream().unwrap().take(4000) {
             if let TraceEvent::Uop(u) = e {
                 if u.fu == FuType::Load && u.addr >= layout::B && u.addr < layout::C {
                     b_addrs.push(u.addr);
@@ -203,7 +203,7 @@ mod tests {
     fn vima_c_row_is_reused_across_k() {
         let p = TraceParams::new(KernelId::MatMul, Backend::Vima, 3 << 20);
         let mut c_dsts = std::collections::HashMap::new();
-        for e in p.stream().take(20000) {
+        for e in p.stream().unwrap().take(20000) {
             if let TraceEvent::Vima(v) = e {
                 if let Some(d) = v.dst() {
                     if d >= layout::C {
@@ -219,7 +219,7 @@ mod tests {
     #[test]
     fn vima_partial_vector_rows() {
         let p = TraceParams::new(KernelId::MatMul, Backend::Vima, 6 << 20);
-        for e in p.stream().take(100) {
+        for e in p.stream().unwrap().take(100) {
             if let TraceEvent::Vima(v) = e {
                 assert_eq!(v.vector_bytes, 724 * 4);
             }

@@ -181,7 +181,7 @@ mod tests {
     fn avx_instance_loads_dominate() {
         let p = TraceParams::new(KernelId::Mlp, Backend::Avx, 4 << 20);
         let loads = p
-            .stream()
+            .stream().unwrap()
             .filter(|e| {
                 matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load && u.addr < layout::B)
             })
@@ -193,7 +193,7 @@ mod tests {
     fn vima_fma_count() {
         let p = TraceParams::new(KernelId::Mlp, Backend::Vima, 4 << 20);
         let fmas = p
-            .stream()
+            .stream().unwrap()
             .filter(|e| matches!(e, TraceEvent::Vima(v) if v.op == VimaOp::Fma))
             .count() as u64;
         // chunks = 16384/2048 = 8, F = 64
@@ -204,7 +204,7 @@ mod tests {
     fn vima_emits_relu_per_chunk() {
         let p = TraceParams::new(KernelId::Mlp, Backend::Vima, 4 << 20);
         let relus = p
-            .stream()
+            .stream().unwrap()
             .filter(|e| matches!(e, TraceEvent::Vima(v) if v.op == VimaOp::Max))
             .count() as u64;
         assert_eq!(relus, SIM_NEURONS * 8);

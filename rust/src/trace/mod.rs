@@ -23,6 +23,8 @@ pub mod stencil;
 pub mod streaming;
 
 use crate::isa::TraceEvent;
+use crate::util::error::Result;
+use crate::workload::{self, WorkloadId};
 
 /// Which ISA the kernel was "compiled" for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -118,10 +120,13 @@ impl Iterator for TraceStream {
     }
 }
 
-/// Workload parameters handed to the generators.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Workload parameters handed to the generators. All-integer and
+/// `Eq + Hash`: a `TraceParams` *is* the workload identity, so the sweep
+/// engine keys its result cache on it directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TraceParams {
-    pub kernel: KernelId,
+    /// Registry identity ([`KernelId`] converts for the paper kernels).
+    pub workload: WorkloadId,
     pub backend: Backend,
     /// Total data footprint in bytes (the paper's "dataset" axis).
     pub footprint: u64,
@@ -133,8 +138,15 @@ pub struct TraceParams {
 }
 
 impl TraceParams {
-    pub fn new(kernel: KernelId, backend: Backend, footprint: u64) -> Self {
-        Self { kernel, backend, footprint, vector_bytes: 8192, thread: 0, threads: 1 }
+    pub fn new(workload: impl Into<WorkloadId>, backend: Backend, footprint: u64) -> Self {
+        Self {
+            workload: workload.into(),
+            backend,
+            footprint,
+            vector_bytes: 8192,
+            thread: 0,
+            threads: 1,
+        }
     }
 
     pub fn with_threads(mut self, thread: usize, threads: usize) -> Self {
@@ -158,30 +170,30 @@ impl TraceParams {
         (lo, hi)
     }
 
-    /// Build the event stream for these parameters.
-    pub fn stream(&self) -> TraceStream {
-        let c: Box<dyn TraceChunker> = match (self.kernel, self.backend) {
-            (KernelId::MemSet, Backend::Avx) => Box::new(streaming::MemSetAvx::new(self)),
-            (KernelId::MemSet, Backend::Vima) => Box::new(streaming::MemSetVima::new(self)),
-            (KernelId::MemSet, Backend::Hive) => Box::new(streaming::MemSetHive::new(self)),
-            (KernelId::MemCopy, Backend::Avx) => Box::new(streaming::MemCopyAvx::new(self)),
-            (KernelId::MemCopy, Backend::Vima) => Box::new(streaming::MemCopyVima::new(self)),
-            (KernelId::MemCopy, Backend::Hive) => Box::new(streaming::MemCopyHive::new(self)),
-            (KernelId::VecSum, Backend::Avx) => Box::new(streaming::VecSumAvx::new(self)),
-            (KernelId::VecSum, Backend::Vima) => Box::new(streaming::VecSumVima::new(self)),
-            (KernelId::VecSum, Backend::Hive) => Box::new(streaming::VecSumHive::new(self)),
-            (KernelId::Stencil, Backend::Avx) => Box::new(stencil::StencilAvx::new(self)),
-            (KernelId::Stencil, Backend::Vima) => Box::new(stencil::StencilVima::new(self)),
-            (KernelId::Stencil, Backend::Hive) => Box::new(stencil::StencilHive::new(self)),
-            (KernelId::MatMul, Backend::Avx) => Box::new(matmul::MatMulAvx::new(self)),
-            (KernelId::MatMul, Backend::Vima) => Box::new(matmul::MatMulVima::new(self)),
-            (KernelId::Knn, Backend::Avx) => Box::new(knn::KnnAvx::new(self)),
-            (KernelId::Knn, Backend::Vima) => Box::new(knn::KnnVima::new(self)),
-            (KernelId::Mlp, Backend::Avx) => Box::new(mlp::MlpAvx::new(self)),
-            (KernelId::Mlp, Backend::Vima) => Box::new(mlp::MlpVima::new(self)),
-            (k, b) => panic!("no {b} trace generator for {k}"),
-        };
-        TraceStream::new(c)
+    /// Resolve the workload and validate these parameters without building
+    /// a trace — the cheap pre-flight the sweep engine runs on every cell
+    /// before dispatching to its worker pool.
+    pub fn check(&self) -> Result<()> {
+        let w = workload::get(self.workload)?;
+        if !w.backends().contains(&self.backend) {
+            let supported: Vec<String> = w.backends().iter().map(|b| b.to_string()).collect();
+            crate::bail!(
+                "no {} trace generator for {} (supported backends: {})",
+                self.backend,
+                w.name(),
+                supported.join(", ")
+            );
+        }
+        w.validate(self)
+    }
+
+    /// Build the event stream for these parameters through the workload
+    /// registry. Unknown workloads, unsupported backends, and invalid
+    /// parameters are typed errors (the old enum dispatch panicked).
+    pub fn stream(&self) -> Result<TraceStream> {
+        self.check()?;
+        let w = workload::get(self.workload)?;
+        Ok(TraceStream::new(w.chunker(self)?))
     }
 }
 
@@ -207,7 +219,7 @@ mod tests {
 
     fn count(params: TraceParams) -> (u64, u64, u64) {
         let (mut uops, mut vima, mut hive) = (0, 0, 0);
-        for e in params.stream() {
+        for e in params.stream().unwrap() {
             match e {
                 TraceEvent::Uop(_) => uops += 1,
                 TraceEvent::Vima(_) => vima += 1,
@@ -249,6 +261,28 @@ mod tests {
             assert!(h > 0, "{kernel}/HIVE produced no HIVE ops");
             assert_eq!(v, 0);
         }
+    }
+
+    #[test]
+    fn unsupported_backends_are_typed_errors() {
+        // The HIVE gaps (MatMul/kNN/MLP) used to panic; now they are
+        // results the CLI can surface.
+        for kernel in [KernelId::MatMul, KernelId::Knn, KernelId::Mlp] {
+            let p = TraceParams::new(kernel, Backend::Hive, 6 << 20);
+            let e = p.stream().unwrap_err().to_string();
+            assert!(e.contains("HIVE"), "{e}");
+            assert!(e.contains(&kernel.to_string()), "{e}");
+        }
+    }
+
+    #[test]
+    fn params_are_hashable_identity() {
+        use std::collections::HashSet;
+        let a = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20);
+        let b = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20);
+        let c = b.with_vector_bytes(256);
+        let set: HashSet<TraceParams> = [a, b, c].into_iter().collect();
+        assert_eq!(set.len(), 2, "equal params must collapse, distinct must not");
     }
 
     #[test]

@@ -185,7 +185,7 @@ mod tests {
     #[test]
     fn vima_rows_are_vector_aligned() {
         let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 512 << 10);
-        for e in p.stream() {
+        for e in p.stream().unwrap() {
             if let TraceEvent::Vima(v) = e {
                 for a in v.src_addrs() {
                     assert_eq!(a % 8192, 0, "unaligned vector src {a:#x}");
@@ -198,7 +198,7 @@ mod tests {
     fn vima_reuses_rows_across_iterations() {
         let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 512 << 10);
         let mut row_fetches = std::collections::HashMap::new();
-        for e in p.stream() {
+        for e in p.stream().unwrap() {
             if let TraceEvent::Vima(v) = e {
                 for a in v.src_addrs() {
                     if (layout::A..layout::B).contains(&a) {
@@ -215,7 +215,7 @@ mod tests {
     #[test]
     fn avx_emits_five_loads_per_chunk() {
         let p = TraceParams::new(KernelId::Stencil, Backend::Avx, 256 << 10);
-        let evs: Vec<TraceEvent> = p.stream().collect();
+        let evs: Vec<TraceEvent> = p.stream().unwrap().collect();
         let loads = evs
             .iter()
             .filter(|e| matches!(e, TraceEvent::Uop(u) if u.fu == FuType::Load))
@@ -231,7 +231,7 @@ mod tests {
     fn hive_reloads_every_row_three_times() {
         let p = TraceParams::new(KernelId::Stencil, Backend::Hive, 512 << 10);
         let mut loads = std::collections::HashMap::new();
-        for e in p.stream() {
+        for e in p.stream().unwrap() {
             if let TraceEvent::Hive(HiveOp::LoadReg { addr, .. }) = e {
                 *loads.entry(addr).or_insert(0u32) += 1;
             }
@@ -243,6 +243,6 @@ mod tests {
     #[test]
     fn tiny_footprint_still_produces_rows() {
         let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 64 << 10);
-        assert!(p.stream().count() > 0);
+        assert!(p.stream().unwrap().count() > 0);
     }
 }

@@ -358,7 +358,7 @@ mod tests {
     use crate::trace::{Backend, KernelId};
 
     fn events(p: TraceParams) -> Vec<TraceEvent> {
-        p.stream().collect()
+        p.stream().unwrap().collect()
     }
 
     #[test]

@@ -275,7 +275,7 @@ mod tests {
     #[test]
     fn vecsum_avx_transpiles_to_vima_adds() {
         let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20);
-        let (events, stats) = Transpiler::run(p.stream());
+        let (events, stats) = Transpiler::run(p.stream().unwrap());
         let (_, vima) = count_kinds(&events);
         assert!(vima > 0, "no VIMA instructions emitted");
         assert!(stats.windows_rewritten > 0);
@@ -291,7 +291,7 @@ mod tests {
     #[test]
     fn memset_avx_transpiles_to_bcast() {
         let p = TraceParams::new(KernelId::MemSet, Backend::Avx, 1 << 20);
-        let (events, stats) = Transpiler::run(p.stream());
+        let (events, stats) = Transpiler::run(p.stream().unwrap());
         assert_eq!(stats.vima_emitted, 128);
         assert!(events.iter().any(|e| matches!(e, TraceEvent::Vima(v) if v.op == VimaOp::Bcast)));
     }
@@ -299,7 +299,7 @@ mod tests {
     #[test]
     fn memcopy_avx_transpiles_to_mov() {
         let p = TraceParams::new(KernelId::MemCopy, Backend::Avx, 2 << 20);
-        let (_, stats) = Transpiler::run(p.stream());
+        let (_, stats) = Transpiler::run(p.stream().unwrap());
         assert_eq!(stats.vima_emitted, 128);
     }
 
@@ -308,8 +308,8 @@ mod tests {
         // Overlapping row reuse is not a pure stream: the pass must leave
         // the trace byte-identical.
         let p = TraceParams::new(KernelId::Stencil, Backend::Avx, 1 << 20);
-        let original: Vec<TraceEvent> = p.stream().collect();
-        let (events, stats) = Transpiler::run(p.stream());
+        let original: Vec<TraceEvent> = p.stream().unwrap().collect();
+        let (events, stats) = Transpiler::run(p.stream().unwrap());
         assert_eq!(stats.vima_emitted, 0);
         assert_eq!(events.len(), original.len());
         assert_eq!(events, original);
@@ -318,7 +318,7 @@ mod tests {
     #[test]
     fn matmul_does_not_transpile() {
         let p = TraceParams::new(KernelId::MatMul, Backend::Avx, 3 << 20);
-        let (events, stats) = Transpiler::run(p.stream());
+        let (events, stats) = Transpiler::run(p.stream().unwrap());
         let _ = events;
         assert_eq!(stats.vima_emitted, 0, "strided column walks must pass through");
     }
@@ -331,11 +331,11 @@ mod tests {
         let vima = TraceParams::new(KernelId::VecSum, Backend::Vima, footprint);
 
         let mut m = Machine::new(&cfg, 1);
-        let base = m.run(vec![avx.stream()]);
+        let base = m.run(vec![avx.stream().unwrap()]);
         let mut m = Machine::new(&cfg, 1);
-        let auto = m.run(vec![transpile(avx.stream())]);
+        let auto = m.run(vec![transpile(avx.stream().unwrap())]);
         let mut m = Machine::new(&cfg, 1);
-        let hand = m.run(vec![vima.stream()]);
+        let hand = m.run(vec![vima.stream().unwrap()]);
 
         let auto_speedup = base.cycles as f64 / auto.cycles as f64;
         let hand_speedup = base.cycles as f64 / hand.cycles as f64;
@@ -345,8 +345,15 @@ mod tests {
 
     #[test]
     fn empty_stream_produces_nothing() {
-        let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 0);
-        let (events, stats) = Transpiler::run(p.stream());
+        // Zero-footprint params are now a validation error, so build the
+        // empty stream directly.
+        struct Empty;
+        impl TraceChunker for Empty {
+            fn refill(&mut self, _buf: &mut Vec<TraceEvent>) -> bool {
+                false
+            }
+        }
+        let (events, stats) = Transpiler::run(TraceStream::new(Box::new(Empty)));
         assert!(events.is_empty());
         assert_eq!(stats.vima_emitted, 0);
     }
@@ -355,8 +362,8 @@ mod tests {
     fn vima_input_passes_through_untouched() {
         // Feeding an already-VIMA trace must be a no-op rewrite.
         let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20);
-        let original: Vec<TraceEvent> = p.stream().collect();
-        let (events, stats) = Transpiler::run(p.stream());
+        let original: Vec<TraceEvent> = p.stream().unwrap().collect();
+        let (events, stats) = Transpiler::run(p.stream().unwrap());
         assert_eq!(events, original);
         assert_eq!(stats.windows_rewritten, 0);
     }
@@ -367,7 +374,7 @@ mod tests {
         // rewrite the first and keep the second.
         let vs = TraceParams::new(KernelId::VecSum, Backend::Avx, 3 << 20);
         let st = TraceParams::new(KernelId::Stencil, Backend::Avx, 1 << 20);
-        let mixed: Vec<TraceEvent> = vs.stream().chain(st.stream()).collect();
+        let mixed: Vec<TraceEvent> = vs.stream().unwrap().chain(st.stream().unwrap()).collect();
         struct VecChunker(std::vec::IntoIter<TraceEvent>, bool);
         impl TraceChunker for VecChunker {
             fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool {

@@ -1,0 +1,259 @@
+//! Open workload API: the [`Workload`] trait and the process-wide registry.
+//!
+//! The paper's headline is not just the 26x speedup but the *programming
+//! interface* (Sec. III-B, Intrinsics-VIMA): new workloads should be data,
+//! not enum arms. This module makes the workload surface open:
+//!
+//! * [`Workload`] — what a workload *is*: a name, the set of backends it can
+//!   lower to, parameter validation, an optional sampling-extrapolation
+//!   factor, and a per-backend [`TraceChunker`] factory.
+//! * the **registry** — a process-wide name -> workload table. The paper's
+//!   seven kernels ([`paper`]) and two Intrinsics-VIMA example programs
+//!   ([`programs`]) are pre-registered; user code adds its own with
+//!   [`register`] (or [`VimaProgram::register`]) and the new workload is
+//!   immediately runnable everywhere a built-in is: `simulate`/`run_on`,
+//!   [`SweepPlan`]/[`RunCell`] (with result-cache dedup — workload identity
+//!   is part of [`TraceParams`], which is `Eq + Hash`), and the
+//!   `vima-sim run`/`sweep` CLI.
+//! * [`WorkloadId`] — a small copyable identity. For the built-in kernels it
+//!   coincides with [`KernelId`] (`WorkloadId::from(KernelId::MemSet)` etc.),
+//!   so existing call sites keep working unchanged.
+//!
+//! Dispatch that used to be a 20-arm `match (KernelId, Backend)` (and a
+//! panic on the gaps) is now `registry lookup -> backend check -> chunker`,
+//! with every failure a typed [`util::error`](crate::util::error) result.
+//!
+//! [`VimaProgram::register`]: crate::intrinsics::VimaProgram::register
+//! [`SweepPlan`]: crate::sweep::SweepPlan
+//! [`RunCell`]: crate::sweep::RunCell
+//! [`TraceParams`]: crate::trace::TraceParams
+
+pub mod paper;
+pub mod programs;
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::ensure;
+use crate::trace::{Backend, KernelId, TraceChunker, TraceParams};
+use crate::util::error::Result;
+
+pub use programs::ProgramWorkload;
+
+/// An open workload: anything that can lower itself to a per-backend trace
+/// stream. Implementations are registered once ([`register`]) and addressed
+/// by [`WorkloadId`] afterwards.
+pub trait Workload: Send + Sync {
+    /// Unique display name (registry keys are case-insensitive).
+    fn name(&self) -> &str;
+
+    /// Backends this workload can lower to. Requesting any other backend is
+    /// a typed error from [`TraceParams::stream`], never a panic.
+    fn backends(&self) -> &[Backend];
+
+    /// One-line description for `vima-sim workloads`.
+    fn description(&self) -> &str {
+        ""
+    }
+
+    /// Validate parameters before any trace is generated. The default
+    /// checks the invariants every generator assumes; overrides should call
+    /// [`common_validate`] first and then add their own constraints.
+    fn validate(&self, p: &TraceParams) -> Result<()> {
+        common_validate(p)
+    }
+
+    /// Sampling extrapolation factor (cycles and counters scale linearly;
+    /// see DESIGN.md §Sampling). 1.0 = the whole workload is simulated.
+    fn sampling_scale(&self, p: &TraceParams) -> f64 {
+        let _ = p;
+        1.0
+    }
+
+    /// Footprint used when the caller does not specify one (CLI `run`
+    /// without `--mb`, the custom sweep figure).
+    fn default_footprint(&self) -> u64 {
+        4 << 20
+    }
+
+    /// Build the trace producer for `p` (`p.backend` is guaranteed to be in
+    /// [`backends`](Self::backends) and `p` to have passed
+    /// [`validate`](Self::validate)).
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>>;
+}
+
+/// Parameter invariants shared by every trace generator.
+pub fn common_validate(p: &TraceParams) -> Result<()> {
+    ensure!(p.footprint > 0, "footprint must be non-zero");
+    ensure!(
+        p.vector_bytes >= 64 && p.vector_bytes.is_power_of_two(),
+        "vector_bytes must be a power of two >= 64 (got {})",
+        p.vector_bytes
+    );
+    ensure!(
+        p.threads >= 1 && p.thread < p.threads,
+        "thread {} out of range for {} threads",
+        p.thread,
+        p.threads
+    );
+    Ok(())
+}
+
+/// Registry identity of a workload — a small, copyable, hashable handle.
+/// Stable for the whole process; the built-in kernels occupy the indices of
+/// [`KernelId`] so the conversion is free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkloadId(u32);
+
+impl WorkloadId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl From<KernelId> for WorkloadId {
+    fn from(k: KernelId) -> Self {
+        // The registry constructor registers the paper kernels first, in
+        // `KernelId` declaration order (asserted by `builtin_ids_line_up`).
+        WorkloadId(k as u32)
+    }
+}
+
+struct Registry {
+    entries: Vec<Arc<dyn Workload>>,
+    by_name: HashMap<String, WorkloadId>,
+}
+
+impl Registry {
+    fn with_builtins() -> Self {
+        let mut r = Registry { entries: Vec::new(), by_name: HashMap::new() };
+        for w in paper::all() {
+            r.insert(w).expect("built-in kernel registration cannot collide");
+        }
+        for w in programs::builtins() {
+            r.insert(w).expect("built-in program registration cannot collide");
+        }
+        r
+    }
+
+    fn insert(&mut self, w: Arc<dyn Workload>) -> Result<WorkloadId> {
+        let key = w.name().to_ascii_lowercase();
+        ensure!(!key.is_empty(), "workload name must be non-empty");
+        ensure!(
+            !self.by_name.contains_key(&key),
+            "workload `{}` is already registered",
+            w.name()
+        );
+        let id = WorkloadId(self.entries.len() as u32);
+        self.by_name.insert(key, id);
+        self.entries.push(w);
+        Ok(id)
+    }
+}
+
+fn global() -> &'static RwLock<Registry> {
+    static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(Registry::with_builtins()))
+}
+
+/// Register a workload; its name becomes addressable from every layer
+/// (params, sweeps, CLI). Errors if the (case-insensitive) name is taken.
+pub fn register(w: Arc<dyn Workload>) -> Result<WorkloadId> {
+    global().write().unwrap().insert(w)
+}
+
+/// Look a workload up by (case-insensitive) name.
+pub fn resolve(name: &str) -> Result<WorkloadId> {
+    let r = global().read().unwrap();
+    match r.by_name.get(&name.to_ascii_lowercase()) {
+        Some(&id) => Ok(id),
+        None => {
+            let mut names: Vec<String> =
+                r.entries.iter().map(|w| w.name().to_string()).collect();
+            names.sort_unstable();
+            crate::bail!("unknown workload {name:?}; registered: {}", names.join(", "))
+        }
+    }
+}
+
+/// Fetch a registered workload by id.
+pub fn get(id: WorkloadId) -> Result<Arc<dyn Workload>> {
+    let r = global().read().unwrap();
+    match r.entries.get(id.index()) {
+        Some(w) => Ok(Arc::clone(w)),
+        None => crate::bail!("workload id #{} is not registered", id.0),
+    }
+}
+
+/// Display name for an id (`"workload#N"` if the id is unknown — labels
+/// must never fail).
+pub fn name(id: WorkloadId) -> String {
+    get(id).map(|w| w.name().to_string()).unwrap_or_else(|_| format!("workload#{}", id.0))
+}
+
+/// All registered workload ids, in registration order.
+pub fn all_ids() -> Vec<WorkloadId> {
+    let r = global().read().unwrap();
+    (0..r.entries.len() as u32).map(WorkloadId).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_ids_line_up() {
+        for k in [
+            KernelId::MemSet,
+            KernelId::MemCopy,
+            KernelId::VecSum,
+            KernelId::Stencil,
+            KernelId::MatMul,
+            KernelId::Knn,
+            KernelId::Mlp,
+        ] {
+            let id = WorkloadId::from(k);
+            let w = get(id).unwrap();
+            assert_eq!(w.name(), k.to_string(), "registry order must match KernelId");
+            assert_eq!(resolve(w.name()).unwrap(), id);
+        }
+    }
+
+    #[test]
+    fn resolution_is_case_insensitive() {
+        assert_eq!(resolve("memset").unwrap(), WorkloadId::from(KernelId::MemSet));
+        assert_eq!(resolve("MEMSET").unwrap(), WorkloadId::from(KernelId::MemSet));
+        assert_eq!(resolve("kNN").unwrap(), WorkloadId::from(KernelId::Knn));
+    }
+
+    #[test]
+    fn unknown_name_lists_registered() {
+        let e = resolve("no-such-kernel").unwrap_err().to_string();
+        assert!(e.contains("no-such-kernel"), "{e}");
+        assert!(e.contains("MemSet"), "error must list registered workloads: {e}");
+        assert!(e.contains("saxpy"), "error must list registered programs: {e}");
+    }
+
+    #[test]
+    fn builtin_programs_are_registered() {
+        for name in ["saxpy", "softmax"] {
+            let id = resolve(name).unwrap();
+            let w = get(id).unwrap();
+            assert!(w.backends().contains(&Backend::Vima));
+            assert!(w.backends().contains(&Backend::Avx));
+            assert!(w.default_footprint() > 0);
+        }
+    }
+
+    #[test]
+    fn common_validate_rejects_bad_params() {
+        let good = TraceParams::new(KernelId::MemSet, Backend::Avx, 1 << 20);
+        assert!(common_validate(&good).is_ok());
+        let mut zero = good;
+        zero.footprint = 0;
+        assert!(common_validate(&zero).is_err());
+        let mut odd = good;
+        odd.vector_bytes = 100;
+        assert!(common_validate(&odd).is_err());
+    }
+}

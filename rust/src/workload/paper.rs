@@ -1,0 +1,213 @@
+//! The paper's seven kernels (Sec. IV-A) as [`Workload`] registrations.
+//!
+//! Each kernel is one small struct whose [`Workload::chunker`] dispatches
+//! over its *own* supported backends to the existing trace generators in
+//! [`crate::trace`] — the old crate-wide `match (KernelId, Backend)` (which
+//! panicked on the HIVE gaps for MatMul/kNN/MLP) no longer exists; an
+//! unsupported backend is a typed error raised before any trace is built.
+
+use std::sync::Arc;
+
+use super::Workload;
+use crate::trace::{knn, matmul, mlp, stencil, streaming, Backend, TraceChunker, TraceParams};
+use crate::util::error::Result;
+
+const ALL_BACKENDS: [Backend; 3] = [Backend::Avx, Backend::Vima, Backend::Hive];
+const NO_HIVE: [Backend; 2] = [Backend::Avx, Backend::Vima];
+
+pub(super) fn all() -> Vec<Arc<dyn Workload>> {
+    vec![
+        Arc::new(MemSet),
+        Arc::new(MemCopy),
+        Arc::new(VecSum),
+        Arc::new(Stencil),
+        Arc::new(MatMul),
+        Arc::new(Knn),
+        Arc::new(Mlp),
+    ]
+}
+
+pub struct MemSet;
+
+impl Workload for MemSet {
+    fn name(&self) -> &str {
+        "MemSet"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &ALL_BACKENDS
+    }
+
+    fn description(&self) -> &str {
+        "fill one array (pure store bandwidth)"
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        Ok(match p.backend {
+            Backend::Avx => Box::new(streaming::MemSetAvx::new(p)),
+            Backend::Vima => Box::new(streaming::MemSetVima::new(p)),
+            Backend::Hive => Box::new(streaming::MemSetHive::new(p)),
+        })
+    }
+}
+
+pub struct MemCopy;
+
+impl Workload for MemCopy {
+    fn name(&self) -> &str {
+        "MemCopy"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &ALL_BACKENDS
+    }
+
+    fn description(&self) -> &str {
+        "copy src array to dst array (load+store bandwidth)"
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        Ok(match p.backend {
+            Backend::Avx => Box::new(streaming::MemCopyAvx::new(p)),
+            Backend::Vima => Box::new(streaming::MemCopyVima::new(p)),
+            Backend::Hive => Box::new(streaming::MemCopyHive::new(p)),
+        })
+    }
+}
+
+pub struct VecSum;
+
+impl Workload for VecSum {
+    fn name(&self) -> &str {
+        "VecSum"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &ALL_BACKENDS
+    }
+
+    fn description(&self) -> &str {
+        "c = a + b elementwise (streaming compute)"
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        Ok(match p.backend {
+            Backend::Avx => Box::new(streaming::VecSumAvx::new(p)),
+            Backend::Vima => Box::new(streaming::VecSumVima::new(p)),
+            Backend::Hive => Box::new(streaming::VecSumHive::new(p)),
+        })
+    }
+}
+
+pub struct Stencil;
+
+impl Workload for Stencil {
+    fn name(&self) -> &str {
+        "Stencil"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &ALL_BACKENDS
+    }
+
+    fn description(&self) -> &str {
+        "5-point convolution with row reuse"
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        Ok(match p.backend {
+            Backend::Avx => Box::new(stencil::StencilAvx::new(p)),
+            Backend::Vima => Box::new(stencil::StencilVima::new(p)),
+            Backend::Hive => Box::new(stencil::StencilHive::new(p)),
+        })
+    }
+}
+
+pub struct MatMul;
+
+impl Workload for MatMul {
+    fn name(&self) -> &str {
+        "MatMul"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &NO_HIVE
+    }
+
+    fn description(&self) -> &str {
+        "C = A x B, naive loop nest (data-reuse showcase)"
+    }
+
+    fn default_footprint(&self) -> u64 {
+        6 << 20
+    }
+
+    fn sampling_scale(&self, p: &TraceParams) -> f64 {
+        let s = matmul::sampling_for(p);
+        s.rows_total as f64 / s.rows_simulated as f64
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        Ok(match p.backend {
+            Backend::Avx => Box::new(matmul::MatMulAvx::new(p)),
+            Backend::Vima => Box::new(matmul::MatMulVima::new(p)),
+            Backend::Hive => crate::bail!("MatMul has no HIVE trace generator"),
+        })
+    }
+}
+
+pub struct Knn;
+
+impl Workload for Knn {
+    fn name(&self) -> &str {
+        "kNN"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &NO_HIVE
+    }
+
+    fn description(&self) -> &str {
+        "k-nearest-neighbours distance sweep"
+    }
+
+    fn sampling_scale(&self, _p: &TraceParams) -> f64 {
+        knn::scale_factor()
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        Ok(match p.backend {
+            Backend::Avx => Box::new(knn::KnnAvx::new(p)),
+            Backend::Vima => Box::new(knn::KnnVima::new(p)),
+            Backend::Hive => crate::bail!("kNN has no HIVE trace generator"),
+        })
+    }
+}
+
+pub struct Mlp;
+
+impl Workload for Mlp {
+    fn name(&self) -> &str {
+        "MLP"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &NO_HIVE
+    }
+
+    fn description(&self) -> &str {
+        "multi-layer perceptron inference"
+    }
+
+    fn sampling_scale(&self, _p: &TraceParams) -> f64 {
+        mlp::scale_factor()
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        Ok(match p.backend {
+            Backend::Avx => Box::new(mlp::MlpAvx::new(p)),
+            Backend::Vima => Box::new(mlp::MlpVima::new(p)),
+            Backend::Hive => crate::bail!("MLP has no HIVE trace generator"),
+        })
+    }
+}

@@ -13,8 +13,8 @@ fn vima_multithread_fills_stop_and_go_gaps() {
     // on the shared device for a streaming kernel (no cache contention).
     let cfg = SystemConfig::default();
     let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 24 << 20);
-    let t1 = simulate_threads(&cfg, p, 1);
-    let t2 = simulate_threads(&cfg, p, 2);
+    let t1 = simulate_threads(&cfg, p, 1).unwrap();
+    let t2 = simulate_threads(&cfg, p, 2).unwrap();
     assert!(
         t2.cycles < t1.cycles,
         "2-thread VIMA must overlap dispatch gaps: {} vs {}",
@@ -30,14 +30,14 @@ fn vima_multithread_reuse_kernels_may_thrash_but_never_deadlock() {
     // the run must still complete, deterministically, without locking.
     let cfg = SystemConfig::default();
     let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 8 << 20);
-    let t4a = simulate_threads(&cfg, p, 4);
-    let t4b = simulate_threads(&cfg, p, 4);
+    let t4a = simulate_threads(&cfg, p, 4).unwrap();
+    let t4b = simulate_threads(&cfg, p, 4).unwrap();
     assert_eq!(t4a.cycles, t4b.cycles);
     assert!(t4a.cycles > 0);
     // a 4x larger cache restores the reuse for 4 threads
     let mut big = cfg.clone();
     big.vima.cache_bytes = 256 << 10;
-    let t4_big = simulate_threads(&big, p, 4);
+    let t4_big = simulate_threads(&big, p, 4).unwrap();
     assert!(t4_big.cycles <= t4a.cycles);
 }
 
@@ -48,8 +48,8 @@ fn hive_lock_serializes_threads() {
     // waits for the bank.
     let cfg = SystemConfig::default();
     let p = TraceParams::new(KernelId::VecSum, Backend::Hive, 12 << 20);
-    let t1 = simulate_threads(&cfg, p, 1);
-    let t4 = simulate_threads(&cfg, p, 4);
+    let t1 = simulate_threads(&cfg, p, 1).unwrap();
+    let t4 = simulate_threads(&cfg, p, 4).unwrap();
     let hive_scaling = t1.cycles as f64 / t4.cycles as f64;
     // The lock holds the bank for the whole load/compute/writeback span;
     // scaling must be well below ideal.
@@ -67,8 +67,8 @@ fn vima_multithread_shares_the_vcache_coherently() {
     // cache; the run must stay deterministic and account every fetch.
     let cfg = SystemConfig::default();
     let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 8 << 20);
-    let a = simulate_threads(&cfg, p, 2);
-    let b = simulate_threads(&cfg, p, 2);
+    let a = simulate_threads(&cfg, p, 2).unwrap();
+    let b = simulate_threads(&cfg, p, 2).unwrap();
     assert_eq!(a.cycles, b.cycles, "multithreaded VIMA must stay deterministic");
     let hits = a.report.get("vima.vcache_hits").unwrap();
     let misses = a.report.get("vima.vcache_misses").unwrap();

@@ -11,8 +11,8 @@ fn cfg() -> SystemConfig {
 }
 
 fn speedup(kernel: KernelId, bytes: u64) -> f64 {
-    let avx = simulate(&cfg(), TraceParams::new(kernel, Backend::Avx, bytes));
-    let vima = simulate(&cfg(), TraceParams::new(kernel, Backend::Vima, bytes));
+    let avx = simulate(&cfg(), TraceParams::new(kernel, Backend::Avx, bytes)).unwrap();
+    let vima = simulate(&cfg(), TraceParams::new(kernel, Backend::Vima, bytes)).unwrap();
     vima.speedup_vs(&avx)
 }
 
@@ -26,8 +26,10 @@ fn streaming_kernels_show_large_vima_speedup() {
 
 #[test]
 fn stencil_benefits_from_vector_reuse() {
-    let avx = simulate(&cfg(), TraceParams::new(KernelId::Stencil, Backend::Avx, 16 << 20));
-    let vima = simulate(&cfg(), TraceParams::new(KernelId::Stencil, Backend::Vima, 16 << 20));
+    let avx =
+        simulate(&cfg(), TraceParams::new(KernelId::Stencil, Backend::Avx, 16 << 20)).unwrap();
+    let vima =
+        simulate(&cfg(), TraceParams::new(KernelId::Stencil, Backend::Vima, 16 << 20)).unwrap();
     assert!(vima.speedup_vs(&avx) > 1.3, "stencil speedup {}", vima.speedup_vs(&avx));
     // The VIMA cache must be doing real work: rows are reused.
     let hits = vima.report.get("vima.vcache_hits").unwrap();
@@ -69,10 +71,10 @@ fn avx_multithread_catches_vima_on_vecsum() {
     // Fig. 4: AVX needs on the order of 16 cores to reach VIMA on VecSum.
     let c = cfg();
     let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 24 << 20);
-    let base = simulate(&c, p);
-    let vima = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Vima, 24 << 20));
-    let avx2 = simulate_threads(&c, p, 2);
-    let avx16 = simulate_threads(&c, p, 16);
+    let base = simulate(&c, p).unwrap();
+    let vima = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Vima, 24 << 20)).unwrap();
+    let avx2 = simulate_threads(&c, p, 2).unwrap();
+    let avx16 = simulate_threads(&c, p, 16).unwrap();
     let vima_speedup = vima.speedup_vs(&base);
     assert!(
         avx2.speedup_vs(&base) < vima_speedup,
@@ -92,7 +94,7 @@ fn avx_multithread_scaling_is_monotone() {
     let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 12 << 20);
     let mut prev = u64::MAX;
     for th in [1, 2, 4, 8] {
-        let r = simulate_threads(&c, p, th);
+        let r = simulate_threads(&c, p, th).unwrap();
         assert!(r.cycles <= prev, "{th} threads slower than {}", prev);
         prev = r.cycles;
     }
@@ -103,8 +105,8 @@ fn vima_saves_energy() {
     // Headline: up to 93% energy saving; any streaming kernel must save >50%.
     let c = cfg();
     for kernel in [KernelId::VecSum, KernelId::MemCopy] {
-        let avx = simulate(&c, TraceParams::new(kernel, Backend::Avx, 8 << 20));
-        let vima = simulate(&c, TraceParams::new(kernel, Backend::Vima, 8 << 20));
+        let avx = simulate(&c, TraceParams::new(kernel, Backend::Avx, 8 << 20)).unwrap();
+        let vima = simulate(&c, TraceParams::new(kernel, Backend::Vima, 8 << 20)).unwrap();
         let ratio = vima.energy_ratio_vs(&avx);
         assert!(ratio < 0.5, "{kernel}: energy ratio {ratio}");
     }
@@ -113,8 +115,8 @@ fn vima_saves_energy() {
 #[test]
 fn vima_dram_energy_per_bit_is_lower() {
     let c = cfg();
-    let avx = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Avx, 4 << 20));
-    let vima = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Vima, 4 << 20));
+    let avx = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Avx, 4 << 20)).unwrap();
+    let vima = simulate(&c, TraceParams::new(KernelId::MemCopy, Backend::Vima, 4 << 20)).unwrap();
     // Both move the same payload, but VIMA pays 4.8 pJ/bit vs 10.8.
     let avx_bits = avx.report.get("mem.host_bits").unwrap();
     let vima_bits = vima.report.get("mem.vima_bits").unwrap();
@@ -130,8 +132,9 @@ fn vector_size_ablation_matches_sec3c() {
     let small = simulate(
         &small_cfg,
         TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20).with_vector_bytes(256),
-    );
-    let big = simulate(&cfg(), TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20));
+    )
+    .unwrap();
+    let big = simulate(&cfg(), TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20)).unwrap();
     let penalty = small.cycles as f64 / big.cycles as f64;
     assert!(penalty > 1.5, "256 B vectors must underperform: {penalty:.2}x slower");
 }
@@ -139,11 +142,13 @@ fn vector_size_ablation_matches_sec3c() {
 #[test]
 fn stop_and_go_overhead_is_small_but_real() {
     // Sec. III-C: the dispatch bubble costs a few percent.
-    let with = simulate(&cfg(), TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20));
+    let with =
+        simulate(&cfg(), TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20)).unwrap();
     let mut nc = cfg();
     nc.vima.stop_and_go = false;
     nc.vima.dispatch_gap_cycles = 0;
-    let without = simulate(&nc, TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20));
+    let without =
+        simulate(&nc, TraceParams::new(KernelId::VecSum, Backend::Vima, 6 << 20)).unwrap();
     let overhead = with.cycles as f64 / without.cycles as f64 - 1.0;
     assert!(overhead >= 0.0, "negative overhead {overhead}");
     assert!(overhead < 2.0, "stop-and-go should not dominate: {overhead}");
@@ -154,9 +159,9 @@ fn hive_beats_baseline_but_not_vima_on_reuse() {
     // Fig. 2: HIVE > AVX on streaming; VIMA > HIVE on Stencil (reuse).
     let c = cfg();
     let bytes = 8 << 20;
-    let avx = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Avx, bytes));
-    let hive = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Hive, bytes));
-    let vima = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Vima, bytes));
+    let avx = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Avx, bytes)).unwrap();
+    let hive = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Hive, bytes)).unwrap();
+    let vima = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Vima, bytes)).unwrap();
     assert!(hive.cycles < avx.cycles, "HIVE must beat the baseline");
     assert!(vima.cycles < hive.cycles, "VIMA must beat HIVE on stencil reuse");
 }
@@ -168,7 +173,7 @@ fn bigger_vima_cache_never_hurts_stencil() {
     for kb in [16usize, 64, 256] {
         let mut c = base.clone();
         c.vima.cache_bytes = kb << 10;
-        let r = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Vima, 8 << 20));
+        let r = simulate(&c, TraceParams::new(KernelId::Stencil, Backend::Vima, 8 << 20)).unwrap();
         assert!(
             r.cycles <= prev.saturating_add(prev / 50),
             "{kb}KB hurt: {} vs {prev}",

@@ -32,8 +32,8 @@ fn simulation_is_deterministic() {
     proptest(8, |rng| {
         let p = random_params(rng);
         let cfg = SystemConfig::default();
-        let a = simulate(&cfg, p);
-        let b = simulate(&cfg, p);
+        let a = simulate(&cfg, p).unwrap();
+        let b = simulate(&cfg, p).unwrap();
         assert_eq!(a.cycles, b.cycles, "{p:?}");
         assert_eq!(a.report, b.report, "{p:?}");
     });
@@ -43,7 +43,7 @@ fn simulation_is_deterministic() {
 fn cycles_and_energy_are_positive_and_consistent() {
     proptest(10, |rng| {
         let p = random_params(rng);
-        let r = simulate(&SystemConfig::default(), p);
+        let r = simulate(&SystemConfig::default(), p).unwrap();
         assert!(r.cycles > 0, "{p:?}");
         assert!(r.energy.total_j > 0.0, "{p:?}");
         let sum = r.energy.core_j
@@ -60,7 +60,7 @@ fn cycles_and_energy_are_positive_and_consistent() {
 fn cache_counters_are_coherent() {
     proptest(10, |rng| {
         let p = random_params(rng);
-        let r = simulate(&SystemConfig::default(), p);
+        let r = simulate(&SystemConfig::default(), p).unwrap();
         let g = |k: &str| r.report.get(k).unwrap_or(0.0);
         // hits + misses == accesses at every level
         for lvl in ["l1d", "l2", "llc"] {
@@ -82,9 +82,9 @@ fn thread_slicing_conserves_memory_traffic() {
         let kernel = *rng.pick(&[KernelId::MemCopy, KernelId::VecSum, KernelId::Stencil]);
         let p = TraceParams::new(kernel, Backend::Avx, 4 << 20);
         let cfg = SystemConfig::default();
-        let one = simulate(&cfg, p);
+        let one = simulate(&cfg, p).unwrap();
         let threads = 1 + rng.below(7) as usize;
-        let many = simulate_threads(&cfg, p, threads);
+        let many = simulate_threads(&cfg, p, threads).unwrap();
         let (a, b) = (
             one.report.get("l1d.misses").unwrap_or(0.0),
             many.report.get("l1d.misses").unwrap_or(0.0),
@@ -100,8 +100,8 @@ fn more_threads_never_substantially_hurt() {
     proptest(4, |rng| {
         let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 4 << 20);
         let cfg = SystemConfig::default();
-        let t1 = simulate_threads(&cfg, p, 1);
-        let tn = simulate_threads(&cfg, p, 2 + rng.below(14) as usize);
+        let t1 = simulate_threads(&cfg, p, 1).unwrap();
+        let tn = simulate_threads(&cfg, p, 2 + rng.below(14) as usize).unwrap();
         assert!(tn.cycles <= t1.cycles + t1.cycles / 10);
     });
 }
@@ -182,8 +182,8 @@ fn sampling_extrapolation_scales_cycles() {
     // extrapolated cycles on either backend.
     let cfg = SystemConfig::default();
     for backend in [Backend::Avx, Backend::Vima] {
-        let small = simulate(&cfg, TraceParams::new(KernelId::MatMul, backend, 3 << 20));
-        let big = simulate(&cfg, TraceParams::new(KernelId::MatMul, backend, 6 << 20));
+        let small = simulate(&cfg, TraceParams::new(KernelId::MatMul, backend, 3 << 20)).unwrap();
+        let big = simulate(&cfg, TraceParams::new(KernelId::MatMul, backend, 6 << 20)).unwrap();
         assert!(big.cycles > small.cycles, "{backend}: {} !> {}", big.cycles, small.cycles);
     }
 }

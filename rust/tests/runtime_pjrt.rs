@@ -136,7 +136,7 @@ fn functional_vima_replays_stencil_trace() {
     fx.bcast_value = 0.125;
 
     let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 2 * rows * 8192);
-    for ev in p.stream() {
+    for ev in p.stream().unwrap() {
         if let TraceEvent::Vima(instr) = ev {
             fx.execute(&instr).unwrap();
         }

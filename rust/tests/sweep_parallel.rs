@@ -29,8 +29,8 @@ fn parallel_and_serial_runs_are_bit_identical() {
             plan.push(RunCell::new(w, b));
         }
     }
-    let serial = SweepRunner::new(1).run(&cfg, &plan);
-    let parallel = SweepRunner::new(8).run(&cfg, &plan);
+    let serial = SweepRunner::new(1).run(&cfg, &plan).unwrap();
+    let parallel = SweepRunner::new(8).run(&cfg, &plan).unwrap();
     assert_eq!(serial.len(), parallel.len());
     for ((a, b), cell) in serial.iter().zip(&parallel).zip(plan.cells()) {
         assert_eq!(a.cycles, b.cycles, "{}", cell.label());
@@ -41,8 +41,8 @@ fn parallel_and_serial_runs_are_bit_identical() {
 
 #[test]
 fn figure_tables_identical_serial_vs_parallel() {
-    let a = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 1).fig2();
-    let b = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 4).fig2();
+    let a = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 1).fig2().unwrap();
+    let b = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 4).fig2().unwrap();
     assert_eq!(a.columns, b.columns);
     assert_eq!(a.rows, b.rows);
 }
@@ -54,12 +54,12 @@ fn figure_tables_identical_serial_vs_parallel() {
 #[test]
 fn full_suite_dedup_accounting() {
     let exp = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 0);
-    exp.fig2();
-    exp.fig3();
+    exp.fig2().unwrap();
+    exp.fig3().unwrap();
     let after_fig3 = exp.sweep_stats();
-    exp.fig4();
+    exp.fig4().unwrap();
     let after_fig4 = exp.sweep_stats();
-    exp.fig5();
+    exp.fig5().unwrap();
     let stats = exp.sweep_stats();
 
     // The seed's loops simulated every cell: 27 (fig2) + 42 (fig3) +
@@ -90,6 +90,6 @@ fn full_suite_dedup_accounting() {
     assert_eq!(stats.unique_runs, 61);
 
     // A repeated figure is fully served from the cache.
-    exp.fig3();
+    exp.fig3().unwrap();
     assert_eq!(exp.sweep_stats().unique_runs, stats.unique_runs);
 }

@@ -1,0 +1,190 @@
+//! Integration tests of the open workload API (ISSUE 2): registry
+//! round-trips, typed error paths where the old enum dispatch panicked,
+//! streaming-program equivalence with eager builds, and sweep-cache dedup
+//! across identical custom workloads.
+
+use vima_sim::config::SystemConfig;
+use vima_sim::intrinsics::VimaProgram;
+use vima_sim::isa::TraceEvent;
+use vima_sim::sim::{simulate, simulate_threads};
+use vima_sim::sweep::{RunCell, SweepPlan, SweepRunner};
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+use vima_sim::workload::{self, WorkloadId};
+use vima_sim::prelude::SizedWorkload;
+
+/// register -> resolve -> stream: the full round trip for a user program.
+#[test]
+fn registry_roundtrip_for_custom_program() {
+    let mut p = VimaProgram::new();
+    let vb = p.vector_bytes() as u64;
+    let a = p.alloc(8 * vb);
+    let b = p.alloc(8 * vb);
+    let c = p.alloc(8 * vb);
+    p.vloop(8, |l| l.vim2k_muls(a.walk(vb), b.walk(vb), c.walk(vb)));
+    let footprint = p.footprint();
+    let events = p.events();
+
+    let id = p.register("t-roundtrip").unwrap();
+    assert_eq!(workload::resolve("t-roundtrip").unwrap(), id);
+    assert_eq!(workload::resolve("T-Roundtrip").unwrap(), id, "case-insensitive");
+
+    let params = TraceParams::new(id, Backend::Vima, footprint);
+    let got: Vec<TraceEvent> = params.stream().unwrap().collect();
+    assert_eq!(got.len() as u64, events);
+    // ...and through the simulator, by the same identity.
+    let r = simulate(&SystemConfig::default(), params).unwrap();
+    assert!(r.cycles > 0);
+    assert_eq!(r.report.get("vima.instructions"), Some(8.0));
+}
+
+#[test]
+fn duplicate_registration_is_an_error() {
+    VimaProgram::new().register("t-dup").unwrap();
+    let e = VimaProgram::new().register("T-DUP").unwrap_err().to_string();
+    assert!(e.contains("already registered"), "{e}");
+}
+
+/// The paper kernels resolve through the same registry the CLI uses, and
+/// every supported (kernel, backend) pair still streams.
+#[test]
+fn paper_kernels_stream_through_the_registry() {
+    for name in ["memset", "memcopy", "vecsum", "stencil", "matmul", "knn", "mlp"] {
+        let id = workload::resolve(name).unwrap();
+        let w = workload::get(id).unwrap();
+        for &b in w.backends() {
+            let p = TraceParams::new(id, b, 2 << 20);
+            assert!(
+                p.stream().unwrap().next().is_some(),
+                "{name}/{b} must produce events"
+            );
+        }
+    }
+}
+
+/// Unsupported backends and bad parameters are typed errors end to end
+/// (params, simulate, sweep) — the old dispatch panicked.
+#[test]
+fn error_paths_are_typed_not_panics() {
+    let cfg = SystemConfig::default();
+
+    // HIVE gap on a paper kernel.
+    let p = TraceParams::new(KernelId::Mlp, Backend::Hive, 4 << 20);
+    assert!(p.check().is_err());
+    let e = simulate(&cfg, p).unwrap_err().to_string();
+    assert!(e.contains("HIVE") && e.contains("MLP"), "{e}");
+
+    // Programs have no HIVE lowering either.
+    let saxpy = workload::resolve("saxpy").unwrap();
+    let fp = workload::get(saxpy).unwrap().default_footprint();
+    let e = simulate(&cfg, TraceParams::new(saxpy, Backend::Hive, fp))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("HIVE"), "{e}");
+
+    // A bad footprint for a fixed-structure program workload.
+    let e = simulate(&cfg, TraceParams::new(saxpy, Backend::Vima, fp + 1))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("footprint"), "{e}");
+
+    // A sweep containing a bad cell fails fast with context.
+    let mut plan = SweepPlan::new();
+    plan.push(RunCell::new(
+        SizedWorkload { workload: KernelId::Knn.into(), footprint: 4 << 20, size_label: "x" },
+        Backend::Hive,
+    ));
+    let e = SweepRunner::new(1).run(&cfg, &plan).unwrap_err().to_string();
+    assert!(e.contains("sweep cell") && e.contains("HIVE"), "{e}");
+}
+
+/// A streamed program (lazy chunker) is event-for-event identical to the
+/// eager `build()` expansion — the old eager-vector behavior is a special
+/// case of the new streaming DSL.
+#[test]
+fn streaming_program_equals_eager_build() {
+    let build_one = || {
+        let mut p = VimaProgram::new();
+        let vb = p.vector_bytes() as u64;
+        let acc = p.alloc(vb);
+        let data = p.alloc(32 * vb);
+        p.vim2k_sets(acc);
+        p.vloop(32, |l| {
+            l.vim2k_adds(data.walk(vb), acc, acc);
+            l.vim2k_dots(data.walk(vb), acc);
+        });
+        p.host_load(acc, 8);
+        p
+    };
+    let eager: Vec<TraceEvent> = build_one().build();
+    let streamed: Vec<TraceEvent> =
+        build_one().stream_for(Backend::Vima).unwrap().collect();
+    assert_eq!(eager, streamed);
+
+    // The simulator sees identical results from either form.
+    let cfg = SystemConfig::default();
+    let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+    let a = m.run(vec![build_one().into_stream()]);
+    let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+    let b = m.run(vec![build_one().into_stream()]);
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.report, b.report);
+}
+
+/// Identical custom-workload cells hit the sweep result cache — workload
+/// identity (TraceParams: Eq + Hash) keys the cache directly.
+#[test]
+fn sweep_cache_dedups_identical_custom_workloads() {
+    let mut prog = VimaProgram::new();
+    let vb = prog.vector_bytes() as u64;
+    let a = prog.alloc(16 * vb);
+    let b = prog.alloc(16 * vb);
+    prog.vloop(16, |l| l.vim2k_movs(a.walk(vb), b.walk(vb)));
+    let id = prog.register("t-dedup").unwrap();
+
+    let w = SizedWorkload::custom("t-dedup").unwrap();
+    assert_eq!(w.workload, id);
+
+    let cfg = SystemConfig::default();
+    let runner = SweepRunner::new(2);
+    let mut plan = SweepPlan::new();
+    let first = plan.push(RunCell::new(w, Backend::Vima));
+    let dup = plan.push(RunCell::new(w, Backend::Vima));
+    let avx = plan.push(RunCell::new(w, Backend::Avx));
+    let res = runner.run(&cfg, &plan).unwrap();
+
+    assert_eq!(res[first].cycles, res[dup].cycles);
+    assert_ne!(res[first].cycles, res[avx].cycles, "backends must differ");
+    let stats = runner.stats();
+    assert_eq!(stats.cells, 3);
+    assert_eq!(stats.unique_runs, 2, "identical custom cells simulate once");
+    assert_eq!(stats.cache_hits, 1);
+
+    // A second plan over the same workload is served entirely from cache.
+    runner.run(&cfg, &plan).unwrap();
+    assert_eq!(runner.stats().unique_runs, 2);
+}
+
+/// The shipped example programs run data-parallel and keep their trace
+/// volume under thread slicing.
+#[test]
+fn builtin_programs_run_multithreaded() {
+    let cfg = SystemConfig::default();
+    let saxpy = workload::resolve("saxpy").unwrap();
+    let fp = workload::get(saxpy).unwrap().default_footprint();
+    let p = TraceParams::new(saxpy, Backend::Vima, fp);
+    let t1 = simulate_threads(&cfg, p, 1).unwrap();
+    let t2 = simulate_threads(&cfg, p, 2).unwrap();
+    let instrs = |r: &vima_sim::sim::SimResult| r.report.get("vima.instructions").unwrap();
+    assert_eq!(instrs(&t1), instrs(&t2), "slicing must conserve instructions");
+    assert!(t2.cycles > 0);
+}
+
+/// WorkloadId/KernelId interop: the paper kernels keep their identity.
+#[test]
+fn kernel_ids_convert_to_workload_ids() {
+    let id: WorkloadId = KernelId::Stencil.into();
+    assert_eq!(workload::name(id), "Stencil");
+    let a = TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20);
+    let b = TraceParams::new(id, Backend::Vima, 1 << 20);
+    assert_eq!(a, b);
+}
