@@ -161,9 +161,12 @@ impl VimaDevice {
     }
 
     /// Host-coherence invalidation of one vector (processor wrote to it).
+    /// Writes back the resident line's actual touched size — partial
+    /// vectors and small-vector (ablation) instructions on a large-vector
+    /// device must not bill a full `cfg.vector_bytes` of DRAM traffic.
     pub fn invalidate(&mut self, base: u64, at: u64, mem: &mut Mem3D) {
-        if self.vcache.invalidate(base) {
-            self.writeback_vector(base, self.cfg.vector_bytes as u32, at, mem);
+        if let Some(bytes) = self.vcache.invalidate(base) {
+            self.writeback_vector(base, bytes, at, mem);
         }
     }
 
@@ -172,7 +175,7 @@ impl VimaDevice {
     pub fn drain(&mut self, at: u64, mem: &mut Mem3D) -> u64 {
         for (base, bytes) in self.vcache.dirty_lines() {
             self.writeback_vector(base, bytes, at, mem);
-            self.vcache.invalidate(base);
+            let _ = self.vcache.invalidate(base);
         }
         mem.drained_at().max(at)
     }
@@ -320,5 +323,19 @@ mod tests {
         let w = mem.stats.vima_writes;
         v.invalidate(0x4000, t, &mut mem);
         assert!(mem.stats.vima_writes > w);
+    }
+
+    #[test]
+    fn invalidate_writes_back_resident_size_not_config_size() {
+        // Regression (vector-size ablation): a 256 B instruction on a
+        // default 8 KB-vector device leaves a dirty line whose touched size
+        // is 256 B. Host invalidation owes 4 x 64 B sub-request
+        // write-backs — the old code billed cfg.vector_bytes (128 of them).
+        let (mut v, mut mem) = setup();
+        let instr = VimaInstr::new(VimaOp::Add, VDtype::F32, &[0x0, 0x2000], Some(0x4000), 256);
+        let t = v.execute(&instr, 0, &mut mem);
+        let w = mem.stats.vima_writes;
+        v.invalidate(0x4000, t, &mut mem);
+        assert_eq!(mem.stats.vima_writes - w, 4, "256 B = 4 x 64 B write-backs");
     }
 }

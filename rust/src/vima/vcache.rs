@@ -116,18 +116,19 @@ impl VCache {
     }
 
     /// Host-coherence hook (Sec. III-D): on a processor write to a cached
-    /// vector, VIMA writes the line back and invalidates it. Returns whether
-    /// the line was present and dirty.
-    pub fn invalidate(&mut self, addr: u64) -> bool {
+    /// vector, VIMA writes the line back and invalidates it. Returns the
+    /// touched size of the dropped line if it was present **and dirty** —
+    /// exactly the bytes the caller owes DRAM — and `None` otherwise.
+    pub fn invalidate(&mut self, addr: u64) -> Option<u32> {
         let tag = self.tag(addr);
         for l in &mut self.lines {
             if l.0 == tag {
-                let was_dirty = l.1;
+                let (was_dirty, bytes) = (l.1, l.3);
                 *l = (INVALID, false, 0, 0);
-                return was_dirty;
+                return was_dirty.then_some(bytes);
             }
         }
-        false
+        None
     }
 
     /// All dirty vector (base address, touched bytes) pairs (end-of-run drain).
@@ -212,12 +213,25 @@ mod tests {
     }
 
     #[test]
-    fn invalidate_reports_dirty() {
+    fn invalidate_reports_dirty_bytes() {
         let mut c = VCache::new(4, 8192);
         c.insert(0x2000, true);
-        assert!(c.invalidate(0x2000));
-        assert!(!c.invalidate(0x2000));
+        assert_eq!(c.invalidate(0x2000), Some(8192));
+        assert_eq!(c.invalidate(0x2000), None);
         assert_eq!(c.occupancy(), 0);
+        // Clean lines drop silently — nothing to write back.
+        c.insert(0x4000, false);
+        assert_eq!(c.invalidate(0x4000), None);
+        assert_eq!(c.occupancy(), 0);
+    }
+
+    #[test]
+    fn invalidate_reports_touched_size_of_partial_line() {
+        // A partial vector (e.g. a 724-float MatMul row) occupies a full
+        // line but only its touched bytes are owed on write-back.
+        let mut c = VCache::new(4, 8192);
+        c.insert_sized(0x2000, true, 724 * 4);
+        assert_eq!(c.invalidate(0x2000), Some(724 * 4));
     }
 
     #[test]
