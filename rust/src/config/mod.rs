@@ -565,6 +565,12 @@ impl SystemConfig {
         ensure!(self.mem.vaults.is_power_of_two(), "vault count must be 2^n");
         ensure!(self.mem.banks_per_vault.is_power_of_two(), "bank count must be 2^n");
         ensure!(
+            self.mem.row_buffer_bytes % 64 == 0
+                && (self.mem.row_buffer_bytes / 64).is_power_of_two(),
+            "row buffer ({} B) must hold a power-of-two count of 64 B lines",
+            self.mem.row_buffer_bytes
+        );
+        ensure!(
             self.vima.vector_bytes % self.mem.line_bytes() == 0,
             "VIMA vector must be a multiple of the 64 B sub-request granularity"
         );

@@ -61,12 +61,23 @@ pub struct Mem3D {
     /// Precomputed CPU-cycle latencies.
     lat_access: u64,
     lat_cas: u64,
+    lat_cas_write: u64,
     lat_row_miss: u64,
+    lat_row_miss_write: u64,
     lat_bank_busy: u64,
     lat_cmd: u64,
     lat_data_burst: u64,
     lat_write: u64,
     link_halfcycles_per_line: u64,
+    /// Precomputed [`map`](Self::map) geometry — the mapping runs once per
+    /// 64 B sub-request, the hottest DRAM-side path.
+    vault_mask: usize,
+    vault_shift: u32,
+    bank_mask: usize,
+    /// Row-index shift for [`map`](Self::map): line bits consumed by the
+    /// vault index, the bank index, and the lines-per-row offset (derived
+    /// from `row_buffer_bytes`, not hardcoded).
+    row_shift: u32,
     pub stats: MemStats,
 }
 
@@ -76,6 +87,15 @@ impl Mem3D {
         // 64 B line over an 8 B-wide internal bank bus (one flit per DRAM cycle).
         let data_burst_dram = (64 / 8) as u64;
         let link_cyc = cfg.link_cycles_per_line(cpu_ghz);
+        let lines_per_row = (cfg.row_buffer_bytes / 64).max(1);
+        assert!(
+            cfg.row_buffer_bytes % 64 == 0 && lines_per_row.is_power_of_two(),
+            "row buffer ({} B) must hold a power-of-two count of 64 B lines",
+            cfg.row_buffer_bytes
+        );
+        let row_shift = cfg.vaults.trailing_zeros()
+            + cfg.banks_per_vault.trailing_zeros()
+            + lines_per_row.trailing_zeros();
         Self {
             bank_free: vec![0; n_banks],
             bank_open_row: vec![u64::MAX; n_banks],
@@ -85,12 +105,18 @@ impl Mem3D {
             link_from_mem_free_x2: 0,
             lat_access: cfg.dram_to_cpu(cfg.access_dram_cycles(), cpu_ghz),
             lat_cas: cfg.dram_to_cpu(cfg.t_cas, cpu_ghz),
+            lat_cas_write: cfg.dram_to_cpu(cfg.t_cwd, cpu_ghz),
             lat_row_miss: cfg.dram_to_cpu(cfg.t_rp + cfg.t_rcd + cfg.t_cas, cpu_ghz),
+            lat_row_miss_write: cfg.dram_to_cpu(cfg.t_rp + cfg.t_rcd + cfg.t_cwd, cpu_ghz),
             lat_bank_busy: cfg.dram_to_cpu(cfg.bank_busy_dram_cycles(), cpu_ghz),
             lat_cmd: cfg.dram_to_cpu(1, cpu_ghz).max(1),
             lat_data_burst: cfg.dram_to_cpu(data_burst_dram, cpu_ghz),
             lat_write: cfg.dram_to_cpu(cfg.t_cwd + cfg.t_rcd, cpu_ghz),
             link_halfcycles_per_line: (link_cyc * 2.0).ceil() as u64,
+            vault_mask: cfg.vaults - 1,
+            vault_shift: cfg.vaults.trailing_zeros(),
+            bank_mask: cfg.banks_per_vault - 1,
+            row_shift,
             cfg: cfg.clone(),
             stats: MemStats::default(),
         }
@@ -116,10 +142,9 @@ impl Mem3D {
     pub fn map(&self, addr: u64) -> (usize, usize, u64) {
         let line = addr >> 6;
         let mix = line ^ (line >> 5) ^ (line >> 10) ^ (line >> 15) ^ (line >> 20) ^ (line >> 25);
-        let vault = (mix as usize) & (self.cfg.vaults - 1);
-        let line_in_vault = mix >> self.cfg.vaults.trailing_zeros();
-        let bank = (line_in_vault as usize) & (self.cfg.banks_per_vault - 1);
-        let row = line >> (self.cfg.vaults.trailing_zeros() + self.cfg.banks_per_vault.trailing_zeros() + 2);
+        let vault = (mix as usize) & self.vault_mask;
+        let bank = ((mix >> self.vault_shift) as usize) & self.bank_mask;
+        let row = line >> self.row_shift;
         (vault, bank, row)
     }
 
@@ -135,13 +160,19 @@ impl Mem3D {
 
         let bank_start = cmd_start.max(self.bank_free[bank_idx]);
         let (busy, access) = if self.cfg.open_row {
-            // Open-row ablation: a row-buffer hit pays CAS only; a miss pays
-            // precharge + activate + column and keeps the row open.
+            // Open-row ablation: a row-buffer hit pays the column latency
+            // only; a miss pays precharge + activate + column and keeps the
+            // row open. Writes use the write column delay (CWD), not CAS.
+            let (hit, miss) = if is_write {
+                (self.lat_cas_write, self.lat_row_miss_write)
+            } else {
+                (self.lat_cas, self.lat_row_miss)
+            };
             if self.bank_open_row[bank_idx] == row {
-                (self.lat_cas, self.lat_cas)
+                (hit, hit)
             } else {
                 self.bank_open_row[bank_idx] = row;
-                (self.lat_row_miss, self.lat_row_miss)
+                (miss, miss)
             }
         } else {
             // Table I: closed-row policy — every access activates; the bank
@@ -370,6 +401,39 @@ mod tests {
             t_closed = closed.vima_access(0, false, t_closed).done;
         }
         assert!(t_open < t_closed, "open-row must win on locality: {t_open} vs {t_closed}");
+    }
+
+    #[test]
+    fn open_row_write_uses_write_timing() {
+        let mut cfg = Mem3DConfig::default();
+        cfg.open_row = true;
+        let mut mw = Mem3D::new(&cfg, 2.0);
+        let mut mr = Mem3D::new(&cfg, 2.0);
+        // Open the row, then time a row-hit write vs a row-hit read on
+        // identical devices: CWD (7 DRAM cycles) < CAS (9), so the write
+        // must complete strictly earlier. The old code charged CAS to both.
+        mw.vima_access(0, false, 0);
+        mr.vima_access(0, false, 0);
+        let w = mw.vima_access(0, true, 1000).done;
+        let r = mr.vima_access(0, false, 1000).done;
+        assert!(w < r, "row-hit write (t_cwd) must beat row-hit read (t_cas): {w} vs {r}");
+    }
+
+    #[test]
+    fn row_shift_derives_from_row_buffer_size() {
+        // Default 256 B rows = 4 lines/row: row bits start after
+        // 6 (line) + 5 (vault) + 3 (bank) + 2 (lines-per-row) address bits.
+        let m = mem();
+        assert_eq!(m.map(1 << (6 + 5 + 3 + 2)).2, 1);
+        assert_eq!(m.map((1 << (6 + 5 + 3 + 2)) - 64).2, 0);
+        // 512 B rows = 8 lines/row: one more line bit before the row bits
+        // (the old code hardcoded the 256 B case for every configuration).
+        let mut cfg = Mem3DConfig::default();
+        cfg.row_buffer_bytes = 512;
+        let m = Mem3D::new(&cfg, 2.0);
+        assert_eq!(m.row_shift, 5 + 3 + 3);
+        assert_eq!(m.map(1 << (6 + 5 + 3 + 3)).2, 1);
+        assert_eq!(m.map((1 << (6 + 5 + 3 + 3)) - 64).2, 0);
     }
 
     #[test]
