@@ -79,7 +79,7 @@ fn main() {
                 Some(base + 0x4000),
                 8192,
             );
-            t = v.execute(&instr, t, &mut m);
+            t = v.execute(&instr, t, &mut m).unwrap();
         }
         t
     });

@@ -182,9 +182,9 @@ fn main() -> Result<()> {
             };
             let p = TraceParams::new(id, Backend::Avx, footprint);
             let mut m = vima_sim::sim::Machine::new(&cfg, 1);
-            let native = m.run(vec![p.stream()?]);
+            let native = m.run(vec![p.stream()?])?;
             let mut m = vima_sim::sim::Machine::new(&cfg, 1);
-            let auto = m.run(vec![vima_sim::transpile::transpile(p.stream()?)]);
+            let auto = m.run(vec![vima_sim::transpile::transpile(p.stream()?)])?;
             let hand = simulate_threads(
                 &cfg,
                 TraceParams::new(id, Backend::Vima, footprint),

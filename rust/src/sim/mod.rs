@@ -99,8 +99,8 @@ impl Machine {
     }
 
     /// Process one trace event on core `c`. Returns the core-local time.
-    fn step(&mut self, c: usize, ev: &TraceEvent) -> u64 {
-        match ev {
+    fn step(&mut self, c: usize, ev: &TraceEvent) -> Result<u64> {
+        Ok(match ev {
             TraceEvent::Uop(u) => self.cores[c].run_uop(u, &mut self.mem),
             TraceEvent::Vima(v) => {
                 // Stop-and-go dispatch (Sec. III-C): the VIMA instruction
@@ -117,7 +117,7 @@ impl Machine {
                     let (s, _) = self.mem.flush_range(d, v.vector_bytes as usize, t);
                     settle = settle.max(s);
                 }
-                let done = self.vima.execute(v, settle, &mut self.mem.mem);
+                let done = self.vima.execute(v, settle, &mut self.mem.mem)?;
                 if self.cfg.vima.stop_and_go {
                     // Wait for the completion signal + dispatch gap.
                     self.cores[c].serialize_until(done + self.cfg.vima.dispatch_gap_cycles);
@@ -133,11 +133,11 @@ impl Machine {
                 self.hive.execute(h, t, &mut self.mem.mem);
                 t
             }
-        }
+        })
     }
 
     /// Run one trace stream per thread to completion.
-    pub fn run(&mut self, traces: Vec<TraceStream>) -> SimResult {
+    pub fn run(&mut self, traces: Vec<TraceStream>) -> Result<SimResult> {
         RUN_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
         assert_eq!(traces.len(), self.cores.len(), "one trace per core");
         let mut streams: Vec<_> = traces.into_iter().map(Some).collect();
@@ -153,7 +153,7 @@ impl Machine {
                 !buf.is_empty()
             } {
                 for ev in &buf {
-                    self.step(0, ev);
+                    self.step(0, ev)?;
                 }
             }
             done[0] = true;
@@ -184,7 +184,7 @@ impl Machine {
                 while self.cores[c].now() <= limit {
                     match stream.next() {
                         Some(ev) => {
-                            self.step(c, &ev);
+                            self.step(c, &ev)?;
                         }
                         None => {
                             done[c] = true;
@@ -212,7 +212,14 @@ impl Machine {
             );
         }
         let cycles_raw = core_end.max(vima_end).max(hive_end).max(self.mem.mem.drained_at());
-        let cycles = (cycles_raw as f64 * self.scale) as u64;
+        // Extrapolate through f64 only when a sampling scale is set, and
+        // round instead of truncating: `as u64` floors, which past 2^53 (or
+        // with any fractional scale) biases every scaled run downward.
+        let cycles = if self.scale == 1.0 {
+            cycles_raw
+        } else {
+            (cycles_raw as f64 * self.scale).round() as u64
+        };
 
         let mut report = StatsReport::new();
         for core in &self.cores {
@@ -232,7 +239,7 @@ impl Machine {
 
         let energy = EnergyModel::new(&self.cfg).compute(&report, cycles, self.cores.len());
         let seconds = cycles as f64 / (self.cfg.core.freq_ghz * 1e9);
-        SimResult { cycles, seconds, energy, report }
+        Ok(SimResult { cycles, seconds, energy, report })
     }
 
     /// Reset every component for a fresh run with the same configuration.
@@ -292,7 +299,7 @@ pub fn run_on(machine: &mut Machine, params: TraceParams) -> Result<SimResult> {
     let traces = (0..params.threads)
         .map(|t| params.with_threads(t, params.threads).stream())
         .collect::<Result<Vec<_>>>()?;
-    Ok(machine.run(traces))
+    machine.run(traces)
 }
 
 #[cfg(test)]

@@ -48,10 +48,24 @@ impl StatsReport {
         }
     }
 
-    /// Merge another report into this one, summing overlapping keys.
+    /// Timestamp gauges — "when did this component go idle" values. Unlike
+    /// event counters they must combine by `max`: summing two reports'
+    /// `sim.cycles` or `vima.busy_until` produces a point in time that
+    /// never existed. `sim.scale` is a per-run factor, also not summable.
+    fn is_timestamp_gauge(key: &str) -> bool {
+        key == "sim.cycles" || key == "sim.scale" || key.ends_with(".busy_until")
+    }
+
+    /// Merge another report into this one: event counters sum, timestamp
+    /// gauges (`is_timestamp_gauge`) take the max.
     pub fn merge(&mut self, other: &StatsReport) {
         for (k, v) in &other.entries {
-            self.add(k.clone(), *v);
+            if Self::is_timestamp_gauge(k) {
+                let e = self.entries.entry(k.clone()).or_insert(*v);
+                *e = e.max(*v);
+            } else {
+                self.add(k.clone(), *v);
+            }
         }
     }
 
@@ -168,6 +182,24 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.get("l1d.hits"), Some(15.0));
         assert_eq!(a.with_prefix("l1d.").count(), 2);
+    }
+
+    #[test]
+    fn merge_takes_max_of_timestamp_gauges() {
+        let mut a = StatsReport::new();
+        a.set("sim.cycles", 100.0);
+        a.set("vima.busy_until", 90.0);
+        a.set("core.uops", 10.0);
+        let mut b = StatsReport::new();
+        b.set("sim.cycles", 80.0);
+        b.set("vima.busy_until", 95.0);
+        b.set("hive.busy_until", 40.0);
+        b.set("core.uops", 5.0);
+        a.merge(&b);
+        assert_eq!(a.get("sim.cycles"), Some(100.0), "gauges combine by max");
+        assert_eq!(a.get("vima.busy_until"), Some(95.0));
+        assert_eq!(a.get("hive.busy_until"), Some(40.0), "missing keys adopt the other side");
+        assert_eq!(a.get("core.uops"), Some(15.0), "counters still sum");
     }
 
     #[test]

@@ -331,11 +331,11 @@ mod tests {
         let vima = TraceParams::new(KernelId::VecSum, Backend::Vima, footprint);
 
         let mut m = Machine::new(&cfg, 1);
-        let base = m.run(vec![avx.stream().unwrap()]);
+        let base = m.run(vec![avx.stream().unwrap()]).unwrap();
         let mut m = Machine::new(&cfg, 1);
-        let auto = m.run(vec![transpile(avx.stream().unwrap())]);
+        let auto = m.run(vec![transpile(avx.stream().unwrap())]).unwrap();
         let mut m = Machine::new(&cfg, 1);
-        let hand = m.run(vec![vima.stream().unwrap()]);
+        let hand = m.run(vec![vima.stream().unwrap()]).unwrap();
 
         let auto_speedup = base.cycles as f64 / auto.cycles as f64;
         let hand_speedup = base.cycles as f64 / hand.cycles as f64;

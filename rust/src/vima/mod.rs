@@ -25,6 +25,7 @@ use crate::config::VimaConfig;
 use crate::isa::{VDtype, VimaFuKind, VimaInstr};
 use crate::mem3d::Mem3D;
 use crate::stats::StatsReport;
+use crate::util::error::Result;
 
 #[derive(Debug, Default, Clone)]
 pub struct VimaStats {
@@ -113,10 +114,16 @@ impl VimaDevice {
 
     /// Execute one VIMA instruction dispatched by the processor at
     /// `dispatch`. Returns the cycle the completion signal reaches the CPU.
-    pub fn execute(&mut self, instr: &VimaInstr, dispatch: u64, mem: &mut Mem3D) -> u64 {
-        debug_assert!(
+    ///
+    /// An instruction whose vector exceeds the configured device vector is
+    /// a typed error — it used to be a `debug_assert!` that release builds
+    /// silently waved through, yielding nonsense timing.
+    pub fn execute(&mut self, instr: &VimaInstr, dispatch: u64, mem: &mut Mem3D) -> Result<u64> {
+        crate::ensure!(
             instr.vector_bytes as usize <= self.cfg.vector_bytes,
-            "trace vector larger than configured VIMA vector"
+            "VIMA instruction vector ({} B) exceeds the configured device vector ({} B)",
+            instr.vector_bytes,
+            self.cfg.vector_bytes
         );
         self.stats.instructions += 1;
         let arrive = dispatch + self.inst_lat;
@@ -157,7 +164,7 @@ impl VimaDevice {
         }
 
         // 4. Status signal back to the processor.
-        done + self.inst_lat
+        Ok(done + self.inst_lat)
     }
 
     /// Host-coherence invalidation of one vector (processor wrote to it).
@@ -219,7 +226,7 @@ mod tests {
     #[test]
     fn cold_instruction_pays_fetch_plus_compute() {
         let (mut v, mut mem) = setup();
-        let done = v.execute(&add_instr(0x0000, 0x4000, 0x8000), 0, &mut mem);
+        let done = v.execute(&add_instr(0x0000, 0x4000, 0x8000), 0, &mut mem).unwrap();
         // fetch (~60-150 cycles for 128 parallel subreqs) + compute (~28).
         assert!(done > 50 && done < 400, "cold add latency {done}");
         assert_eq!(v.vcache.misses, 2);
@@ -229,10 +236,10 @@ mod tests {
     #[test]
     fn cache_hit_skips_dram() {
         let (mut v, mut mem) = setup();
-        let t1 = v.execute(&add_instr(0x0000, 0x4000, 0x8000), 0, &mut mem);
+        let t1 = v.execute(&add_instr(0x0000, 0x4000, 0x8000), 0, &mut mem).unwrap();
         let reads = mem.stats.vima_reads;
         // Same operands again: both hit, no new DRAM reads.
-        let t2 = v.execute(&add_instr(0x0000, 0x4000, 0xA000), t1, &mut mem);
+        let t2 = v.execute(&add_instr(0x0000, 0x4000, 0xA000), t1, &mut mem).unwrap();
         assert_eq!(mem.stats.vima_reads, reads);
         assert!(t2 - t1 < 60, "hit latency {}", t2 - t1);
     }
@@ -241,9 +248,9 @@ mod tests {
     fn result_reuse_hits_fill_buffer_line() {
         let (mut v, mut mem) = setup();
         // c = a + b; d = c + a -> c must hit (it was filled by instr 1).
-        let t1 = v.execute(&add_instr(0x0000, 0x2000, 0x4000), 0, &mut mem);
+        let t1 = v.execute(&add_instr(0x0000, 0x2000, 0x4000), 0, &mut mem).unwrap();
         let reads = mem.stats.vima_reads;
-        v.execute(&add_instr(0x4000, 0x0000, 0x6000), t1, &mut mem);
+        v.execute(&add_instr(0x4000, 0x0000, 0x6000), t1, &mut mem).unwrap();
         assert_eq!(mem.stats.vima_reads, reads, "result vector should be cache-resident");
     }
 
@@ -254,7 +261,7 @@ mod tests {
         // 20 distinct adds: 40 source vectors + 20 results >> 8 lines.
         for i in 0..20u64 {
             let base = i * 0x6000;
-            t = v.execute(&add_instr(base, base + 0x2000, base + 0x4000), t, &mut mem);
+            t = v.execute(&add_instr(base, base + 0x2000, base + 0x4000), t, &mut mem).unwrap();
         }
         assert!(v.vcache.dirty_evictions > 0, "results must evict as dirty");
         assert!(mem.stats.vima_writes > 0);
@@ -264,7 +271,7 @@ mod tests {
     fn dot_writes_no_vector() {
         let (mut v, mut mem) = setup();
         let i = VimaInstr::new(VimaOp::Dot, VDtype::F32, &[0x0, 0x2000], None, 8192);
-        v.execute(&i, 0, &mut mem);
+        v.execute(&i, 0, &mut mem).unwrap();
         assert_eq!(v.vcache.dirty_lines().len(), 0);
     }
 
@@ -272,7 +279,7 @@ mod tests {
     fn bcast_needs_no_fetch() {
         let (mut v, mut mem) = setup();
         let i = VimaInstr::new(VimaOp::Bcast, VDtype::I32, &[], Some(0x2000), 8192);
-        let done = v.execute(&i, 0, &mut mem);
+        let done = v.execute(&i, 0, &mut mem).unwrap();
         assert_eq!(mem.stats.vima_reads, 0);
         assert!(done < 50, "memset instr is compute-only: {done}");
         assert_eq!(v.vcache.dirty_lines(), vec![(0x2000, 8192)]);
@@ -284,8 +291,8 @@ mod tests {
         let (mut v2, mut m2) = setup();
         let add = VimaInstr::new(VimaOp::Add, VDtype::I32, &[0x0, 0x2000], Some(0x4000), 8192);
         let div = VimaInstr::new(VimaOp::Div, VDtype::F32, &[0x0, 0x2000], Some(0x4000), 8192);
-        let t_add = v1.execute(&add, 0, &mut m1);
-        let t_div = v2.execute(&div, 0, &mut m2);
+        let t_add = v1.execute(&add, 0, &mut m1).unwrap();
+        let t_div = v2.execute(&div, 0, &mut m2).unwrap();
         assert!(t_div > t_add, "div {t_div} vs add {t_add}");
     }
 
@@ -300,7 +307,7 @@ mod tests {
         for i in 0..32u64 {
             let instr =
                 VimaInstr::new(VimaOp::Add, VDtype::F32, &[i * 256, 0x20000 + i * 256], Some(0x40000 + i * 256), 256);
-            t = v.execute(&instr, t, &mut mem);
+            t = v.execute(&instr, t, &mut mem).unwrap();
         }
         // ...but serially: much slower than the ~150-cycle 8 KB instruction.
         assert!(t > 400, "256 B vectors must underuse the memory: {t}");
@@ -309,7 +316,7 @@ mod tests {
     #[test]
     fn drain_writes_back_dirty() {
         let (mut v, mut mem) = setup();
-        let t = v.execute(&add_instr(0x0, 0x2000, 0x4000), 0, &mut mem);
+        let t = v.execute(&add_instr(0x0, 0x2000, 0x4000), 0, &mut mem).unwrap();
         let w_before = mem.stats.vima_writes;
         v.drain(t, &mut mem);
         assert!(mem.stats.vima_writes > w_before);
@@ -319,10 +326,21 @@ mod tests {
     #[test]
     fn host_invalidate_forces_writeback() {
         let (mut v, mut mem) = setup();
-        let t = v.execute(&add_instr(0x0, 0x2000, 0x4000), 0, &mut mem);
+        let t = v.execute(&add_instr(0x0, 0x2000, 0x4000), 0, &mut mem).unwrap();
         let w = mem.stats.vima_writes;
         v.invalidate(0x4000, t, &mut mem);
         assert!(mem.stats.vima_writes > w);
+    }
+
+    #[test]
+    fn oversized_vector_is_a_typed_error() {
+        // Used to be a debug_assert! — release builds simulated the
+        // impossible instruction with a straight face.
+        let (mut v, mut mem) = setup();
+        let i = VimaInstr::new(VimaOp::Add, VDtype::F32, &[0x0, 0x4000], Some(0x8000), 16384);
+        let e = v.execute(&i, 0, &mut mem).unwrap_err().to_string();
+        assert!(e.contains("16384") && e.contains("8192"), "{e}");
+        assert_eq!(v.stats.instructions, 0, "rejected instructions must not count");
     }
 
     #[test]
@@ -333,7 +351,7 @@ mod tests {
         // write-backs — the old code billed cfg.vector_bytes (128 of them).
         let (mut v, mut mem) = setup();
         let instr = VimaInstr::new(VimaOp::Add, VDtype::F32, &[0x0, 0x2000], Some(0x4000), 256);
-        let t = v.execute(&instr, 0, &mut mem);
+        let t = v.execute(&instr, 0, &mut mem).unwrap();
         let w = mem.stats.vima_writes;
         v.invalidate(0x4000, t, &mut mem);
         assert_eq!(mem.stats.vima_writes - w, 4, "256 B = 4 x 64 B write-backs");

@@ -99,6 +99,6 @@ fn intrinsics_programs_run_per_thread() {
         }
         progs.push(p.into_stream());
     }
-    let r = machine.run(progs);
+    let r = machine.run(progs).unwrap();
     assert_eq!(r.report.get("vima.instructions"), Some(2.0 * (2.0 + 8.0)));
 }
