@@ -386,6 +386,22 @@ mod tests {
     }
 
     #[test]
+    fn loop_branches_predict_well_on_every_backend() {
+        // Every backend's generator emits the same taken..taken,not-taken
+        // loop shape, so the two-level predictor must be near perfect on
+        // all of them — the HIVE streams used to skip the loop-exit branch
+        // entirely, silently flattering their front-end accounting.
+        let c = cfg();
+        for backend in [Backend::Avx, Backend::Vima, Backend::Hive] {
+            let r = simulate(&c, TraceParams::new(KernelId::MemSet, backend, 4 << 20)).unwrap();
+            let branches = r.report.get("core.branches").unwrap();
+            let mis = r.report.get("core.mispredicts").unwrap();
+            assert!(branches > 0.0, "{backend}: no branches simulated");
+            assert!(mis * 20.0 < branches, "{backend}: {mis}/{branches} mispredicts");
+        }
+    }
+
+    #[test]
     fn hive_runs_and_drains() {
         let c = cfg();
         let r = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Hive, 1 << 20)).unwrap();

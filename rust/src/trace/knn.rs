@@ -183,7 +183,13 @@ impl TraceChunker for KnnVima {
         buf.push(VimaInstr::new(VimaOp::Bcast, VDtype::F32, &[], Some(tb), vb).into());
         buf.push(VimaInstr::new(VimaOp::Sub, VDtype::F32, &[col, tb], Some(d), vb).into());
         buf.push(VimaInstr::new(VimaOp::Fma, VDtype::F32, &[d, d, acc], Some(acc), vb).into());
-        emit::loop_ctl(buf, 0xAC0, 16, true);
+        // Loop-exit branch accounting must mirror the AVX generator: the
+        // feature loop's branch falls through exactly once, at the last
+        // feature of the last chunk of the last test instance.
+        let last = self.feat + 1 >= self.f
+            && self.chunk + 1 >= self.chunks
+            && self.test + 1 >= self.end_test;
+        emit::loop_ctl(buf, 0xAC0, 16, !last);
 
         self.feat += 1;
         if self.feat >= self.f {
@@ -245,6 +251,24 @@ mod tests {
         // acc zeroed once per (test, chunk); FMA once per feature
         assert_eq!(acc_writes, SIM_TESTS * 16);
         assert_eq!(fmas, SIM_TESTS * 16 * 32);
+    }
+
+    #[test]
+    fn vima_feature_loop_branch_exits_exactly_once() {
+        // Branch accounting parity with the AVX generator: the feature
+        // loop's branch (pc 0xAC4; the 0xA90 scan branches are
+        // data-dependent) falls through exactly once, at the end of the
+        // stream's last feature loop (it used to emit taken=true forever).
+        let p = TraceParams::new(KernelId::Knn, Backend::Vima, 4 << 20);
+        let exits = p
+            .stream()
+            .unwrap()
+            .filter(|e| {
+                matches!(e, TraceEvent::Uop(u)
+                    if u.fu == FuType::Branch && u.pc == 0xAC4 && !u.taken)
+            })
+            .count();
+        assert_eq!(exits, 1);
     }
 
     #[test]

@@ -147,7 +147,13 @@ impl TraceChunker for MlpVima {
         buf.push(Uop::load(0xB80, w_addr, 4, 0).into());
         buf.push(VimaInstr::new(VimaOp::Bcast, VDtype::F32, &[], Some(wb), vb).into());
         buf.push(VimaInstr::new(VimaOp::Fma, VDtype::F32, &[wb, col, acc], Some(acc), vb).into());
-        emit::loop_ctl(buf, 0xBA0, 16, true);
+        // Loop-exit branch accounting must mirror the AVX generator: the
+        // branch falls through exactly once, on the stream's last
+        // (neuron, chunk, feature) iteration.
+        let last = self.feat + 1 >= self.f
+            && self.chunk + 1 >= self.chunks
+            && self.neuron + 1 >= self.end_neuron;
+        emit::loop_ctl(buf, 0xBA0, 16, !last);
 
         self.feat += 1;
         if self.feat >= self.f {
@@ -198,6 +204,23 @@ mod tests {
             .count() as u64;
         // chunks = 16384/2048 = 8, F = 64
         assert_eq!(fmas, SIM_NEURONS * 8 * 64);
+    }
+
+    #[test]
+    fn vima_loop_branch_exits_exactly_once() {
+        // Branch accounting parity with the AVX generator: one not-taken
+        // loop-exit branch per stream (it used to emit taken=true forever).
+        let p = TraceParams::new(KernelId::Mlp, Backend::Vima, 4 << 20);
+        let branches: Vec<bool> = p
+            .stream()
+            .unwrap()
+            .filter_map(|e| match e {
+                TraceEvent::Uop(u) if u.fu == FuType::Branch => Some(u.taken),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(branches.iter().filter(|&&t| !t).count(), 1);
+        assert!(!branches.last().unwrap());
     }
 
     #[test]

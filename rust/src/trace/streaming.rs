@@ -106,7 +106,7 @@ impl TraceChunker for MemSetHive {
             );
             buf.push(HiveOp::StoreReg { reg: r, addr: layout::A + self.pos }.into());
             self.pos += self.vb;
-            emit::loop_ctl(buf, 0x4C0, 16, true);
+            emit::loop_ctl(buf, 0x4C0, 16, self.pos < self.end);
         }
         buf.push(HiveOp::Unlock.into());
         true
@@ -194,6 +194,9 @@ pub struct MemCopyHive {
     pos: u64,
     end: u64,
     vb: u64,
+    /// (register, destination) of the transaction's staged stores, reused
+    /// across refills so the chunk refill loop allocates nothing.
+    staged: Vec<(u8, u64)>,
 }
 
 impl MemCopyHive {
@@ -202,7 +205,7 @@ impl MemCopyHive {
         let vecs = half / p.vector_bytes as u64;
         let (lo, hi) = p.slice(vecs);
         let vb = p.vector_bytes as u64;
-        Self { pos: lo * vb, end: hi * vb, vb }
+        Self { pos: lo * vb, end: hi * vb, vb, staged: Vec::with_capacity(4) }
     }
 }
 
@@ -212,17 +215,17 @@ impl TraceChunker for MemCopyHive {
             return false;
         }
         buf.push(HiveOp::Lock.into());
-        let mut staged = Vec::new();
+        self.staged.clear();
         for r in 0..4u8 {
             if self.pos >= self.end {
                 break;
             }
             buf.push(HiveOp::LoadReg { reg: r, addr: layout::A + self.pos }.into());
-            staged.push((r, layout::B + self.pos));
+            self.staged.push((r, layout::B + self.pos));
             self.pos += self.vb;
-            emit::loop_ctl(buf, 0x600, 16, true);
+            emit::loop_ctl(buf, 0x600, 16, self.pos < self.end);
         }
-        for (r, dst) in staged {
+        for &(r, dst) in &self.staged {
             buf.push(HiveOp::StoreReg { reg: r, addr: dst }.into());
         }
         buf.push(HiveOp::Unlock.into());
@@ -345,7 +348,7 @@ impl TraceChunker for VecSumHive {
             );
             buf.push(HiveOp::StoreReg { reg: rd, addr: layout::C + self.pos }.into());
             self.pos += self.vb;
-            emit::loop_ctl(buf, 0x7C0, 16, true);
+            emit::loop_ctl(buf, 0x7C0, 16, self.pos < self.end);
         }
         buf.push(HiveOp::Unlock.into());
         true
@@ -441,5 +444,31 @@ mod tests {
             .collect();
         assert!(!branches.last().unwrap());
         assert!(branches[..branches.len() - 1].iter().all(|&t| t));
+    }
+
+    #[test]
+    fn every_backend_ends_with_one_not_taken_branch() {
+        // Branch accounting must agree across backends: every generator
+        // models the same taken..taken,not-taken loop shape, ending on the
+        // single loop-exit branch. The HIVE generators used to emit
+        // taken=true forever, so their exit branch never existed.
+        for kernel in [KernelId::MemSet, KernelId::MemCopy, KernelId::VecSum] {
+            for backend in [Backend::Avx, Backend::Vima, Backend::Hive] {
+                let branches: Vec<bool> = events(TraceParams::new(kernel, backend, 64 << 10))
+                    .iter()
+                    .filter_map(|e| match e {
+                        TraceEvent::Uop(u) if u.fu == FuType::Branch => Some(u.taken),
+                        _ => None,
+                    })
+                    .collect();
+                assert!(!branches.is_empty(), "{kernel}/{backend}: no loop branches");
+                assert_eq!(
+                    branches.iter().filter(|&&t| !t).count(),
+                    1,
+                    "{kernel}/{backend}: expected exactly one loop-exit branch"
+                );
+                assert!(!branches.last().unwrap(), "{kernel}/{backend}: must end not-taken");
+            }
+        }
     }
 }
