@@ -8,7 +8,7 @@ use vima_sim::coordinator::workloads::{SizeScale, WorkloadSet};
 use vima_sim::cpu::Core;
 use vima_sim::isa::{FuType, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
 use vima_sim::mem3d::Mem3D;
-use vima_sim::sim::simulate;
+use vima_sim::sim::{simulate, Machine};
 use vima_sim::sweep::{RunCell, SweepPlan, SweepRunner};
 use vima_sim::trace::{Backend, KernelId, TraceParams};
 use vima_sim::util::bench;
@@ -92,6 +92,20 @@ fn main() {
     bench::metric("sim.end_to_end_events_per_sec", events / r.mean_s, "ev/s");
     let sim_cycles = simulate(&cfg, p).unwrap().cycles as f64;
     bench::metric("sim.simulated_cycles_per_sec", sim_cycles / r.mean_s, "cy/s");
+
+    bench::section("chunked vs reference execution (events/sec)");
+    let mut m = Machine::new(&cfg, 1);
+    let r_ref = bench::bench("run_reference_vecsum_avx_8mb", 5, || {
+        m.reset();
+        m.run_reference(vec![p.stream().unwrap()]).unwrap().cycles
+    });
+    let r_chunk = bench::bench("run_chunked_vecsum_avx_8mb", 5, || {
+        m.reset();
+        m.run(vec![p.stream().unwrap()]).unwrap().cycles
+    });
+    bench::metric("sim.reference_events_per_sec", events / r_ref.mean_s, "ev/s");
+    bench::metric("sim.chunked_events_per_sec", events / r_chunk.mean_s, "ev/s");
+    bench::metric("sim.chunked_speedup_vs_reference", r_ref.mean_s / r_chunk.mean_s, "x");
 
     bench::section("sweep engine (fig2 grid: 27 cells, deduped + parallel)");
     let mut plan = SweepPlan::new();

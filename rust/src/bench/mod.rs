@@ -1,0 +1,218 @@
+//! Simulator throughput benchmark — the §Perf trajectory instrument.
+//!
+//! Measures **simulated events per second** of the chunked execution
+//! engine ([`Machine::run`]) against the event-at-a-time reference path
+//! ([`Machine::run_reference`]) over a representative workload matrix, and
+//! serializes the result as the `BENCH_*.json` record the repo's perf
+//! trajectory is built from (`vima-sim bench --json BENCH_PR3.json`; CI
+//! uploads it as an artifact on every push).
+//!
+//! JSON is emitted by hand: the offline build is dependency-free by
+//! design, and the schema is flat (see [`ThroughputReport::to_json`]).
+
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::sim::Machine;
+use crate::trace::{Backend, KernelId, TraceParams, TraceStream};
+use crate::util::error::Result;
+
+/// One benchmark cell: a workload/backend pair timed on both engines.
+#[derive(Debug, Clone)]
+pub struct ThroughputRow {
+    pub workload: String,
+    pub backend: String,
+    /// Dynamic trace events simulated per run.
+    pub events: u64,
+    /// Simulated events per wall-clock second, reference engine.
+    pub reference_eps: f64,
+    /// Simulated events per wall-clock second, chunked engine.
+    pub chunked_eps: f64,
+    /// `chunked_eps / reference_eps`.
+    pub speedup: f64,
+}
+
+/// The full benchmark record; serializes to `BENCH_*.json`.
+#[derive(Debug, Clone)]
+pub struct ThroughputReport {
+    /// True when run on the 1/16 quick sizes (CI smoke mode).
+    pub quick: bool,
+    pub iters: u32,
+    pub rows: Vec<ThroughputRow>,
+}
+
+impl ThroughputReport {
+    /// Geometric mean of the per-row chunked-vs-reference speedups.
+    pub fn geomean_speedup(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 1.0;
+        }
+        let log_sum: f64 = self.rows.iter().map(|r| r.speedup.ln()).sum();
+        (log_sum / self.rows.len() as f64).exp()
+    }
+
+    pub fn min_speedup(&self) -> f64 {
+        self.rows.iter().map(|r| r.speedup).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Best chunked events/sec across rows (the headline throughput).
+    pub fn peak_chunked_eps(&self) -> f64 {
+        self.rows.iter().map(|r| r.chunked_eps).fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s += "  \"benchmark\": \"vima-sim simulator throughput (events/sec)\",\n";
+        s += &format!("  \"quick\": {},\n  \"iters\": {},\n", self.quick, self.iters);
+        s += "  \"rows\": [\n";
+        for (i, r) in self.rows.iter().enumerate() {
+            s += &format!(
+                "    {{\"workload\": \"{}\", \"backend\": \"{}\", \"events\": {}, \
+                 \"reference_events_per_sec\": {:.0}, \"chunked_events_per_sec\": {:.0}, \
+                 \"speedup\": {:.3}}}{}\n",
+                r.workload,
+                r.backend,
+                r.events,
+                r.reference_eps,
+                r.chunked_eps,
+                r.speedup,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            );
+        }
+        s += "  ],\n";
+        s += &format!(
+            "  \"summary\": {{\"geomean_speedup\": {:.3}, \"min_speedup\": {:.3}, \
+             \"peak_chunked_events_per_sec\": {:.0}}}\n",
+            self.geomean_speedup(),
+            self.min_speedup(),
+            self.peak_chunked_eps()
+        );
+        s += "}\n";
+        s
+    }
+}
+
+/// Workload matrix: the three trace shapes that stress different hot paths
+/// (µop-dense AVX streaming, VIMA instruction dispatch + coherence walks,
+/// HIVE transactions), plus a multithreaded cell for the interleaver.
+fn matrix(quick: bool) -> Vec<(KernelId, Backend, u64, usize)> {
+    let mb = if quick { 1u64 } else { 8 };
+    vec![
+        (KernelId::VecSum, Backend::Avx, mb << 20, 1),
+        (KernelId::MemCopy, Backend::Avx, mb << 20, 1),
+        (KernelId::VecSum, Backend::Vima, mb << 20, 1),
+        (KernelId::VecSum, Backend::Hive, mb << 20, 1),
+        (KernelId::VecSum, Backend::Avx, mb << 20, 4),
+    ]
+}
+
+fn streams(p: TraceParams, threads: usize) -> Result<Vec<TraceStream>> {
+    (0..threads).map(|t| p.with_threads(t, threads).stream()).collect()
+}
+
+/// Median-of-`iters` wall time of `f` (one warm-up run first). Even
+/// iteration counts average the two middle samples — `times[len / 2]`
+/// alone would report the *slower* middle, turning one scheduler hiccup
+/// under `--iters 2` into a fake regression in the trajectory record.
+fn time_runs(iters: u32, mut f: impl FnMut() -> Result<u64>) -> Result<f64> {
+    std::hint::black_box(f()?);
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f()?);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let mid = times.len() / 2;
+    Ok(if times.len() % 2 == 1 { times[mid] } else { (times[mid - 1] + times[mid]) / 2.0 })
+}
+
+/// Run the throughput matrix; `verbose` prints one line per cell.
+pub fn throughput(
+    cfg: &SystemConfig,
+    quick: bool,
+    iters: u32,
+    verbose: bool,
+) -> Result<ThroughputReport> {
+    let mut rows = Vec::new();
+    for (kernel, backend, footprint, threads) in matrix(quick) {
+        let p = TraceParams::new(kernel, backend, footprint);
+        let events = streams(p, threads)?
+            .into_iter()
+            .map(|s| s.count() as u64)
+            .sum::<u64>();
+        let mut m = Machine::new(cfg, threads);
+        let t_ref = time_runs(iters, || {
+            m.reset();
+            Ok(m.run_reference(streams(p, threads)?)?.cycles)
+        })?;
+        let t_chunk = time_runs(iters, || {
+            m.reset();
+            Ok(m.run(streams(p, threads)?)?.cycles)
+        })?;
+        let row = ThroughputRow {
+            workload: kernel.to_string(),
+            backend: backend.to_string(),
+            events,
+            reference_eps: events as f64 / t_ref,
+            chunked_eps: events as f64 / t_chunk,
+            speedup: t_ref / t_chunk,
+        };
+        if verbose {
+            eprintln!(
+                "[vima-sim] bench {}/{} x{}: {:.2}M ev/s chunked vs {:.2}M ev/s reference \
+                 ({:.2}x)",
+                row.workload,
+                row.backend,
+                threads,
+                row.chunked_eps / 1e6,
+                row.reference_eps / 1e6,
+                row.speedup
+            );
+        }
+        rows.push(row);
+    }
+    Ok(ThroughputReport { quick, iters, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_is_parseable_enough() {
+        let report = ThroughputReport {
+            quick: true,
+            iters: 1,
+            rows: vec![ThroughputRow {
+                workload: "VecSum".into(),
+                backend: "AVX".into(),
+                events: 1000,
+                reference_eps: 1e6,
+                chunked_eps: 2e6,
+                speedup: 2.0,
+            }],
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"speedup\": 2.000"), "{j}");
+        assert!(j.contains("\"geomean_speedup\": 2.000"), "{j}");
+        assert!(j.ends_with("}\n"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn geomean_and_min() {
+        let row = |s: f64| ThroughputRow {
+            workload: "w".into(),
+            backend: "b".into(),
+            events: 1,
+            reference_eps: 1.0,
+            chunked_eps: s,
+            speedup: s,
+        };
+        let r = ThroughputReport { quick: true, iters: 1, rows: vec![row(2.0), row(8.0)] };
+        assert!((r.geomean_speedup() - 4.0).abs() < 1e-9);
+        assert_eq!(r.min_speedup(), 2.0);
+        assert_eq!(r.peak_chunked_eps(), 8.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Open-addressed `line address -> cycle` map for the in-flight prefetch
+//! window.
+//!
+//! `std::collections::HashMap` pays SipHash plus DoS-resistant table
+//! machinery per probe; the prefetch window only ever keys on 64 B-aligned
+//! line addresses and sits on the per-access hot path, so a linear-probe
+//! table with a multiplicative hash does the same job in a fraction of the
+//! cost. Deletions leave tombstones; the table rebuilds (dropping them)
+//! when the occupied fraction crosses 3/4, doubling only when the *live*
+//! load demands it. Keys are 64 B-aligned, so the two unaligned sentinel
+//! values can never collide with a real key.
+
+/// Slot never used.
+const EMPTY: u64 = u64::MAX;
+/// Slot deleted (probe chains continue through it).
+const TOMB: u64 = u64::MAX - 1;
+
+/// Linear-probe hash map from 64 B-aligned line addresses to cycle stamps.
+pub struct LineMap {
+    keys: Vec<u64>,
+    vals: Vec<u64>,
+    /// Live entries.
+    live: usize,
+    /// Live entries + tombstones (slots that are not `EMPTY`).
+    used: usize,
+}
+
+impl LineMap {
+    pub fn new() -> Self {
+        Self::with_pow2_capacity(64)
+    }
+
+    fn with_pow2_capacity(cap: usize) -> Self {
+        debug_assert!(cap.is_power_of_two());
+        Self { keys: vec![EMPTY; cap], vals: vec![0; cap], live: 0, used: 0 }
+    }
+
+    #[inline]
+    fn mask(&self) -> usize {
+        self.keys.len() - 1
+    }
+
+    /// Fibonacci (multiplicative) hash: one multiply, top bits, mask.
+    #[inline]
+    fn slot_of(key: u64, mask: usize) -> usize {
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize & mask
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.keys.fill(EMPTY);
+        self.live = 0;
+        self.used = 0;
+    }
+
+    /// Index of the slot holding `key`, if present.
+    #[inline]
+    fn find(&self, key: u64) -> Option<usize> {
+        debug_assert!(key < TOMB, "unaligned sentinel key");
+        let mask = self.mask();
+        let mut i = Self::slot_of(key, mask);
+        loop {
+            match self.keys[i] {
+                k if k == key => return Some(i),
+                EMPTY => return None,
+                // Tombstones and other keys: probe on.
+                _ => i = (i + 1) & mask,
+            }
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.find(key).is_some()
+    }
+
+    /// Insert or overwrite.
+    pub fn insert(&mut self, key: u64, val: u64) {
+        // Keep at least a quarter of the slots EMPTY so probe chains stay
+        // short and terminate.
+        if (self.used + 1) * 4 >= self.keys.len() * 3 {
+            self.rebuild();
+        }
+        let mask = self.mask();
+        let mut i = Self::slot_of(key, mask);
+        let mut first_tomb = None;
+        loop {
+            match self.keys[i] {
+                k if k == key => {
+                    self.vals[i] = val;
+                    return;
+                }
+                EMPTY => {
+                    // Prefer reusing a tombstone seen on the way (keeps
+                    // `used` flat under insert/remove churn).
+                    let slot = match first_tomb {
+                        Some(t) => t,
+                        None => {
+                            self.used += 1;
+                            i
+                        }
+                    };
+                    self.keys[slot] = key;
+                    self.vals[slot] = val;
+                    self.live += 1;
+                    return;
+                }
+                TOMB => {
+                    if first_tomb.is_none() {
+                        first_tomb = Some(i);
+                    }
+                    i = (i + 1) & mask;
+                }
+                _ => i = (i + 1) & mask,
+            }
+        }
+    }
+
+    /// Remove `key`, returning its value if it was present.
+    pub fn remove(&mut self, key: u64) -> Option<u64> {
+        let i = self.find(key)?;
+        self.keys[i] = TOMB;
+        self.live -= 1;
+        Some(self.vals[i])
+    }
+
+    /// Re-insert the live entries into a table sized for them (dropping
+    /// tombstones); doubles only when the live load itself is high.
+    fn rebuild(&mut self) {
+        let new_cap =
+            if self.live * 2 >= self.keys.len() { self.keys.len() * 2 } else { self.keys.len() };
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; new_cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![0; new_cap]);
+        self.live = 0;
+        self.used = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY && k != TOMB {
+                self.insert(k, v);
+            }
+        }
+    }
+}
+
+impl Default for LineMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_find_remove() {
+        let mut m = LineMap::new();
+        assert!(m.is_empty());
+        m.insert(0x1000, 42);
+        m.insert(0x2000, 43);
+        assert_eq!(m.len(), 2);
+        assert!(m.contains(0x1000));
+        assert!(!m.contains(0x3000));
+        assert_eq!(m.remove(0x1000), Some(42));
+        assert_eq!(m.remove(0x1000), None);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.remove(0x2000), Some(43));
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn overwrite_keeps_one_entry() {
+        let mut m = LineMap::new();
+        m.insert(0x40, 1);
+        m.insert(0x40, 2);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.remove(0x40), Some(2));
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut m = LineMap::new();
+        for i in 0..10_000u64 {
+            m.insert(i * 64, i);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in (0..10_000u64).rev() {
+            assert_eq!(m.remove(i * 64), Some(i), "lost key {i}");
+        }
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn churn_does_not_fill_table_with_tombstones() {
+        // Insert/remove cycles at bounded live size: the rebuild must keep
+        // probing terminating (this loops forever if tombstones leak).
+        let mut m = LineMap::new();
+        for round in 0..2_000u64 {
+            let k = (round % 97) * 64;
+            m.insert(k, round);
+            if round % 3 != 0 {
+                m.remove(k);
+            }
+        }
+        assert!(m.len() <= 97);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut m = LineMap::new();
+        for i in 0..100u64 {
+            m.insert(i * 64, i);
+        }
+        m.clear();
+        assert!(m.is_empty());
+        assert!(!m.contains(0));
+        m.insert(0, 7);
+        assert_eq!(m.remove(0), Some(7));
+    }
+
+    #[test]
+    fn colliding_keys_chain() {
+        // Keys an exact table-capacity multiple apart often hash to nearby
+        // slots; verify chains survive middle deletions.
+        let mut m = LineMap::new();
+        let keys: Vec<u64> = (0..32).map(|i| i * 64 * 64).collect();
+        for (i, &k) in keys.iter().enumerate() {
+            m.insert(k, i as u64);
+        }
+        m.remove(keys[10]);
+        for (i, &k) in keys.iter().enumerate() {
+            if i != 10 {
+                assert!(m.contains(k), "key {i} lost after middle deletion");
+            }
+        }
+    }
+}

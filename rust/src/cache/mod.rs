@@ -7,15 +7,16 @@
 //! miss-level parallelism is bounded exactly without per-cycle ticking.
 
 mod array;
+mod linemap;
 mod mshr;
 mod prefetch;
 
 pub use array::CacheArray;
+pub use linemap::LineMap;
 pub use mshr::MshrWindow;
 pub use prefetch::StridePrefetcher;
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::VecDeque;
 
 use crate::config::{CacheConfig, SystemConfig};
 use crate::mem3d::Mem3D;
@@ -75,7 +76,13 @@ pub struct MemorySystem {
     /// before they touch the DRAM resource clocks, so the latency-forwarding
     /// model sees requests in approximately arrival order even though stores
     /// issue at data-dependent (much later) pipeline times than younger loads.
-    pending: BinaryHeap<Reverse<(u64, u64, bool)>>,
+    ///
+    /// Kept as a deque sorted ascending by `(time, addr, is_write)`. Posts
+    /// arrive nearly in order (bounded multi-core skew, write-backs a DRAM
+    /// round-trip ahead), so the binary-search insert lands at or near the
+    /// tail, and peek/pop-front are O(1) — cheaper than a `BinaryHeap`'s
+    /// sift on both ends while draining the identical ascending sequence.
+    pending: VecDeque<(u64, u64, bool)>,
     /// Per-core stride prefetchers (into the LLC; see [`StridePrefetcher`]).
     prefetchers: Vec<StridePrefetcher>,
     pf_enabled: bool,
@@ -89,7 +96,7 @@ pub struct MemorySystem {
     /// A demand access that meets an in-flight prefetch waits for the
     /// remainder (prefetch *timeliness*: a k-ahead stream only hides
     /// k x demand-interval cycles of DRAM latency, not all of it).
-    pf_inflight: std::collections::HashMap<u64, u64>,
+    pf_inflight: LineMap,
     /// DRAM fill latency estimate for prefetch timeliness.
     pf_fill_latency: u64,
     pub pf_late_hits: u64,
@@ -110,12 +117,12 @@ impl MemorySystem {
             l2: (0..cores).map(|_| CacheLevel::new(&cfg.l2)).collect(),
             llc: CacheLevel::new(&cfg.llc),
             mem: Mem3D::new(&cfg.mem, cfg.core.freq_ghz),
-            pending: BinaryHeap::new(),
+            pending: VecDeque::new(),
             region_filter: vec![0; REGION_WORDS],
             prefetchers: (0..cores).map(|_| StridePrefetcher::new(&cfg.prefetch)).collect(),
             pf_enabled: cfg.prefetch.enabled,
             pf_buf: Vec::with_capacity(8),
-            pf_inflight: std::collections::HashMap::new(),
+            pf_inflight: LineMap::new(),
             // RCD+CAS + burst + link, rounded: one uncontended DRAM round trip
             pf_fill_latency: Mem3D::new(&cfg.mem, cfg.core.freq_ghz).uncontended_read_latency(),
             pf_late_hits: 0,
@@ -170,7 +177,7 @@ impl MemorySystem {
         buf.clear();
         self.prefetchers[core].observe(pc, addr, &mut buf);
         for &line in &buf {
-            if !self.llc.array.lookup(line, false) && !self.pf_inflight.contains_key(&line) {
+            if !self.llc.array.lookup(line, false) && !self.pf_inflight.contains(line) {
                 self.post(line, false, now);
                 self.pf_inflight.insert(line, now + self.pf_fill_latency);
                 if self.pf_inflight.len() > (1 << 15) {
@@ -189,7 +196,7 @@ impl MemorySystem {
             return None; // fast path: prefetcher off or idle (no hashing)
         }
         let line = addr & !63;
-        let ready = self.pf_inflight.remove(&line)?;
+        let ready = self.pf_inflight.remove(line)?;
         if let Some(victim) = self.llc.array.insert(line, false) {
             self.llc.stats.writebacks += 1;
             self.post(victim, true, ready);
@@ -200,18 +207,27 @@ impl MemorySystem {
         Some(ready)
     }
 
-    /// Queue posted DRAM traffic (applied in arrival order).
+    /// Queue posted DRAM traffic (applied in arrival order). The fast path
+    /// is a tail push; out-of-order posts binary-search their slot, which
+    /// preserves the exact ascending drain order the heap produced.
     fn post(&mut self, addr: u64, is_write: bool, at: u64) {
-        self.pending.push(Reverse((at, addr, is_write)));
+        let item = (at, addr, is_write);
+        match self.pending.back() {
+            Some(last) if *last > item => {
+                let idx = self.pending.partition_point(|e| *e <= item);
+                self.pending.insert(idx, item);
+            }
+            _ => self.pending.push_back(item),
+        }
     }
 
     /// Apply every posted request with arrival time <= `upto`.
     fn apply_pending(&mut self, upto: u64) {
-        while let Some(&Reverse((t, addr, w))) = self.pending.peek() {
+        while let Some(&(t, addr, w)) = self.pending.front() {
             if t > upto {
                 break;
             }
-            self.pending.pop();
+            self.pending.pop_front();
             self.mem.host_access(addr, w, t);
         }
     }

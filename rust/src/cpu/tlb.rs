@@ -14,6 +14,11 @@ pub struct Tlb {
     entries: Vec<(u64, u64)>,
     page_shift: u32,
     tick: u64,
+    /// Most-recently-hit slot. Streaming kernels translate the same huge
+    /// page for thousands of consecutive accesses, so one compare replaces
+    /// the full associative scan on the hot path (timing-identical: same
+    /// hit, same stamp update).
+    mru: usize,
     pub hits: u64,
     pub misses: u64,
     /// CPU cycles per page walk (charged on a miss).
@@ -32,6 +37,7 @@ impl Tlb {
             entries: vec![(u64::MAX, 0); entries],
             page_shift,
             tick: 0,
+            mru: 0,
             hits: 0,
             misses: 0,
             walk_penalty,
@@ -42,9 +48,15 @@ impl Tlb {
     pub fn access(&mut self, addr: u64) -> u64 {
         let vpn = addr >> self.page_shift;
         self.tick += 1;
-        for e in &mut self.entries {
+        if self.entries[self.mru].0 == vpn {
+            self.entries[self.mru].1 = self.tick;
+            self.hits += 1;
+            return 0;
+        }
+        for (i, e) in self.entries.iter_mut().enumerate() {
             if e.0 == vpn {
                 e.1 = self.tick;
+                self.mru = i;
                 self.hits += 1;
                 return 0;
             }
@@ -64,6 +76,7 @@ impl Tlb {
             }
         }
         self.entries[victim] = (vpn, self.tick);
+        self.mru = victim;
         self.walk_penalty
     }
 
@@ -75,6 +88,7 @@ impl Tlb {
     pub fn reset(&mut self) {
         self.entries.fill((u64::MAX, 0));
         self.tick = 0;
+        self.mru = 0;
         self.hits = 0;
         self.misses = 0;
     }

@@ -483,12 +483,20 @@ impl ProgramChunker {
     fn emit(&self, stmt: &Stmt, iter: u64, buf: &mut Vec<TraceEvent>) {
         match stmt {
             Stmt::Instr { op, dtype, srcs, dst } => {
-                let srcs: Vec<u64> = srcs.iter().map(|o| o.at(iter)).collect();
+                // Resolve operands into a fixed buffer (VIMA instructions
+                // carry at most 3 sources) — the chunk refill loop must not
+                // allocate per leaf statement.
+                let mut sbuf = [0u64; 3];
+                let n = srcs.len().min(3);
+                for (slot, o) in sbuf.iter_mut().zip(srcs.iter()) {
+                    *slot = o.at(iter);
+                }
+                let srcs = &sbuf[..n];
                 let dst = dst.map(|o| o.at(iter));
                 match self.backend {
                     Backend::Vima => {
                         buf.push(
-                            VimaInstr::new(*op, *dtype, &srcs, dst, self.vector_bytes).into(),
+                            VimaInstr::new(*op, *dtype, srcs, dst, self.vector_bytes).into(),
                         );
                         if self.loop_overhead {
                             buf.push(
@@ -497,7 +505,7 @@ impl ProgramChunker {
                             buf.push(Uop::branch(0xF04, true).into());
                         }
                     }
-                    Backend::Avx => self.emit_avx(*op, *dtype, &srcs, dst, buf),
+                    Backend::Avx => self.emit_avx(*op, *dtype, srcs, dst, buf),
                     Backend::Hive => unreachable!("rejected at chunker construction"),
                 }
             }

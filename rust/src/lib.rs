@@ -30,6 +30,7 @@
 //! as well as *temporally* (cycles/energy). Python is never on the run
 //! path, and the default build has no dependencies at all.
 
+pub mod bench;
 pub mod cache;
 pub mod config;
 pub mod coordinator;

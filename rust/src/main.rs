@@ -8,6 +8,7 @@
 //! vima-sim sweep [--jobs N] [--figs fig2,custom] [--csv DIR] [--quick]
 //! vima-sim fig2|fig3|fig4|fig5|ablation|headline|custom|all [--quick]
 //! vima-sim run <workload> <backend> [--mb N] [--threads N] [--stats]
+//! vima-sim bench [--quick] [--iters N] [--json FILE]
 //! vima-sim workloads          (list the registry: kernels + programs)
 //! vima-sim config [--config FILE]
 //! vima-sim selftest           (requires a build with --features pjrt)
@@ -48,6 +49,10 @@ COMMANDS:
               saxpy / softmax; backends: avx vima hive
   custom      Custom-workload figure: each registered Intrinsics-VIMA
               program, VIMA vs the AVX lowering of the same program
+  bench       Simulator throughput benchmark: chunked execution engine vs
+              the event-at-a-time reference path, in simulated events/sec;
+              --json FILE writes the BENCH_*.json perf-trajectory record
+              (e.g. BENCH_PR3.json)
   workloads   List every workload in the registry (name, backends, size)
   transpile   Future-work demo: auto-convert an AVX trace to VIMA
               (vima-sim transpile <workload> [--mb N])
@@ -57,6 +62,8 @@ COMMANDS:
 
 OPTIONS:
   --jobs N         sweep worker threads (default: all cores; 1 = serial)
+  --iters N        (bench) timed iterations per cell, median reported (3)
+  --json FILE      (bench) write the JSON record to FILE
   --quick          1/16 dataset sizes (smoke runs)
   --config FILE    TOML overrides for Table I
   --out DIR        also write each table as CSV into DIR
@@ -229,6 +236,31 @@ fn main() -> Result<()> {
             );
             if args.flag("stats") {
                 print!("{}", r.report);
+            }
+        }
+        "bench" => {
+            let iters = args.get_usize("iters", 3) as u32;
+            let report =
+                vima_sim::bench::throughput(&cfg, args.flag("quick"), iters, true)?;
+            println!(
+                "{:<10} {:>6} {:>12} {:>16} {:>16} {:>9}",
+                "workload", "backend", "events", "reference ev/s", "chunked ev/s", "speedup"
+            );
+            for r in &report.rows {
+                println!(
+                    "{:<10} {:>6} {:>12} {:>16.0} {:>16.0} {:>8.2}x",
+                    r.workload, r.backend, r.events, r.reference_eps, r.chunked_eps, r.speedup
+                );
+            }
+            println!(
+                "geomean speedup {:.2}x, min {:.2}x, peak {:.2}M ev/s",
+                report.geomean_speedup(),
+                report.min_speedup(),
+                report.peak_chunked_eps() / 1e6
+            );
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, report.to_json())?;
+                eprintln!("[vima-sim] wrote {path}");
             }
         }
         "workloads" => {

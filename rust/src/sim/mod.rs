@@ -136,8 +136,114 @@ impl Machine {
         })
     }
 
-    /// Run one trace stream per thread to completion.
+    /// Run one trace stream per thread to completion on the chunked
+    /// execution path: each core consumes its stream's refill buffer in
+    /// place through [`run_chunk_until`](Self::run_chunk_until) — no
+    /// per-event `Iterator::next` round trip. Event-for-event it performs
+    /// exactly the state transitions of
+    /// [`run_reference`](Self::run_reference); cycle counts are
+    /// bit-identical (see `tests/chunked_equivalence.rs` and DESIGN.md
+    /// §Chunked execution).
     pub fn run(&mut self, traces: Vec<TraceStream>) -> Result<SimResult> {
+        RUN_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(traces.len(), self.cores.len(), "one trace per core");
+        let mut streams = traces;
+
+        if streams.len() == 1 {
+            // Single-core fast path: no windowing/watermark bookkeeping —
+            // whole chunks execute back to back.
+            let stream = &mut streams[0];
+            while stream.fill() {
+                let n = self.run_chunk_until(0, stream.chunk(), u64::MAX)?;
+                stream.consume(n);
+            }
+        } else {
+            self.run_interleaved(&mut streams)?;
+        }
+        self.finish()
+    }
+
+    /// Multi-core chunked path: interleave cores in bounded windows of
+    /// simulated time. The start position rotates every round: whoever
+    /// issues first in a window gets the shared resources first, and a
+    /// fixed order would systematically starve the last core.
+    fn run_interleaved(&mut self, streams: &mut [TraceStream]) -> Result<()> {
+        let n = streams.len();
+        let mut done = vec![false; n];
+        let mut round = 0usize;
+        while !done.iter().all(|&d| d) {
+            let watermark = self
+                .cores
+                .iter()
+                .zip(&done)
+                .filter(|(_, &d)| !d)
+                .map(|(c, _)| c.now())
+                .min();
+            let Some(watermark) = watermark else { break };
+            let limit = watermark + WINDOW;
+            round += 1;
+            for i in 0..n {
+                let c = (i + round) % n;
+                if done[c] {
+                    continue;
+                }
+                while self.cores[c].now() <= limit {
+                    if !streams[c].fill() {
+                        done[c] = true;
+                        break;
+                    }
+                    let consumed = self.run_chunk_until(c, streams[c].chunk(), limit)?;
+                    streams[c].consume(consumed);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute the leading events of `events` on core `c`, stopping before
+    /// the first event once the core-local clock passes `limit`. Returns
+    /// how many events were consumed.
+    ///
+    /// This is the chunked hot loop: runs of host µops dispatch through a
+    /// tight per-kind inner loop with the core/memory borrows (and the
+    /// enum match) hoisted out of the per-µop path; VIMA/HIVE events fall
+    /// back to the general per-event `step`. The limit check happens
+    /// before every event, exactly like the reference interleaver.
+    pub fn run_chunk_until(
+        &mut self,
+        c: usize,
+        events: &[TraceEvent],
+        limit: u64,
+    ) -> Result<usize> {
+        let mut i = 0;
+        while i < events.len() && self.cores[c].now() <= limit {
+            if let TraceEvent::Uop(_) = events[i] {
+                let core = &mut self.cores[c];
+                let mem = &mut self.mem;
+                while i < events.len() && core.now() <= limit {
+                    let TraceEvent::Uop(u) = &events[i] else { break };
+                    core.run_uop(u, mem);
+                    i += 1;
+                }
+            } else {
+                self.step(c, &events[i])?;
+                i += 1;
+            }
+        }
+        Ok(i)
+    }
+
+    /// Execute one whole chunk of events on core `c` (no time bound) —
+    /// the single-core fast path, exposed for external chunk drivers.
+    pub fn run_chunk(&mut self, c: usize, events: &[TraceEvent]) -> Result<()> {
+        self.run_chunk_until(c, events, u64::MAX).map(|_| ())
+    }
+
+    /// Event-at-a-time reference implementation of [`run`] — the
+    /// pre-chunking execution path, kept as the determinism oracle (the
+    /// chunked engine must reproduce its cycle counts bit for bit) and as
+    /// the baseline the `simcore` throughput benchmark reports against.
+    pub fn run_reference(&mut self, traces: Vec<TraceStream>) -> Result<SimResult> {
         RUN_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
         assert_eq!(traces.len(), self.cores.len(), "one trace per core");
         let mut streams: Vec<_> = traces.into_iter().map(Some).collect();
@@ -159,10 +265,8 @@ impl Machine {
             done[0] = true;
         }
 
-        // Interleave cores in bounded windows of simulated time. The start
-        // position rotates every round: whoever issues first in a window gets
-        // the shared resources first, and a fixed order would systematically
-        // starve the last core.
+        // Interleave cores in bounded windows of simulated time (see
+        // `run_interleaved` for the rotation rationale).
         let mut round = 0usize;
         while !done.iter().all(|&d| d) {
             let watermark = self
@@ -197,9 +301,12 @@ impl Machine {
                 break;
             }
         }
+        self.finish()
+    }
 
-        // Drain devices (dirty VIMA cache lines, HIVE write-backs, posted
-        // stores, DRAM).
+    /// Shared run epilogue: drain devices (dirty VIMA cache lines, HIVE
+    /// write-backs, posted stores, DRAM) and assemble the result.
+    fn finish(&mut self) -> Result<SimResult> {
         self.mem.drain_pending();
         let core_end = self.cores.iter().map(|c| c.now()).max().unwrap_or(0);
         let vima_end = self.vima.drain(core_end, &mut self.mem.mem);

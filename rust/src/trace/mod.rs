@@ -90,7 +90,19 @@ pub trait TraceChunker: Send {
     fn refill(&mut self, buf: &mut Vec<TraceEvent>) -> bool;
 }
 
-/// Pull-based event stream over a [`TraceChunker`].
+/// Events one [`TraceStream::fill`] aggregates per chunk: enough to
+/// amortize the virtual refill call and the consumer's dispatch loop over
+/// thousands of events, written and read strictly sequentially.
+pub const CHUNK_TARGET: usize = 4096;
+
+/// Event stream over a [`TraceChunker`].
+///
+/// The simulator's chunked hot path ([`crate::sim::Machine::run_chunk`])
+/// consumes the refill buffer **in place** via [`fill`](Self::fill) /
+/// [`chunk`](Self::chunk) / [`consume`](Self::consume) — no per-event
+/// `Option` round trip, no copy into a second buffer, one virtual call per
+/// ~[`CHUNK_TARGET`] events. The [`Iterator`] impl remains for tests and
+/// offline tooling (collect, transpile) and pays one copy per event.
 pub struct TraceStream {
     chunker: Box<dyn TraceChunker>,
     buf: Vec<TraceEvent>,
@@ -99,7 +111,34 @@ pub struct TraceStream {
 
 impl TraceStream {
     pub fn new(chunker: Box<dyn TraceChunker>) -> Self {
-        Self { chunker, buf: Vec::with_capacity(4096), pos: 0 }
+        Self { chunker, buf: Vec::with_capacity(CHUNK_TARGET), pos: 0 }
+    }
+
+    /// Ensure the buffer holds unconsumed events, aggregating as many
+    /// chunker refills (one outer-loop iteration each) as fit the chunk
+    /// target. Returns `false` once the stream is exhausted. The buffer is
+    /// reused across fills, so the refill loop allocates nothing in steady
+    /// state.
+    pub fn fill(&mut self) -> bool {
+        if self.pos < self.buf.len() {
+            return true;
+        }
+        self.buf.clear();
+        self.pos = 0;
+        while self.buf.len() < CHUNK_TARGET && self.chunker.refill(&mut self.buf) {}
+        !self.buf.is_empty()
+    }
+
+    /// Unconsumed slice of the current chunk (empty before the first
+    /// [`fill`](Self::fill) and after exhaustion).
+    pub fn chunk(&self) -> &[TraceEvent] {
+        &self.buf[self.pos..]
+    }
+
+    /// Mark the first `n` events of [`chunk`](Self::chunk) consumed.
+    pub fn consume(&mut self, n: usize) {
+        debug_assert!(n <= self.buf.len() - self.pos);
+        self.pos += n;
     }
 }
 
@@ -107,12 +146,8 @@ impl Iterator for TraceStream {
     type Item = TraceEvent;
 
     fn next(&mut self) -> Option<TraceEvent> {
-        while self.pos >= self.buf.len() {
-            self.buf.clear();
-            self.pos = 0;
-            if !self.chunker.refill(&mut self.buf) {
-                return None;
-            }
+        if !self.fill() {
+            return None;
         }
         let e = self.buf[self.pos];
         self.pos += 1;
@@ -273,6 +308,30 @@ mod tests {
             assert!(e.contains("HIVE"), "{e}");
             assert!(e.contains(&kernel.to_string()), "{e}");
         }
+    }
+
+    #[test]
+    fn chunk_api_yields_same_events_as_iterator() {
+        let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 256 << 10);
+        let via_iter: Vec<TraceEvent> = p.stream().unwrap().collect();
+        let mut via_chunks = Vec::new();
+        let mut s = p.stream().unwrap();
+        while s.fill() {
+            // Ragged consumption exercises partial-chunk bookkeeping.
+            let n = (s.chunk().len() / 2).max(1);
+            via_chunks.extend_from_slice(&s.chunk()[..n]);
+            s.consume(n);
+        }
+        assert_eq!(via_iter.len(), via_chunks.len());
+        assert!(via_iter == via_chunks, "chunked and iterated events must agree");
+    }
+
+    #[test]
+    fn fill_aggregates_many_refills_per_chunk() {
+        let p = TraceParams::new(KernelId::MemSet, Backend::Avx, 1 << 20);
+        let mut s = p.stream().unwrap();
+        assert!(s.fill());
+        assert!(s.chunk().len() >= CHUNK_TARGET, "chunk too small: {}", s.chunk().len());
     }
 
     #[test]

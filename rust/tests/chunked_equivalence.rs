@@ -1,0 +1,75 @@
+//! Chunked-execution oracle: `Machine::run` (the chunked hot path) must
+//! reproduce `Machine::run_reference` (the event-at-a-time pull path)
+//! **bit for bit** — same cycle count, same value for every counter in the
+//! report. Determinism is the regression oracle for the whole PR-3
+//! throughput work; CI runs this file in release mode as the
+//! serial ≡ parallel ≡ chunked smoke (parallel ≡ serial lives in
+//! `sweep_parallel.rs`).
+
+use vima_sim::config::SystemConfig;
+use vima_sim::sim::Machine;
+use vima_sim::trace::{Backend, KernelId, TraceParams, TraceStream};
+use vima_sim::util::error::Result;
+
+/// One representative cell per figure family:
+/// fig2 (HIVE comparator), fig3 (single-thread VIMA + reuse-heavy kernel),
+/// fig4 (multithreaded AVX), fig5-ish config sensitivity via MatMul's
+/// partial vectors, and the Sec. III-C vector-size ablation shape.
+fn cells() -> Vec<(TraceParams, usize)> {
+    vec![
+        (TraceParams::new(KernelId::VecSum, Backend::Hive, 1 << 20), 1),
+        (TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20), 1),
+        (TraceParams::new(KernelId::MatMul, Backend::Vima, 256 << 10), 1),
+        (TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20), 1),
+        (TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20), 4),
+        (TraceParams::new(KernelId::MemSet, Backend::Vima, 1 << 20).with_vector_bytes(256), 1),
+    ]
+}
+
+fn streams(p: TraceParams, threads: usize) -> Result<Vec<TraceStream>> {
+    (0..threads).map(|t| p.with_threads(t, threads).stream()).collect()
+}
+
+#[test]
+fn chunked_matches_reference_bit_for_bit() {
+    let cfg = SystemConfig::default();
+    for (p, threads) in cells() {
+        let mut m = Machine::new(&cfg, threads);
+        let chunked = m.run(streams(p, threads).unwrap()).unwrap();
+        let mut m = Machine::new(&cfg, threads);
+        let reference = m.run_reference(streams(p, threads).unwrap()).unwrap();
+        assert_eq!(chunked.cycles, reference.cycles, "cycles diverged for {p:?} x{threads}");
+        assert_eq!(chunked.report, reference.report, "report diverged for {p:?} x{threads}");
+    }
+}
+
+#[test]
+fn chunked_reset_reuse_matches_reference() {
+    // The sweep engine reuses machines across cells via reset(); the
+    // chunked path must stay equivalent under reuse too.
+    let cfg = SystemConfig::default();
+    let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20);
+    let q = TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20);
+    let mut m = Machine::new(&cfg, 1);
+    m.run(streams(p, 1).unwrap()).unwrap();
+    m.reset();
+    let chunked = m.run(streams(q, 1).unwrap()).unwrap();
+    let mut m = Machine::new(&cfg, 1);
+    let reference = m.run_reference(streams(q, 1).unwrap()).unwrap();
+    assert_eq!(chunked.cycles, reference.cycles);
+    assert_eq!(chunked.report, reference.report);
+}
+
+#[test]
+fn run_chunk_until_respects_the_window_limit() {
+    // Driving a chunk with a finite limit must stop before the first event
+    // that would start past it, exactly like the reference interleaver.
+    let cfg = SystemConfig::default();
+    let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 256 << 10);
+    let mut s = p.stream().unwrap();
+    assert!(s.fill());
+    let mut m = Machine::new(&cfg, 1);
+    let consumed = m.run_chunk_until(0, s.chunk(), 50).unwrap();
+    assert!(consumed > 0, "at least one event runs inside the window");
+    assert!(consumed < s.chunk().len(), "a 50-cycle window cannot drain a whole chunk");
+}
