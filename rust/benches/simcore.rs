@@ -8,7 +8,7 @@ use vima_sim::coordinator::workloads::{SizeScale, WorkloadSet};
 use vima_sim::cpu::Core;
 use vima_sim::isa::{FuType, Uop, VDtype, VimaInstr, VimaOp, NO_REG};
 use vima_sim::mem3d::Mem3D;
-use vima_sim::sim::{simulate, Machine};
+use vima_sim::sim::{run_on, simulate, Machine};
 use vima_sim::sweep::{RunCell, SweepPlan, SweepRunner};
 use vima_sim::trace::{Backend, KernelId, TraceParams};
 use vima_sim::util::bench;
@@ -88,7 +88,14 @@ fn main() {
     bench::section("whole stack (end-to-end simulate)");
     let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 8 << 20);
     let events = p.stream().unwrap().count() as f64;
-    let r = bench::bench("simulate_vecsum_avx_8mb", 5, || simulate(&cfg, p).unwrap().cycles);
+    // Drive the machine directly: `simulate` now goes through the service
+    // result cache, which would turn every timed iteration after the first
+    // into a cache hit and fake a massive speedup in the perf record.
+    let mut sim_machine = Machine::new(&cfg, 1);
+    let r = bench::bench("simulate_vecsum_avx_8mb", 5, || {
+        sim_machine.reset();
+        run_on(&mut sim_machine, p).unwrap().cycles
+    });
     bench::metric("sim.end_to_end_events_per_sec", events / r.mean_s, "ev/s");
     let sim_cycles = simulate(&cfg, p).unwrap().cycles as f64;
     bench::metric("sim.simulated_cycles_per_sec", sim_cycles / r.mean_s, "cy/s");

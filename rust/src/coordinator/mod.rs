@@ -1,9 +1,11 @@
 //! Experiment coordinator: regenerates every table and figure of the paper.
 //!
 //! Each `fig*` function *declares* its grid as a [`SweepPlan`] of
-//! [`RunCell`]s and assembles a [`FigTable`] from the results; the
-//! [`SweepRunner`] executes plans on a worker pool behind a persistent
-//! result cache, so the AVX baselines every figure normalizes against
+//! [`RunCell`]s and assembles a [`FigTable`] from the results; plans are
+//! submitted to the [`Experiment`]'s [`SimService`] — the same long-lived
+//! scheduler (worker pool, pooled machines, bounded result cache) that
+//! serves ad-hoc [`Job`](crate::service::Job)s and the `vima-sim serve`
+//! JSONL mode — so the AVX baselines every figure normalizes against
 //! simulate exactly once per [`Experiment`], no matter how many figures ask
 //! for them (`vima-sim sweep` prints the dedup accounting). The acceptance
 //! criterion is *shape* (who wins, crossover points, rough factors), not
@@ -12,8 +14,9 @@
 pub mod workloads;
 
 use crate::config::SystemConfig;
+use crate::service::{ServiceConfig, SimService};
 use crate::sim::{simulate_threads, SimResult};
-use crate::sweep::{RunCell, SweepPlan, SweepRunner, SweepStats};
+use crate::sweep::{RunCell, SweepPlan, SweepStats};
 use crate::trace::{Backend, KernelId};
 use crate::util::error::Result;
 use workloads::{SizeScale, SizedWorkload, WorkloadSet};
@@ -98,15 +101,17 @@ impl FigTable {
     }
 }
 
-/// The experiment driver. Holds the sweep runner (worker pool + result
-/// cache), so figures requested from the same `Experiment` share baseline
-/// simulations.
+/// The experiment driver. Holds a [`SimService`] (worker pool + bounded
+/// result cache), so figures requested from the same `Experiment` share
+/// baseline simulations — and ad-hoc jobs submitted through
+/// [`service`](Self::service) run on the very same scheduler as the paper
+/// suite.
 pub struct Experiment {
     pub cfg: SystemConfig,
     pub scale: SizeScale,
     /// Print progress lines while running.
     pub verbose: bool,
-    runner: SweepRunner,
+    service: SimService,
 }
 
 impl Experiment {
@@ -118,21 +123,29 @@ impl Experiment {
     /// Explicit worker count (`jobs = 0` means `available_parallelism()`,
     /// `jobs = 1` is fully serial).
     pub fn with_jobs(cfg: SystemConfig, scale: SizeScale, jobs: usize) -> Self {
-        Self { cfg, scale, verbose: false, runner: SweepRunner::new(jobs) }
+        let service =
+            SimService::new(ServiceConfig { base: cfg.clone(), jobs, ..ServiceConfig::default() });
+        Self { cfg, scale, verbose: false, service }
+    }
+
+    /// The scheduler the figures run on; submit ad-hoc
+    /// [`Job`](crate::service::Job)s here to share its cache and workers.
+    pub fn service(&self) -> &SimService {
+        &self.service
     }
 
     /// Dedup accounting across every figure this experiment has produced.
     pub fn sweep_stats(&self) -> SweepStats {
-        self.runner.stats()
+        self.service.stats()
     }
 
     /// Worker-pool width.
     pub fn jobs(&self) -> usize {
-        self.runner.jobs()
+        self.service.jobs()
     }
 
     fn run_plan(&self, plan: &SweepPlan) -> Result<Vec<SimResult>> {
-        self.runner.run_verbose(&self.cfg, plan, self.verbose)
+        self.service.run_plan(&self.cfg, plan, self.verbose)
     }
 
     /// **Fig. 2** — HIVE vs VIMA speedup over single-thread AVX for

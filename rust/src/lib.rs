@@ -18,7 +18,11 @@
 //!   streaming Intrinsics-VIMA DSL that lowers one program to both a VIMA
 //!   stream and an honest AVX baseline — through the same
 //!   `simulate`/sweep/CLI paths, with typed errors instead of panics on
-//!   unsupported combinations.
+//!   unsupported combinations. Every entry point funnels into the
+//!   [`service`] layer: one long-lived [`service::SimService`] scheduler
+//!   (worker pool, pooled machines, bounded result cache, exactly-once
+//!   dedup) behind `simulate`, sweeps, figures, and the `vima-sim serve`
+//!   JSONL mode.
 //! * **Layer 2 (python/compile/model.py)** — JAX workload graphs, AOT-lowered
 //!   to HLO text in `artifacts/`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels modelling the
@@ -42,6 +46,7 @@ pub mod isa;
 pub mod mem3d;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod stats;
 pub mod sweep;
@@ -59,6 +64,7 @@ pub mod prelude {
         Experiment, FigTable, RunSpec,
     };
     pub use crate::intrinsics::{VecPtr, VimaProgram};
+    pub use crate::service::{Job, JobHandle, JobStatus, ServiceConfig, SimService};
     pub use crate::sim::{Machine, SimResult};
     pub use crate::sweep::{RunCell, SweepPlan, SweepRunner};
     pub use crate::trace::{Backend, KernelId, TraceParams};

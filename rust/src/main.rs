@@ -5,9 +5,10 @@
 //! Table-I configuration, and run the functional (PJRT-backed) smoke check.
 //!
 //! ```text
-//! vima-sim sweep [--jobs N] [--figs fig2,custom] [--csv DIR] [--quick]
+//! vima-sim sweep [--jobs N] [--figs fig2,custom|all] [--csv DIR] [--quick]
 //! vima-sim fig2|fig3|fig4|fig5|ablation|headline|custom|all [--quick]
 //! vima-sim run <workload> <backend> [--mb N] [--threads N] [--stats]
+//! vima-sim serve [--jobs N] [--cache N]   (JSONL jobs: stdin -> stdout)
 //! vima-sim bench [--quick] [--iters N] [--json FILE]
 //! vima-sim workloads          (list the registry: kernels + programs)
 //! vima-sim config [--config FILE]
@@ -20,11 +21,20 @@ use vima_sim::coordinator::workloads::SizeScale;
 use vima_sim::coordinator::{Experiment, FigTable};
 #[cfg(feature = "pjrt")]
 use vima_sim::runtime::{default_artifacts_dir, Engine};
+use vima_sim::service::{self, ServiceConfig, SimService};
 use vima_sim::sim::simulate_threads;
 use vima_sim::trace::{Backend, TraceParams};
 use vima_sim::util::cli::Args;
 use vima_sim::util::error::Result;
 use vima_sim::workload;
+
+/// Every figure name `sweep --figs` / `figure_tables` accepts.
+const FIG_NAMES: [&str; 7] =
+    ["fig2", "fig3", "fig4", "fig5", "ablation", "headline", "custom"];
+
+/// The default `sweep` set (everything except the custom-program figure,
+/// which `--figs custom` / `--figs all` opts into).
+const DEFAULT_FIGS: [&str; 6] = ["fig2", "fig3", "fig4", "fig5", "ablation", "headline"];
 
 const USAGE: &str = "\
 vima-sim — VIMA (Vector-In-Memory Architecture) paper-reproduction simulator
@@ -47,6 +57,13 @@ COMMANDS:
               workload: any registered name (see `vima-sim workloads`) —
               the 7 paper kernels plus Intrinsics-VIMA programs like
               saxpy / softmax; backends: avx vima hive
+  serve       Long-running service mode: read JSONL job requests from
+              stdin, write JSONL results to stdout (one line each, in
+              request order; the in-flight window simulates in parallel
+              with dedup). Request:
+                {"id": 1, "workload": "vecsum", "backend": "vima",
+                 "mb": 4, "threads": 2}
+              see EXPERIMENTS.md §Serving for the full protocol
   custom      Custom-workload figure: each registered Intrinsics-VIMA
               program, VIMA vs the AVX lowering of the same program
   bench       Simulator throughput benchmark: chunked execution engine vs
@@ -61,28 +78,21 @@ COMMANDS:
               and a binary built with `--features pjrt`)
 
 OPTIONS:
-  --jobs N         sweep worker threads (default: all cores; 1 = serial)
+  --jobs N         sweep/serve worker threads (default: all cores; 1 = serial)
+  --cache N        (serve) result-cache bound in cells (default 1024)
   --iters N        (bench) timed iterations per cell, median reported (3)
   --json FILE      (bench) write the JSON record to FILE
   --quick          1/16 dataset sizes (smoke runs)
   --config FILE    TOML overrides for Table I
   --out DIR        also write each table as CSV into DIR
   --csv DIR        (sweep) same as --out
-  --figs LIST      (sweep) comma-separated subset, e.g. fig2,fig5,custom
+  --figs LIST      (sweep) comma-separated subset, e.g. fig2,fig5,custom;
+                   'all' = every figure including custom
   --threads N      (run) data-parallel cores
   --mb N           (run) footprint in MiB
   --stats          (run) dump the full counter report
   --verbose        progress lines on stderr
 ";
-
-fn parse_backend(s: &str) -> Result<Backend> {
-    Ok(match s {
-        "avx" => Backend::Avx,
-        "vima" => Backend::Vima,
-        "hive" => Backend::Hive,
-        _ => bail!("unknown backend {s:?}"),
-    })
-}
 
 fn emit(table: &FigTable, out: Option<&str>) -> Result<()> {
     println!("{}", table.to_markdown());
@@ -117,7 +127,10 @@ fn figure_tables(exp: &Experiment, name: &str) -> Result<Vec<FigTable>> {
         "headline" => vec![exp.headline()?],
         "custom" => vec![exp.custom_programs()?],
         other => {
-            bail!("unknown figure {other:?}; expected fig2..fig5, ablation, headline, custom")
+            bail!(
+                "unknown figure {other:?}; valid figures: {} (or 'all' for every one)",
+                FIG_NAMES.join(", ")
+            )
         }
     })
 }
@@ -136,17 +149,28 @@ fn main() -> Result<()> {
     cfg.validate()?;
     let scale = if args.flag("quick") { SizeScale::Quick } else { SizeScale::Paper };
     let jobs = args.get_usize("jobs", 0);
-    let mut exp = Experiment::with_jobs(cfg.clone(), scale, jobs);
-    exp.verbose = args.flag("verbose");
+    // Built only by the figure-running commands: constructing an
+    // Experiment spawns its service worker pool, which `run`, `serve`,
+    // `bench`, etc. never use.
+    let make_exp = || {
+        let mut exp = Experiment::with_jobs(cfg.clone(), scale, jobs);
+        exp.verbose = args.flag("verbose");
+        exp
+    };
     let out = args.get("out");
 
     match cmd {
         "sweep" => {
-            let figs = args.get_list("figs").unwrap_or_else(|| {
-                ["fig2", "fig3", "fig4", "fig5", "ablation", "headline"]
-                    .map(String::from)
-                    .to_vec()
-            });
+            let exp = make_exp();
+            let figs = args
+                .get_list("figs")
+                .unwrap_or_else(|| DEFAULT_FIGS.map(String::from).to_vec());
+            // `--figs all`: the whole suite, custom figure included.
+            let figs: Vec<String> = if figs.iter().any(|f| f == "all") {
+                FIG_NAMES.map(String::from).to_vec()
+            } else {
+                figs
+            };
             let out = args.get("csv").or(out);
             let before = vima_sim::sim::run_invocations();
             for fig in &figs {
@@ -166,12 +190,14 @@ fn main() -> Result<()> {
             );
         }
         "fig2" | "fig3" | "fig4" | "fig5" | "headline" | "ablation" | "custom" => {
+            let exp = make_exp();
             for table in figure_tables(&exp, cmd)? {
                 emit(&table, out)?;
             }
         }
         "all" => {
-            for fig in ["fig2", "fig3", "fig4", "fig5", "ablation", "headline"] {
+            let exp = make_exp();
+            for fig in DEFAULT_FIGS {
                 for table in figure_tables(&exp, fig)? {
                     emit(&table, out)?;
                 }
@@ -218,9 +244,8 @@ fn main() -> Result<()> {
             let id = workload::resolve(
                 args.positional.get(1).map(String::as_str).unwrap_or_default(),
             )?;
-            let backend = parse_backend(
-                args.positional.get(2).map(String::as_str).unwrap_or_default(),
-            )?;
+            let backend: Backend =
+                args.positional.get(2).map(String::as_str).unwrap_or_default().parse()?;
             // Programs carry their own footprint; --mb overrides where the
             // workload allows it.
             let footprint = match args.get("mb") {
@@ -237,6 +262,34 @@ fn main() -> Result<()> {
             if args.flag("stats") {
                 print!("{}", r.report);
             }
+        }
+        "serve" => {
+            let cache = args.get_usize("cache", service::DEFAULT_CACHE_CAPACITY);
+            let svc = SimService::new(ServiceConfig {
+                base: cfg.clone(),
+                jobs,
+                cache_capacity: cache,
+                ..ServiceConfig::default()
+            });
+            eprintln!(
+                "[vima-sim] serve: reading JSONL jobs from stdin ({} worker(s), \
+                 cache {} cells); EOF ends the session",
+                svc.jobs(),
+                cache,
+            );
+            let stdin = std::io::stdin();
+            let summary = service::jsonl::serve(&svc, stdin.lock(), std::io::stdout())?;
+            let stats = svc.stats();
+            eprintln!(
+                "[vima-sim] serve: {} request(s) -> {} ok, {} failed; \
+                 {} unique simulation(s), {} cache hit(s), {} eviction(s)",
+                summary.requests,
+                summary.ok,
+                summary.failed,
+                stats.unique_runs,
+                stats.cache_hits,
+                stats.evictions,
+            );
         }
         "bench" => {
             let iters = args.get_usize("iters", 3) as u32;
@@ -313,7 +366,11 @@ fn main() -> Result<()> {
                    `cargo build --features pjrt` (requires the xla crate)")
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
-        other => bail!("unknown command {other:?}; see `vima-sim help`"),
+        other => bail!(
+            "unknown command {other:?}; valid commands: sweep, fig2, fig3, fig4, fig5, \
+             ablation, headline, custom, all, run, serve, bench, workloads, transpile, \
+             config, selftest, help"
+        ),
     }
     Ok(())
 }

@@ -1,0 +1,508 @@
+//! `vima-sim serve` — the JSONL request/response protocol.
+//!
+//! One request per line on stdin, one response per line on stdout, so any
+//! external harness can drive a long-running simulator process with a
+//! pipe. Requests are **flat** JSON objects (no nesting — the offline
+//! build is dependency-free, so both directions use the same hand-rolled
+//! JSON the `bench` module writes):
+//!
+//! ```text
+//! {"id": 1, "workload": "vecsum", "backend": "vima", "mb": 4, "threads": 2}
+//! ```
+//!
+//! Fields: `workload` (registry name, required), `backend`
+//! (`avx`/`vima`/`hive`, required), one of `mb` (MiB) or `footprint`
+//! (bytes) — default is the workload's own footprint — plus optional
+//! `threads` (default 1), `vector_bytes` (default 8192), and `id`, an
+//! arbitrary scalar echoed verbatim in the response.
+//!
+//! Responses (same order as the requests; the service still simulates the
+//! whole in-flight window in parallel and dedups identical cells):
+//!
+//! ```text
+//! {"id": 1, "status": "done", "workload": "VecSum", "backend": "VIMA", "threads": 2, "cycles": 123456, "seconds": 0.000041, "energy_j": 0.000972}
+//! {"id": 2, "status": "failed", "error": "unknown backend \"neon\"; valid backends: avx, vima, hive"}
+//! ```
+//!
+//! A malformed line is answered with a `failed` response and the stream
+//! keeps serving — a bad request must never take the service down.
+
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+
+use crate::bail;
+use crate::service::{Job, JobHandle, SimService};
+use crate::trace::{Backend, TraceParams};
+use crate::util::error::{Context, Error, Result};
+use crate::workload;
+
+/// A scalar JSON value (the protocol is flat by design).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl JsonValue {
+    /// Re-serialize the value as a JSON token (used to echo `id`).
+    fn to_json(&self) -> String {
+        match self {
+            JsonValue::Str(s) => format!("\"{}\"", escape(s)),
+            JsonValue::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            JsonValue::Bool(b) => b.to_string(),
+            JsonValue::Null => "null".to_string(),
+        }
+    }
+}
+
+/// Escape a string for embedding in a JSON document.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Parse one flat JSON object (`{"k": scalar, ...}`) into key/value pairs
+/// in document order. Nested objects/arrays are a typed error.
+pub fn parse_flat_object(line: &str) -> Result<Vec<(String, JsonValue)>> {
+    let mut p = Parser { s: line.as_bytes(), i: 0 };
+    p.ws();
+    p.eat(b'{')?;
+    let mut fields = Vec::new();
+    p.ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            let key = p.string()?;
+            p.eat(b':')?;
+            let value = p.value()?;
+            fields.push((key, value));
+            p.ws();
+            match p.next_byte()? {
+                b',' => continue,
+                b'}' => break,
+                other => bail!("expected ',' or '}}' after a field, got {:?}", other as char),
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.s.len() {
+        bail!("trailing bytes after the JSON object");
+    }
+    Ok(fields)
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn next_byte(&mut self) -> Result<u8> {
+        let b = self.peek().context("unexpected end of request line")?;
+        self.i += 1;
+        Ok(b)
+    }
+
+    fn eat(&mut self, want: u8) -> Result<()> {
+        self.ws();
+        match self.peek() {
+            Some(b) if b == want => {
+                self.i += 1;
+                Ok(())
+            }
+            Some(b) => bail!("expected {:?}, got {:?}", want as char, b as char),
+            None => bail!("expected {:?}, got end of line", want as char),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            match self.next_byte()? {
+                b'"' => break,
+                b'\\' => {
+                    let esc = self.next_byte()?;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'u' => {
+                            let mut code = 0u32;
+                            for _ in 0..4 {
+                                let h = self.next_byte()?;
+                                let d = (h as char)
+                                    .to_digit(16)
+                                    .with_context(|| format!("bad \\u hex digit {:?}", h as char))?;
+                                code = code * 16 + d;
+                            }
+                            let c = char::from_u32(code)
+                                .context("surrogate \\u escapes are not supported")?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => bail!("unsupported escape \\{}", other as char),
+                    }
+                }
+                b => out.push(b),
+            }
+        }
+        String::from_utf8(out).map_err(|_| Error::msg("request string is not valid UTF-8"))
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        self.ws();
+        match self.peek() {
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') if self.s[self.i..].starts_with(b"true") => {
+                self.i += 4;
+                Ok(JsonValue::Bool(true))
+            }
+            Some(b'f') if self.s[self.i..].starts_with(b"false") => {
+                self.i += 5;
+                Ok(JsonValue::Bool(false))
+            }
+            Some(b'n') if self.s[self.i..].starts_with(b"null") => {
+                self.i += 4;
+                Ok(JsonValue::Null)
+            }
+            Some(b'{') | Some(b'[') => {
+                bail!("nested objects/arrays are not part of the flat JSONL protocol")
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let start = self.i;
+                while self
+                    .peek()
+                    .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+                {
+                    self.i += 1;
+                }
+                let text = std::str::from_utf8(&self.s[start..self.i]).unwrap_or("");
+                let n: f64 = text
+                    .parse()
+                    .with_context(|| format!("bad number {text:?}"))?;
+                if !n.is_finite() {
+                    // `1e999` parses to inf; echoing it back (e.g. as an
+                    // `id`) would emit a line no JSON parser accepts.
+                    bail!("number out of range: {text}");
+                }
+                Ok(JsonValue::Num(n))
+            }
+            Some(c) => bail!("unexpected value starting with {:?}", c as char),
+            None => bail!("missing value"),
+        }
+    }
+}
+
+/// The request's `id` token, re-serialized for echoing (if present).
+pub fn request_id(fields: &[(String, JsonValue)]) -> Option<String> {
+    fields.iter().find(|(k, _)| k == "id").map(|(_, v)| v.to_json())
+}
+
+fn field_str<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+    match v {
+        JsonValue::Str(s) => Ok(s),
+        other => bail!("field {key:?} must be a string, got {}", other.to_json()),
+    }
+}
+
+fn field_num(v: &JsonValue, key: &str) -> Result<f64> {
+    match v {
+        JsonValue::Num(n) => Ok(*n),
+        other => bail!("field {key:?} must be a number, got {}", other.to_json()),
+    }
+}
+
+fn field_count(v: &JsonValue, key: &str) -> Result<u64> {
+    let n = field_num(v, key)?;
+    if n < 1.0 || n.fract() != 0.0 || n > u64::MAX as f64 {
+        bail!("field {key:?} must be a positive integer, got {n}");
+    }
+    Ok(n as u64)
+}
+
+/// Turn a parsed request into a [`Job`] (the service validates the cell
+/// itself at submission; this resolves names and shapes the parameters).
+pub fn request_job(fields: &[(String, JsonValue)]) -> Result<Job> {
+    let mut workload_name: Option<&str> = None;
+    let mut backend: Option<&str> = None;
+    let mut mb: Option<f64> = None;
+    let mut footprint: Option<u64> = None;
+    let mut threads: u64 = 1;
+    let mut vector_bytes: Option<u64> = None;
+    for (key, value) in fields {
+        match key.as_str() {
+            "id" => {}
+            "workload" => workload_name = Some(field_str(value, key)?),
+            "backend" => backend = Some(field_str(value, key)?),
+            "mb" => mb = Some(field_num(value, key)?),
+            "footprint" => footprint = Some(field_count(value, key)?),
+            "threads" => threads = field_count(value, key)?,
+            "vector_bytes" => vector_bytes = Some(field_count(value, key)?),
+            other => bail!(
+                "unknown request field {other:?}; expected id, workload, backend, \
+                 mb, footprint, threads, vector_bytes"
+            ),
+        }
+    }
+    let workload_name = workload_name.context("request is missing \"workload\"")?;
+    let id = workload::resolve(workload_name)?;
+    let backend: Backend = backend.context("request is missing \"backend\"")?.parse()?;
+    let footprint = match (footprint, mb) {
+        (Some(bytes), _) => bytes,
+        (None, Some(mb)) => {
+            if !mb.is_finite() || mb <= 0.0 {
+                bail!("field \"mb\" must be a positive number, got {mb}");
+            }
+            (mb * (1u64 << 20) as f64) as u64
+        }
+        (None, None) => workload::get(id)?.default_footprint(),
+    };
+    let mut params = TraceParams::new(id, backend, footprint);
+    if let Some(vb) = vector_bytes {
+        if vb > u32::MAX as u64 {
+            bail!("field \"vector_bytes\" is too large: {vb}");
+        }
+        params = params.with_vector_bytes(vb as u32);
+    }
+    params.threads = threads as usize;
+    Ok(Job::new(params))
+}
+
+/// Success response line.
+pub fn response_ok(id: Option<&str>, params: &TraceParams, r: &crate::sim::SimResult) -> String {
+    let mut s = String::from("{");
+    if let Some(id) = id {
+        s += &format!("\"id\": {id}, ");
+    }
+    s += &format!(
+        "\"status\": \"done\", \"workload\": \"{}\", \"backend\": \"{}\", \
+         \"threads\": {}, \"cycles\": {}, \"seconds\": {:.9}, \"energy_j\": {:.9}}}",
+        escape(&workload::name(params.workload)),
+        params.backend,
+        params.threads,
+        r.cycles,
+        r.seconds,
+        r.energy.total_j
+    );
+    s
+}
+
+/// Failure response line.
+pub fn response_err(id: Option<&str>, error: &str) -> String {
+    let mut s = String::from("{");
+    if let Some(id) = id {
+        s += &format!("\"id\": {id}, ");
+    }
+    s + &format!("\"status\": \"failed\", \"error\": \"{}\"}}", escape(error))
+}
+
+/// Totals of one [`serve`] session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub ok: u64,
+    pub failed: u64,
+}
+
+enum Item {
+    /// Request that never reached the scheduler (parse/shape error).
+    Immediate { id: Option<String>, error: String },
+    /// Submitted job: the writer blocks on its handle, in order.
+    Pending { id: Option<String>, params: TraceParams, handle: JobHandle },
+}
+
+/// Backpressure bound: how many requests may be in flight (submitted but
+/// not yet answered) before the reader stops pulling from stdin. Keeps a
+/// multi-million-line input from materializing its whole job table in
+/// memory — peak usage is O(window), not O(total requests) — while still
+/// giving the scheduler a deep parallel window.
+pub const SERVE_WINDOW: usize = 256;
+
+/// Serve JSONL requests from `input` until EOF, writing one response line
+/// per request to `output` **in request order**. Reading and responding
+/// are decoupled (the responder runs on its own scoped thread), so a
+/// harness may stream requests and read responses concurrently without
+/// deadlocking, and every job in the in-flight window (at most
+/// [`SERVE_WINDOW`] requests) runs through the service's parallel
+/// scheduler.
+pub fn serve<W: Write + Send>(
+    service: &SimService,
+    mut input: impl BufRead,
+    output: W,
+) -> Result<ServeSummary> {
+    let (tx, rx) = mpsc::sync_channel::<Item>(SERVE_WINDOW);
+    std::thread::scope(|scope| -> Result<ServeSummary> {
+        let writer = scope.spawn(move || -> Result<ServeSummary> {
+            let mut out = output;
+            let mut summary = ServeSummary::default();
+            for item in rx {
+                summary.requests += 1;
+                let line = match item {
+                    Item::Immediate { id, error } => {
+                        summary.failed += 1;
+                        response_err(id.as_deref(), &error)
+                    }
+                    Item::Pending { id, params, handle } => match handle.wait() {
+                        Ok(r) => {
+                            summary.ok += 1;
+                            response_ok(id.as_deref(), &params, &r)
+                        }
+                        Err(e) => {
+                            summary.failed += 1;
+                            response_err(id.as_deref(), &e.to_string())
+                        }
+                    },
+                };
+                writeln!(out, "{line}")?;
+                out.flush()?;
+            }
+            Ok(summary)
+        });
+
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if input.read_line(&mut line)? == 0 {
+                break;
+            }
+            let text = line.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let item = match parse_flat_object(text) {
+                Err(e) => Item::Immediate { id: None, error: format!("bad request line: {e}") },
+                Ok(fields) => {
+                    let id = request_id(&fields);
+                    match request_job(&fields) {
+                        Ok(job) => {
+                            let params = job.params;
+                            let handle = service.submit(job);
+                            Item::Pending { id, params, handle }
+                        }
+                        Err(e) => Item::Immediate { id, error: e.to_string() },
+                    }
+                }
+            };
+            if tx.send(item).is_err() {
+                break; // responder died (output error); stop reading
+            }
+        }
+        drop(tx);
+        writer
+            .join()
+            .unwrap_or_else(|_| Err(Error::msg("serve responder panicked")))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_objects() {
+        let f = parse_flat_object(
+            r#"{"id": 7, "workload": "vecsum", "quick": true, "note": "a\"b", "x": null}"#,
+        )
+        .unwrap();
+        assert_eq!(f[0], ("id".to_string(), JsonValue::Num(7.0)));
+        assert_eq!(f[1], ("workload".to_string(), JsonValue::Str("vecsum".into())));
+        assert_eq!(f[2], ("quick".to_string(), JsonValue::Bool(true)));
+        assert_eq!(f[3], ("note".to_string(), JsonValue::Str("a\"b".into())));
+        assert_eq!(f[4], ("x".to_string(), JsonValue::Null));
+        assert!(parse_flat_object("{}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for bad in [
+            "not json",
+            "{\"a\": }",
+            "{\"a\": 1",
+            "{\"a\": {\"nested\": 1}}",
+            "{\"a\": [1]}",
+            "{\"a\": 1} trailing",
+            "{\"a\": 1e999}", // overflows f64: would echo as invalid JSON
+
+        ] {
+            assert!(parse_flat_object(bad).is_err(), "{bad} must fail");
+        }
+    }
+
+    #[test]
+    fn unicode_escapes_decode() {
+        let f = parse_flat_object(r#"{"s": "café\n"}"#).unwrap();
+        assert_eq!(f[0].1, JsonValue::Str("café\n".into()));
+    }
+
+    #[test]
+    fn request_to_job_defaults_and_overrides() {
+        let fields =
+            parse_flat_object(r#"{"workload": "vecsum", "backend": "vima", "mb": 2, "threads": 2}"#)
+                .unwrap();
+        let job = request_job(&fields).unwrap();
+        assert_eq!(job.params.footprint, 2 << 20);
+        assert_eq!(job.params.threads, 2);
+        assert_eq!(job.params.vector_bytes, 8192);
+
+        // Missing required fields and unknown names are typed errors.
+        let missing = parse_flat_object(r#"{"backend": "vima"}"#).unwrap();
+        assert!(request_job(&missing).unwrap_err().to_string().contains("workload"));
+        let unknown =
+            parse_flat_object(r#"{"workload": "vecsum", "backend": "neon"}"#).unwrap();
+        let e = request_job(&unknown).unwrap_err().to_string();
+        assert!(e.contains("valid backends"), "{e}");
+    }
+
+    #[test]
+    fn id_tokens_echo_verbatim() {
+        let f = parse_flat_object(r#"{"id": "a-1", "workload": "x"}"#).unwrap();
+        assert_eq!(request_id(&f).as_deref(), Some("\"a-1\""));
+        let f = parse_flat_object(r#"{"id": 42}"#).unwrap();
+        assert_eq!(request_id(&f).as_deref(), Some("42"));
+        assert_eq!(request_id(&[]), None);
+    }
+
+    #[test]
+    fn response_lines_are_flat_json() {
+        let err = response_err(Some("7"), "boom \"quoted\"");
+        assert_eq!(err, r#"{"id": 7, "status": "failed", "error": "boom \"quoted\""}"#);
+        assert!(parse_flat_object(&err).is_ok(), "{err}");
+    }
+}

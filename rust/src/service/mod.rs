@@ -1,0 +1,807 @@
+//! Long-lived simulation service — the one front door for running
+//! simulations.
+//!
+//! Every entry point the crate used to expose separately (`sim::simulate`,
+//! `sim::simulate_threads`, [`SweepRunner`](crate::sweep::SweepRunner)
+//! plans, the `Experiment` figure drivers, the `vima-sim serve` JSONL mode)
+//! now funnels into a [`SimService`]: construct it once and submit [`Job`]s
+//! individually ([`submit`](SimService::submit)), in batches
+//! ([`submit_batch`](SimService::submit_batch)), or as whole
+//! [`SweepPlan`]s ([`submit_plan`](SimService::submit_plan) /
+//! [`run_plan`](SimService::run_plan)). Each submission returns a ticketed
+//! [`JobHandle`] with a typed [`JobStatus`]
+//! (`Queued`/`Running`/`Done`/`Failed`) and a blocking
+//! [`wait`](JobHandle::wait) for the [`SimResult`].
+//!
+//! The scheduler owns the three concerns the old entry points each solved
+//! partially:
+//!
+//! * **worker pool** — `jobs` long-lived threads (default
+//!   `available_parallelism()`) pull leader jobs from a shared FIFO deque;
+//!   workers outlive any single plan, so repeated submissions pay no
+//!   cold-start cost;
+//! * **machine pooling** — each worker keeps a [`MachinePool`] of up to a
+//!   few [`Machine`]s keyed by `(config, threads)` and calls
+//!   [`Machine::reset`] on reuse instead of reallocating the cache
+//!   hierarchy (reset-and-reuse is bit-identical to a fresh machine; see
+//!   `sim::tests::machine_reuse_matches_fresh_runs`);
+//! * **result cache + dedup** — results are cached under the cell's full
+//!   identity ([`CellKey`]: `TraceParams` + effective `SystemConfig`),
+//!   exactly as the sweep engine always keyed them, so equal keys never
+//!   simulate twice. A submission whose key is already **in flight** joins
+//!   the running leader instead of spawning a duplicate run — concurrent
+//!   submitters observe exactly-once execution per key. The cache is
+//!   **bounded**: a configurable capacity with LRU-ish eviction
+//!   (least-recently-touched entry evicted on overflow), with hit/miss/
+//!   evict accounting surfaced through [`SweepStats`].
+//!
+//! Determinism: the simulator is single-threaded and deterministic per
+//! cell, machine reuse is bit-identical to fresh machines, and the cache
+//! key is the cell's complete identity — so scheduling order, worker
+//! count, batching, and cache hits can never change a result. Sweep
+//! output through the service is bit-identical to the pre-service engine.
+//!
+//! A panicking simulation (a bug, not a typed error) is caught per job:
+//! the worker discards the possibly-inconsistent pooled machine, marks the
+//! job `Failed`, and keeps serving.
+
+pub mod jsonl;
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::config::SystemConfig;
+use crate::sim::{run_on, Machine, SimResult};
+use crate::sweep::{CellKey, RunCell, SweepPlan, SweepStats};
+use crate::trace::TraceParams;
+use crate::util::error::{Error, Result};
+use crate::workload;
+
+/// Default bound on the service result cache, in cached `SimResult`s. The
+/// full paper suite is 111 cells (61 unique), so the default never evicts
+/// mid-suite; long-lived `serve` processes can lower it with `--cache`.
+pub const DEFAULT_CACHE_CAPACITY: usize = 1024;
+
+/// Default per-worker [`MachinePool`] capacity. Figure sweeps cycle
+/// through a handful of config shapes (base, cache-size points, ablation
+/// overrides); a few pooled machines catch most reuse without hoarding
+/// memory.
+pub const DEFAULT_MACHINE_POOL: usize = 4;
+
+/// Construction parameters for a [`SimService`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Config a [`Job`] runs on when it carries no override.
+    pub base: SystemConfig,
+    /// Worker threads; `0` means `available_parallelism()`.
+    pub jobs: usize,
+    /// Result-cache bound (entries); clamped to at least 1.
+    pub cache_capacity: usize,
+    /// Per-worker machine-pool bound (machines); clamped to at least 1.
+    pub machine_pool: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            base: SystemConfig::default(),
+            jobs: 0,
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+            machine_pool: DEFAULT_MACHINE_POOL,
+        }
+    }
+}
+
+/// One unit of work: any registered workload x backend x footprint x
+/// threads, with an optional full-config override (`None` = the service's
+/// base config). The cell-identity fields live in [`TraceParams`].
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub params: TraceParams,
+    /// Full-config override; `None` runs on the service's base config.
+    pub cfg: Option<SystemConfig>,
+    /// Log one `[vima-sim] run <label>` line on stderr when this job
+    /// actually simulates (cache hits and joins stay silent).
+    pub verbose: bool,
+    /// Progress-label override (plan submissions pass the cell's own
+    /// label); derived from `params` when `None`.
+    pub label: Option<String>,
+}
+
+impl Job {
+    pub fn new(params: TraceParams) -> Self {
+        Self { params, cfg: None, verbose: false, label: None }
+    }
+
+    pub fn with_cfg(mut self, cfg: SystemConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    pub fn with_verbose(mut self, verbose: bool) -> Self {
+        self.verbose = verbose;
+        self
+    }
+}
+
+impl From<RunCell> for Job {
+    fn from(cell: RunCell) -> Self {
+        let params = cell.params();
+        let label = Some(cell.label());
+        Self { params, cfg: cell.cfg_override, verbose: false, label }
+    }
+}
+
+/// Lifecycle of a submitted [`Job`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobStatus {
+    /// Accepted; waiting for a worker (or for the in-flight leader run it
+    /// joined).
+    Queued,
+    /// A worker is simulating this job's cell right now.
+    Running,
+    /// Finished; [`JobHandle::wait`] returns the result immediately.
+    Done,
+    /// Rejected at submission (validation) or failed during simulation;
+    /// [`JobHandle::wait`] returns the error.
+    Failed,
+}
+
+/// Ticket for a submitted job. Dropping the handle abandons the job (the
+/// service forgets its bookkeeping once the run finishes); results stay
+/// available in the result cache either way.
+pub struct JobHandle {
+    id: u64,
+    shared: Arc<Shared>,
+}
+
+impl JobHandle {
+    /// Service-local ticket number (submission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Current typed status (non-blocking).
+    pub fn status(&self) -> JobStatus {
+        let st = self.shared.state.lock().unwrap();
+        st.table.get(&self.id).map(|e| e.status).unwrap_or(JobStatus::Failed)
+    }
+
+    /// Block until the job completes; returns its result (or the typed
+    /// error that failed it). Idempotent: waiting again returns the same
+    /// outcome.
+    pub fn wait(&self) -> Result<SimResult> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let outcome = {
+                let entry = st.table.get(&self.id).expect("job entry lives while handle does");
+                match entry.status {
+                    JobStatus::Done | JobStatus::Failed => {
+                        Some(entry.outcome.clone().expect("completed job has outcome"))
+                    }
+                    JobStatus::Queued | JobStatus::Running => None,
+                }
+            };
+            match outcome {
+                Some(Ok(r)) => return Ok((*r).clone()),
+                Some(Err(msg)) => return Err(Error::msg(msg)),
+                None => st = self.shared.done_cv.wait(st).unwrap(),
+            }
+        }
+    }
+}
+
+impl Drop for JobHandle {
+    fn drop(&mut self) {
+        let Ok(mut st) = self.shared.state.lock() else { return };
+        let completed = st
+            .table
+            .get(&self.id)
+            .map(|e| matches!(e.status, JobStatus::Done | JobStatus::Failed))
+            .unwrap_or(true);
+        if completed {
+            st.table.remove(&self.id);
+        } else if let Some(e) = st.table.get_mut(&self.id) {
+            // Still queued/running: the worker drops the entry on
+            // completion instead of storing an outcome nobody will read.
+            e.abandoned = true;
+        }
+    }
+}
+
+/// Per-job bookkeeping while a handle (or the scheduler) needs it.
+struct JobEntry {
+    params: TraceParams,
+    /// Effective (already base-resolved) configuration.
+    cfg: SystemConfig,
+    label: String,
+    verbose: bool,
+    status: JobStatus,
+    /// Set exactly once, at completion. `Err` carries the flattened
+    /// message (the in-tree [`Error`] is not `Clone`).
+    outcome: Option<Result<Arc<SimResult>, String>>,
+    /// Handle dropped before completion: drop the entry at completion.
+    abandoned: bool,
+}
+
+/// Bounded result cache: `CellKey -> SimResult`, least-recently-touched
+/// entry evicted when the capacity overflows ("LRU-ish": a full scan
+/// picks the victim — capacities are small and eviction is rare).
+struct ResultCache {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<CellKey, (Arc<SimResult>, u64)>,
+}
+
+impl ResultCache {
+    fn new(capacity: usize) -> Self {
+        Self { capacity: capacity.max(1), tick: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, key: &CellKey) -> Option<Arc<SimResult>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|slot| {
+            slot.1 = tick;
+            Arc::clone(&slot.0)
+        })
+    }
+
+    /// Insert and evict down to capacity; returns how many entries were
+    /// evicted.
+    fn insert(&mut self, key: CellKey, result: Arc<SimResult>) -> u64 {
+        self.tick += 1;
+        self.map.insert(key, (result, self.tick));
+        let mut evicted = 0;
+        while self.map.len() > self.capacity {
+            let victim = self.map.iter().min_by_key(|(_, slot)| slot.1).map(|(k, _)| k.clone());
+            let Some(k) = victim else { break };
+            self.map.remove(&k);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Per-worker machine reuse, pooled by `(config, threads)` shape: a cell
+/// whose shape matches a pooled machine re-runs on it after
+/// [`Machine::reset`] (bit-identical to a fresh machine) instead of
+/// reallocating the whole cache hierarchy. The least-recently-used
+/// machine is dropped when the pool overflows.
+pub struct MachinePool {
+    slots: Vec<PoolSlot>,
+    capacity: usize,
+    tick: u64,
+    /// Machines constructed (pool misses).
+    pub builds: u64,
+    /// Cells served by resetting a pooled machine.
+    pub reuses: u64,
+}
+
+struct PoolSlot {
+    threads: usize,
+    last_use: u64,
+    machine: Machine,
+}
+
+impl Default for MachinePool {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_MACHINE_POOL)
+    }
+}
+
+impl MachinePool {
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self { slots: Vec::new(), capacity: capacity.max(1), tick: 0, builds: 0, reuses: 0 }
+    }
+
+    /// Machines currently pooled.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Fetch a reset machine for this shape, building (and evicting) if no
+    /// pooled machine matches.
+    pub fn get(&mut self, cfg: &SystemConfig, threads: usize) -> &mut Machine {
+        self.tick += 1;
+        let tick = self.tick;
+        let found = self
+            .slots
+            .iter()
+            .position(|s| s.threads == threads && s.machine.cfg == *cfg);
+        if let Some(i) = found {
+            self.reuses += 1;
+            self.slots[i].last_use = tick;
+            self.slots[i].machine.reset();
+            return &mut self.slots[i].machine;
+        }
+        self.builds += 1;
+        if self.slots.len() >= self.capacity {
+            let oldest = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(i, _)| i);
+            if let Some(i) = oldest {
+                self.slots.swap_remove(i);
+            }
+        }
+        self.slots.push(PoolSlot { threads, last_use: tick, machine: Machine::new(cfg, threads) });
+        let slot = self.slots.last_mut().expect("just pushed");
+        &mut slot.machine
+    }
+
+    /// Drop the pooled machine for this shape (used after a panic, when
+    /// the machine's state can no longer be trusted).
+    pub fn discard(&mut self, cfg: &SystemConfig, threads: usize) {
+        self.slots.retain(|s| !(s.threads == threads && s.machine.cfg == *cfg));
+    }
+}
+
+struct State {
+    /// Leader job ids awaiting a worker, FIFO.
+    queue: VecDeque<u64>,
+    /// Every live job (handle not yet dropped, or not yet completed).
+    table: HashMap<u64, JobEntry>,
+    /// Key -> leader job id, for submissions to join while a cell is
+    /// queued or running.
+    leaders: HashMap<CellKey, u64>,
+    /// Leader job id -> jobs that joined its run.
+    followers: HashMap<u64, Vec<u64>>,
+    cache: ResultCache,
+    stats: SweepStats,
+    next_id: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers sleep here while the queue is empty.
+    work_cv: Condvar,
+    /// Handles sleep here while their job is queued/running.
+    done_cv: Condvar,
+}
+
+/// The service: a worker pool + bounded result cache behind a submission
+/// queue. See the module docs for the scheduling contract.
+pub struct SimService {
+    shared: Arc<Shared>,
+    base: SystemConfig,
+    jobs: usize,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl SimService {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        let jobs = resolve_jobs(cfg.jobs);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                table: HashMap::new(),
+                leaders: HashMap::new(),
+                followers: HashMap::new(),
+                cache: ResultCache::new(cfg.cache_capacity),
+                stats: SweepStats::default(),
+                next_id: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (0..jobs)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                let pool = cfg.machine_pool;
+                std::thread::Builder::new()
+                    .name(format!("vima-sim-worker-{i}"))
+                    .spawn(move || worker_loop(sh, pool))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        Self { shared, base: cfg.base, jobs, workers }
+    }
+
+    /// Service over a base config with default pool/cache sizing.
+    pub fn with_base(base: SystemConfig) -> Self {
+        Self::new(ServiceConfig { base, ..ServiceConfig::default() })
+    }
+
+    /// Worker-pool width.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// The config jobs without an override run on.
+    pub fn base(&self) -> &SystemConfig {
+        &self.base
+    }
+
+    /// Scheduler accounting across everything ever submitted.
+    pub fn stats(&self) -> SweepStats {
+        self.shared.state.lock().unwrap().stats
+    }
+
+    /// Number of distinct cells currently cached.
+    pub fn cached_cells(&self) -> usize {
+        self.shared.state.lock().unwrap().cache.len()
+    }
+
+    /// Submit one job. Never blocks on simulation: invalid jobs come back
+    /// already `Failed`, cached cells already `Done`, and everything else
+    /// is `Queued` (either as a leader or joined to an in-flight run).
+    pub fn submit(&self, job: Job) -> JobHandle {
+        let mut st = self.shared.state.lock().unwrap();
+        let id = self.submit_locked(&mut st, job);
+        drop(st);
+        JobHandle { id, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Submit a batch atomically: no worker can complete (and no other
+    /// submitter can interleave) between the first and last job, so
+    /// intra-batch duplicates deterministically join their leader.
+    pub fn submit_batch(&self, jobs: Vec<Job>) -> Vec<JobHandle> {
+        let mut st = self.shared.state.lock().unwrap();
+        let ids: Vec<u64> = jobs.into_iter().map(|j| self.submit_locked(&mut st, j)).collect();
+        drop(st);
+        ids.into_iter().map(|id| JobHandle { id, shared: Arc::clone(&self.shared) }).collect()
+    }
+
+    /// Submit every cell of a plan (against the service base config) as
+    /// one batch; handles come back in plan order.
+    pub fn submit_plan(&self, plan: &SweepPlan) -> Vec<JobHandle> {
+        self.submit_batch(plan.cells().iter().cloned().map(Job::from).collect())
+    }
+
+    /// Blocking plan execution — the sweep engine's contract: pre-validate
+    /// every cell (fail fast with the cell label, before any simulation),
+    /// submit the batch, and collect results in plan order. `base`
+    /// overrides the service base for cells without their own override.
+    pub fn run_plan(
+        &self,
+        base: &SystemConfig,
+        plan: &SweepPlan,
+        verbose: bool,
+    ) -> Result<Vec<SimResult>> {
+        for cell in plan.cells() {
+            cell.params()
+                .check()
+                .map_err(|e| e.context(format!("sweep cell {}", cell.label())))?;
+        }
+        let jobs: Vec<Job> = plan
+            .cells()
+            .iter()
+            .map(|cell| Job {
+                params: cell.params(),
+                cfg: Some(cell.cfg_override.clone().unwrap_or_else(|| base.clone())),
+                verbose,
+                label: Some(cell.label()),
+            })
+            .collect();
+        let handles = self.submit_batch(jobs);
+        let mut out = Vec::with_capacity(handles.len());
+        for (handle, cell) in handles.iter().zip(plan.cells()) {
+            out.push(
+                handle
+                    .wait()
+                    .map_err(|e| e.context(format!("sweep cell {}", cell.label())))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Core submission, under the state lock. Returns the job id.
+    fn submit_locked(&self, st: &mut State, job: Job) -> u64 {
+        let id = st.next_id;
+        st.next_id += 1;
+        st.stats.cells += 1;
+
+        let cfg = job.cfg.clone().unwrap_or_else(|| self.base.clone());
+        let overridden = job.cfg.as_ref().is_some_and(|c| *c != self.base);
+        let mut entry = JobEntry {
+            params: job.params,
+            cfg,
+            label: String::new(),
+            verbose: job.verbose,
+            status: JobStatus::Queued,
+            outcome: None,
+            abandoned: false,
+        };
+
+        // Validate before normalizing: `with_threads` asserts on zero.
+        let checked = validate_job(&entry.params, &entry.cfg);
+        if let Err(e) = checked {
+            entry.status = JobStatus::Failed;
+            entry.outcome = Some(Err(e.to_string()));
+            st.table.insert(id, entry);
+            return id;
+        }
+        // Normalize to the cell-level (thread 0) view so a job built from
+        // a per-thread `TraceParams` shares the cell's cache identity.
+        entry.params = entry.params.with_threads(0, entry.params.threads);
+        entry.label =
+            job.label.unwrap_or_else(|| job_label(&entry.params, overridden));
+
+        let key = CellKey::new(entry.params, entry.cfg.clone());
+        if let Some(result) = st.cache.get(&key) {
+            st.stats.cache_hits += 1;
+            entry.status = JobStatus::Done;
+            entry.outcome = Some(Ok(result));
+            st.table.insert(id, entry);
+            return id;
+        }
+        if let Some(&leader) = st.leaders.get(&key) {
+            // Join the in-flight run: exactly-once execution per key.
+            st.stats.cache_hits += 1;
+            entry.status = st.table.get(&leader).map(|e| e.status).unwrap_or(JobStatus::Queued);
+            st.followers.entry(leader).or_default().push(id);
+            st.table.insert(id, entry);
+            return id;
+        }
+        st.stats.unique_runs += 1;
+        st.stats.cache_misses += 1;
+        st.leaders.insert(key, id);
+        st.queue.push_back(id);
+        st.table.insert(id, entry);
+        self.shared.work_cv.notify_one();
+        id
+    }
+}
+
+impl Drop for SimService {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            // Fail whatever never reached a worker so waiters can't hang;
+            // in-flight leaders complete normally before workers exit.
+            while let Some(id) = st.queue.pop_front() {
+                let mut ids = vec![id];
+                ids.extend(st.followers.remove(&id).unwrap_or_default());
+                for jid in ids {
+                    if let Some(e) = st.table.get_mut(&jid) {
+                        e.status = JobStatus::Failed;
+                        e.outcome =
+                            Some(Err("service shut down before the job ran".to_string()));
+                    }
+                }
+            }
+        }
+        self.shared.work_cv.notify_all();
+        self.shared.done_cv.notify_all();
+        for handle in std::mem::take(&mut self.workers) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Submission-time validation: everything that would otherwise panic in a
+/// worker (`Machine::new` thread bounds) or fail later anyway
+/// (`TraceParams::check`).
+fn validate_job(params: &TraceParams, cfg: &SystemConfig) -> Result<()> {
+    crate::ensure!(params.threads >= 1, "job needs at least one thread");
+    crate::ensure!(
+        params.threads <= cfg.core.num_cores,
+        "job wants {} threads but the config has {} cores",
+        params.threads,
+        cfg.core.num_cores
+    );
+    params.check()
+}
+
+/// Progress label (mirrors `RunCell::label`, which the sweep engine
+/// printed before the service existed).
+fn job_label(params: &TraceParams, overridden: bool) -> String {
+    let mut s = format!(
+        "{}/{} {:.1}MB x{}",
+        workload::name(params.workload),
+        params.backend,
+        params.footprint as f64 / (1 << 20) as f64,
+        params.threads
+    );
+    if params.vector_bytes != 8192 {
+        s += &format!(" vb={}", params.vector_bytes);
+    }
+    if overridden {
+        s += " [cfg]";
+    }
+    s
+}
+
+/// `jobs = 0` means `available_parallelism()`.
+pub(crate) fn resolve_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        jobs
+    }
+}
+
+/// Worker body: claim a leader, simulate it on a pooled machine, publish
+/// the outcome to the leader and everyone who joined it.
+fn worker_loop(shared: Arc<Shared>, pool_capacity: usize) {
+    let mut pool = MachinePool::with_capacity(pool_capacity);
+    loop {
+        let (id, params, cfg, label, verbose) = {
+            let mut st = shared.state.lock().unwrap();
+            let id = loop {
+                if let Some(id) = st.queue.pop_front() {
+                    break id;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            };
+            let follower_ids = st.followers.get(&id).cloned().unwrap_or_default();
+            for jid in std::iter::once(id).chain(follower_ids) {
+                if let Some(e) = st.table.get_mut(&jid) {
+                    e.status = JobStatus::Running;
+                }
+            }
+            let e = st.table.get(&id).expect("leader entry");
+            (id, e.params, e.cfg.clone(), e.label.clone(), e.verbose)
+        };
+
+        if verbose {
+            eprintln!("[vima-sim] run {label}");
+        }
+        let outcome = match catch_unwind(AssertUnwindSafe(|| {
+            run_on(pool.get(&cfg, params.threads), params)
+        })) {
+            Ok(Ok(result)) => Ok(Arc::new(result)),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(panic) => {
+                // The machine may be mid-run: never reuse it.
+                pool.discard(&cfg, params.threads);
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".to_string());
+                Err(format!("simulation panicked: {msg}"))
+            }
+        };
+
+        let mut st = shared.state.lock().unwrap();
+        let key = CellKey::new(params, cfg);
+        if let Ok(result) = &outcome {
+            let evicted = st.cache.insert(key.clone(), Arc::clone(result));
+            st.stats.evictions += evicted;
+        }
+        st.leaders.remove(&key);
+        let mut ids = vec![id];
+        ids.extend(st.followers.remove(&id).unwrap_or_default());
+        for jid in ids {
+            let abandoned = st.table.get(&jid).map(|e| e.abandoned).unwrap_or(true);
+            if abandoned {
+                st.table.remove(&jid);
+                continue;
+            }
+            let e = st.table.get_mut(&jid).expect("checked above");
+            e.status = if outcome.is_ok() { JobStatus::Done } else { JobStatus::Failed };
+            e.outcome = Some(outcome.clone());
+        }
+        drop(st);
+        shared.done_cv.notify_all();
+    }
+}
+
+/// The process-default service behind `sim::simulate` /
+/// `sim::simulate_threads`: default config base, `available_parallelism()`
+/// workers, default cache bound. Built lazily on first use and never torn
+/// down (idle workers just sleep on the queue).
+pub fn default_service() -> &'static SimService {
+    static DEFAULT: OnceLock<SimService> = OnceLock::new();
+    DEFAULT.get_or_init(|| SimService::new(ServiceConfig::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Backend, KernelId};
+
+    fn params(kernel: KernelId, backend: Backend, mb: u64) -> TraceParams {
+        TraceParams::new(kernel, backend, mb << 20)
+    }
+
+    fn small_service(jobs: usize) -> SimService {
+        SimService::new(ServiceConfig { jobs, ..ServiceConfig::default() })
+    }
+
+    #[test]
+    fn submit_and_wait_round_trip() {
+        let svc = small_service(2);
+        let h = svc.submit(Job::new(params(KernelId::MemSet, Backend::Avx, 1)));
+        let r = h.wait().unwrap();
+        assert!(r.cycles > 0);
+        assert_eq!(h.status(), JobStatus::Done);
+    }
+
+    #[test]
+    fn duplicate_submissions_share_one_run() {
+        let svc = small_service(2);
+        let job = Job::new(params(KernelId::MemSet, Backend::Vima, 1));
+        let handles = svc.submit_batch(vec![job.clone(), job.clone(), job]);
+        let results: Vec<_> = handles.iter().map(|h| h.wait().unwrap()).collect();
+        assert_eq!(results[0].cycles, results[1].cycles);
+        assert_eq!(results[0].cycles, results[2].cycles);
+        let stats = svc.stats();
+        assert_eq!(stats.cells, 3);
+        assert_eq!(stats.unique_runs, 1);
+        assert_eq!(stats.cache_hits, 2);
+        assert_eq!(stats.cache_misses, 1);
+    }
+
+    #[test]
+    fn invalid_job_fails_fast_with_typed_error() {
+        let svc = small_service(1);
+        // MLP has no HIVE lowering.
+        let h = svc.submit(Job::new(params(KernelId::Mlp, Backend::Hive, 4)));
+        assert_eq!(h.status(), JobStatus::Failed);
+        let e = h.wait().unwrap_err().to_string();
+        assert!(e.contains("HIVE"), "{e}");
+
+        // Thread counts beyond the config are a typed error, not a panic.
+        let mut p = params(KernelId::MemSet, Backend::Avx, 1);
+        p.threads = 10_000;
+        let e = svc.submit(Job::new(p)).wait().unwrap_err().to_string();
+        assert!(e.contains("threads"), "{e}");
+    }
+
+    #[test]
+    fn cache_eviction_is_bounded_and_counted() {
+        let svc = SimService::new(ServiceConfig {
+            jobs: 1,
+            cache_capacity: 2,
+            ..ServiceConfig::default()
+        });
+        for mb in [1u64, 2, 3] {
+            svc.submit(Job::new(params(KernelId::MemSet, Backend::Avx, mb))).wait().unwrap();
+        }
+        assert_eq!(svc.cached_cells(), 2);
+        let stats = svc.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.unique_runs, 3);
+        // The evicted (least-recently-touched) cell re-simulates...
+        svc.submit(Job::new(params(KernelId::MemSet, Backend::Avx, 1))).wait().unwrap();
+        assert_eq!(svc.stats().unique_runs, 4);
+        // ...while a resident cell is a pure hit.
+        svc.submit(Job::new(params(KernelId::MemSet, Backend::Avx, 3))).wait().unwrap();
+        assert_eq!(svc.stats().unique_runs, 4);
+    }
+
+    #[test]
+    fn machine_pool_reuses_and_evicts() {
+        let cfg = SystemConfig::default();
+        let mut pool = MachinePool::with_capacity(2);
+        pool.get(&cfg, 1);
+        pool.get(&cfg, 1);
+        assert_eq!((pool.builds, pool.reuses), (1, 1));
+        pool.get(&cfg, 2);
+        assert_eq!(pool.len(), 2);
+        pool.get(&cfg, 4); // overflows: evicts the LRU (threads=1) machine
+        assert_eq!(pool.len(), 2);
+        pool.get(&cfg, 1); // rebuild after eviction
+        assert_eq!((pool.builds, pool.reuses), (4, 1));
+    }
+
+    #[test]
+    fn results_match_the_plain_entry_points() {
+        let svc = small_service(2);
+        let p = params(KernelId::VecSum, Backend::Vima, 1);
+        let via_service = svc.submit(Job::new(p)).wait().unwrap();
+        let direct = crate::sim::simulate(&SystemConfig::default(), p).unwrap();
+        assert_eq!(via_service.cycles, direct.cycles);
+        assert_eq!(via_service.report, direct.report);
+    }
+}

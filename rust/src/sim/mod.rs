@@ -44,13 +44,33 @@ pub struct SimResult {
 
 impl SimResult {
     /// Speedup of `self` relative to a baseline run.
+    ///
+    /// Degenerate inputs are guarded instead of leaking `inf`/`NaN` into
+    /// figure tables and geomeans: two zero-cycle runs compare as 1.0
+    /// (equal), and a zero-cycle `self` against a real baseline saturates
+    /// to `f64::MAX`.
     pub fn speedup_vs(&self, baseline: &SimResult) -> f64 {
-        baseline.cycles as f64 / self.cycles as f64
+        guarded_ratio(baseline.cycles as f64, self.cycles as f64)
     }
 
-    /// Energy of `self` relative to a baseline run (1.0 = same).
+    /// Energy of `self` relative to a baseline run (1.0 = same). Zero-joule
+    /// baselines are guarded like [`speedup_vs`](Self::speedup_vs): 0/0 is
+    /// 1.0, and a real numerator over a zero baseline saturates to
+    /// `f64::MAX` instead of returning `inf`.
     pub fn energy_ratio_vs(&self, baseline: &SimResult) -> f64 {
-        self.energy.total_j / baseline.energy.total_j
+        guarded_ratio(self.energy.total_j, baseline.energy.total_j)
+    }
+}
+
+/// `num / den` with zero-denominator guards: finite for all finite inputs
+/// (0/0 → 1.0, x/0 → `f64::MAX`), untouched whenever `den > 0`.
+fn guarded_ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else if num == 0.0 {
+        1.0
+    } else {
+        f64::MAX
     }
 }
 
@@ -365,26 +385,40 @@ impl Machine {
 /// count already carried in `params` (1 for freshly built params) — so a
 /// multi-threaded `RunCell::params()` simulated directly agrees with the
 /// sweep result for the same cache key.
+///
+/// This is now a thin wrapper over the process-default
+/// [`SimService`](crate::service::SimService): the job runs on its
+/// long-lived worker pool, machines are pooled and reset instead of
+/// rebuilt, and a repeated call is a result-cache hit. Results are
+/// bit-identical to a fresh `Machine::new` + [`run_on`] (the simulator is
+/// deterministic and reset ≡ fresh; see `machine_reuse_matches_fresh_runs`).
 pub fn simulate(cfg: &SystemConfig, params: crate::trace::TraceParams) -> Result<SimResult> {
     simulate_threads(cfg, params, params.threads)
 }
 
 /// Simulate a data-parallel workload over an explicit `threads` override
-/// (replaces whatever thread count `params` carries).
+/// (replaces whatever thread count `params` carries). Like [`simulate`],
+/// a wrapper over the process-default service — invalid thread counts are
+/// typed errors now, not `Machine::new` panics.
 pub fn simulate_threads(
     cfg: &SystemConfig,
     params: TraceParams,
     threads: usize,
 ) -> Result<SimResult> {
-    let mut machine = Machine::new(cfg, threads);
-    run_on(&mut machine, params.with_threads(0, threads))
+    let mut p = params;
+    p.thread = 0;
+    p.threads = threads;
+    crate::service::default_service()
+        .submit(crate::service::Job::new(p).with_cfg(cfg.clone()))
+        .wait()
 }
 
 /// Run one data-parallel workload (`params.threads` cores) on an existing
-/// (fresh or just-reset) machine. This is the sweep engine's entry point:
-/// workers keep a machine alive across cells with the same `(config,
-/// threads)` shape and call [`Machine::reset`] between runs instead of
-/// reallocating the whole hierarchy.
+/// (fresh or just-reset) machine. This is the execution primitive the
+/// [`service`](crate::service) workers call: they pool machines per
+/// `(config, threads)` shape and call [`Machine::reset`] between runs
+/// instead of reallocating the whole hierarchy. Callers who own a machine
+/// (benchmarks, the transpile demo) use it directly.
 ///
 /// The workload comes from the registry: its sampling-extrapolation factor
 /// (DESIGN.md §Sampling) is applied, and unknown workloads / unsupported
@@ -514,6 +548,44 @@ mod tests {
         let r = simulate(&c, TraceParams::new(KernelId::VecSum, Backend::Hive, 1 << 20)).unwrap();
         assert!(r.cycles > 0);
         assert!(r.report.get("hive.transactions").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ratio_guards_zero_baselines() {
+        let zero = SimResult {
+            cycles: 0,
+            seconds: 0.0,
+            energy: crate::energy::EnergyBreakdown::default(),
+            report: StatsReport::new(),
+        };
+        let mut real = zero.clone();
+        real.cycles = 1000;
+        real.energy.total_j = 0.5;
+
+        // 0/0 pins to 1.0 (equal), never NaN.
+        assert_eq!(zero.speedup_vs(&zero), 1.0);
+        assert_eq!(zero.energy_ratio_vs(&zero), 1.0);
+        // A zero denominator saturates finite instead of returning inf.
+        assert_eq!(zero.speedup_vs(&real), f64::MAX);
+        assert_eq!(real.energy_ratio_vs(&zero), f64::MAX);
+        // Zero numerators over real denominators are plain zero...
+        assert_eq!(real.speedup_vs(&zero), 0.0);
+        assert_eq!(zero.energy_ratio_vs(&real), 0.0);
+        // ...and everything stays finite (geomean/max reductions survive).
+        for v in [
+            zero.speedup_vs(&real),
+            real.speedup_vs(&zero),
+            zero.energy_ratio_vs(&real),
+            real.energy_ratio_vs(&zero),
+        ] {
+            assert!(v.is_finite(), "{v}");
+        }
+        // Real runs are untouched by the guard.
+        let mut twice = real.clone();
+        twice.cycles = 2000;
+        twice.energy.total_j = 1.0;
+        assert_eq!(real.speedup_vs(&twice), 2.0);
+        assert_eq!(real.energy_ratio_vs(&twice), 0.5);
     }
 
     #[test]

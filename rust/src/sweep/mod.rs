@@ -1,42 +1,49 @@
-//! Declarative sweep engine — the experiment path's run grid.
+//! Declarative sweep grids — the experiment path's run-plan vocabulary.
 //!
 //! The paper's figures are grids of `(kernel × backend × threads × size ×
 //! config)` simulation cells, and many cells recur across figures (every
-//! figure normalizes to the same single-thread AVX baselines). Instead of
-//! hand-rolled serial loops per figure, the coordinator now *declares* a
-//! [`SweepPlan`] of [`RunCell`]s and hands it to a [`SweepRunner`], which:
+//! figure normalizes to the same single-thread AVX baselines). The
+//! coordinator *declares* a [`SweepPlan`] of [`RunCell`]s; execution —
+//! worker pool, machine pooling, result caching, dedup — lives in the
+//! [`service`](crate::service) layer, the crate's single scheduler.
+//! [`SweepRunner`] survives as a thin façade over an owned
+//! [`SimService`]:
 //!
 //! * **deduplicates** — cells are keyed by their full identity
 //!   ([`CellKey`]: the cell's `Eq + Hash` [`TraceParams`] — workload,
 //!   backend, footprint, threads, vector size — plus the complete
-//!   [`SystemConfig`]) in a persistent result cache, so a cell
-//!   shared by fig3/fig4/fig5 simulates exactly once per runner (across
-//!   *sequential* `run` calls — two `run`s racing on the same runner may
-//!   both simulate a cell neither has cached yet; results are unaffected,
-//!   the work is just duplicated);
-//! * **parallelizes** — unique cells execute on a `std::thread::scope`
-//!   worker pool (default `available_parallelism()`, `--jobs N` override;
-//!   no extra dependencies). Each simulation is single-threaded and
-//!   deterministic, so scheduling order cannot change any result: serial
-//!   (`jobs = 1`) and parallel runs produce bit-identical tables;
-//! * **reuses machines** — each worker keeps its [`Machine`] alive across
-//!   cells with the same `(config, threads)` shape and calls
-//!   [`Machine::reset`] instead of reallocating the cache hierarchy
-//!   (see [`MachineCache`]).
+//!   [`SystemConfig`]) in the service's result cache, so a cell shared by
+//!   fig3/fig4/fig5 simulates exactly once while cached. Unlike the old
+//!   engine, concurrent submissions racing on an uncached cell now *join*
+//!   the in-flight run instead of simulating twice;
+//! * **parallelizes** — unique cells execute on the service's long-lived
+//!   worker pool (default `available_parallelism()`, `--jobs N`
+//!   override). Each simulation is single-threaded and deterministic, so
+//!   scheduling order cannot change any result: serial (`jobs = 1`) and
+//!   parallel runs produce bit-identical tables;
+//! * **reuses machines** — workers pool [`Machine`](crate::sim::Machine)s
+//!   per `(config, threads)` shape and reset them between cells (see
+//!   [`MachineCache`]).
+//!
+//! The result cache is **bounded** (default
+//! [`DEFAULT_CACHE_CAPACITY`](crate::service::DEFAULT_CACHE_CAPACITY),
+//! far above the 111-cell paper suite) with LRU-ish eviction;
+//! [`SweepStats`] reports hits, misses, and evictions.
 //!
 //! Results come back in plan order, so callers assemble figure tables by
 //! the indices [`SweepPlan::push`] returned.
 
-use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
 use crate::config::SystemConfig;
 use crate::coordinator::workloads::SizedWorkload;
-use crate::sim::{run_on, Machine, SimResult};
+use crate::service::{ServiceConfig, SimService, DEFAULT_CACHE_CAPACITY};
+use crate::sim::SimResult;
 use crate::trace::{Backend, TraceParams};
 use crate::util::error::Result;
 use crate::workload::{self, WorkloadId};
+
+/// Per-worker machine reuse (kept under its historical sweep-engine name;
+/// the implementation is the service's machine pool).
+pub use crate::service::MachinePool as MachineCache;
 
 /// One cell of the run grid: a workload on a backend with a thread count
 /// and an optional configuration override.
@@ -83,14 +90,14 @@ impl RunCell {
     }
 
     /// Trace-generator parameters for this cell (per-thread slicing happens
-    /// inside [`run_on`]).
+    /// inside [`run_on`](crate::sim::run_on)).
     pub fn params(&self) -> TraceParams {
         TraceParams::new(self.workload, self.backend, self.footprint)
             .with_vector_bytes(self.vector_bytes)
             .with_threads(0, self.threads)
     }
 
-    fn effective_cfg<'a>(&'a self, base: &'a SystemConfig) -> &'a SystemConfig {
+    pub(crate) fn effective_cfg<'a>(&'a self, base: &'a SystemConfig) -> &'a SystemConfig {
         self.cfg_override.as_ref().unwrap_or(base)
     }
 
@@ -98,7 +105,7 @@ impl RunCell {
     /// hashes identically to no override — identity is by value, not by
     /// provenance.
     pub fn key(&self, base: &SystemConfig) -> CellKey {
-        CellKey { params: self.params(), cfg: self.effective_cfg(base).clone() }
+        CellKey::new(self.params(), self.effective_cfg(base).clone())
     }
 
     /// Progress label for verbose runs.
@@ -129,6 +136,14 @@ impl RunCell {
 pub struct CellKey {
     params: TraceParams,
     cfg: SystemConfig,
+}
+
+impl CellKey {
+    /// Identity is by value: any `(params, effective config)` pair keys
+    /// the same cache slot no matter which entry point built it.
+    pub fn new(params: TraceParams, cfg: SystemConfig) -> Self {
+        Self { params, cfg }
+    }
 }
 
 /// An ordered list of cells; [`push`](Self::push) returns the index used to
@@ -162,78 +177,71 @@ impl SweepPlan {
     }
 }
 
-/// Per-worker machine reuse: consecutive cells sharing a `(config,
-/// threads)` shape re-run on a [`Machine::reset`] machine instead of a
-/// fresh allocation.
-#[derive(Default)]
-pub struct MachineCache {
-    machine: Option<Machine>,
-    pub reuses: u64,
-    pub builds: u64,
-}
-
-impl MachineCache {
-    pub fn get(&mut self, cfg: &SystemConfig, threads: usize) -> &mut Machine {
-        let reusable =
-            self.machine.as_ref().is_some_and(|m| m.threads() == threads && m.cfg == *cfg);
-        if reusable {
-            self.reuses += 1;
-            let m = self.machine.as_mut().unwrap();
-            m.reset();
-            m
-        } else {
-            self.builds += 1;
-            self.machine = Some(Machine::new(cfg, threads));
-            self.machine.as_mut().unwrap()
-        }
-    }
-}
-
-/// Dedup accounting across every plan a runner has executed.
+/// Scheduler accounting across everything a service (or runner) has
+/// executed.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SweepStats {
-    /// Cells requested across all plans (before dedup).
+    /// Cells requested across all submissions (before dedup).
     pub cells: u64,
     /// Cells that actually simulated (`Machine::run` invocations).
     pub unique_runs: u64,
-    /// Cells answered from the result cache (or deduped within a plan).
+    /// Cells served without a new simulation: result-cache hits plus
+    /// submissions that joined an in-flight run of the same key.
     pub cache_hits: u64,
+    /// Cache lookups that scheduled a new simulation. Every miss runs
+    /// exactly once, so this tracks `unique_runs`; it is kept explicit as
+    /// the cache-contract counterpart of `cache_hits`/`evictions`.
+    pub cache_misses: u64,
+    /// Results evicted by the bounded cache (an evicted cell re-simulates
+    /// if requested again).
+    pub evictions: u64,
 }
 
-/// Executes [`SweepPlan`]s against a persistent, thread-safe result cache.
+/// Executes [`SweepPlan`]s — a façade over an owned [`SimService`] (the
+/// historical sweep-engine entry point; new code can talk to the service
+/// directly).
 ///
-/// Dedup is exact across sequential `run` calls. The runner is `Sync`, but
-/// concurrent `run` calls do not coordinate in-flight work: cells neither
-/// call has cached yet may simulate in both (results identical — the
-/// simulator is deterministic — only wall-clock and the stats counters
-/// notice). The coordinator only issues sequential runs.
+/// Dedup is exact across sequential `run` calls *and* — new with the
+/// service — across concurrent ones: racing `run`s on an uncached cell
+/// join one in-flight simulation instead of both simulating.
 pub struct SweepRunner {
-    jobs: usize,
-    cache: Mutex<HashMap<CellKey, SimResult>>,
-    stats: Mutex<SweepStats>,
+    service: SimService,
 }
 
 impl SweepRunner {
     /// `jobs = 0` means `available_parallelism()`.
     pub fn new(jobs: usize) -> Self {
+        Self::with_cache_capacity(jobs, DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// Runner with an explicit result-cache bound (entries; LRU-ish
+    /// eviction past it, counted in [`SweepStats::evictions`]).
+    pub fn with_cache_capacity(jobs: usize, cache_capacity: usize) -> Self {
         Self {
-            jobs: resolve_jobs(jobs),
-            cache: Mutex::new(HashMap::new()),
-            stats: Mutex::new(SweepStats::default()),
+            service: SimService::new(ServiceConfig {
+                jobs,
+                cache_capacity,
+                ..ServiceConfig::default()
+            }),
         }
     }
 
+    /// The scheduler this runner submits to.
+    pub fn service(&self) -> &SimService {
+        &self.service
+    }
+
     pub fn jobs(&self) -> usize {
-        self.jobs
+        self.service.jobs()
     }
 
     pub fn stats(&self) -> SweepStats {
-        *self.stats.lock().unwrap()
+        self.service.stats()
     }
 
     /// Number of distinct cells currently cached.
     pub fn cached_cells(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.service.cached_cells()
     }
 
     /// Execute a plan; results are returned in plan order. Every cell is
@@ -250,87 +258,7 @@ impl SweepRunner {
         plan: &SweepPlan,
         verbose: bool,
     ) -> Result<Vec<SimResult>> {
-        for cell in plan.cells() {
-            cell.params()
-                .check()
-                .map_err(|e| e.context(format!("sweep cell {}", cell.label())))?;
-        }
-        let keys: Vec<CellKey> = plan.cells().iter().map(|c| c.key(base)).collect();
-
-        // First occurrence of each not-yet-cached key gets simulated; later
-        // occurrences (and cached keys) are hits.
-        let todo: Vec<usize> = {
-            let cache = self.cache.lock().unwrap();
-            let mut claimed: HashSet<&CellKey> = HashSet::new();
-            let mut todo = Vec::new();
-            for (i, k) in keys.iter().enumerate() {
-                if !cache.contains_key(k) && claimed.insert(k) {
-                    todo.push(i);
-                }
-            }
-            let mut stats = self.stats.lock().unwrap();
-            stats.cells += keys.len() as u64;
-            stats.unique_runs += todo.len() as u64;
-            stats.cache_hits += (keys.len() - todo.len()) as u64;
-            todo
-        };
-
-        if !todo.is_empty() {
-            let workers = self.jobs.min(todo.len()).max(1);
-            let next = AtomicUsize::new(0);
-            let done: Mutex<Vec<(usize, Result<SimResult>)>> =
-                Mutex::new(Vec::with_capacity(todo.len()));
-            std::thread::scope(|s| {
-                for _ in 0..workers {
-                    s.spawn(|| {
-                        let mut machines = MachineCache::default();
-                        loop {
-                            let j = next.fetch_add(1, Ordering::Relaxed);
-                            let Some(&i) = todo.get(j) else { break };
-                            let cell = &plan.cells()[i];
-                            let cfg = cell.effective_cfg(base);
-                            if verbose {
-                                eprintln!("[vima-sim] run {}", cell.label());
-                            }
-                            let machine = machines.get(cfg, cell.threads);
-                            // Pre-validation catches registry/parameter
-                            // errors; a custom workload's chunker can still
-                            // fail here, so errors propagate, never panic.
-                            let result = run_on(machine, cell.params());
-                            done.lock().unwrap().push((i, result));
-                        }
-                    });
-                }
-            });
-            let mut cache = self.cache.lock().unwrap();
-            let mut first_err = None;
-            for (i, result) in done.into_inner().unwrap() {
-                match result {
-                    Ok(r) => {
-                        cache.insert(keys[i].clone(), r);
-                    }
-                    Err(e) if first_err.is_none() => {
-                        first_err =
-                            Some(e.context(format!("sweep cell {}", plan.cells()[i].label())));
-                    }
-                    Err(_) => {}
-                }
-            }
-            if let Some(e) = first_err {
-                return Err(e);
-            }
-        }
-
-        let cache = self.cache.lock().unwrap();
-        Ok(keys.iter().map(|k| cache[k].clone()).collect())
-    }
-}
-
-fn resolve_jobs(jobs: usize) -> usize {
-    if jobs == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        jobs
+        self.service.run_plan(base, plan, verbose)
     }
 }
 
@@ -358,6 +286,8 @@ mod tests {
         assert_eq!(stats.cells, 2);
         assert_eq!(stats.unique_runs, 1);
         assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.cache_misses, 1);
+        assert_eq!(stats.evictions, 0);
     }
 
     #[test]
@@ -372,6 +302,29 @@ mod tests {
         assert_eq!(stats.unique_runs, 1);
         assert_eq!(stats.cache_hits, 1);
         assert_eq!(runner.cached_cells(), 1);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_and_recounts() {
+        let cfg = SystemConfig::default();
+        let runner = SweepRunner::with_cache_capacity(1, 2);
+        let sizes = WorkloadSet::sizes(KernelId::MemSet, SizeScale::Quick);
+        let mut plan = SweepPlan::new();
+        // Three distinct footprints through a 2-entry cache.
+        for mb in [1u64, 2, 3] {
+            let mut w = sizes[0];
+            w.footprint = mb << 20;
+            plan.push(RunCell::new(w, Backend::Avx));
+        }
+        runner.run(&cfg, &plan).unwrap();
+        assert_eq!(runner.cached_cells(), 2);
+        let stats = runner.stats();
+        assert_eq!(stats.unique_runs, 3);
+        assert_eq!(stats.evictions, 1);
+        // Re-running the full plan re-simulates evicted cells only.
+        runner.run(&cfg, &plan).unwrap();
+        assert!(runner.stats().unique_runs > 3);
+        assert!(runner.stats().cache_hits >= 1);
     }
 
     #[test]
@@ -408,10 +361,10 @@ mod tests {
         mc.get(&cfg, 1);
         mc.get(&cfg, 1);
         assert_eq!((mc.builds, mc.reuses), (1, 1));
-        mc.get(&cfg, 2); // different thread count: rebuild
+        mc.get(&cfg, 2); // different thread count: build
         let mut other = cfg.clone();
         other.vima.cache_bytes = 16 << 10;
-        mc.get(&other, 2); // different config: rebuild
+        mc.get(&other, 2); // different config: build
         assert_eq!((mc.builds, mc.reuses), (3, 1));
     }
 

@@ -44,6 +44,23 @@ impl std::fmt::Display for Backend {
     }
 }
 
+impl std::str::FromStr for Backend {
+    type Err = crate::util::error::Error;
+
+    /// Case-insensitive backend name, as the CLI and the `serve` JSONL
+    /// protocol spell it; unknown names enumerate the valid choices.
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "avx" => Ok(Backend::Avx),
+            "vima" => Ok(Backend::Vima),
+            "hive" => Ok(Backend::Hive),
+            _ => Err(crate::util::error::Error::msg(format!(
+                "unknown backend {s:?}; valid backends: avx, vima, hive"
+            ))),
+        }
+    }
+}
+
 /// The paper's seven kernels (Sec. IV-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelId {

@@ -1,0 +1,226 @@
+//! Integration tests of the service API (the one front door for running
+//! simulations): concurrent batched submission through `SimService` must
+//! match serial `simulate` results bit for bit, overlapping submissions
+//! must observe exactly-once execution per cell identity, job handles
+//! must report typed statuses, and the `serve` JSONL protocol must
+//! round-trip requests in order.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::{SizeScale, WorkloadSet};
+use vima_sim::service::{jsonl, Job, JobStatus, ServiceConfig, SimService};
+use vima_sim::sim::{simulate, SimResult};
+use vima_sim::sweep::{RunCell, SweepPlan, SweepRunner};
+use vima_sim::trace::{Backend, KernelId, TraceChunker, TraceParams};
+use vima_sim::util::error::Result;
+use vima_sim::workload::{self, Workload, WorkloadId};
+
+/// The acceptance check: a batch submitted concurrently from many threads
+/// returns, for every job, exactly the result a serial `simulate` call
+/// produces — cycles, full counter report, and energy bits.
+#[test]
+fn concurrent_batched_submission_matches_serial_simulate() {
+    let cfg = SystemConfig::default();
+    let svc = SimService::with_base(cfg.clone());
+    let mut jobs = Vec::new();
+    for kernel in [KernelId::MemSet, KernelId::VecSum] {
+        for backend in [Backend::Avx, Backend::Vima] {
+            jobs.push(Job::new(TraceParams::new(kernel, backend, 1 << 20)));
+        }
+    }
+
+    let batches: Vec<Vec<SimResult>> = std::thread::scope(|s| {
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(|| {
+                    svc.submit_batch(jobs.clone())
+                        .iter()
+                        .map(|h| h.wait().unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        threads.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+
+    for batch in &batches {
+        assert_eq!(batch.len(), jobs.len());
+        for (job, result) in jobs.iter().zip(batch) {
+            let direct = simulate(&cfg, job.params).unwrap();
+            assert_eq!(result.cycles, direct.cycles);
+            assert_eq!(result.report, direct.report);
+            assert_eq!(
+                result.energy.total_j.to_bits(),
+                direct.energy.total_j.to_bits(),
+                "energy must be bit-identical"
+            );
+        }
+    }
+}
+
+/// Instrumented workload: counts trace-generator builds (one per run per
+/// thread), delegating the actual stream to MemSet's generators.
+struct Counting {
+    runs: Arc<AtomicU64>,
+}
+
+const COUNTING_BACKENDS: [Backend; 2] = [Backend::Avx, Backend::Vima];
+
+impl Workload for Counting {
+    fn name(&self) -> &str {
+        "svc-counting"
+    }
+
+    fn backends(&self) -> &[Backend] {
+        &COUNTING_BACKENDS
+    }
+
+    fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        workload::get(WorkloadId::from(KernelId::MemSet))?.chunker(p)
+    }
+}
+
+/// Many threads submitting overlapping jobs observe exactly-once
+/// execution per cell identity: the trace generator builds exactly once
+/// per distinct cell, no matter how many submitters race.
+#[test]
+fn overlapping_submissions_execute_exactly_once_per_key() {
+    let runs = Arc::new(AtomicU64::new(0));
+    let id = workload::register(Arc::new(Counting { runs: Arc::clone(&runs) })).unwrap();
+    let svc = SimService::new(ServiceConfig { jobs: 4, ..ServiceConfig::default() });
+    let cells: Vec<TraceParams> =
+        (1u64..=3).map(|mb| TraceParams::new(id, Backend::Avx, mb << 20)).collect();
+
+    let results: Vec<Vec<SimResult>> = std::thread::scope(|s| {
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                s.spawn(|| {
+                    cells
+                        .iter()
+                        .map(|p| svc.submit(Job::new(*p)).wait().unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        threads.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+
+    // One generator build per distinct cell — never one per submission.
+    assert_eq!(runs.load(Ordering::SeqCst), cells.len() as u64);
+    let stats = svc.stats();
+    assert_eq!(stats.cells, 24);
+    assert_eq!(stats.unique_runs, 3);
+    assert_eq!(stats.cache_hits, 21);
+
+    // Every submitter saw identical (deterministic) results.
+    for batch in &results[1..] {
+        for (a, b) in results[0].iter().zip(batch) {
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.report, b.report);
+        }
+    }
+}
+
+#[test]
+fn handle_statuses_track_the_job_lifecycle() {
+    let svc = SimService::new(ServiceConfig { jobs: 1, ..ServiceConfig::default() });
+
+    // Invalid jobs are Failed at submission, with the typed error on wait.
+    let bad = svc.submit(Job::new(TraceParams::new(KernelId::Mlp, Backend::Hive, 4 << 20)));
+    assert_eq!(bad.status(), JobStatus::Failed);
+    let e = bad.wait().unwrap_err().to_string();
+    assert!(e.contains("HIVE"), "{e}");
+
+    // Valid jobs move through live states and settle on Done.
+    let good = svc.submit(Job::new(TraceParams::new(KernelId::MemSet, Backend::Avx, 1 << 20)));
+    assert!(matches!(
+        good.status(),
+        JobStatus::Queued | JobStatus::Running | JobStatus::Done
+    ));
+    good.wait().unwrap();
+    assert_eq!(good.status(), JobStatus::Done);
+
+    // A duplicate of a cached cell is already Done when submitted.
+    let dup = svc.submit(Job::new(TraceParams::new(KernelId::MemSet, Backend::Avx, 1 << 20)));
+    assert_eq!(dup.status(), JobStatus::Done);
+    dup.wait().unwrap();
+    assert_eq!(svc.stats().unique_runs, 1);
+}
+
+/// The sweep path and direct service plan submission are the same
+/// scheduler: identical plans produce bit-identical results either way.
+#[test]
+fn plan_submission_matches_sweep_runner() {
+    let cfg = SystemConfig::default();
+    let mut plan = SweepPlan::new();
+    for w in WorkloadSet::fig2(SizeScale::Quick).into_iter().take(2) {
+        for b in [Backend::Avx, Backend::Vima] {
+            plan.push(RunCell::new(w, b));
+        }
+    }
+    let svc = SimService::with_base(cfg.clone());
+    let via_service = svc.run_plan(&cfg, &plan, false).unwrap();
+    let runner = SweepRunner::new(2);
+    let via_runner = runner.run(&cfg, &plan).unwrap();
+    assert_eq!(via_service.len(), via_runner.len());
+    for ((a, b), cell) in via_service.iter().zip(&via_runner).zip(plan.cells()) {
+        assert_eq!(a.cycles, b.cycles, "{}", cell.label());
+        assert_eq!(a.report, b.report, "{}", cell.label());
+    }
+
+    // submit_plan hands back one handle per cell, in plan order.
+    let handles = svc.submit_plan(&plan);
+    assert_eq!(handles.len(), plan.len());
+    for (h, r) in handles.iter().zip(&via_service) {
+        assert_eq!(h.wait().unwrap().cycles, r.cycles);
+    }
+}
+
+/// JSONL serve round trip: responses come back one per request, in
+/// request order, well-formed, with errors answered inline instead of
+/// killing the session.
+#[test]
+fn serve_jsonl_round_trips_in_order() {
+    let cfg = SystemConfig::default();
+    let svc = SimService::new(ServiceConfig { jobs: 2, ..ServiceConfig::default() });
+    let input = concat!(
+        "{\"id\": 1, \"workload\": \"vecsum\", \"backend\": \"vima\", \"mb\": 1}\n",
+        "\n", // blank lines are skipped, not answered
+        "{\"id\": \"j2\", \"workload\": \"memset\", \"backend\": \"avx\", \"mb\": 1, \"threads\": 2}\n",
+        "{\"id\": 3, \"workload\": \"vecsum\", \"backend\": \"neon\"}\n",
+        "this is not json\n",
+    );
+    let mut out: Vec<u8> = Vec::new();
+    let summary = jsonl::serve(&svc, input.as_bytes(), &mut out).unwrap();
+    assert_eq!((summary.requests, summary.ok, summary.failed), (4, 2, 2));
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4, "{text}");
+
+    // Every response is itself parseable flat JSON.
+    for line in &lines {
+        jsonl::parse_flat_object(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+    }
+
+    // In request order, ids echoed verbatim.
+    assert!(lines[0].starts_with("{\"id\": 1, \"status\": \"done\""), "{}", lines[0]);
+    assert!(lines[1].starts_with("{\"id\": \"j2\", \"status\": \"done\""), "{}", lines[1]);
+    assert!(lines[2].starts_with("{\"id\": 3, \"status\": \"failed\""), "{}", lines[2]);
+    assert!(lines[2].contains("valid backends"), "{}", lines[2]);
+    assert!(lines[3].contains("\"status\": \"failed\""), "{}", lines[3]);
+    assert!(lines[3].contains("bad request line"), "{}", lines[3]);
+
+    // The served result is the simulator's result, not an approximation.
+    let direct =
+        simulate(&cfg, TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20)).unwrap();
+    assert!(
+        lines[0].contains(&format!("\"cycles\": {}", direct.cycles)),
+        "{} vs cycles {}",
+        lines[0],
+        direct.cycles
+    );
+}
