@@ -35,7 +35,7 @@ fn main() {
         .collect();
     let r = bench::bench("core_100k_uops", 10, || {
         let mut core = Core::new(0, &cfg.core);
-        let mut mem = MemorySystem::new(&cfg, 1);
+        let mut mem = MemorySystem::new(&cfg, 1).unwrap();
         for u in &uops {
             core.run_uop(u, &mut mem);
         }
@@ -45,7 +45,7 @@ fn main() {
 
     bench::section("memory system (streaming misses)");
     let r = bench::bench("memsys_100k_miss_stream", 10, || {
-        let mut mem = MemorySystem::new(&cfg, 1);
+        let mut mem = MemorySystem::new(&cfg, 1).unwrap();
         let mut t = 0;
         for i in 0..100_000u64 {
             t = mem.access(0, i * 64, false, t).done.saturating_sub(60);
@@ -56,7 +56,7 @@ fn main() {
 
     bench::section("3D memory (raw vault/bank model)");
     let r = bench::bench("mem3d_100k_vima_subreqs", 10, || {
-        let mut m = Mem3D::new(&cfg.mem, cfg.core.freq_ghz);
+        let mut m = Mem3D::new(&cfg.mem, cfg.core.freq_ghz).unwrap();
         let mut done = 0u64;
         for i in 0..100_000u64 {
             done = m.vima_access(i * 64, false, done.saturating_sub(40)).done;
@@ -68,7 +68,7 @@ fn main() {
     bench::section("VIMA device (instruction pipeline)");
     let r = bench::bench("vima_10k_instructions", 10, || {
         let mut v = VimaDevice::new(&cfg.vima, 1, cfg.core.freq_ghz);
-        let mut m = Mem3D::new(&cfg.mem, cfg.core.freq_ghz);
+        let mut m = Mem3D::new(&cfg.mem, cfg.core.freq_ghz).unwrap();
         let mut t = 0;
         for i in 0..10_000u64 {
             let base = (i % 512) * 0x6000;
@@ -91,7 +91,7 @@ fn main() {
     // Drive the machine directly: `simulate` now goes through the service
     // result cache, which would turn every timed iteration after the first
     // into a cache hit and fake a massive speedup in the perf record.
-    let mut sim_machine = Machine::new(&cfg, 1);
+    let mut sim_machine = Machine::new(&cfg, 1).unwrap();
     let r = bench::bench("simulate_vecsum_avx_8mb", 5, || {
         sim_machine.reset();
         run_on(&mut sim_machine, p).unwrap().cycles
@@ -101,7 +101,7 @@ fn main() {
     bench::metric("sim.simulated_cycles_per_sec", sim_cycles / r.mean_s, "cy/s");
 
     bench::section("chunked vs reference execution (events/sec)");
-    let mut m = Machine::new(&cfg, 1);
+    let mut m = Machine::new(&cfg, 1).unwrap();
     let r_ref = bench::bench("run_reference_vecsum_avx_8mb", 5, || {
         m.reset();
         m.run_reference(vec![p.stream().unwrap()]).unwrap().cycles

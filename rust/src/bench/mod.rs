@@ -141,7 +141,7 @@ pub fn throughput(
             .into_iter()
             .map(|s| s.count() as u64)
             .sum::<u64>();
-        let mut m = Machine::new(cfg, threads);
+        let mut m = Machine::new(cfg, threads)?;
         let t_ref = time_runs(iters, || {
             m.reset();
             Ok(m.run_reference(streams(p, threads)?)?.cycles)

@@ -19,8 +19,9 @@ pub use prefetch::StridePrefetcher;
 use std::collections::VecDeque;
 
 use crate::config::{CacheConfig, SystemConfig};
-use crate::mem3d::Mem3D;
+use crate::fabric::MemFabric;
 use crate::stats::StatsReport;
+use crate::util::error::Result;
 
 /// 1 MB-region occupancy filter size (16 K regions = 16 GB before aliasing;
 /// aliasing is harmless — it only forces the slow path).
@@ -70,7 +71,10 @@ pub struct MemorySystem {
     pub l1: Vec<CacheLevel>,
     pub l2: Vec<CacheLevel>,
     pub llc: CacheLevel,
-    pub mem: Mem3D,
+    /// The DRAM substrate: one or more 3D-stacked cubes behind the
+    /// address-interleaved [`MemFabric`] front door (one cube ≡ the
+    /// paper's single `Mem3D`, bit for bit).
+    pub mem: MemFabric,
     /// Posted DRAM traffic (store write-allocate fetches, dirty write-backs,
     /// prefetches) ordered by arrival time. Demand loads merge this queue
     /// before they touch the DRAM resource clocks, so the latency-forwarding
@@ -111,22 +115,24 @@ pub struct AccessResult {
 }
 
 impl MemorySystem {
-    pub fn new(cfg: &SystemConfig, cores: usize) -> Self {
-        Self {
+    pub fn new(cfg: &SystemConfig, cores: usize) -> Result<Self> {
+        let mem = MemFabric::new(&cfg.mem, cfg.core.freq_ghz)?;
+        // RCD+CAS + burst + link, rounded: one uncontended DRAM round trip
+        let pf_fill_latency = mem.uncontended_read_latency();
+        Ok(Self {
             l1: (0..cores).map(|_| CacheLevel::new(&cfg.l1d)).collect(),
             l2: (0..cores).map(|_| CacheLevel::new(&cfg.l2)).collect(),
             llc: CacheLevel::new(&cfg.llc),
-            mem: Mem3D::new(&cfg.mem, cfg.core.freq_ghz),
+            mem,
             pending: VecDeque::new(),
             region_filter: vec![0; REGION_WORDS],
             prefetchers: (0..cores).map(|_| StridePrefetcher::new(&cfg.prefetch)).collect(),
             pf_enabled: cfg.prefetch.enabled,
             pf_buf: Vec::with_capacity(8),
             pf_inflight: LineMap::new(),
-            // RCD+CAS + burst + link, rounded: one uncontended DRAM round trip
-            pf_fill_latency: Mem3D::new(&cfg.mem, cfg.core.freq_ghz).uncontended_read_latency(),
+            pf_fill_latency,
             pf_late_hits: 0,
-        }
+        })
     }
 
     pub fn reset(&mut self) {
@@ -494,7 +500,7 @@ mod tests {
     use crate::config::SystemConfig;
 
     fn sys() -> MemorySystem {
-        MemorySystem::new(&SystemConfig::default(), 1)
+        MemorySystem::new(&SystemConfig::default(), 1).unwrap()
     }
 
     #[test]
@@ -518,7 +524,7 @@ mod tests {
 
     #[test]
     fn llc_serves_second_core() {
-        let mut m = MemorySystem::new(&SystemConfig::default(), 2);
+        let mut m = MemorySystem::new(&SystemConfig::default(), 2).unwrap();
         let a = m.access(0, 0x4000, false, 0);
         let b = m.access(1, 0x4000, false, a.done);
         assert_eq!(b.level, 3, "expected LLC hit from the other core");
@@ -577,11 +583,11 @@ mod tests {
         for i in 0..lines {
             now = m.access(0, i * 64, false, now).done;
         }
-        let cold_dram = m.mem.stats.host_reads;
+        let cold_dram = m.mem.stats_total().host_reads;
         for i in 0..lines {
             now = m.access(0, i * 64, false, now).done;
         }
         // Second pass: no new DRAM reads (all <= LLC).
-        assert_eq!(m.mem.stats.host_reads, cold_dram);
+        assert_eq!(m.mem.stats_total().host_reads, cold_dram);
     }
 }

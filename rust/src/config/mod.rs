@@ -293,6 +293,15 @@ cfg_struct!(
     /// 2.5:1 core-to-bus ratio, closed-row, CAS-RP-RCD-RAS-CWD =
     /// 9-9-9-24-7, instruction latency 1 CPU cycle, 10.8 / 4.8 pJ/bit on
     /// the x86 / VIMA paths, 4 W static.
+    ///
+    /// The last three fields configure the sharded multi-cube **fabric**
+    /// (DESIGN.md §10; not in Table I — the paper evaluates one cube, and
+    /// `num_cubes = 1` reproduces it bit-for-bit): `num_cubes` chained
+    /// HMC-style cubes behind one address-interleaved front door,
+    /// `cube_hop_cycles` CPU cycles per inter-cube SerDes hop (~6 ns at
+    /// 2 GHz, a typical chained-HMC link traversal), and
+    /// `cube_shard_bytes` — the interleaving granularity, sized to the
+    /// largest VIMA vector so one vector never straddles cubes.
     Mem3DConfig {
         vaults: usize = 32,
         banks_per_vault: usize = 8,
@@ -313,6 +322,9 @@ cfg_struct!(
         x86_pj_per_bit: f64 = 10.8,
         vima_pj_per_bit: f64 = 4.8,
         static_w: f64 = 4.0,
+        num_cubes: usize = 1,
+        cube_hop_cycles: u64 = 12,
+        cube_shard_bytes: usize = 8192,
     }
 );
 
@@ -565,6 +577,23 @@ impl SystemConfig {
         ensure!(self.mem.vaults.is_power_of_two(), "vault count must be 2^n");
         ensure!(self.mem.banks_per_vault.is_power_of_two(), "bank count must be 2^n");
         ensure!(
+            self.mem.num_cubes >= 1 && self.mem.num_cubes.is_power_of_two(),
+            "mem3d.num_cubes ({}) must be a power of two",
+            self.mem.num_cubes
+        );
+        ensure!(
+            self.mem.cube_shard_bytes >= 64
+                && self.mem.cube_shard_bytes.is_power_of_two(),
+            "mem3d.cube_shard_bytes ({}) must be a power-of-two multiple of 64",
+            self.mem.cube_shard_bytes
+        );
+        ensure!(
+            self.vima.vector_bytes <= self.mem.cube_shard_bytes,
+            "VIMA vector ({} B) must fit one fabric shard ({} B) so vectors never straddle cubes",
+            self.vima.vector_bytes,
+            self.mem.cube_shard_bytes
+        );
+        ensure!(
             self.mem.row_buffer_bytes % 64 == 0
                 && (self.mem.row_buffer_bytes / 64).is_power_of_two(),
             "row buffer ({} B) must hold a power-of-two count of 64 B lines",
@@ -689,6 +718,23 @@ mod tests {
         let mut c = SystemConfig::default();
         c.vima.vector_bytes = 100;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_fabric_geometry() {
+        let mut c = SystemConfig::default();
+        c.mem.num_cubes = 3;
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("num_cubes") && e.contains('3'), "{e}");
+
+        let mut c = SystemConfig::default();
+        c.mem.cube_shard_bytes = 4096; // < the 8 KB vector: it would straddle
+        assert!(c.validate().is_err());
+
+        let mut c = SystemConfig::default();
+        c.mem.num_cubes = 8;
+        c.mem.cube_shard_bytes = 16384;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -410,6 +410,53 @@ impl Experiment {
         Ok(t)
     }
 
+    /// **Cube-scaling figure** — the fabric extension (DESIGN.md §10): the
+    /// streaming kernels at their largest size, 8 host threads driving a
+    /// 1/2/4/8-cube [`MemFabric`](crate::fabric::MemFabric), each point
+    /// normalized to the same kernel's 1-cube run. With one cube all eight
+    /// threads serialize on a single VIMA device and one cube's vaults;
+    /// sharding gives each cube its own device, vector cache, and DRAM
+    /// bandwidth, so streaming throughput scales with the cube count
+    /// (minus the cross-cube gather hops the fabric charges honestly).
+    pub fn scaling_cubes(&self) -> Result<FigTable> {
+        let cube_counts = [1usize, 2, 4, 8];
+        let threads = 8;
+        let cols: Vec<String> = cube_counts.iter().map(|c| format!("{c}cube")).collect();
+        let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+
+        let mut plan = SweepPlan::new();
+        let rows: Vec<_> = [KernelId::MemSet, KernelId::MemCopy, KernelId::VecSum]
+            .into_iter()
+            .map(|kernel| {
+                let w = *WorkloadSet::sizes(kernel, self.scale).last().unwrap();
+                let cells: Vec<usize> = cube_counts
+                    .iter()
+                    .map(|&n| {
+                        let mut cfg = self.cfg.clone();
+                        cfg.mem.num_cubes = n;
+                        plan.push(
+                            RunCell::new(w, Backend::Vima).with_cfg(cfg).with_threads(threads),
+                        )
+                    })
+                    .collect();
+                (w.label(), cells)
+            })
+            .collect();
+        let res = self.run_plan(&plan)?;
+
+        let mut t = FigTable::new(
+            "Cube scaling: streaming-kernel throughput vs fabric size \
+             (speedup over the 1-cube fabric, 8 threads)",
+            &cols_ref,
+        );
+        for (label, cells) in rows {
+            let base = &res[cells[0]];
+            let row = cells.iter().map(|&i| res[i].speedup_vs(base)).collect();
+            t.push(label, row);
+        }
+        Ok(t)
+    }
+
     /// **Headline numbers** — max speedup and max energy saving across
     /// Fig. 3 (all cells cached if `fig3` already ran).
     pub fn headline(&self) -> Result<FigTable> {

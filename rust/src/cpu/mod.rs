@@ -389,7 +389,7 @@ mod tests {
 
     fn setup() -> (Core, MemorySystem) {
         let cfg = SystemConfig::default();
-        (Core::new(0, &cfg.core), MemorySystem::new(&cfg, 1))
+        (Core::new(0, &cfg.core), MemorySystem::new(&cfg, 1).unwrap())
     }
 
     #[test]
@@ -466,7 +466,7 @@ mod tests {
     fn rob_limits_runahead_past_long_miss() {
         let cfg = SystemConfig::default();
         let mut core = Core::new(0, &cfg.core);
-        let mut mem = MemorySystem::new(&cfg, 1);
+        let mut mem = MemorySystem::new(&cfg, 1).unwrap();
         // A cold DRAM miss followed by >ROB independent ALU ops: the ALU ops
         // beyond the ROB window must wait for the load to retire.
         let load_done = {

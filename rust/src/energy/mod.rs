@@ -66,15 +66,27 @@ impl EnergyModel {
             + self.cfg.llc.static_mw * 1e-3)
             * seconds;
 
-        // --- 3D memory ---
+        // --- 3D memory (static power per cube: a chained fabric keeps
+        // every cube refreshed/linked for the whole run) ---
         let dram_dynamic_j = g("mem.host_bits") * self.cfg.mem.x86_pj_per_bit * pj
             + g("mem.vima_bits") * self.cfg.mem.vima_pj_per_bit * pj;
-        let dram_static_j = self.cfg.mem.static_w * seconds;
+        let dram_static_j =
+            self.cfg.mem.static_w * seconds * self.cfg.mem.num_cubes.max(1) as f64;
 
         // --- VIMA logic layer (gated when unused) ---
         let vima_used = g("vima.instructions") > 0.0 || g("hive.computes") > 0.0;
         let vima_j = if vima_used {
-            let busy = g("vima.busy_until").max(g("hive.writeback_cycles")).min(cycles as f64);
+            // Multi-cube fabrics report the per-device busy-time sum
+            // (`vima.busy_cycles_sum`): each cube's logic layer burns power
+            // for its own busy window. Single-cube reports carry only the
+            // classic `busy_until` gauge — same value, same energy.
+            let gated = g("vima.busy_until").max(g("hive.writeback_cycles")).min(cycles as f64);
+            let busy = match report.get("vima.busy_cycles_sum") {
+                Some(sum) => sum
+                    .min(cycles as f64 * self.cfg.mem.num_cubes.max(1) as f64)
+                    .max(gated),
+                None => gated,
+            };
             let busy_s = busy / (self.cfg.core.freq_ghz * 1e9);
             self.cfg.vima.power_w * busy_s
                 + (g("vima.vcache_hits") + g("vima.vcache_misses"))

@@ -1,0 +1,599 @@
+//! Sharded multi-cube memory fabric (DESIGN.md §10).
+//!
+//! The paper evaluates one 3D-stacked cube (Table I), but its HMC substrate
+//! is explicitly chainable. [`MemFabric`] generalizes the single
+//! [`Mem3D`] into `num_cubes` cubes behind one address-interleaved front
+//! door:
+//!
+//! * **Sharding** — addresses interleave across cubes at
+//!   `cube_shard_bytes` granularity (default 8 KB, the largest VIMA
+//!   vector) through the same XOR-folded hash the per-cube vault mapping
+//!   uses, so consecutive vectors spread over cubes while any one
+//!   vector-aligned VIMA vector lives wholly inside a single cube.
+//! * **Host path** — every cube keeps its own SerDes links (they live in
+//!   [`Mem3D`]), and the chain topology charges `cube_hop_cycles` per hop
+//!   from the host-attached cube 0: a read to cube *k* pays `k` hops each
+//!   way on top of that cube's own link/DRAM timing.
+//! * **Logic-layer path** — each cube carries its own VIMA device
+//!   ([`VimaDispatcher`] holds one [`VimaDevice`] per cube); an
+//!   instruction executes on the cube owning its destination (*home*),
+//!   and any operand sub-request that hashes to another cube is a
+//!   **cross-cube gather**: it is served by the owning cube's
+//!   vaults and pays `|cube − home| · cube_hop_cycles` per direction,
+//!   accounted in [`FabricStats`].
+//!
+//! With `num_cubes = 1` every routing decision degenerates to cube 0 with
+//! zero hop cost, so the fabric is bit-identical to the classic
+//! single-`Mem3D` system (pinned by `tests/fabric.rs`).
+
+use crate::config::{Mem3DConfig, VimaConfig};
+use crate::isa::VimaInstr;
+use crate::mem3d::{Mem3D, MemCompletion, MemPort, MemStats};
+use crate::stats::StatsReport;
+use crate::util::error::Result;
+use crate::vima::VimaDevice;
+
+/// Fabric-level accounting (all zero while `num_cubes = 1`).
+#[derive(Debug, Default, Clone)]
+pub struct FabricStats {
+    /// 64 B logic-layer sub-requests served by a cube other than the
+    /// requesting device's home cube (cross-cube operand gathers).
+    pub cross_cube_lines: u64,
+    /// Host lines served by chained (non-root) cubes.
+    pub chained_host_lines: u64,
+    /// Total extra cycles charged for inter-cube hops (request + response
+    /// legs).
+    pub hop_cycles: u64,
+}
+
+/// `num_cubes` stacked-memory cubes behind one address-interleaved front
+/// door. See the module docs for the sharding/hop model.
+#[derive(Debug)]
+pub struct MemFabric {
+    cubes: Vec<Mem3D>,
+    /// `num_cubes - 1` (power of two enforced at construction).
+    cube_mask: usize,
+    /// log2 of the interleaving granularity.
+    shard_shift: u32,
+    /// CPU cycles per inter-cube hop on the chain.
+    hop_lat: u64,
+    pub stats: FabricStats,
+}
+
+impl MemFabric {
+    pub fn new(cfg: &Mem3DConfig, cpu_ghz: f64) -> Result<Self> {
+        crate::ensure!(
+            cfg.num_cubes >= 1 && cfg.num_cubes.is_power_of_two(),
+            "mem3d.num_cubes ({}) must be a power of two (the cube index is mask-mapped)",
+            cfg.num_cubes
+        );
+        crate::ensure!(
+            cfg.cube_shard_bytes >= 64 && cfg.cube_shard_bytes.is_power_of_two(),
+            "mem3d.cube_shard_bytes ({}) must be a power-of-two multiple of 64",
+            cfg.cube_shard_bytes
+        );
+        let cubes = (0..cfg.num_cubes)
+            .map(|_| Mem3D::new(cfg, cpu_ghz))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            cubes,
+            cube_mask: cfg.num_cubes - 1,
+            shard_shift: cfg.cube_shard_bytes.trailing_zeros(),
+            hop_lat: cfg.cube_hop_cycles,
+            stats: FabricStats::default(),
+        })
+    }
+
+    pub fn num_cubes(&self) -> usize {
+        self.cubes.len()
+    }
+
+    pub fn cube(&self, i: usize) -> &Mem3D {
+        &self.cubes[i]
+    }
+
+    pub fn cube_mut(&mut self, i: usize) -> &mut Mem3D {
+        &mut self.cubes[i]
+    }
+
+    /// Shared single-cube configuration.
+    pub fn config(&self) -> &Mem3DConfig {
+        self.cubes[0].config()
+    }
+
+    /// Which cube owns `addr`: the XOR-folded hash of the shard-granular
+    /// block index — the same decorrelation trick as the per-cube
+    /// vault/bank mapping ([`Mem3D::map`]), one level up. Any
+    /// `cube_shard_bytes`-aligned block (hence any vector-aligned VIMA
+    /// vector of at most that size) maps to exactly one cube.
+    #[inline]
+    pub fn cube_of(&self, addr: u64) -> usize {
+        if self.cube_mask == 0 {
+            return 0;
+        }
+        let blk = addr >> self.shard_shift;
+        let mix = blk ^ (blk >> 5) ^ (blk >> 10) ^ (blk >> 15) ^ (blk >> 20) ^ (blk >> 25);
+        (mix as usize) & self.cube_mask
+    }
+
+    /// Host-side access for one 64 B line. The owning cube's own SerDes
+    /// links and DRAM timing apply; chained cubes additionally pay
+    /// `cube_index` hops from the host-attached cube 0 on the request leg,
+    /// and reads pay them again on the response leg (writes are posted).
+    pub fn host_access(&mut self, addr: u64, is_write: bool, now: u64) -> MemCompletion {
+        let cube = self.cube_of(addr);
+        if cube == 0 {
+            return self.cubes[0].host_access(addr, is_write, now);
+        }
+        let hop = self.hop_lat * cube as u64;
+        self.stats.chained_host_lines += 1;
+        self.stats.hop_cycles += if is_write { hop } else { 2 * hop };
+        let c = self.cubes[cube].host_access(addr, is_write, now + hop);
+        MemCompletion { done: if is_write { c.done } else { c.done + hop }, ..c }
+    }
+
+    /// Logic-layer access issued by the device on `home`'s logic layer.
+    /// Local lines go straight to `home`'s vaults; remote lines are served
+    /// by the owning cube and pay `|cube - home|` hops per direction
+    /// (cross-cube operand gather / write scatter).
+    pub fn vima_access_from(
+        &mut self,
+        home: usize,
+        addr: u64,
+        is_write: bool,
+        now: u64,
+    ) -> MemCompletion {
+        let cube = self.cube_of(addr);
+        if cube == home {
+            return self.cubes[cube].vima_access(addr, is_write, now);
+        }
+        let hop = self.hop_lat * cube.abs_diff(home) as u64;
+        self.stats.cross_cube_lines += 1;
+        self.stats.hop_cycles += if is_write { hop } else { 2 * hop };
+        let c = self.cubes[cube].vima_access(addr, is_write, now + hop);
+        MemCompletion { done: if is_write { c.done } else { c.done + hop }, ..c }
+    }
+
+    /// Uncontended host read latency of the nearest cube (prefetch
+    /// fill-time estimate, as before).
+    pub fn uncontended_read_latency(&self) -> u64 {
+        self.cubes[0].uncontended_read_latency()
+    }
+
+    /// Earliest cycle at which every cube is fully idle.
+    pub fn drained_at(&self) -> u64 {
+        self.cubes.iter().map(|c| c.drained_at()).max().unwrap_or(0)
+    }
+
+    /// Aggregated per-cube DRAM counters (the `mem.*` totals).
+    pub fn stats_total(&self) -> MemStats {
+        let mut total = MemStats::default();
+        for c in &self.cubes {
+            total.accumulate(&c.stats);
+        }
+        total
+    }
+
+    /// Emit the classic `mem.*` keys (summed over cubes — identical to the
+    /// single-cube report when `num_cubes = 1`), plus `fabric.*` keys for
+    /// multi-cube runs only, so single-cube reports stay bit-identical to
+    /// the pre-fabric simulator.
+    pub fn dump_stats(&self, report: &mut StatsReport) {
+        self.stats_total().dump_into(report);
+        if self.cubes.len() > 1 {
+            report.add("fabric.cubes", self.cubes.len() as f64);
+            report.add("fabric.cross_cube_lines", self.stats.cross_cube_lines as f64);
+            report.add("fabric.chained_host_lines", self.stats.chained_host_lines as f64);
+            report.add("fabric.hop_cycles", self.stats.hop_cycles as f64);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.cubes {
+            c.reset();
+        }
+        self.stats = FabricStats::default();
+    }
+}
+
+/// A [`MemPort`] view of the fabric from one cube's logic layer: every
+/// 64 B sub-request routes to the cube owning its address, charging hops
+/// relative to `home`. This is how a per-cube [`VimaDevice`] (or the HIVE
+/// comparator, pinned to cube 0) reads and writes through the fabric
+/// without knowing the topology.
+pub struct FabricPort<'a> {
+    fabric: &'a mut MemFabric,
+    home: usize,
+}
+
+impl<'a> FabricPort<'a> {
+    pub fn new(fabric: &'a mut MemFabric, home: usize) -> Self {
+        debug_assert!(home < fabric.num_cubes());
+        Self { fabric, home }
+    }
+}
+
+impl MemPort for FabricPort<'_> {
+    fn vima_access(&mut self, addr: u64, is_write: bool, now: u64) -> MemCompletion {
+        self.fabric.vima_access_from(self.home, addr, is_write, now)
+    }
+
+    fn drained_at(&self) -> u64 {
+        self.fabric.drained_at()
+    }
+}
+
+/// One VIMA logic layer per cube, plus the routing that picks which device
+/// executes each instruction: the cube owning the destination vector (or
+/// the first source for reductions) is the instruction's *home* — results
+/// always land in the home cube's vector cache and DRAM, while remote
+/// operands stream in as accounted cross-cube gathers.
+pub struct VimaDispatcher {
+    devices: Vec<VimaDevice>,
+    /// Instructions whose home was a chained (non-zero) cube.
+    pub remote_home_instrs: u64,
+}
+
+impl VimaDispatcher {
+    pub fn new(cfg: &VimaConfig, inst_lat: u64, cpu_ghz: f64, num_cubes: usize) -> Self {
+        let n = num_cubes.max(1);
+        Self {
+            devices: (0..n).map(|_| VimaDevice::new(cfg, inst_lat, cpu_ghz)).collect(),
+            remote_home_instrs: 0,
+        }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, i: usize) -> &VimaDevice {
+        &self.devices[i]
+    }
+
+    pub fn device_mut(&mut self, i: usize) -> &mut VimaDevice {
+        &mut self.devices[i]
+    }
+
+    /// The cube whose logic layer executes `instr`.
+    pub fn home_cube(&self, instr: &VimaInstr, fabric: &MemFabric) -> usize {
+        let anchor = instr.dst().or_else(|| instr.src_addrs().next()).unwrap_or(0);
+        fabric.cube_of(anchor)
+    }
+
+    /// Execute one instruction on its home cube's device, streaming
+    /// operands through a [`FabricPort`]. Identical to a single
+    /// [`VimaDevice`] over a single [`Mem3D`] when the fabric has one cube.
+    ///
+    /// Cross-device coherence (two directions, both cheap because a
+    /// vector is dirty only in the device that produced it as a
+    /// destination — its *owning* cube, since results always execute
+    /// where their destination lives):
+    ///
+    /// * **gather of a dirty vector** — before a device reads a source
+    ///   owned by another home, the owner posts the write-back and keeps
+    ///   a clean copy ([`VimaDevice::flush_vector`]), so remote reads
+    ///   never observe data that exists only in a sibling cache;
+    /// * **rewrite of a shared vector** — writing a destination drops any
+    ///   stale *clean* copies sibling devices gathered earlier, so a later
+    ///   read there re-fetches (and is charged the cross-cube gather)
+    ///   instead of hitting stale data.
+    pub fn execute(
+        &mut self,
+        instr: &VimaInstr,
+        dispatch: u64,
+        fabric: &mut MemFabric,
+    ) -> Result<u64> {
+        let home = self.home_cube(instr, fabric);
+        if home != 0 {
+            self.remote_home_instrs += 1;
+        }
+        if self.devices.len() > 1 {
+            for s in instr.unique_src_addrs() {
+                let owner = fabric.cube_of(s);
+                if owner != home {
+                    let mut port = FabricPort::new(&mut *fabric, owner);
+                    self.devices[owner].flush_vector(s, dispatch, &mut port);
+                }
+            }
+            if instr.op.writes_vector() {
+                if let Some(dst) = instr.dst() {
+                    for (i, dev) in self.devices.iter_mut().enumerate() {
+                        if i != home {
+                            // Siblings can only hold dst clean (dirty
+                            // copies live in the owner == home).
+                            let dirty = dev.vcache.invalidate(dst);
+                            debug_assert!(
+                                dirty.is_none(),
+                                "dirty vectors live only in their owner's device"
+                            );
+                            let _ = dirty;
+                        }
+                    }
+                }
+            }
+        }
+        let mut port = FabricPort::new(&mut *fabric, home);
+        self.devices[home].execute(instr, dispatch, &mut port)
+    }
+
+    /// End-of-run drain: write back every device's dirty vectors to its
+    /// own cube and wait for the whole fabric to settle.
+    pub fn drain(&mut self, at: u64, fabric: &mut MemFabric) -> u64 {
+        let mut end = at;
+        for (home, dev) in self.devices.iter_mut().enumerate() {
+            let mut port = FabricPort::new(&mut *fabric, home);
+            end = end.max(dev.drain(at, &mut port));
+        }
+        end
+    }
+
+    /// Aggregate device counters under the classic `vima.*` keys by
+    /// merging each device's own [`VimaDevice::dump_stats`] report —
+    /// counters sum, `*.busy_until` combines by max
+    /// ([`StatsReport::merge`]'s gauge rule) — so any counter a device
+    /// grows in the future aggregates without touching this code.
+    /// Multi-cube runs additionally report the per-device busy-time sum
+    /// (drives the per-cube energy model) and the dispatcher's routing
+    /// counters; single-cube reports carry exactly the pre-fabric key set.
+    pub fn dump_stats(&self, report: &mut StatsReport) {
+        let mut agg = StatsReport::new();
+        for d in &self.devices {
+            let mut one = StatsReport::new();
+            d.dump_stats(&mut one);
+            agg.merge(&one);
+        }
+        for (k, v) in agg.iter() {
+            report.add(k, v);
+        }
+        if self.devices.len() > 1 {
+            let busy_sum: u64 = self.devices.iter().map(|d| d.stats.busy_until).sum();
+            report.add("vima.devices", self.devices.len() as f64);
+            report.add("vima.busy_cycles_sum", busy_sum as f64);
+            report.add("vima.remote_home_instrs", self.remote_home_instrs as f64);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for d in &mut self.devices {
+            d.reset();
+        }
+        self.remote_home_instrs = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{VDtype, VimaOp};
+
+    fn cfg_with(cubes: usize) -> Mem3DConfig {
+        let mut cfg = Mem3DConfig::default();
+        cfg.num_cubes = cubes;
+        cfg
+    }
+
+    #[test]
+    fn single_cube_routes_everything_to_cube_zero_for_free() {
+        let mut fab = MemFabric::new(&cfg_with(1), 2.0).unwrap();
+        let mut raw = Mem3D::new(&Mem3DConfig::default(), 2.0).unwrap();
+        for i in 0..200u64 {
+            let addr = i * 4096 + (i % 7) * 64;
+            let w = i % 3 == 0;
+            assert_eq!(fab.cube_of(addr), 0);
+            let a = fab.host_access(addr, w, i);
+            let b = raw.host_access(addr, w, i);
+            assert_eq!(a, b, "host access diverged at line {i}");
+            let a = fab.vima_access_from(0, addr, !w, i);
+            let b = raw.vima_access(addr, !w, i);
+            assert_eq!(a, b, "vima access diverged at line {i}");
+        }
+        assert_eq!(fab.stats.cross_cube_lines, 0);
+        assert_eq!(fab.stats.hop_cycles, 0);
+        assert_eq!(fab.drained_at(), raw.drained_at());
+        let t = fab.stats_total();
+        assert_eq!(
+            (t.host_reads, t.host_writes, t.vima_reads, t.vima_writes),
+            (
+                raw.stats.host_reads,
+                raw.stats.host_writes,
+                raw.stats.vima_reads,
+                raw.stats.vima_writes
+            )
+        );
+    }
+
+    #[test]
+    fn sharding_covers_all_cubes_and_keeps_vectors_whole() {
+        let fab = MemFabric::new(&cfg_with(8), 2.0).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for v in 0..4096u64 {
+            let base = v * 8192;
+            let cube = fab.cube_of(base);
+            seen.insert(cube);
+            // Every 64 B line of an 8 KB-aligned vector lives in one cube.
+            for line in 0..128u64 {
+                assert_eq!(fab.cube_of(base + line * 64), cube, "vector {v} straddles cubes");
+            }
+        }
+        assert_eq!(seen.len(), 8, "shard hash must reach every cube");
+    }
+
+    #[test]
+    fn chained_host_reads_pay_hops_per_direction() {
+        let mut cfg = cfg_with(4);
+        cfg.cube_hop_cycles = 100; // exaggerate for visibility
+        let mut fab = MemFabric::new(&cfg, 2.0).unwrap();
+        // Find a vector block owned by a chained cube.
+        let addr = (0..1024u64)
+            .map(|v| v * 8192)
+            .find(|&a| fab.cube_of(a) > 0)
+            .expect("some block must live off cube 0");
+        let cube = fab.cube_of(addr);
+        let mut near = Mem3D::new(&cfg, 2.0).unwrap();
+        let far = fab.host_access(addr, false, 0).done;
+        let base = near.host_access(addr, false, 0).done;
+        assert_eq!(far, base + 2 * 100 * cube as u64, "read pays {cube} hops each way");
+        assert_eq!(fab.stats.chained_host_lines, 1);
+        assert_eq!(fab.stats.hop_cycles, 2 * 100 * cube as u64);
+    }
+
+    #[test]
+    fn cross_cube_gather_is_slower_than_local() {
+        let mut cfg = cfg_with(4);
+        cfg.cube_hop_cycles = 50;
+        let mut fab = MemFabric::new(&cfg, 2.0).unwrap();
+        let addr = (0..1024u64)
+            .map(|v| v * 8192)
+            .find(|&a| fab.cube_of(a) > 0)
+            .expect("some block must live off cube 0");
+        let owner = fab.cube_of(addr);
+        let local = fab.vima_access_from(owner, addr, false, 0).done;
+        fab.reset();
+        let remote = fab.vima_access_from(0, addr, false, 0).done;
+        assert_eq!(remote, local + 2 * 50 * owner as u64);
+        assert_eq!(fab.stats.cross_cube_lines, 1);
+    }
+
+    #[test]
+    fn dispatcher_single_device_matches_raw_device() {
+        // One cube: the dispatcher must be indistinguishable from driving
+        // a lone VimaDevice over a lone Mem3D — the bit-identical contract
+        // every paper figure relies on.
+        let vcfg = VimaConfig::default();
+        let mut disp = VimaDispatcher::new(&vcfg, 1, 2.0, 1);
+        let mut fab = MemFabric::new(&cfg_with(1), 2.0).unwrap();
+        let mut dev = VimaDevice::new(&vcfg, 1, 2.0);
+        let mut raw = Mem3D::new(&Mem3DConfig::default(), 2.0).unwrap();
+        let mut t_a = 0;
+        let mut t_b = 0;
+        for i in 0..24u64 {
+            let base = i * 0x6000;
+            let instr = VimaInstr::new(
+                VimaOp::Add,
+                VDtype::F32,
+                &[base, base + 0x2000],
+                Some(base + 0x4000),
+                8192,
+            );
+            t_a = disp.execute(&instr, t_a, &mut fab).unwrap();
+            t_b = dev.execute(&instr, t_b, &mut raw).unwrap();
+            assert_eq!(t_a, t_b, "instruction {i} diverged");
+        }
+        let da = disp.drain(t_a, &mut fab);
+        let db = dev.drain(t_b, &mut raw);
+        assert_eq!(da, db);
+        let mut ra = StatsReport::new();
+        disp.dump_stats(&mut ra);
+        let mut rb = StatsReport::new();
+        dev.dump_stats(&mut rb);
+        assert_eq!(ra, rb, "single-device dispatcher stats must match raw device");
+    }
+
+    #[test]
+    fn dispatcher_routes_homes_across_cubes() {
+        let vcfg = VimaConfig::default();
+        let mut disp = VimaDispatcher::new(&vcfg, 1, 2.0, 4);
+        let mut fab = MemFabric::new(&cfg_with(4), 2.0).unwrap();
+        let mut t = 0;
+        for i in 0..64u64 {
+            let base = i * 0x6000;
+            let instr = VimaInstr::new(
+                VimaOp::Add,
+                VDtype::F32,
+                &[base, base + 0x2000],
+                Some(base + 0x4000),
+                8192,
+            );
+            t = disp.execute(&instr, t, &mut fab).unwrap();
+        }
+        assert!(disp.remote_home_instrs > 0, "homes must spread off cube 0");
+        let used: usize =
+            (0..4).filter(|&i| disp.device(i).stats.instructions > 0).count();
+        assert!(used >= 2, "at least two cubes' devices must execute");
+        assert!(fab.stats.cross_cube_lines > 0, "streaming operands must gather cross-cube");
+    }
+
+    #[test]
+    fn cross_home_read_of_dirty_vector_forces_owner_writeback() {
+        // Producer/consumer across homes: instr 1 leaves its result dirty
+        // in the owning cube's vcache (no DRAM write yet); a consumer
+        // homed elsewhere must see the owner post the write-back before
+        // gathering — data can't be read from DRAM it never reached.
+        let vcfg = VimaConfig::default();
+        let mut disp = VimaDispatcher::new(&vcfg, 1, 2.0, 4);
+        let mut fab = MemFabric::new(&cfg_with(4), 2.0).unwrap();
+        let block = |cube: usize, skip: u64| {
+            (0..4096u64)
+                .map(|i| i * 8192)
+                .find(|&a| fab.cube_of(a) == cube && a != skip)
+                .expect("shard hash reaches every cube")
+        };
+        let v = block(2, u64::MAX);
+        let d = block(0, u64::MAX);
+        let w = block(0, d);
+
+        let produce = VimaInstr::new(VimaOp::Bcast, VDtype::F32, &[], Some(v), 8192);
+        let t = disp.execute(&produce, 0, &mut fab).unwrap();
+        assert_eq!(fab.cube(2).stats.vima_writes, 0, "result sits in the vcache, not DRAM");
+
+        // Consumer homed on cube 0 (dst d) reads v, owned by cube 2.
+        let consume = VimaInstr::new(VimaOp::Add, VDtype::F32, &[v, w], Some(d), 8192);
+        disp.execute(&consume, t, &mut fab).unwrap();
+        assert_eq!(
+            fab.cube(2).stats.vima_writes,
+            128,
+            "dirty producer must flush to its own cube before the gather"
+        );
+        assert!(disp.device(2).vcache.dirty_lines().is_empty(), "copy downgraded to clean");
+    }
+
+    #[test]
+    fn rewriting_a_vector_invalidates_stale_sibling_copies() {
+        // Ping-pong pattern: a device gathers a remote vector (cached
+        // clean), the owner rewrites it, and the first device reads it
+        // again — the stale clean copy must be dropped so the re-read is
+        // charged a full cross-cube re-gather, not a one-cycle tag hit.
+        let vcfg = VimaConfig::default();
+        let mut disp = VimaDispatcher::new(&vcfg, 1, 2.0, 4);
+        let mut fab = MemFabric::new(&cfg_with(4), 2.0).unwrap();
+        let block = |cube: usize, skip: u64| {
+            (0..4096u64)
+                .map(|i| i * 8192)
+                .find(|&a| fab.cube_of(a) == cube && a != skip)
+                .expect("shard hash reaches every cube")
+        };
+        let a = block(2, u64::MAX);
+        let b = block(0, u64::MAX);
+        let b2 = block(0, b);
+
+        // 1. Consumer homed on cube 0 gathers `a` (owned by cube 2).
+        let gather = VimaInstr::new(VimaOp::Add, VDtype::F32, &[a, b2], Some(b), 8192);
+        let t = disp.execute(&gather, 0, &mut fab).unwrap();
+        let reads = fab.cube(2).stats.vima_reads;
+        assert_eq!(reads, 128, "first gather reads the owner's vaults");
+
+        // 2. The owner rewrites `a` (homed on cube 2).
+        let rewrite = VimaInstr::new(VimaOp::Bcast, VDtype::F32, &[], Some(a), 8192);
+        let t = disp.execute(&rewrite, t, &mut fab).unwrap();
+
+        // 3. Re-consume on cube 0: `b2` is still cached there, but `a`
+        //    must re-fetch from cube 2 (after the owner's flush).
+        disp.execute(&gather, t, &mut fab).unwrap();
+        assert_eq!(
+            fab.cube(2).stats.vima_reads,
+            reads + 128,
+            "stale sibling copy must be dropped and re-gathered"
+        );
+    }
+
+    #[test]
+    fn fabric_rejects_bad_cube_counts() {
+        let e = MemFabric::new(&cfg_with(3), 2.0).unwrap_err().to_string();
+        assert!(e.contains("num_cubes") && e.contains('3'), "{e}");
+        let mut cfg = cfg_with(2);
+        cfg.cube_shard_bytes = 100;
+        let e = MemFabric::new(&cfg, 2.0).unwrap_err().to_string();
+        assert!(e.contains("cube_shard_bytes"), "{e}");
+    }
+}

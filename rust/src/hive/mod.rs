@@ -16,7 +16,7 @@
 
 use crate::config::HiveConfig;
 use crate::isa::{HiveOp, VDtype, VimaFuKind};
-use crate::mem3d::Mem3D;
+use crate::mem3d::MemPort;
 use crate::stats::StatsReport;
 
 #[derive(Debug, Default, Clone)]
@@ -99,7 +99,7 @@ impl HiveDevice {
     }
 
     /// Fetch one vector into register `r` (parallel sub-requests).
-    fn load_reg(&mut self, r: usize, addr: u64, at: u64, mem: &mut Mem3D) -> u64 {
+    fn load_reg(&mut self, r: usize, addr: u64, at: u64, mem: &mut impl MemPort) -> u64 {
         self.stats.loads += 1;
         let mut ready = at;
         for i in 0..self.subreqs() {
@@ -110,7 +110,7 @@ impl HiveDevice {
     }
 
     /// Sequentially write register `r` back (one vector fully, then next).
-    fn store_reg(&mut self, r: usize, addr: u64, at: u64, mem: &mut Mem3D) -> u64 {
+    fn store_reg(&mut self, r: usize, addr: u64, at: u64, mem: &mut impl MemPort) -> u64 {
         self.stats.stores += 1;
         let start = if self.cfg.sequential_writeback {
             at.max(self.wb_tail).max(self.regs[r].ready)
@@ -129,7 +129,7 @@ impl HiveDevice {
 
     /// Process one HIVE op arriving at CPU-cycle `at` (posted: the host does
     /// not wait). Returns the op's internal completion time.
-    pub fn execute(&mut self, op: &HiveOp, at: u64, mem: &mut Mem3D) -> u64 {
+    pub fn execute(&mut self, op: &HiveOp, at: u64, mem: &mut impl MemPort) -> u64 {
         match *op {
             HiveOp::Lock => {
                 self.stats.transactions += 1;
@@ -228,11 +228,12 @@ mod tests {
     use super::*;
     use crate::config::Mem3DConfig;
     use crate::isa::VimaOp;
+    use crate::mem3d::Mem3D;
 
     fn setup() -> (HiveDevice, Mem3D) {
         (
             HiveDevice::new(&HiveConfig::default(), 2.0),
-            Mem3D::new(&Mem3DConfig::default(), 2.0),
+            Mem3D::new(&Mem3DConfig::default(), 2.0).unwrap(),
         )
     }
 

@@ -733,7 +733,7 @@ mod tests {
         p.vim2k_adds(bufs[0], bufs[1], bufs[2]);
         p.vim2k_fmadds(bufs[0], bufs[1], bufs[2], bufs[3]);
         p.vim2k_dots(bufs[2], bufs[3]);
-        let mut m = Machine::new(&SystemConfig::default(), 1);
+        let mut m = Machine::new(&SystemConfig::default(), 1).unwrap();
         let r = m.run(vec![p.into_stream()]).unwrap();
         assert!(r.cycles > 0);
         assert_eq!(r.report.get("vima.instructions"), Some(5.0));
@@ -749,7 +749,7 @@ mod tests {
         let y = p.alloc(16 * vb);
         p.vim2k_sets(alpha);
         p.vloop(16, |l| l.vim2k_fmadds(alpha, x.walk(vb), y.walk(vb), y.walk(vb)));
-        let mut m = Machine::new(&SystemConfig::default(), 1);
+        let mut m = Machine::new(&SystemConfig::default(), 1).unwrap();
         let r = m.run(vec![p.into_stream()]).unwrap();
         let hits = r.report.get("vima.vcache_hits").unwrap();
         assert!(hits >= 16.0, "alpha must hit the VIMA cache: {hits}");

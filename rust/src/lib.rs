@@ -8,9 +8,10 @@
 //!
 //! * **Layer 3 (this crate)** — the Rust coordinator: a trace-driven,
 //!   cycle-level timing model of the whole system of Table I (out-of-order
-//!   core, three-level cache hierarchy, 3D-stacked memory with 32 vaults,
-//!   the VIMA logic layer, and the HIVE comparator), plus the experiment
-//!   drivers that regenerate every figure of the paper through the
+//!   core, three-level cache hierarchy, 3D-stacked memory with 32 vaults —
+//!   shardable across `N` chained cubes via the [`fabric`] front door,
+//!   one VIMA logic layer per cube — and the HIVE comparator), plus the
+//!   experiment drivers that regenerate every figure of the paper through the
 //!   [`sweep`] engine (a declarative, deduplicating, multi-threaded run
 //!   grid — see EXPERIMENTS.md). The workload surface is *open*: the
 //!   [`workload`] registry serves the paper's seven kernels and any
@@ -40,6 +41,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cpu;
 pub mod energy;
+pub mod fabric;
 pub mod hive;
 pub mod intrinsics;
 pub mod isa;
@@ -59,6 +61,7 @@ pub mod workload;
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
     pub use crate::config::SystemConfig;
+    pub use crate::fabric::{FabricPort, MemFabric, VimaDispatcher};
     pub use crate::coordinator::{
         workloads::{SizedWorkload, WorkloadSet},
         Experiment, FigTable, RunSpec,

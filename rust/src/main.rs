@@ -29,8 +29,8 @@ use vima_sim::util::error::Result;
 use vima_sim::workload;
 
 /// Every figure name `sweep --figs` / `figure_tables` accepts.
-const FIG_NAMES: [&str; 7] =
-    ["fig2", "fig3", "fig4", "fig5", "ablation", "headline", "custom"];
+const FIG_NAMES: [&str; 8] =
+    ["fig2", "fig3", "fig4", "fig5", "ablation", "headline", "custom", "scaling"];
 
 /// The default `sweep` set (everything except the custom-program figure,
 /// which `--figs custom` / `--figs all` opts into).
@@ -66,6 +66,8 @@ COMMANDS:
               see EXPERIMENTS.md §Serving for the full protocol
   custom      Custom-workload figure: each registered Intrinsics-VIMA
               program, VIMA vs the AVX lowering of the same program
+  scaling     Cube-scaling figure: streaming kernels on 1/2/4/8-cube
+              sharded memory fabrics (8 threads, speedup vs 1 cube)
   bench       Simulator throughput benchmark: chunked execution engine vs
               the event-at-a-time reference path, in simulated events/sec;
               --json FILE writes the BENCH_*.json perf-trajectory record
@@ -84,6 +86,8 @@ OPTIONS:
   --json FILE      (bench) write the JSON record to FILE
   --quick          1/16 dataset sizes (smoke runs)
   --config FILE    TOML overrides for Table I
+  --cubes N        memory cubes in the sharded fabric (default 1; power of
+                   two; equivalent to [mem] num_cubes in --config)
   --out DIR        also write each table as CSV into DIR
   --csv DIR        (sweep) same as --out
   --figs LIST      (sweep) comma-separated subset, e.g. fig2,fig5,custom;
@@ -126,6 +130,7 @@ fn figure_tables(exp: &Experiment, name: &str) -> Result<Vec<FigTable>> {
         ],
         "headline" => vec![exp.headline()?],
         "custom" => vec![exp.custom_programs()?],
+        "scaling" => vec![exp.scaling_cubes()?],
         other => {
             bail!(
                 "unknown figure {other:?}; valid figures: {} (or 'all' for every one)",
@@ -142,10 +147,15 @@ fn main() -> Result<()> {
         return Ok(());
     };
 
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => SystemConfig::from_toml_file(path)?,
         None => SystemConfig::default(),
     };
+    // `--cubes N`: size the sharded memory fabric (DESIGN.md §10) without
+    // a config file; 1 (the default) is the paper's single-cube system.
+    if let Some(cubes) = args.get("cubes") {
+        cfg.mem.num_cubes = cubes.parse::<usize>()?;
+    }
     cfg.validate()?;
     let scale = if args.flag("quick") { SizeScale::Quick } else { SizeScale::Paper };
     let jobs = args.get_usize("jobs", 0);
@@ -189,7 +199,7 @@ fn main() -> Result<()> {
                 exp.jobs(),
             );
         }
-        "fig2" | "fig3" | "fig4" | "fig5" | "headline" | "ablation" | "custom" => {
+        "fig2" | "fig3" | "fig4" | "fig5" | "headline" | "ablation" | "custom" | "scaling" => {
             let exp = make_exp();
             for table in figure_tables(&exp, cmd)? {
                 emit(&table, out)?;
@@ -214,9 +224,9 @@ fn main() -> Result<()> {
                 None => workload::get(id)?.default_footprint(),
             };
             let p = TraceParams::new(id, Backend::Avx, footprint);
-            let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+            let mut m = vima_sim::sim::Machine::new(&cfg, 1)?;
             let native = m.run(vec![p.stream()?])?;
-            let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+            let mut m = vima_sim::sim::Machine::new(&cfg, 1)?;
             let auto = m.run(vec![vima_sim::transpile::transpile(p.stream()?)])?;
             let hand = simulate_threads(
                 &cfg,
@@ -368,8 +378,8 @@ fn main() -> Result<()> {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!(
             "unknown command {other:?}; valid commands: sweep, fig2, fig3, fig4, fig5, \
-             ablation, headline, custom, all, run, serve, bench, workloads, transpile, \
-             config, selftest, help"
+             ablation, headline, custom, scaling, all, run, serve, bench, workloads, \
+             transpile, config, selftest, help"
         ),
     }
     Ok(())

@@ -19,6 +19,7 @@
 
 use crate::config::Mem3DConfig;
 use crate::stats::StatsReport;
+use crate::util::error::Result;
 
 /// Per-request resource usage summary (returned for testing/inspection).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,6 +28,30 @@ pub struct MemCompletion {
     pub done: u64,
     pub vault: usize,
     pub bank: usize,
+}
+
+/// The memory-access port the logic-layer devices (VIMA, HIVE) drive.
+///
+/// A single [`Mem3D`] implements it directly (the classic one-cube system);
+/// [`FabricPort`](crate::fabric::FabricPort) implements it by routing each
+/// 64 B sub-request to the cube that owns its address and charging inter-cube
+/// hops — so the devices are agnostic to whether they sit on one cube or on
+/// a sharded multi-cube fabric.
+pub trait MemPort {
+    /// One 64 B sub-request issued from the logic layer (no host links).
+    fn vima_access(&mut self, addr: u64, is_write: bool, now: u64) -> MemCompletion;
+    /// Earliest cycle at which the backing memory is fully idle.
+    fn drained_at(&self) -> u64;
+}
+
+impl MemPort for Mem3D {
+    fn vima_access(&mut self, addr: u64, is_write: bool, now: u64) -> MemCompletion {
+        Mem3D::vima_access(self, addr, is_write, now)
+    }
+
+    fn drained_at(&self) -> u64 {
+        Mem3D::drained_at(self)
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -43,7 +68,34 @@ pub struct MemStats {
     pub vima_queue_cycles: u64,
 }
 
+impl MemStats {
+    /// Accumulate another stats block (per-cube totals in the fabric).
+    pub fn accumulate(&mut self, other: &MemStats) {
+        self.host_reads += other.host_reads;
+        self.host_writes += other.host_writes;
+        self.vima_reads += other.vima_reads;
+        self.vima_writes += other.vima_writes;
+        self.host_bits += other.host_bits;
+        self.vima_bits += other.vima_bits;
+        self.host_queue_cycles += other.host_queue_cycles;
+        self.vima_queue_cycles += other.vima_queue_cycles;
+    }
+
+    /// Emit the standard `mem.*` counter keys.
+    pub fn dump_into(&self, report: &mut StatsReport) {
+        report.add("mem.host_reads", self.host_reads as f64);
+        report.add("mem.host_writes", self.host_writes as f64);
+        report.add("mem.vima_reads", self.vima_reads as f64);
+        report.add("mem.vima_writes", self.vima_writes as f64);
+        report.add("mem.host_bits", self.host_bits as f64);
+        report.add("mem.vima_bits", self.vima_bits as f64);
+        report.add("mem.host_queue_cycles", self.host_queue_cycles as f64);
+        report.add("mem.vima_queue_cycles", self.vima_queue_cycles as f64);
+    }
+}
+
 /// The stacked-memory cube.
+#[derive(Debug)]
 pub struct Mem3D {
     cfg: Mem3DConfig,
     /// `next_free` per bank (vault-major: `vault * banks_per_vault + bank`).
@@ -82,21 +134,35 @@ pub struct Mem3D {
 }
 
 impl Mem3D {
-    pub fn new(cfg: &Mem3DConfig, cpu_ghz: f64) -> Self {
+    /// Build one cube, validating the address-geometry fields. The mask/
+    /// shift mapping in [`map`](Self::map) silently corrupts vault/bank
+    /// indices for non-power-of-two geometries, so those are typed errors
+    /// (naming the bad field) rather than debug-only assertions.
+    pub fn new(cfg: &Mem3DConfig, cpu_ghz: f64) -> Result<Self> {
+        crate::ensure!(
+            cfg.vaults >= 1 && cfg.vaults.is_power_of_two(),
+            "mem3d.vaults ({}) must be a power of two (the vault index is mask/shift mapped)",
+            cfg.vaults
+        );
+        crate::ensure!(
+            cfg.banks_per_vault >= 1 && cfg.banks_per_vault.is_power_of_two(),
+            "mem3d.banks_per_vault ({}) must be a power of two (the bank index is mask/shift mapped)",
+            cfg.banks_per_vault
+        );
+        let lines_per_row = (cfg.row_buffer_bytes / 64).max(1);
+        crate::ensure!(
+            cfg.row_buffer_bytes % 64 == 0 && lines_per_row.is_power_of_two(),
+            "mem3d.row_buffer_bytes ({}) must hold a power-of-two count of 64 B lines",
+            cfg.row_buffer_bytes
+        );
         let n_banks = cfg.vaults * cfg.banks_per_vault;
         // 64 B line over an 8 B-wide internal bank bus (one flit per DRAM cycle).
         let data_burst_dram = (64 / 8) as u64;
         let link_cyc = cfg.link_cycles_per_line(cpu_ghz);
-        let lines_per_row = (cfg.row_buffer_bytes / 64).max(1);
-        assert!(
-            cfg.row_buffer_bytes % 64 == 0 && lines_per_row.is_power_of_two(),
-            "row buffer ({} B) must hold a power-of-two count of 64 B lines",
-            cfg.row_buffer_bytes
-        );
         let row_shift = cfg.vaults.trailing_zeros()
             + cfg.banks_per_vault.trailing_zeros()
             + lines_per_row.trailing_zeros();
-        Self {
+        Ok(Self {
             bank_free: vec![0; n_banks],
             bank_open_row: vec![u64::MAX; n_banks],
             vault_cmd_free: vec![0; cfg.vaults],
@@ -119,7 +185,7 @@ impl Mem3D {
             row_shift,
             cfg: cfg.clone(),
             stats: MemStats::default(),
-        }
+        })
     }
 
     pub fn config(&self) -> &Mem3DConfig {
@@ -242,25 +308,24 @@ impl Mem3D {
         MemCompletion { done, vault, bank }
     }
 
-    /// Earliest cycle at which every bank/bus is idle (drain point).
+    /// Earliest cycle at which every resource is idle (drain point):
+    /// banks, vault data buses, **vault command slots**, and both link
+    /// directions. The command slots used to be omitted, so the drain point
+    /// could land before the last vault command retired whenever a timing
+    /// configuration makes `lat_cmd` exceed the post-command bank/bus
+    /// occupancy.
     pub fn drained_at(&self) -> u64 {
         let b = self.bank_free.iter().copied().max().unwrap_or(0);
         let v = self.vault_data_free.iter().copied().max().unwrap_or(0);
+        let c = self.vault_cmd_free.iter().copied().max().unwrap_or(0);
         b.max(v)
+            .max(c)
             .max(self.link_from_mem_free_x2.div_ceil(2))
             .max(self.link_to_mem_free_x2.div_ceil(2))
     }
 
     pub fn dump_stats(&self, report: &mut StatsReport) {
-        let s = &self.stats;
-        report.add("mem.host_reads", s.host_reads as f64);
-        report.add("mem.host_writes", s.host_writes as f64);
-        report.add("mem.vima_reads", s.vima_reads as f64);
-        report.add("mem.vima_writes", s.vima_writes as f64);
-        report.add("mem.host_bits", s.host_bits as f64);
-        report.add("mem.vima_bits", s.vima_bits as f64);
-        report.add("mem.host_queue_cycles", s.host_queue_cycles as f64);
-        report.add("mem.vima_queue_cycles", s.vima_queue_cycles as f64);
+        self.stats.dump_into(report);
     }
 
     /// Reset all resource clocks and stats (reuse across runs).
@@ -280,7 +345,7 @@ mod tests {
     use super::*;
 
     fn mem() -> Mem3D {
-        Mem3D::new(&Mem3DConfig::default(), 2.0)
+        Mem3D::new(&Mem3DConfig::default(), 2.0).unwrap()
     }
 
     #[test]
@@ -386,7 +451,7 @@ mod tests {
     fn open_row_policy_rewards_locality() {
         let mut cfg = Mem3DConfig::default();
         cfg.open_row = true;
-        let mut open = Mem3D::new(&cfg, 2.0);
+        let mut open = Mem3D::new(&cfg, 2.0).unwrap();
         let mut closed = mem();
         // 4 consecutive lines share a 256 B row: sequential same-row hits.
         let mut t_open = 0;
@@ -407,8 +472,8 @@ mod tests {
     fn open_row_write_uses_write_timing() {
         let mut cfg = Mem3DConfig::default();
         cfg.open_row = true;
-        let mut mw = Mem3D::new(&cfg, 2.0);
-        let mut mr = Mem3D::new(&cfg, 2.0);
+        let mut mw = Mem3D::new(&cfg, 2.0).unwrap();
+        let mut mr = Mem3D::new(&cfg, 2.0).unwrap();
         // Open the row, then time a row-hit write vs a row-hit read on
         // identical devices: CWD (7 DRAM cycles) < CAS (9), so the write
         // must complete strictly earlier. The old code charged CAS to both.
@@ -430,10 +495,52 @@ mod tests {
         // (the old code hardcoded the 256 B case for every configuration).
         let mut cfg = Mem3DConfig::default();
         cfg.row_buffer_bytes = 512;
-        let m = Mem3D::new(&cfg, 2.0);
+        let m = Mem3D::new(&cfg, 2.0).unwrap();
         assert_eq!(m.row_shift, 5 + 3 + 3);
         assert_eq!(m.map(1 << (6 + 5 + 3 + 3)).2, 1);
         assert_eq!(m.map((1 << (6 + 5 + 3 + 3)) - 64).2, 0);
+    }
+
+    #[test]
+    fn drained_at_includes_vault_command_slots() {
+        // A command-slot-bound state: the last vault command retires after
+        // every bank/bus/link is idle. `drained_at` used to ignore the
+        // command clocks entirely and report the earlier (wrong) point.
+        let mut m = mem();
+        m.vima_access(0, false, 0);
+        let settled = m.drained_at();
+        m.vault_cmd_free[7] = settled + 500;
+        assert_eq!(m.drained_at(), settled + 500, "drain point must cover vault cmd slots");
+
+        // Behavioral: after any traffic burst, no per-vault command clock
+        // may sit past the reported drain point.
+        let mut m = mem();
+        for i in 0..256u64 {
+            m.host_access(i * 64, i % 3 == 0, i);
+        }
+        let drained = m.drained_at();
+        let last_cmd = m.vault_cmd_free.iter().copied().max().unwrap();
+        assert!(drained >= last_cmd, "drain {drained} before last cmd slot {last_cmd}");
+    }
+
+    #[test]
+    fn new_rejects_non_power_of_two_geometry() {
+        // Non-power-of-two vault/bank counts silently corrupt the mask/
+        // shift address mapping; they must be typed errors naming the field.
+        let mut cfg = Mem3DConfig::default();
+        cfg.vaults = 24;
+        let e = Mem3D::new(&cfg, 2.0).unwrap_err().to_string();
+        assert!(e.contains("mem3d.vaults") && e.contains("24"), "{e}");
+
+        let mut cfg = Mem3DConfig::default();
+        cfg.banks_per_vault = 6;
+        let e = Mem3D::new(&cfg, 2.0).unwrap_err().to_string();
+        assert!(e.contains("mem3d.banks_per_vault") && e.contains("6"), "{e}");
+
+        let mut cfg = Mem3DConfig::default();
+        cfg.row_buffer_bytes = 192;
+        let e = Mem3D::new(&cfg, 2.0).unwrap_err().to_string();
+        assert!(e.contains("mem3d.row_buffer_bytes") && e.contains("192"), "{e}");
     }
 
     #[test]

@@ -310,8 +310,9 @@ impl MachinePool {
     }
 
     /// Fetch a reset machine for this shape, building (and evicting) if no
-    /// pooled machine matches.
-    pub fn get(&mut self, cfg: &SystemConfig, threads: usize) -> &mut Machine {
+    /// pooled machine matches. Invalid configurations surface as the
+    /// typed construction error instead of a worker panic.
+    pub fn get(&mut self, cfg: &SystemConfig, threads: usize) -> Result<&mut Machine> {
         self.tick += 1;
         let tick = self.tick;
         let found = self
@@ -322,8 +323,9 @@ impl MachinePool {
             self.reuses += 1;
             self.slots[i].last_use = tick;
             self.slots[i].machine.reset();
-            return &mut self.slots[i].machine;
+            return Ok(&mut self.slots[i].machine);
         }
+        let machine = Machine::new(cfg, threads)?;
         self.builds += 1;
         if self.slots.len() >= self.capacity {
             let oldest = self
@@ -336,9 +338,9 @@ impl MachinePool {
                 self.slots.swap_remove(i);
             }
         }
-        self.slots.push(PoolSlot { threads, last_use: tick, machine: Machine::new(cfg, threads) });
+        self.slots.push(PoolSlot { threads, last_use: tick, machine });
         let slot = self.slots.last_mut().expect("just pushed");
-        &mut slot.machine
+        Ok(&mut slot.machine)
     }
 
     /// Drop the pooled machine for this shape (used after a panic, when
@@ -595,6 +597,9 @@ fn validate_job(params: &TraceParams, cfg: &SystemConfig) -> Result<()> {
         params.threads,
         cfg.core.num_cores
     );
+    // Invalid memory geometry (vault/bank/cube counts...) fails here with
+    // the config's typed error instead of inside a worker.
+    cfg.validate()?;
     params.check()
 }
 
@@ -656,7 +661,7 @@ fn worker_loop(shared: Arc<Shared>, pool_capacity: usize) {
             eprintln!("[vima-sim] run {label}");
         }
         let outcome = match catch_unwind(AssertUnwindSafe(|| {
-            run_on(pool.get(&cfg, params.threads), params)
+            run_on(pool.get(&cfg, params.threads)?, params)
         })) {
             Ok(Ok(result)) => Ok(Arc::new(result)),
             Ok(Err(e)) => Err(e.to_string()),
@@ -784,14 +789,14 @@ mod tests {
     fn machine_pool_reuses_and_evicts() {
         let cfg = SystemConfig::default();
         let mut pool = MachinePool::with_capacity(2);
-        pool.get(&cfg, 1);
-        pool.get(&cfg, 1);
+        pool.get(&cfg, 1).unwrap();
+        pool.get(&cfg, 1).unwrap();
         assert_eq!((pool.builds, pool.reuses), (1, 1));
-        pool.get(&cfg, 2);
+        pool.get(&cfg, 2).unwrap();
         assert_eq!(pool.len(), 2);
-        pool.get(&cfg, 4); // overflows: evicts the LRU (threads=1) machine
+        pool.get(&cfg, 4).unwrap(); // overflows: evicts the LRU (threads=1) machine
         assert_eq!(pool.len(), 2);
-        pool.get(&cfg, 1); // rebuild after eviction
+        pool.get(&cfg, 1).unwrap(); // rebuild after eviction
         assert_eq!((pool.builds, pool.reuses), (4, 1));
     }
 

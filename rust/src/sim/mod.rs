@@ -12,12 +12,12 @@ use crate::cache::MemorySystem;
 use crate::config::SystemConfig;
 use crate::cpu::Core;
 use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::fabric::{FabricPort, VimaDispatcher};
 use crate::hive::HiveDevice;
 use crate::isa::TraceEvent;
 use crate::stats::StatsReport;
 use crate::trace::{TraceParams, TraceStream};
 use crate::util::error::Result;
-use crate::vima::VimaDevice;
 
 /// Process-wide count of [`Machine::run`] invocations. The sweep engine's
 /// result cache exists to minimize this number; the `sweep` CLI summary and
@@ -79,7 +79,10 @@ pub struct Machine {
     pub cfg: SystemConfig,
     cores: Vec<Core>,
     pub mem: MemorySystem,
-    pub vima: VimaDevice,
+    /// One VIMA logic layer per memory cube, with home-cube routing
+    /// ([`VimaDispatcher`]); a single-cube fabric behaves exactly like the
+    /// old lone `VimaDevice`.
+    pub vima: VimaDispatcher,
     pub hive: HiveDevice,
     /// Optional multiplier applied to the final cycle count (trace sampling
     /// extrapolation; see DESIGN.md §Sampling). Stats scale linearly too.
@@ -95,16 +98,28 @@ pub struct Machine {
 const WINDOW: u64 = 4;
 
 impl Machine {
-    pub fn new(cfg: &SystemConfig, threads: usize) -> Self {
-        assert!(threads >= 1 && threads <= cfg.core.num_cores, "thread count out of range");
-        Self {
+    /// Build a machine for `threads` cores. Invalid thread counts and
+    /// invalid memory geometry (non-power-of-two vaults/banks/cubes, bad
+    /// row buffers) are typed errors, not panics or silent corruption.
+    pub fn new(cfg: &SystemConfig, threads: usize) -> Result<Self> {
+        crate::ensure!(
+            threads >= 1 && threads <= cfg.core.num_cores,
+            "thread count {threads} out of range (config has {} cores)",
+            cfg.core.num_cores
+        );
+        Ok(Self {
             cores: (0..threads).map(|i| Core::new(i, &cfg.core)).collect(),
-            mem: MemorySystem::new(cfg, threads),
-            vima: VimaDevice::new(&cfg.vima, cfg.mem.inst_lat_cycles, cfg.core.freq_ghz),
+            mem: MemorySystem::new(cfg, threads)?,
+            vima: VimaDispatcher::new(
+                &cfg.vima,
+                cfg.mem.inst_lat_cycles,
+                cfg.core.freq_ghz,
+                cfg.mem.num_cubes,
+            ),
             hive: HiveDevice::new(&cfg.hive, cfg.core.freq_ghz),
             scale: 1.0,
             cfg: cfg.clone(),
-        }
+        })
     }
 
     /// Set the sampling extrapolation factor (cycles & energy multiply).
@@ -149,8 +164,10 @@ impl Machine {
             }
             TraceEvent::Hive(h) => {
                 // HIVE ops are posted (non-precise): the host continues.
+                // The HIVE register bank sits on the host-attached cube 0;
+                // remote vectors stream through the fabric as hops.
                 let t = self.cores[c].now();
-                self.hive.execute(h, t, &mut self.mem.mem);
+                self.hive.execute(h, t, &mut FabricPort::new(&mut self.mem.mem, 0));
                 t
             }
         })
@@ -359,6 +376,12 @@ impl Machine {
             // Linear extrapolation of event counters (uniform sampled work),
             // in place — no clone/rebuild of the whole report.
             report.scale_all(self.scale);
+            // Hardware-count gauges don't extrapolate; restore them after
+            // the blanket scaling (like the sim.* gauges set below).
+            if self.cfg.mem.num_cubes > 1 {
+                report.set("fabric.cubes", self.cfg.mem.num_cubes as f64);
+                report.set("vima.devices", self.vima.num_devices() as f64);
+            }
         }
         report.set("sim.cycles", cycles as f64);
         report.set("sim.threads", self.cores.len() as f64);
@@ -506,7 +529,7 @@ mod tests {
         let c = cfg();
         let p = TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20);
         let q = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20);
-        let mut m = Machine::new(&c, 1);
+        let mut m = Machine::new(&c, 1).unwrap();
         let first = run_on(&mut m, p).unwrap();
         m.reset();
         let second = run_on(&mut m, q).unwrap();

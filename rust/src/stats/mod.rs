@@ -48,12 +48,18 @@ impl StatsReport {
         }
     }
 
-    /// Timestamp gauges — "when did this component go idle" values. Unlike
-    /// event counters they must combine by `max`: summing two reports'
-    /// `sim.cycles` or `vima.busy_until` produces a point in time that
-    /// never existed. `sim.scale` is a per-run factor, also not summable.
+    /// Non-summable gauges: timestamps ("when did this component go
+    /// idle") and fixed hardware counts. Unlike event counters they must
+    /// combine by `max`: summing two reports' `sim.cycles` or
+    /// `vima.busy_until` produces a point in time that never existed, and
+    /// summing two reports' `fabric.cubes` / `vima.devices` invents
+    /// hardware. `sim.scale` is a per-run factor, also not summable.
     fn is_timestamp_gauge(key: &str) -> bool {
-        key == "sim.cycles" || key == "sim.scale" || key.ends_with(".busy_until")
+        key == "sim.cycles"
+            || key == "sim.scale"
+            || key == "fabric.cubes"
+            || key == "vima.devices"
+            || key.ends_with(".busy_until")
     }
 
     /// Merge another report into this one: event counters sum, timestamp
@@ -143,16 +149,25 @@ impl Histogram {
     }
 
     /// Approximate percentile from bucket upper bounds.
+    ///
+    /// Two edge cases are pinned by regression tests: `p = 0.0` must land on
+    /// the first **non-empty** bucket (the old `target = 0` matched the
+    /// first bucket even when it held nothing), and no percentile may exceed
+    /// the recorded max (an all-one-bucket histogram used to report the
+    /// bucket's upper bound, disagreeing with [`max`](Self::max)).
     pub fn percentile(&self, p: f64) -> u64 {
         if self.total == 0 {
             return 0;
         }
-        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let target = ((p / 100.0 * self.total as f64).ceil() as u64).clamp(1, self.total);
         let mut seen = 0;
         for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
             seen += c;
             if seen >= target {
-                return self.bounds.get(i).copied().unwrap_or(self.max);
+                return self.bounds.get(i).copied().unwrap_or(self.max).min(self.max);
             }
         }
         self.max
@@ -190,16 +205,19 @@ mod tests {
         a.set("sim.cycles", 100.0);
         a.set("vima.busy_until", 90.0);
         a.set("core.uops", 10.0);
+        a.set("fabric.cubes", 4.0);
         let mut b = StatsReport::new();
         b.set("sim.cycles", 80.0);
         b.set("vima.busy_until", 95.0);
         b.set("hive.busy_until", 40.0);
         b.set("core.uops", 5.0);
+        b.set("fabric.cubes", 4.0);
         a.merge(&b);
         assert_eq!(a.get("sim.cycles"), Some(100.0), "gauges combine by max");
         assert_eq!(a.get("vima.busy_until"), Some(95.0));
         assert_eq!(a.get("hive.busy_until"), Some(40.0), "missing keys adopt the other side");
         assert_eq!(a.get("core.uops"), Some(15.0), "counters still sum");
+        assert_eq!(a.get("fabric.cubes"), Some(4.0), "hardware counts don't sum");
     }
 
     #[test]
@@ -224,6 +242,46 @@ mod tests {
         assert!((h.mean() - 221.2).abs() < 1e-9);
         assert!(h.percentile(50.0) <= 4);
         assert!(h.percentile(99.0) >= 512);
+    }
+
+    #[test]
+    fn percentile_zero_skips_empty_buckets() {
+        // Values land only in high buckets; p0 must not report the (empty)
+        // first bucket's bound of 1.
+        let mut h = Histogram::pow2(10);
+        for v in [600, 700, 900] {
+            h.record(v);
+        }
+        // All three live in the (512, 1024] bucket, clamped to the max.
+        assert_eq!(h.percentile(0.0), 900);
+        assert!(h.percentile(0.0) >= 512, "p0 fell into an empty bucket");
+    }
+
+    #[test]
+    fn percentile_never_exceeds_recorded_max() {
+        // All samples share one bucket (513..=1024): every percentile —
+        // including p100 — must agree with the recorded max, not the
+        // bucket's upper bound of 1024.
+        let mut h = Histogram::pow2(10);
+        for _ in 0..5 {
+            h.record(1000);
+        }
+        assert_eq!(h.percentile(0.0), 1000);
+        assert_eq!(h.percentile(50.0), 1000);
+        assert_eq!(h.percentile(100.0), 1000);
+    }
+
+    #[test]
+    fn percentile_100_is_max_with_overflow_bucket() {
+        let mut h = Histogram::pow2(4); // bounds 1..16, +inf
+        h.record(3);
+        h.record(1_000_000);
+        assert_eq!(h.percentile(100.0), 1_000_000);
+        assert_eq!(h.percentile(0.0), 4); // 3 lands in the (2,4] bucket
+        // Empty histogram stays 0 for any p.
+        let e = Histogram::pow2(4);
+        assert_eq!(e.percentile(0.0), 0);
+        assert_eq!(e.percentile(100.0), 0);
     }
 
     #[test]

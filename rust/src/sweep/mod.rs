@@ -358,13 +358,13 @@ mod tests {
     fn machine_cache_reuses_on_matching_shape() {
         let cfg = SystemConfig::default();
         let mut mc = MachineCache::default();
-        mc.get(&cfg, 1);
-        mc.get(&cfg, 1);
+        mc.get(&cfg, 1).unwrap();
+        mc.get(&cfg, 1).unwrap();
         assert_eq!((mc.builds, mc.reuses), (1, 1));
-        mc.get(&cfg, 2); // different thread count: build
+        mc.get(&cfg, 2).unwrap(); // different thread count: build
         let mut other = cfg.clone();
         other.vima.cache_bytes = 16 << 10;
-        mc.get(&other, 2); // different config: build
+        mc.get(&other, 2).unwrap(); // different config: build
         assert_eq!((mc.builds, mc.reuses), (3, 1));
     }
 

@@ -330,11 +330,11 @@ mod tests {
         let avx = TraceParams::new(KernelId::VecSum, Backend::Avx, footprint);
         let vima = TraceParams::new(KernelId::VecSum, Backend::Vima, footprint);
 
-        let mut m = Machine::new(&cfg, 1);
+        let mut m = Machine::new(&cfg, 1).unwrap();
         let base = m.run(vec![avx.stream().unwrap()]).unwrap();
-        let mut m = Machine::new(&cfg, 1);
+        let mut m = Machine::new(&cfg, 1).unwrap();
         let auto = m.run(vec![transpile(avx.stream().unwrap())]).unwrap();
-        let mut m = Machine::new(&cfg, 1);
+        let mut m = Machine::new(&cfg, 1).unwrap();
         let hand = m.run(vec![vima.stream().unwrap()]).unwrap();
 
         let auto_speedup = base.cycles as f64 / auto.cycles as f64;

@@ -6,8 +6,11 @@
 //! 1. The instruction arrives from the processor (`inst_lat` cycles).
 //! 2. The sequencer checks the VIMA cache for each unique source vector.
 //!    Misses split into 128 x 64 B sub-requests issued across vaults/banks
-//!    ([`Mem3D::vima_access`]); *both* operands of a two-source instruction
-//!    fetch in parallel (Sec. IV-B1). A hit costs one tag-check cycle.
+//!    through the device's [`MemPort`] — a raw
+//!    [`Mem3D`](crate::mem3d::Mem3D) or a routing
+//!    [`FabricPort`](crate::fabric::FabricPort); *both* operands of a
+//!    two-source instruction fetch in parallel (Sec. IV-B1). A hit costs
+//!    one tag-check cycle.
 //! 3. Operand vectors stream from the cache to the FUs over the 2 cache
 //!    ports in `beats` pipelined transfers; the FU array adds its remaining
 //!    pipeline depth (Table I: int alu/mul/div 8-12-28, fp 13-13-28 for a
@@ -23,7 +26,7 @@ pub use vcache::VCache;
 
 use crate::config::VimaConfig;
 use crate::isa::{VDtype, VimaFuKind, VimaInstr};
-use crate::mem3d::Mem3D;
+use crate::mem3d::MemPort;
 use crate::stats::StatsReport;
 use crate::util::error::Result;
 
@@ -83,7 +86,7 @@ impl VimaDevice {
 
     /// Fetch one vector (or partial vector of `bytes`) into the VIMA cache.
     /// Returns the cycle its data is available to the FUs.
-    fn fetch_vector(&mut self, base: u64, bytes: u32, at: u64, mem: &mut Mem3D) -> u64 {
+    fn fetch_vector(&mut self, base: u64, bytes: u32, at: u64, mem: &mut impl MemPort) -> u64 {
         self.stats.vector_fetches += 1;
         if self.vcache.lookup(base) {
             // Tag check only; data streams during the compute beats.
@@ -104,7 +107,7 @@ impl VimaDevice {
     }
 
     /// Posted write-back of a dirty vector (sub-requests across vaults).
-    fn writeback_vector(&mut self, base: u64, bytes: u32, at: u64, mem: &mut Mem3D) {
+    fn writeback_vector(&mut self, base: u64, bytes: u32, at: u64, mem: &mut impl MemPort) {
         self.stats.writeback_vectors += 1;
         let subs = (bytes as u64).div_ceil(64);
         for i in 0..subs {
@@ -118,7 +121,12 @@ impl VimaDevice {
     /// An instruction whose vector exceeds the configured device vector is
     /// a typed error — it used to be a `debug_assert!` that release builds
     /// silently waved through, yielding nonsense timing.
-    pub fn execute(&mut self, instr: &VimaInstr, dispatch: u64, mem: &mut Mem3D) -> Result<u64> {
+    pub fn execute(
+        &mut self,
+        instr: &VimaInstr,
+        dispatch: u64,
+        mem: &mut impl MemPort,
+    ) -> Result<u64> {
         crate::ensure!(
             instr.vector_bytes as usize <= self.cfg.vector_bytes,
             "VIMA instruction vector ({} B) exceeds the configured device vector ({} B)",
@@ -142,7 +150,12 @@ impl VimaDevice {
         let beats = elems.div_ceil(self.cfg.lanes as u64).max(1);
         let port_rounds = (instr.op.num_srcs().max(1) as u64).div_ceil(self.cfg.cache_ports as u64);
         let transfer = beats * port_rounds;
-        let depth = self.fu_total_lat(instr.dtype, kind).saturating_sub(8);
+        // Table I's pipelined FU latency covers transfer + drain of the
+        // instruction's own beats; the remaining depth is the total minus
+        // the *actual* beat count. The old hardcoded `- 8` assumed a full
+        // 8 KB f32 vector (8 beats), undercounting the pipeline depth of
+        // small-vector (ablation) instructions and 64-bit dtypes.
+        let depth = self.fu_total_lat(instr.dtype, kind).saturating_sub(beats);
         let duration_vima = self.cfg.cache_tag_lat + transfer + depth + self.cfg.cache_beat_lat;
         let duration = self.cfg.to_cpu_cycles(duration_vima, self.cpu_ghz);
 
@@ -167,11 +180,26 @@ impl VimaDevice {
         Ok(done + self.inst_lat)
     }
 
+    /// Fabric coherence (DESIGN.md §10): if this device holds `base`
+    /// dirty, post its write-back and downgrade the copy to clean —
+    /// called by the dispatcher before a *sibling* cube's device gathers
+    /// the vector, so cross-cube reads never observe data that only
+    /// exists in another logic layer's cache. Returns whether a
+    /// write-back was issued.
+    pub fn flush_vector(&mut self, base: u64, at: u64, mem: &mut impl MemPort) -> bool {
+        if let Some(bytes) = self.vcache.clean(base) {
+            self.writeback_vector(base, bytes, at, mem);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Host-coherence invalidation of one vector (processor wrote to it).
     /// Writes back the resident line's actual touched size — partial
     /// vectors and small-vector (ablation) instructions on a large-vector
     /// device must not bill a full `cfg.vector_bytes` of DRAM traffic.
-    pub fn invalidate(&mut self, base: u64, at: u64, mem: &mut Mem3D) {
+    pub fn invalidate(&mut self, base: u64, at: u64, mem: &mut impl MemPort) {
         if let Some(bytes) = self.vcache.invalidate(base) {
             self.writeback_vector(base, bytes, at, mem);
         }
@@ -179,7 +207,7 @@ impl VimaDevice {
 
     /// End-of-run drain: write back every dirty resident vector.
     /// Returns when memory settles.
-    pub fn drain(&mut self, at: u64, mem: &mut Mem3D) -> u64 {
+    pub fn drain(&mut self, at: u64, mem: &mut impl MemPort) -> u64 {
         for (base, bytes) in self.vcache.dirty_lines() {
             self.writeback_vector(base, bytes, at, mem);
             let _ = self.vcache.invalidate(base);
@@ -212,11 +240,12 @@ mod tests {
     use super::*;
     use crate::config::{Mem3DConfig, VimaConfig};
     use crate::isa::VimaOp;
+    use crate::mem3d::Mem3D;
 
     fn setup() -> (VimaDevice, Mem3D) {
         let vcfg = VimaConfig::default();
         let mcfg = Mem3DConfig::default();
-        (VimaDevice::new(&vcfg, 1, 2.0), Mem3D::new(&mcfg, 2.0))
+        (VimaDevice::new(&vcfg, 1, 2.0), Mem3D::new(&mcfg, 2.0).unwrap())
     }
 
     fn add_instr(a: u64, b: u64, dst: u64) -> VimaInstr {
@@ -301,7 +330,7 @@ mod tests {
         let mut cfg = VimaConfig::default();
         cfg.vector_bytes = 256;
         let mut v = VimaDevice::new(&cfg, 1, 2.0);
-        let mut mem = Mem3D::new(&Mem3DConfig::default(), 2.0);
+        let mut mem = Mem3D::new(&Mem3DConfig::default(), 2.0).unwrap();
         // 32 x 256 B instructions move the same 8 KB as one big one...
         let mut t = 0;
         for i in 0..32u64 {
@@ -341,6 +370,42 @@ mod tests {
         let e = v.execute(&i, 0, &mut mem).unwrap_err().to_string();
         assert!(e.contains("16384") && e.contains("8192"), "{e}");
         assert_eq!(v.stats.instructions, 0, "rejected instructions must not count");
+    }
+
+    #[test]
+    fn fu_depth_uses_actual_beat_count() {
+        // Table I's pipelined FU latency is fill + drain for the
+        // instruction's own transfer beats, so for a fully-pipelined 2-src
+        // op the duration is tag + total_lat + beat *regardless* of vector
+        // length: a 256 B add streams fewer beats but still drains the
+        // same pipeline. The old code subtracted a hardcoded 8 beats,
+        // undercounting small-vector (ablation) and 64-bit-dtype depth.
+        let duration_of = |instr: &VimaInstr| {
+            let (mut v, mut mem) = setup();
+            v.execute(instr, 0, &mut mem).unwrap();
+            v.stats.compute_cycles_sum
+        };
+        let small = VimaInstr::new(VimaOp::Add, VDtype::F32, &[0x0, 0x2000], Some(0x4000), 256);
+        let big = add_instr(0x0, 0x2000, 0x4000);
+        let d_small = duration_of(&small);
+        let d_big = duration_of(&big);
+        assert_eq!(d_small, d_big, "pipelined add duration must not depend on beat count");
+
+        // f64 streams half the beats per 8 KB; the depth term absorbs it.
+        let f64_big =
+            VimaInstr::new(VimaOp::Add, VDtype::F64, &[0x0, 0x2000], Some(0x4000), 8192);
+        assert_eq!(duration_of(&f64_big), d_big, "f64 (4 beats) must match f32 (8 beats)");
+
+        // A 3-src FMA is port-bound (2 cache ports): each extra beat adds
+        // one port round net of the shrinking depth — 7 extra beats between
+        // 256 B (1 beat) and 8 KB (8 beats) is exactly 7 VIMA cycles
+        // (14 CPU cycles at the 2:1 clock ratio). Consistent scaling, not
+        // the old constant-depth discount.
+        let fma_small =
+            VimaInstr::new(VimaOp::Fma, VDtype::F32, &[0x0, 0x2000, 0x4000], Some(0x6000), 256);
+        let fma_big =
+            VimaInstr::new(VimaOp::Fma, VDtype::F32, &[0x0, 0x2000, 0x4000], Some(0x6000), 8192);
+        assert_eq!(duration_of(&fma_big) - duration_of(&fma_small), 14);
     }
 
     #[test]

@@ -115,6 +115,22 @@ impl VCache {
         }
     }
 
+    /// Downgrade the vector at `addr` to clean, keeping it resident.
+    /// Returns the touched size if it was present **and dirty** — the
+    /// bytes the caller owes DRAM. Used by the fabric dispatcher: when a
+    /// sibling cube's device reads a vector this device produced, the
+    /// dirty copy must reach DRAM first, but the local copy stays usable.
+    pub fn clean(&mut self, addr: u64) -> Option<u32> {
+        let tag = self.tag(addr);
+        for l in &mut self.lines {
+            if l.0 == tag && l.1 {
+                l.1 = false;
+                return Some(l.3);
+            }
+        }
+        None
+    }
+
     /// Host-coherence hook (Sec. III-D): on a processor write to a cached
     /// vector, VIMA writes the line back and invalidates it. Returns the
     /// touched size of the dropped line if it was present **and dirty** —
@@ -232,6 +248,18 @@ mod tests {
         let mut c = VCache::new(4, 8192);
         c.insert_sized(0x2000, true, 724 * 4);
         assert_eq!(c.invalidate(0x2000), Some(724 * 4));
+    }
+
+    #[test]
+    fn clean_downgrades_but_keeps_resident() {
+        let mut c = VCache::new(4, 8192);
+        c.insert(0x2000, true);
+        assert_eq!(c.clean(0x2000), Some(8192), "dirty line owes its bytes");
+        assert_eq!(c.clean(0x2000), None, "already clean");
+        assert!(c.lookup(0x2000), "line must stay resident");
+        assert!(c.dirty_lines().is_empty());
+        // Absent lines are a no-op.
+        assert_eq!(c.clean(0x8000), None);
     }
 
     #[test]

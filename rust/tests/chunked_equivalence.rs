@@ -34,9 +34,9 @@ fn streams(p: TraceParams, threads: usize) -> Result<Vec<TraceStream>> {
 fn chunked_matches_reference_bit_for_bit() {
     let cfg = SystemConfig::default();
     for (p, threads) in cells() {
-        let mut m = Machine::new(&cfg, threads);
+        let mut m = Machine::new(&cfg, threads).unwrap();
         let chunked = m.run(streams(p, threads).unwrap()).unwrap();
-        let mut m = Machine::new(&cfg, threads);
+        let mut m = Machine::new(&cfg, threads).unwrap();
         let reference = m.run_reference(streams(p, threads).unwrap()).unwrap();
         assert_eq!(chunked.cycles, reference.cycles, "cycles diverged for {p:?} x{threads}");
         assert_eq!(chunked.report, reference.report, "report diverged for {p:?} x{threads}");
@@ -50,11 +50,11 @@ fn chunked_reset_reuse_matches_reference() {
     let cfg = SystemConfig::default();
     let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20);
     let q = TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20);
-    let mut m = Machine::new(&cfg, 1);
+    let mut m = Machine::new(&cfg, 1).unwrap();
     m.run(streams(p, 1).unwrap()).unwrap();
     m.reset();
     let chunked = m.run(streams(q, 1).unwrap()).unwrap();
-    let mut m = Machine::new(&cfg, 1);
+    let mut m = Machine::new(&cfg, 1).unwrap();
     let reference = m.run_reference(streams(q, 1).unwrap()).unwrap();
     assert_eq!(chunked.cycles, reference.cycles);
     assert_eq!(chunked.report, reference.report);
@@ -68,7 +68,7 @@ fn run_chunk_until_respects_the_window_limit() {
     let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 256 << 10);
     let mut s = p.stream().unwrap();
     assert!(s.fill());
-    let mut m = Machine::new(&cfg, 1);
+    let mut m = Machine::new(&cfg, 1).unwrap();
     let consumed = m.run_chunk_until(0, s.chunk(), 50).unwrap();
     assert!(consumed > 0, "at least one event runs inside the window");
     assert!(consumed < s.chunk().len(), "a 50-cycle window cannot drain a whole chunk");

@@ -1,0 +1,216 @@
+//! Sharded multi-cube fabric acceptance tests (DESIGN.md §10).
+//!
+//! The contract has three legs:
+//! * `num_cubes = 1` is **bit-identical** to the classic single-`Mem3D`
+//!   system — the fabric's routing parameters (hop latency, shard size)
+//!   must be unobservable with one cube, across every paper kernel and
+//!   backend, and single-cube reports must carry no `fabric.*` keys;
+//! * multi-cube runs are **deterministic**, including under the parallel
+//!   sweep engine (`--jobs N` can never change a result);
+//! * the cube-scaling figure shows streaming-kernel throughput
+//!   **improving** with cube count, with cross-cube gathers honestly
+//!   accounted.
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::SizeScale;
+use vima_sim::coordinator::Experiment;
+use vima_sim::sim::{simulate, simulate_threads};
+use vima_sim::sweep::{RunCell, SweepPlan, SweepRunner};
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+
+const KERNELS: [KernelId; 7] = [
+    KernelId::MemSet,
+    KernelId::MemCopy,
+    KernelId::VecSum,
+    KernelId::Stencil,
+    KernelId::MatMul,
+    KernelId::Knn,
+    KernelId::Mlp,
+];
+
+fn with_cubes(n: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.mem.num_cubes = n;
+    cfg
+}
+
+#[test]
+fn single_cube_is_blind_to_fabric_parameters() {
+    // With one cube every routing decision lands on cube 0 at zero hop
+    // cost, so wild hop-latency / shard-size settings must be completely
+    // unobservable: bit-identical cycles and reports for every paper
+    // kernel on every backend it supports. This pins "num_cubes = 1 ≡ the
+    // pre-fabric single-Mem3D simulator" without keeping the old code.
+    let base = SystemConfig::default();
+    let mut weird = SystemConfig::default();
+    weird.mem.cube_hop_cycles = 9_999;
+    weird.mem.cube_shard_bytes = 64 << 10;
+    weird.validate().unwrap();
+    for kernel in KERNELS {
+        for backend in [Backend::Avx, Backend::Vima, Backend::Hive] {
+            let p = TraceParams::new(kernel, backend, 2 << 20);
+            if p.check().is_err() {
+                continue; // e.g. MatMul/kNN/MLP have no HIVE generator
+            }
+            let a = simulate(&base, p).unwrap();
+            let b = simulate(&weird, p).unwrap();
+            assert_eq!(a.cycles, b.cycles, "{kernel}/{backend}: cycles saw fabric params");
+            assert_eq!(a.report, b.report, "{kernel}/{backend}: report saw fabric params");
+            assert_eq!(
+                a.energy.total_j, b.energy.total_j,
+                "{kernel}/{backend}: energy saw fabric params"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_cube_reports_have_no_fabric_keys() {
+    let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 2 << 20);
+    let r = simulate(&SystemConfig::default(), p).unwrap();
+    assert_eq!(r.report.with_prefix("fabric.").count(), 0, "1-cube runs must not grow keys");
+    assert!(r.report.get("vima.busy_cycles_sum").is_none());
+    assert!(r.report.get("vima.devices").is_none());
+}
+
+#[test]
+fn multi_cube_runs_are_deterministic() {
+    let cfg = with_cubes(4);
+    for backend in [Backend::Avx, Backend::Vima, Backend::Hive] {
+        let p = TraceParams::new(KernelId::VecSum, backend, 2 << 20);
+        let a = simulate_threads(&cfg, p, 2).unwrap();
+        let b = simulate_threads(&cfg, p, 2).unwrap();
+        assert_eq!(a.cycles, b.cycles, "{backend}: nondeterministic cycles");
+        assert_eq!(a.report, b.report, "{backend}: nondeterministic report");
+    }
+}
+
+#[test]
+fn multi_cube_accounts_cross_cube_traffic() {
+    let cfg = with_cubes(4);
+    let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 4 << 20);
+    let r = simulate(&cfg, p).unwrap();
+    assert_eq!(r.report.get("fabric.cubes"), Some(4.0));
+    assert!(
+        r.report.get("fabric.cross_cube_lines").unwrap_or(0.0) > 0.0,
+        "streaming operands must gather across cubes"
+    );
+    assert!(r.report.get("fabric.hop_cycles").unwrap_or(0.0) > 0.0);
+    // The per-device VIMA counters still balance after aggregation.
+    let hits = r.report.get("vima.vcache_hits").unwrap();
+    let misses = r.report.get("vima.vcache_misses").unwrap();
+    let fetches = r.report.get("vima.vector_fetches").unwrap();
+    assert_eq!(hits + misses, fetches);
+    // Multi-cube runs expose the device count and summed busy time.
+    assert_eq!(r.report.get("vima.devices"), Some(4.0));
+    assert!(r.report.get("vima.busy_cycles_sum").unwrap() > 0.0);
+}
+
+#[test]
+fn multi_cube_host_backend_still_serves_all_traffic() {
+    // AVX (host-only) path through a 4-cube fabric: every LLC miss routes
+    // to some cube, totals conserved, chained cubes actually used.
+    let one = simulate(&with_cubes(1), TraceParams::new(KernelId::VecSum, Backend::Avx, 2 << 20))
+        .unwrap();
+    let four = simulate(&with_cubes(4), TraceParams::new(KernelId::VecSum, Backend::Avx, 2 << 20))
+        .unwrap();
+    assert_eq!(
+        one.report.get("mem.host_reads"),
+        four.report.get("mem.host_reads"),
+        "sharding must not change how many lines DRAM serves"
+    );
+    assert!(four.report.get("fabric.chained_host_lines").unwrap() > 0.0);
+}
+
+#[test]
+fn multi_cube_fabric_scales_threaded_streaming() {
+    // The scaling claim at test size: 8 threads hammering one cube
+    // serialize on a single VIMA device and one cube's vaults; 4 cubes
+    // give ~4x the device and DRAM parallelism, far outweighing the hop
+    // cost of cross-cube gathers.
+    let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 8 << 20);
+    let one = simulate_threads(&with_cubes(1), p, 8).unwrap();
+    let four = simulate_threads(&with_cubes(4), p, 8).unwrap();
+    assert!(
+        four.cycles < one.cycles,
+        "4-cube fabric must beat 1 cube on threaded streaming: {} vs {}",
+        four.cycles,
+        one.cycles
+    );
+
+    let p = TraceParams::new(KernelId::MemSet, Backend::Vima, 8 << 20);
+    let one = simulate_threads(&with_cubes(1), p, 8).unwrap();
+    let four = simulate_threads(&with_cubes(4), p, 8).unwrap();
+    assert!(
+        four.cycles < one.cycles,
+        "4-cube fabric must beat 1 cube on MemSet: {} vs {}",
+        four.cycles,
+        one.cycles
+    );
+}
+
+#[test]
+fn scaling_figure_shows_throughput_improving() {
+    let e = Experiment::with_jobs(SystemConfig::default(), SizeScale::Quick, 2);
+    let t = e.scaling_cubes().unwrap();
+    assert_eq!(t.rows.len(), 3, "MemSet / MemCopy / VecSum");
+    assert_eq!(t.columns, vec!["1cube", "2cube", "4cube", "8cube"]);
+    for (label, vals) in &t.rows {
+        assert!((vals[0] - 1.0).abs() < 1e-12, "{label}: 1-cube point must normalize to 1.0");
+        let best = vals.iter().copied().fold(0.0f64, f64::max);
+        assert!(best > 1.2, "{label}: no cube count improved throughput: {vals:?}");
+    }
+}
+
+#[test]
+fn parallel_sweep_of_multi_cube_cells_is_bit_identical() {
+    // `sweep --jobs N` determinism extends to fabric configs: the same
+    // multi-cube plan through 1 worker and 4 workers must agree bit for
+    // bit on every cell.
+    let base = SystemConfig::default();
+    let mut plan = SweepPlan::new();
+    for kernel in [KernelId::MemSet, KernelId::VecSum, KernelId::Stencil] {
+        for cubes in [2usize, 4] {
+            let w = vima_sim::coordinator::workloads::SizedWorkload {
+                workload: kernel.into(),
+                footprint: 2 << 20,
+                size_label: "2MB",
+            };
+            plan.push(
+                RunCell::new(w, Backend::Vima).with_cfg(with_cubes(cubes)).with_threads(4),
+            );
+        }
+    }
+    let serial = SweepRunner::new(1).run(&base, &plan).unwrap();
+    let parallel = SweepRunner::new(4).run(&base, &plan).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(s.cycles, p.cycles, "cell {i}: cycles diverged across --jobs");
+        assert_eq!(s.report, p.report, "cell {i}: report diverged across --jobs");
+    }
+}
+
+#[test]
+fn hardware_gauges_survive_sampling_extrapolation() {
+    // MatMul extrapolates from sampled rows (sim.scale > 1): event
+    // counters scale linearly, but the hardware-count gauges must come
+    // through unscaled — 4 cubes, not 4 x scale.
+    let p = TraceParams::new(KernelId::MatMul, Backend::Vima, 6 << 20);
+    let r = simulate(&with_cubes(4), p).unwrap();
+    assert!(
+        r.report.get("sim.scale").unwrap() > 1.0,
+        "test needs a sampled run to be meaningful"
+    );
+    assert_eq!(r.report.get("fabric.cubes"), Some(4.0));
+    assert_eq!(r.report.get("vima.devices"), Some(4.0));
+}
+
+#[test]
+fn bad_cube_config_is_a_typed_error_everywhere() {
+    // Through the service front door (simulate), not just MemFabric::new.
+    let mut cfg = SystemConfig::default();
+    cfg.mem.num_cubes = 3;
+    let p = TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20);
+    let e = simulate(&cfg, p).unwrap_err().to_string();
+    assert!(e.contains("num_cubes") && e.contains('3'), "{e}");
+}

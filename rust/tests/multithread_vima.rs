@@ -81,7 +81,7 @@ fn intrinsics_programs_run_per_thread() {
     // Two hand-built Intrinsics-VIMA programs on two cores.
     use vima_sim::intrinsics::VimaProgram;
     let cfg = SystemConfig::default();
-    let mut machine = Machine::new(&cfg, 2);
+    let mut machine = Machine::new(&cfg, 2).unwrap();
     let mut progs = Vec::new();
     for t in 0..2u64 {
         let mut p = VimaProgram::new();

@@ -122,9 +122,9 @@ fn streaming_program_equals_eager_build() {
 
     // The simulator sees identical results from either form.
     let cfg = SystemConfig::default();
-    let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+    let mut m = vima_sim::sim::Machine::new(&cfg, 1).unwrap();
     let a = m.run(vec![build_one().into_stream()]).unwrap();
-    let mut m = vima_sim::sim::Machine::new(&cfg, 1);
+    let mut m = vima_sim::sim::Machine::new(&cfg, 1).unwrap();
     let b = m.run(vec![build_one().into_stream()]).unwrap();
     assert_eq!(a.cycles, b.cycles);
     assert_eq!(a.report, b.report);
