@@ -13,7 +13,7 @@
 use std::time::Instant;
 
 use crate::config::SystemConfig;
-use crate::sim::Machine;
+use crate::sim::{run_on, Machine};
 use crate::trace::{Backend, KernelId, TraceParams, TraceStream};
 use crate::util::error::Result;
 
@@ -32,6 +32,26 @@ pub struct ThroughputRow {
     pub speedup: f64,
 }
 
+/// One accuracy/speed frontier cell: the same workload run full-detail and
+/// sampled (DESIGN.md §11), comparing wall time and reported results.
+#[derive(Debug, Clone)]
+pub struct SampledRow {
+    pub workload: String,
+    pub backend: String,
+    /// Dynamic trace events in the full run.
+    pub events: u64,
+    /// Detailed-window events the sampled run actually simulated in detail.
+    pub detailed_events: u64,
+    pub full_wall_s: f64,
+    pub sampled_wall_s: f64,
+    /// `full_wall_s / sampled_wall_s`.
+    pub speedup: f64,
+    /// `|sampled.cycles - full.cycles| / full.cycles * 100`.
+    pub cycle_error_pct: f64,
+    /// `|sampled.energy - full.energy| / full.energy * 100`.
+    pub energy_error_pct: f64,
+}
+
 /// The full benchmark record; serializes to `BENCH_*.json`.
 #[derive(Debug, Clone)]
 pub struct ThroughputReport {
@@ -39,6 +59,9 @@ pub struct ThroughputReport {
     pub quick: bool,
     pub iters: u32,
     pub rows: Vec<ThroughputRow>,
+    /// Sampled-mode accuracy/speed frontier (`bench --sampled`); empty
+    /// when the frontier was not requested.
+    pub sampled: Vec<SampledRow>,
 }
 
 impl ThroughputReport {
@@ -58,6 +81,25 @@ impl ThroughputReport {
     /// Best chunked events/sec across rows (the headline throughput).
     pub fn peak_chunked_eps(&self) -> f64 {
         self.rows.iter().map(|r| r.chunked_eps).fold(0.0, f64::max)
+    }
+
+    /// Geometric mean of the sampled-vs-full wall-clock speedups.
+    pub fn geomean_sampled_speedup(&self) -> f64 {
+        if self.sampled.is_empty() {
+            return 1.0;
+        }
+        let log_sum: f64 = self.sampled.iter().map(|r| r.speedup.ln()).sum();
+        (log_sum / self.sampled.len() as f64).exp()
+    }
+
+    /// Worst cycle error across the sampled frontier, in percent.
+    pub fn max_cycle_error_pct(&self) -> f64 {
+        self.sampled.iter().map(|r| r.cycle_error_pct).fold(0.0, f64::max)
+    }
+
+    /// Worst energy error across the sampled frontier, in percent.
+    pub fn max_energy_error_pct(&self) -> f64 {
+        self.sampled.iter().map(|r| r.energy_error_pct).fold(0.0, f64::max)
     }
 
     pub fn to_json(&self) -> String {
@@ -80,6 +122,35 @@ impl ThroughputReport {
             );
         }
         s += "  ],\n";
+        if !self.sampled.is_empty() {
+            s += "  \"sampled\": [\n";
+            for (i, r) in self.sampled.iter().enumerate() {
+                s += &format!(
+                    "    {{\"workload\": \"{}\", \"backend\": \"{}\", \"events\": {}, \
+                     \"detailed_events\": {}, \"full_wall_s\": {:.4}, \
+                     \"sampled_wall_s\": {:.4}, \"speedup\": {:.2}, \
+                     \"cycle_error_pct\": {:.3}, \"energy_error_pct\": {:.3}}}{}\n",
+                    r.workload,
+                    r.backend,
+                    r.events,
+                    r.detailed_events,
+                    r.full_wall_s,
+                    r.sampled_wall_s,
+                    r.speedup,
+                    r.cycle_error_pct,
+                    r.energy_error_pct,
+                    if i + 1 < self.sampled.len() { "," } else { "" }
+                );
+            }
+            s += "  ],\n";
+            s += &format!(
+                "  \"sampled_summary\": {{\"geomean_speedup\": {:.2}, \
+                 \"max_cycle_error_pct\": {:.3}, \"max_energy_error_pct\": {:.3}}},\n",
+                self.geomean_sampled_speedup(),
+                self.max_cycle_error_pct(),
+                self.max_energy_error_pct()
+            );
+        }
         s += &format!(
             "  \"summary\": {{\"geomean_speedup\": {:.3}, \"min_speedup\": {:.3}, \
              \"peak_chunked_events_per_sec\": {:.0}}}\n",
@@ -172,7 +243,77 @@ pub fn throughput(
         }
         rows.push(row);
     }
-    Ok(ThroughputReport { quick, iters, rows })
+    Ok(ThroughputReport { quick, iters, rows, sampled: Vec::new() })
+}
+
+/// Streaming-kernel cells for the sampled accuracy/speed frontier:
+/// µop-dense AVX traces at paper-scale footprints — the shapes where
+/// fast-forward has the most events to skip.
+fn sampled_matrix(quick: bool) -> Vec<(KernelId, Backend, u64)> {
+    let mb = if quick { 2u64 } else { 24 };
+    vec![
+        (KernelId::MemSet, Backend::Avx, mb << 20),
+        (KernelId::MemCopy, Backend::Avx, mb << 20),
+        (KernelId::VecSum, Backend::Avx, mb << 20),
+        (KernelId::Stencil, Backend::Avx, mb << 20),
+    ]
+}
+
+/// Measure the sampled-mode accuracy/speed frontier (`bench --sampled`):
+/// each streaming kernel timed full-detail vs sampled at the workload's
+/// default window/period, comparing the reported cycles and energy. Goes
+/// through the production [`run_on`] path so every number matches what a
+/// sampled sweep cell would report.
+pub fn sampled_frontier(
+    cfg: &SystemConfig,
+    quick: bool,
+    iters: u32,
+    verbose: bool,
+) -> Result<Vec<SampledRow>> {
+    let mut cfg_sampled = cfg.clone();
+    cfg_sampled.sample.enabled = true;
+    let err_pct =
+        |got: f64, want: f64| if want == 0.0 { 0.0 } else { (got - want).abs() / want * 100.0 };
+    let mut rows = Vec::new();
+    for (kernel, backend, footprint) in sampled_matrix(quick) {
+        let p = TraceParams::new(kernel, backend, footprint);
+        let events = p.stream()?.count() as u64;
+        let mut m_full = Machine::new(cfg, 1)?;
+        let mut m_sampled = Machine::new(&cfg_sampled, 1)?;
+        let full = run_on(&mut m_full, p)?;
+        m_sampled.reset();
+        let sampled = run_on(&mut m_sampled, p)?;
+        let detailed_events =
+            sampled.report.get("sample.detailed_events").unwrap_or(events as f64) as u64;
+        let full_wall_s = time_runs(iters, || {
+            m_full.reset();
+            Ok(run_on(&mut m_full, p)?.cycles)
+        })?;
+        let sampled_wall_s = time_runs(iters, || {
+            m_sampled.reset();
+            Ok(run_on(&mut m_sampled, p)?.cycles)
+        })?;
+        let row = SampledRow {
+            workload: kernel.to_string(),
+            backend: backend.to_string(),
+            events,
+            detailed_events,
+            full_wall_s,
+            sampled_wall_s,
+            speedup: full_wall_s / sampled_wall_s,
+            cycle_error_pct: err_pct(sampled.cycles as f64, full.cycles as f64),
+            energy_error_pct: err_pct(sampled.energy.total_j, full.energy.total_j),
+        };
+        if verbose {
+            eprintln!(
+                "[vima-sim] bench --sampled {}/{}: {:.2}x wall speedup, \
+                 cycle err {:.2}%, energy err {:.2}%",
+                row.workload, row.backend, row.speedup, row.cycle_error_pct, row.energy_error_pct
+            );
+        }
+        rows.push(row);
+    }
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -192,12 +333,39 @@ mod tests {
                 chunked_eps: 2e6,
                 speedup: 2.0,
             }],
+            sampled: Vec::new(),
         };
         let j = report.to_json();
         assert!(j.contains("\"speedup\": 2.000"), "{j}");
         assert!(j.contains("\"geomean_speedup\": 2.000"), "{j}");
+        assert!(!j.contains("\"sampled\""), "{j}");
         assert!(j.ends_with("}\n"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn sampled_section_appears_and_balances() {
+        let report = ThroughputReport {
+            quick: true,
+            iters: 1,
+            rows: Vec::new(),
+            sampled: vec![SampledRow {
+                workload: "VecSum".into(),
+                backend: "AVX".into(),
+                events: 1000,
+                detailed_events: 50,
+                full_wall_s: 2.0,
+                sampled_wall_s: 0.1,
+                speedup: 20.0,
+                cycle_error_pct: 1.5,
+                energy_error_pct: 0.5,
+            }],
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"sampled_summary\""), "{j}");
+        assert!(j.contains("\"max_cycle_error_pct\": 1.500"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!((report.geomean_sampled_speedup() - 20.0).abs() < 1e-9);
     }
 
     #[test]
@@ -210,7 +378,12 @@ mod tests {
             chunked_eps: s,
             speedup: s,
         };
-        let r = ThroughputReport { quick: true, iters: 1, rows: vec![row(2.0), row(8.0)] };
+        let r = ThroughputReport {
+            quick: true,
+            iters: 1,
+            rows: vec![row(2.0), row(8.0)],
+            sampled: Vec::new(),
+        };
         assert!((r.geomean_speedup() - 4.0).abs() < 1e-9);
         assert_eq!(r.min_speedup(), 2.0);
         assert_eq!(r.peak_chunked_eps(), 8.0);

@@ -97,6 +97,14 @@ impl CacheArray {
         false
     }
 
+    /// Fold the complete tag/LRU/dirty state into `h` (sampled-mode
+    /// state-parity digests; see `Machine::state_digest`).
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        self.tick.hash(h);
+        self.lines.hash(h);
+    }
+
     /// Number of valid lines currently resident (test/inspection helper).
     pub fn occupancy(&self) -> usize {
         self.lines.iter().filter(|l| l.0 != INVALID).count()

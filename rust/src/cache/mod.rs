@@ -60,6 +60,12 @@ impl CacheLevel {
         self.mshrs.reset();
         self.stats = LevelStats::default();
     }
+
+    /// Fold the tag/LRU/dirty state into `h` (sampled-mode state-parity
+    /// digests; see `Machine::state_digest`).
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        self.array.digest_into(h);
+    }
 }
 
 /// The full host-side memory system for `n` cores: per-core L1D + L2,
@@ -104,6 +110,10 @@ pub struct MemorySystem {
     /// DRAM fill latency estimate for prefetch timeliness.
     pf_fill_latency: u64,
     pub pf_late_hits: u64,
+    /// Functional fast-forward phase (DESIGN.md §11): posted DRAM traffic
+    /// bypasses the arrival-ordered queue and lands directly on the
+    /// clock-free counters. Toggled by [`begin_functional`](Self::begin_functional).
+    functional: bool,
 }
 
 /// Result of a host memory access.
@@ -132,6 +142,7 @@ impl MemorySystem {
             pf_inflight: LineMap::new(),
             pf_fill_latency,
             pf_late_hits: 0,
+            functional: false,
         })
     }
 
@@ -152,6 +163,7 @@ impl MemorySystem {
         self.pf_inflight.clear();
         self.pf_late_hits = 0;
         self.region_filter.fill(0);
+        self.functional = false;
     }
 
     #[inline]
@@ -217,6 +229,12 @@ impl MemorySystem {
     /// is a tail push; out-of-order posts binary-search their slot, which
     /// preserves the exact ascending drain order the heap produced.
     fn post(&mut self, addr: u64, is_write: bool, at: u64) {
+        if self.functional {
+            // Fast-forward phase: the timestamp is a frozen clock, so
+            // ordering is meaningless — count the traffic immediately.
+            self.mem.host_access_functional(addr, is_write);
+            return;
+        }
         let item = (at, addr, is_write);
         match self.pending.back() {
             Some(last) if *last > item => {
@@ -241,6 +259,167 @@ impl MemorySystem {
     /// Flush all posted traffic into the DRAM model (end of run).
     pub fn drain_pending(&mut self) {
         self.apply_pending(u64::MAX);
+    }
+
+    /// Enter a functional fast-forward phase (DESIGN.md §11): drain the
+    /// posted-traffic queue (its entries carry detailed-window timestamps)
+    /// and reroute subsequent posts straight to the DRAM counters.
+    pub fn begin_functional(&mut self) {
+        self.drain_pending();
+        self.functional = true;
+    }
+
+    /// Leave the functional phase; posts queue and merge by arrival time
+    /// again.
+    pub fn end_functional(&mut self) {
+        self.functional = false;
+    }
+
+    /// Functional-phase twin of [`access_pc`](Self::access_pc): replays
+    /// the *exact* tag/LRU/dirty bookkeeping of a detailed access — the
+    /// same lookup and insert call order at every level, the same
+    /// prefetcher observations and in-flight prefetch bookkeeping — and
+    /// counts DRAM traffic, but acquires no MSHRs, advances no resource
+    /// clocks and returns no completion time. `now` is the frozen
+    /// fast-forward clock, used only to stamp in-flight prefetch entries.
+    pub fn access_functional(&mut self, core: usize, pc: u64, addr: u64, is_write: bool, now: u64) {
+        debug_assert!(self.functional, "call begin_functional() first");
+        self.mark_region(addr);
+        let level = if is_write {
+            self.store_functional(core, addr, now)
+        } else {
+            self.load_functional(core, addr, now)
+        };
+        if level > 1 {
+            self.maybe_prefetch(core, pc, addr, now);
+        }
+    }
+
+    /// [`load_access`](Self::load_access) minus every timing term; array
+    /// operations mirror the detailed path one for one.
+    fn load_functional(&mut self, core: usize, addr: u64, now: u64) -> u8 {
+        let l1 = &mut self.l1[core];
+        l1.stats.accesses += 1;
+        if l1.array.lookup(addr, false) {
+            l1.stats.hits += 1;
+            return 1;
+        }
+        l1.stats.misses += 1;
+
+        let l2 = &mut self.l2[core];
+        l2.stats.accesses += 1;
+        let level = if l2.array.lookup(addr, false) {
+            l2.stats.hits += 1;
+            2
+        } else {
+            l2.stats.misses += 1;
+            self.llc.stats.accesses += 1;
+            let lvl = if self.llc.array.lookup(addr, false) {
+                self.llc.stats.hits += 1;
+                3
+            } else if self.take_inflight_prefetch(addr, now).is_some() {
+                self.llc.stats.hits += 1;
+                3
+            } else {
+                self.llc.stats.misses += 1;
+                self.mem.host_access_functional(addr, false);
+                if let Some(victim) = self.llc.array.insert(addr, false) {
+                    self.llc.stats.writebacks += 1;
+                    self.post(victim, true, now);
+                }
+                4
+            };
+            self.fill_l2(core, addr, now);
+            lvl
+        };
+        self.fill_l1(core, addr, false, now);
+        level
+    }
+
+    /// [`store_access`](Self::store_access) minus every timing term.
+    fn store_functional(&mut self, core: usize, addr: u64, now: u64) -> u8 {
+        let l1 = &mut self.l1[core];
+        l1.stats.accesses += 1;
+        if l1.array.lookup(addr, true) {
+            l1.stats.hits += 1;
+            return 1;
+        }
+        l1.stats.misses += 1;
+
+        let l2 = &mut self.l2[core];
+        l2.stats.accesses += 1;
+        let level = if l2.array.lookup(addr, false) {
+            l2.stats.hits += 1;
+            2
+        } else {
+            l2.stats.misses += 1;
+            self.llc.stats.accesses += 1;
+            if self.llc.array.lookup(addr, false) {
+                self.llc.stats.hits += 1;
+                3
+            } else if self.take_inflight_prefetch(addr, now).is_some() {
+                self.llc.stats.hits += 1;
+                3
+            } else {
+                self.llc.stats.misses += 1;
+                // write-allocate fetch, counted immediately
+                self.post(addr, false, now);
+                if let Some(victim) = self.llc.array.insert(addr, false) {
+                    self.llc.stats.writebacks += 1;
+                    self.post(victim, true, now);
+                }
+                4
+            }
+        };
+        self.fill_l2(core, addr, now);
+        self.fill_l1(core, addr, true, now);
+        level
+    }
+
+    /// Functional [`flush_range`](Self::flush_range): identical
+    /// region-filter fast path and invalidation walk (state parity), dirty
+    /// write-backs counted without advancing DRAM clocks. Returns the
+    /// number of dirty lines written back.
+    pub fn flush_range_functional(&mut self, base: u64, bytes: usize) -> u64 {
+        let first = base >> 20;
+        let last = (base + bytes as u64 - 1) >> 20;
+        if (first..=last).all(|r| !self.region_touched(r << 20)) {
+            return 0;
+        }
+        let mut dirty_lines = 0;
+        for off in (0..bytes as u64).step_by(64) {
+            let addr = base + off;
+            let mut was_dirty = false;
+            for l1 in &mut self.l1 {
+                was_dirty |= l1.array.invalidate(addr);
+            }
+            for l2 in &mut self.l2 {
+                was_dirty |= l2.array.invalidate(addr);
+            }
+            was_dirty |= self.llc.array.invalidate(addr);
+            if was_dirty {
+                dirty_lines += 1;
+                self.mem.host_access_functional(addr, true);
+            }
+        }
+        dirty_lines
+    }
+
+    /// Fold the complete order-driven hierarchy state (every level's
+    /// tag/LRU/dirty arrays plus the region occupancy filter) into `h`
+    /// (sampled-mode state-parity digests; see `Machine::state_digest`).
+    /// Timing state — MSHR windows, the posted queue, in-flight prefetch
+    /// ready times — is deliberately excluded.
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        for l in &self.l1 {
+            l.digest_into(h);
+        }
+        for l in &self.l2 {
+            l.digest_into(h);
+        }
+        self.llc.digest_into(h);
+        self.region_filter.hash(h);
     }
 
     /// One 64 B-line access from `core` at cycle `now`.
@@ -573,6 +752,39 @@ mod tests {
         let mut m = sys();
         let (settle, dirty) = m.flush_range(0x80000, 8192, 100);
         assert_eq!((settle, dirty), (100, 0));
+    }
+
+    #[test]
+    fn functional_stream_matches_detailed_hit_miss_and_traffic() {
+        // The functional path must replay the detailed path's exact tag
+        // walk: hit/miss/writeback counters and total DRAM traffic are
+        // order-derived, so equality here pins the call-order contract.
+        let mut det = sys();
+        let mut fun = sys();
+        fun.begin_functional();
+        let mut now = 0;
+        for i in 0..8192u64 {
+            let addr = ((i * 97) % 4096) * 64 + ((i % 7) << 20);
+            let w = i % 3 == 0;
+            let pc = 0x400 + (i % 4) * 8;
+            now = det.access_pc(0, pc, addr, w, now).done;
+            fun.access_functional(0, pc, addr, w, 0);
+        }
+        det.drain_pending();
+        for (a, b) in [
+            (&det.l1[0].stats, &fun.l1[0].stats),
+            (&det.l2[0].stats, &fun.l2[0].stats),
+            (&det.llc.stats, &fun.llc.stats),
+        ] {
+            assert_eq!(
+                (a.accesses, a.hits, a.misses, a.writebacks),
+                (b.accesses, b.hits, b.misses, b.writebacks)
+            );
+            assert_eq!(b.mshr_stall_cycles, 0, "functional path must not touch MSHRs");
+        }
+        let (dt, ft) = (det.mem.stats_total(), fun.mem.stats_total());
+        assert_eq!((dt.host_reads, dt.host_writes), (ft.host_reads, ft.host_writes));
+        assert_eq!(ft.host_queue_cycles, 0, "functional path must not advance DRAM clocks");
     }
 
     #[test]

@@ -457,6 +457,24 @@ cfg_struct!(
     }
 );
 
+cfg_struct!(
+    /// Sampled execution (DESIGN.md §11; not in Table I — a simulator
+    /// methodology knob, SMARTS-style). When `enabled`, the engine
+    /// alternates **functional fast-forward** phases (caches, DTLB, branch
+    /// predictors, vcache, and fabric counters updated at near-zero cost,
+    /// no latency accounting) with **detailed windows** whose measured
+    /// cycles are extrapolated to the full run. `window_events` /
+    /// `period_events` are in trace events; `0` defers to the workload's
+    /// [`sample_defaults`](crate::workload::Workload::sample_defaults).
+    /// `window_events >= period_events` degenerates to a plain detailed
+    /// run (bit-identical to `sample.enabled = false`).
+    SampleConfig {
+        enabled: bool = false,
+        window_events: u64 = 0,
+        period_events: u64 = 0,
+    }
+);
+
 /// Full-system configuration (baseline CPU + 3D memory + VIMA + HIVE).
 ///
 /// Implements `Hash`/`Eq` (every section does) so a full config can key the
@@ -473,6 +491,7 @@ pub struct SystemConfig {
     pub vima: VimaConfig,
     pub hive: HiveConfig,
     pub prefetch: PrefetchConfig,
+    pub sample: SampleConfig,
 }
 
 impl Default for SystemConfig {
@@ -487,6 +506,7 @@ impl Default for SystemConfig {
             vima: VimaConfig::default(),
             hive: HiveConfig::default(),
             prefetch: PrefetchConfig::default(),
+            sample: SampleConfig::default(),
         }
     }
 }
@@ -519,6 +539,7 @@ impl SystemConfig {
                 "vima" => cfg.vima.set(key, value)?,
                 "hive" => cfg.hive.set(key, value)?,
                 "prefetch" => cfg.prefetch.set(key, value)?,
+                "sample" => cfg.sample.set(key, value)?,
                 other => bail!("unknown section [{other}]"),
             }
         }
@@ -543,6 +564,7 @@ impl SystemConfig {
             ("vima", &self.vima),
             ("hive", &self.hive),
             ("prefetch", &self.prefetch),
+            ("sample", &self.sample),
         ] {
             s.push_str(&format!("[{name}]\n"));
             write.emit(&mut s);
@@ -561,7 +583,8 @@ impl SystemConfig {
             && self.mem.all_finite()
             && self.vima.all_finite()
             && self.hive.all_finite()
-            && self.prefetch.all_finite();
+            && self.prefetch.all_finite()
+            && self.sample.all_finite();
         ensure!(finite, "non-finite float field (breaks sweep-cache hashing)");
         ensure!(self.core.issue_width > 0, "issue width must be positive");
         for (name, c) in
@@ -625,7 +648,15 @@ macro_rules! impl_section {
     };
 }
 
-impl_section!(CoreConfig, CacheConfig, Mem3DConfig, VimaConfig, HiveConfig, PrefetchConfig);
+impl_section!(
+    CoreConfig,
+    CacheConfig,
+    Mem3DConfig,
+    VimaConfig,
+    HiveConfig,
+    PrefetchConfig,
+    SampleConfig
+);
 
 #[cfg(test)]
 mod tests {
@@ -735,6 +766,26 @@ mod tests {
         c.mem.num_cubes = 8;
         c.mem.cube_shard_bytes = 16384;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn sample_section_round_trips_and_separates_identity() {
+        let c = SystemConfig::default();
+        assert!(!c.sample.enabled, "sampling must be opt-in");
+        let s = SystemConfig::from_toml_str(
+            "[sample]\nenabled = true\nwindow_events = 1024\nperiod_events = 65536\n",
+        )
+        .unwrap();
+        assert!(s.sample.enabled);
+        assert_eq!(s.sample.window_events, 1024);
+        assert_eq!(s.sample.period_events, 65536);
+        s.validate().unwrap();
+        // A sampled config is a distinct cache identity from the full-detail
+        // one — the service result cache must never conflate them.
+        assert_ne!(c, s);
+        use std::collections::HashSet;
+        let set: HashSet<SystemConfig> = [c, s].into_iter().collect();
+        assert_eq!(set.len(), 2);
     }
 
     #[test]

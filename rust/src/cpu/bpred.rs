@@ -102,6 +102,18 @@ impl BranchPredictor {
         false
     }
 
+    /// Fold the complete predictor state (history, PHT counters, BTB tags
+    /// and stamps) into `h` (sampled-mode state-parity digests; see
+    /// `Machine::state_digest`).
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        self.history.hash(h);
+        self.pht.hash(h);
+        self.btb_tick.hash(h);
+        self.btb_tags.hash(h);
+        self.btb_stamp.hash(h);
+    }
+
     pub fn reset(&mut self) {
         self.history = 0;
         self.pht.fill(2);

@@ -322,6 +322,37 @@ impl Core {
         retire
     }
 
+    /// Functional-phase twin of [`run_uop`](Self::run_uop): updates every
+    /// order-driven structure — µop/load/store/branch/mispredict counts,
+    /// the DTLB, the branch predictor tables, and the cache hierarchy via
+    /// [`MemorySystem::access_functional`] — while leaving all pipeline
+    /// clocks (fetch, ROB, rename, FU schedules, MOB, retire) untouched.
+    /// `now` is the frozen fast-forward clock, forwarded only to the
+    /// prefetch bookkeeping.
+    pub fn run_uop_functional(&mut self, u: &Uop, mem: &mut MemorySystem, now: u64) {
+        self.stats.uops += 1;
+        match u.fu {
+            FuType::Load => {
+                self.stats.loads += 1;
+                let _ = self.dtlb.access(u.addr);
+                mem.access_functional(self.id, u.pc, u.addr, false, now);
+            }
+            FuType::Store => {
+                self.stats.stores += 1;
+                let _ = self.dtlb.access(u.addr);
+                mem.access_functional(self.id, u.pc, u.addr, true, now);
+            }
+            FuType::Branch => {
+                self.stats.branches += 1;
+                if !self.bpred.predict_and_update(u.pc, u.taken) {
+                    self.stats.mispredicts += 1;
+                    // No restart: the fetch bubble is a timing effect.
+                }
+            }
+            _ => {}
+        }
+    }
+
     /// Drain: cycle when everything currently in flight has retired
     /// (used by the stop-and-go VIMA dispatch protocol).
     pub fn drain(&self) -> u64 {

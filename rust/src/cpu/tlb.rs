@@ -80,6 +80,15 @@ impl Tlb {
         self.walk_penalty
     }
 
+    /// Fold the complete translation state into `h` (sampled-mode
+    /// state-parity digests; see `Machine::state_digest`).
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        self.tick.hash(h);
+        self.mru.hash(h);
+        self.entries.hash(h);
+    }
+
     /// TLB reach in bytes (entries x page size).
     pub fn reach(&self) -> u64 {
         self.entries.len() as u64 * (1 << self.page_shift)

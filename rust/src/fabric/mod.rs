@@ -154,6 +154,32 @@ impl MemFabric {
         MemCompletion { done: if is_write { c.done } else { c.done + hop }, ..c }
     }
 
+    /// Functional-phase twin of [`host_access`](Self::host_access): routes
+    /// to the owning cube and counts the chained-line traffic, but charges
+    /// no hop cycles and advances no cube resource clock — hop latency is
+    /// a duration, and durations are measured only inside detailed sample
+    /// windows (DESIGN.md §11).
+    #[inline]
+    pub fn host_access_functional(&mut self, addr: u64, is_write: bool) {
+        let cube = self.cube_of(addr);
+        if cube != 0 {
+            self.stats.chained_host_lines += 1;
+        }
+        self.cubes[cube].host_access_functional(addr, is_write);
+    }
+
+    /// Functional-phase twin of [`vima_access_from`](Self::vima_access_from):
+    /// counts cross-cube gather lines without touching hop cycles or the
+    /// owning cube's vault clocks.
+    #[inline]
+    pub fn vima_access_functional_from(&mut self, home: usize, addr: u64, is_write: bool) {
+        let cube = self.cube_of(addr);
+        if cube != home {
+            self.stats.cross_cube_lines += 1;
+        }
+        self.cubes[cube].vima_access_functional(addr, is_write);
+    }
+
     /// Uncontended host read latency of the nearest cube (prefetch
     /// fill-time estimate, as before).
     pub fn uncontended_read_latency(&self) -> u64 {
@@ -315,6 +341,57 @@ impl VimaDispatcher {
         }
         let mut port = FabricPort::new(&mut *fabric, home);
         self.devices[home].execute(instr, dispatch, &mut port)
+    }
+
+    /// Functional-phase twin of [`execute`](Self::execute): same home
+    /// routing, same coherence walk (owner flushes, sibling invalidations)
+    /// and the same per-device vector-cache call order — so tags, LRU
+    /// stamps and dirty bits stay bit-identical to detailed execution —
+    /// but all DRAM traffic flows through the clock-free functional
+    /// accessors and no FU or hop timing accrues.
+    pub fn execute_functional(
+        &mut self,
+        instr: &VimaInstr,
+        fabric: &mut MemFabric,
+    ) -> Result<()> {
+        let home = self.home_cube(instr, fabric);
+        if home != 0 {
+            self.remote_home_instrs += 1;
+        }
+        if self.devices.len() > 1 {
+            for s in instr.unique_src_addrs() {
+                let owner = fabric.cube_of(s);
+                if owner != home {
+                    self.devices[owner].flush_vector_functional(s, |a, w| {
+                        fabric.vima_access_functional_from(owner, a, w)
+                    });
+                }
+            }
+            if instr.op.writes_vector() {
+                if let Some(dst) = instr.dst() {
+                    for (i, dev) in self.devices.iter_mut().enumerate() {
+                        if i != home {
+                            let dirty = dev.vcache.invalidate(dst);
+                            debug_assert!(
+                                dirty.is_none(),
+                                "dirty vectors live only in their owner's device"
+                            );
+                            let _ = dirty;
+                        }
+                    }
+                }
+            }
+        }
+        self.devices[home]
+            .execute_functional(instr, |a, w| fabric.vima_access_functional_from(home, a, w))
+    }
+
+    /// Fold every device's vector-cache state into `h` (sampled-mode
+    /// state-parity digests; see `Machine::state_digest`).
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        for d in &self.devices {
+            d.vcache.digest_into(h);
+        }
     }
 
     /// End-of-run drain: write back every device's dirty vectors to its

@@ -189,6 +189,56 @@ impl HiveDevice {
         }
     }
 
+    /// Functional-phase twin of [`execute`](Self::execute): tracks the
+    /// register bank's order state (dirty bits, bound addresses) and
+    /// counts every 64 B DRAM sub-request through `mem`, but advances no
+    /// lock/FU/write-back clock — `lock_wait_cycles`,
+    /// `writeback_cycles` and `busy_until` are durations and accrue only
+    /// inside detailed sample windows (DESIGN.md §11). Register `ready`
+    /// times are dropped to zero (HIVE is timing-entangled, so it is
+    /// excluded from the warm-up state-identity guarantee; its event
+    /// counters and traffic stay exact).
+    pub fn execute_functional(&mut self, op: &HiveOp, mut mem: impl FnMut(u64, bool)) {
+        match *op {
+            HiveOp::Lock => {
+                self.stats.transactions += 1;
+                self.lock_depth += 1;
+            }
+            HiveOp::Unlock => {
+                debug_assert!(self.lock_depth > 0, "unlock without lock");
+                let subs = (self.cfg.vector_bytes / 64) as u64;
+                for reg in &mut self.regs {
+                    if reg.dirty {
+                        self.stats.stores += 1;
+                        for i in 0..subs {
+                            mem(reg.addr + i * 64, true);
+                        }
+                        reg.dirty = false;
+                    }
+                }
+                self.lock_depth = self.lock_depth.saturating_sub(1);
+            }
+            HiveOp::LoadReg { reg, addr } => {
+                self.stats.loads += 1;
+                for i in 0..self.subreqs() {
+                    mem(addr + i * 64, false);
+                }
+                self.regs[reg as usize] = HiveReg { ready: 0, dirty: false, addr };
+            }
+            HiveOp::StoreReg { reg, addr } => {
+                self.stats.stores += 1;
+                for i in 0..self.subreqs() {
+                    mem(addr + i * 64, true);
+                }
+                self.regs[reg as usize].dirty = false;
+            }
+            HiveOp::Compute { rd, .. } => {
+                self.stats.computes += 1;
+                self.regs[rd as usize].dirty = true;
+            }
+        }
+    }
+
     /// Bind the memory address a register will write back to (set by the
     /// trace generator when a compute result has a known destination).
     pub fn bind_reg_addr(&mut self, reg: u8, addr: u64) {

@@ -7,9 +7,9 @@
 //! ```text
 //! vima-sim sweep [--jobs N] [--figs fig2,custom|all] [--csv DIR] [--quick]
 //! vima-sim fig2|fig3|fig4|fig5|ablation|headline|custom|all [--quick]
-//! vima-sim run <workload> <backend> [--mb N] [--threads N] [--stats]
+//! vima-sim run <workload> <backend> [--mb N] [--threads N] [--sampled] [--stats]
 //! vima-sim serve [--jobs N] [--cache N]   (JSONL jobs: stdin -> stdout)
-//! vima-sim bench [--quick] [--iters N] [--json FILE]
+//! vima-sim bench [--quick] [--iters N] [--sampled] [--json FILE]
 //! vima-sim workloads          (list the registry: kernels + programs)
 //! vima-sim config [--config FILE]
 //! vima-sim selftest           (requires a build with --features pjrt)
@@ -71,7 +71,8 @@ COMMANDS:
   bench       Simulator throughput benchmark: chunked execution engine vs
               the event-at-a-time reference path, in simulated events/sec;
               --json FILE writes the BENCH_*.json perf-trajectory record
-              (e.g. BENCH_PR3.json)
+              (e.g. BENCH_PR3.json); --sampled adds the sampled-execution
+              accuracy/speed frontier (full vs sampled wall time + error)
   workloads   List every workload in the registry (name, backends, size)
   transpile   Future-work demo: auto-convert an AVX trace to VIMA
               (vima-sim transpile <workload> [--mb N])
@@ -94,6 +95,9 @@ OPTIONS:
                    'all' = every figure including custom
   --threads N      (run) data-parallel cores
   --mb N           (run) footprint in MiB
+  --sampled        (run) sampled execution: functional fast-forward between
+                   detailed windows, extrapolated result (DESIGN.md §11);
+                   (bench) measure the accuracy/speed frontier
   --stats          (run) dump the full counter report
   --verbose        progress lines on stderr
 ";
@@ -264,6 +268,11 @@ fn main() -> Result<()> {
             };
             let threads = args.get_usize("threads", 1);
             let p = TraceParams::new(id, backend, footprint);
+            let mut cfg = cfg.clone();
+            // `--sampled`: route through the sampled engine at the
+            // workload's default window/period ([sample] in --config
+            // overrides them).
+            cfg.sample.enabled |= args.flag("sampled");
             let r = simulate_threads(&cfg, p, threads)?;
             println!(
                 "cycles={} seconds={:.6} energy_j={:.6}",
@@ -303,7 +312,7 @@ fn main() -> Result<()> {
         }
         "bench" => {
             let iters = args.get_usize("iters", 3) as u32;
-            let report =
+            let mut report =
                 vima_sim::bench::throughput(&cfg, args.flag("quick"), iters, true)?;
             println!(
                 "{:<10} {:>6} {:>12} {:>16} {:>16} {:>9}",
@@ -321,6 +330,38 @@ fn main() -> Result<()> {
                 report.min_speedup(),
                 report.peak_chunked_eps() / 1e6
             );
+            if args.flag("sampled") {
+                report.sampled =
+                    vima_sim::bench::sampled_frontier(&cfg, args.flag("quick"), iters, true)?;
+                println!(
+                    "\n{:<10} {:>6} {:>12} {:>12} {:>9} {:>10} {:>11}",
+                    "workload",
+                    "backend",
+                    "events",
+                    "detailed",
+                    "speedup",
+                    "cyc err %",
+                    "energy err %"
+                );
+                for r in &report.sampled {
+                    println!(
+                        "{:<10} {:>6} {:>12} {:>12} {:>8.2}x {:>10.3} {:>11.3}",
+                        r.workload,
+                        r.backend,
+                        r.events,
+                        r.detailed_events,
+                        r.speedup,
+                        r.cycle_error_pct,
+                        r.energy_error_pct
+                    );
+                }
+                println!(
+                    "sampled geomean {:.2}x, max cycle err {:.3}%, max energy err {:.3}%",
+                    report.geomean_sampled_speedup(),
+                    report.max_cycle_error_pct(),
+                    report.max_energy_error_pct()
+                );
+            }
             if let Some(path) = args.get("json") {
                 std::fs::write(path, report.to_json())?;
                 eprintln!("[vima-sim] wrote {path}");

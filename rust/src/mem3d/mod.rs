@@ -308,6 +308,35 @@ impl Mem3D {
         MemCompletion { done, vault, bank }
     }
 
+    /// Functional (state-update-only) host access: count the traffic and
+    /// the bits moved, touch **no** resource clock. Used by the sampled
+    /// engine's fast-forward phases (DESIGN.md §11): traffic counters stay
+    /// exact while `bank_free`/`vault_*`/link clocks — which would fake
+    /// resource saturation into the next detailed window if advanced at a
+    /// frozen timestamp — are left untouched. Queue-delay cycles are a
+    /// timing quantity and accrue only in detailed windows.
+    #[inline]
+    pub fn host_access_functional(&mut self, _addr: u64, is_write: bool) {
+        if is_write {
+            self.stats.host_writes += 1;
+        } else {
+            self.stats.host_reads += 1;
+        }
+        self.stats.host_bits += 64 * 8;
+    }
+
+    /// Functional VIMA-side access; see
+    /// [`host_access_functional`](Self::host_access_functional).
+    #[inline]
+    pub fn vima_access_functional(&mut self, _addr: u64, is_write: bool) {
+        if is_write {
+            self.stats.vima_writes += 1;
+        } else {
+            self.stats.vima_reads += 1;
+        }
+        self.stats.vima_bits += 64 * 8;
+    }
+
     /// Earliest cycle at which every resource is idle (drain point):
     /// banks, vault data buses, **vault command slots**, and both link
     /// directions. The command slots used to be omitted, so the drain point
@@ -541,6 +570,21 @@ mod tests {
         cfg.row_buffer_bytes = 192;
         let e = Mem3D::new(&cfg, 2.0).unwrap_err().to_string();
         assert!(e.contains("mem3d.row_buffer_bytes") && e.contains("192"), "{e}");
+    }
+
+    #[test]
+    fn functional_accesses_count_traffic_without_advancing_clocks() {
+        let mut m = mem();
+        for i in 0..100u64 {
+            m.host_access_functional(i * 64, i % 2 == 0);
+            m.vima_access_functional(i * 64, i % 3 == 0);
+        }
+        assert_eq!(m.stats.host_reads + m.stats.host_writes, 100);
+        assert_eq!(m.stats.vima_reads + m.stats.vima_writes, 100);
+        assert_eq!(m.stats.host_bits, 100 * 64 * 8);
+        assert_eq!(m.stats.vima_bits, 100 * 64 * 8);
+        assert_eq!(m.stats.host_queue_cycles, 0, "no timing in functional mode");
+        assert_eq!(m.drained_at(), 0, "functional traffic must not advance resource clocks");
     }
 
     #[test]

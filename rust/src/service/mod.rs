@@ -48,6 +48,7 @@
 pub mod jsonl;
 
 use std::collections::{HashMap, VecDeque};
+use std::io::IsTerminal;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
@@ -490,13 +491,29 @@ impl SimService {
             })
             .collect();
         let handles = self.submit_batch(jobs);
+        // Progress heartbeat for long sweeps: completed/total + ETA on
+        // stderr every ~10% of the plan. On for interactive terminals and
+        // under --verbose; off when stderr is piped (CSV/script capture).
+        let total = handles.len();
+        let progress = verbose || std::io::stderr().is_terminal();
+        let every = (total / 10).max(1);
+        let t0 = std::time::Instant::now();
         let mut out = Vec::with_capacity(handles.len());
-        for (handle, cell) in handles.iter().zip(plan.cells()) {
+        for (i, (handle, cell)) in handles.iter().zip(plan.cells()).enumerate() {
             out.push(
                 handle
                     .wait()
                     .map_err(|e| e.context(format!("sweep cell {}", cell.label())))?,
             );
+            let done = i + 1;
+            if progress && done % every == 0 && done < total {
+                let elapsed = t0.elapsed().as_secs_f64();
+                let eta = elapsed / done as f64 * (total - done) as f64;
+                eprintln!(
+                    "[vima-sim] sweep progress: {done}/{total} cells, \
+                     elapsed {elapsed:.1}s, eta {eta:.1}s"
+                );
+            }
         }
         Ok(out)
     }

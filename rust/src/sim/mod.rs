@@ -6,6 +6,8 @@
 //! banks, links, the VIMA FUs) observe requests in approximately global time
 //! order.
 
+use std::collections::hash_map::DefaultHasher;
+use std::hash::Hasher;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::cache::MemorySystem;
@@ -15,7 +17,7 @@ use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::fabric::{FabricPort, VimaDispatcher};
 use crate::hive::HiveDevice;
 use crate::isa::TraceEvent;
-use crate::stats::StatsReport;
+use crate::stats::{StatsReport, WindowStats};
 use crate::trace::{TraceParams, TraceStream};
 use crate::util::error::Result;
 
@@ -87,6 +89,27 @@ pub struct Machine {
     /// Optional multiplier applied to the final cycle count (trace sampling
     /// extrapolation; see DESIGN.md §Sampling). Stats scale linearly too.
     scale: f64,
+    /// Bookkeeping of the last [`run_sampled`](Self::run_sampled) run:
+    /// per-window cycle costs and the detailed/fast-forwarded event split
+    /// that [`finish`](Self::finish) extrapolates from. `None` for plain
+    /// detailed runs.
+    sample: Option<SampleMeasure>,
+}
+
+/// Measurements accumulated by one sampled run (DESIGN.md §11).
+struct SampleMeasure {
+    /// Events executed in detail per sample period (per core).
+    window_events: u64,
+    /// Total events per sample period (per core); `period - window` are
+    /// fast-forwarded functionally.
+    period_events: u64,
+    /// Cycle cost of each *complete* detailed window (partial trailing
+    /// windows contribute to the clock but not to the spread estimate).
+    windows: WindowStats,
+    /// Events executed with full timing, across all cores.
+    detailed_events: u64,
+    /// Events fast-forwarded functionally, across all cores.
+    ff_events: u64,
 }
 
 /// Interleaving window: a core may run at most this far (in cycles) past the
@@ -118,6 +141,7 @@ impl Machine {
             ),
             hive: HiveDevice::new(&cfg.hive, cfg.core.freq_ghz),
             scale: 1.0,
+            sample: None,
             cfg: cfg.clone(),
         })
     }
@@ -184,6 +208,7 @@ impl Machine {
     pub fn run(&mut self, traces: Vec<TraceStream>) -> Result<SimResult> {
         RUN_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
         assert_eq!(traces.len(), self.cores.len(), "one trace per core");
+        self.sample = None;
         let mut streams = traces;
 
         if streams.len() == 1 {
@@ -276,6 +301,251 @@ impl Machine {
         self.run_chunk_until(c, events, u64::MAX).map(|_| ())
     }
 
+    /// Functional twin of [`step`](Self::step): the event's *state*
+    /// transitions (cache tags, TLB, branch predictor, vector caches,
+    /// event counters, DRAM traffic) happen in the exact order of detailed
+    /// execution, but no resource clock advances and no completion time is
+    /// computed. `now` is the frozen fast-forward clock, used only to
+    /// stamp in-flight prefetch entries.
+    fn step_functional(&mut self, c: usize, ev: &TraceEvent, now: u64) -> Result<()> {
+        match ev {
+            TraceEvent::Uop(u) => self.cores[c].run_uop_functional(u, &mut self.mem, now),
+            TraceEvent::Vima(v) => {
+                // Same coherence walk as the detailed path: write back +
+                // invalidate host-cached operand lines before execution.
+                for a in v.src_addrs() {
+                    self.mem.flush_range_functional(a, v.vector_bytes as usize);
+                }
+                if let Some(d) = v.dst() {
+                    self.mem.flush_range_functional(d, v.vector_bytes as usize);
+                }
+                self.vima.execute_functional(v, &mut self.mem.mem)?;
+            }
+            TraceEvent::Hive(h) => {
+                // HIVE register traffic streams through cube 0 like the
+                // detailed FabricPort, minus hop/lock timing.
+                let fabric = &mut self.mem.mem;
+                self.hive.execute_functional(h, |a, w| {
+                    fabric.vima_access_functional_from(0, a, w)
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a whole chunk functionally on core `c` (fast-forward hot
+    /// loop; µop runs dispatch with the borrows hoisted like
+    /// [`run_chunk_until`](Self::run_chunk_until)). Consumes every event.
+    pub fn run_chunk_functional(&mut self, c: usize, events: &[TraceEvent]) -> Result<()> {
+        let now = self.cores[c].now();
+        let mut i = 0;
+        while i < events.len() {
+            if let TraceEvent::Uop(_) = events[i] {
+                let core = &mut self.cores[c];
+                let mem = &mut self.mem;
+                while let Some(TraceEvent::Uop(u)) = events.get(i) {
+                    core.run_uop_functional(u, mem, now);
+                    i += 1;
+                }
+            } else {
+                self.step_functional(c, &events[i], now)?;
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Sampled execution (DESIGN.md §11): alternate *detailed* windows of
+    /// `window_events` events per core — full timing, exactly the
+    /// [`run`](Self::run) machinery — with functional fast-forward over the
+    /// remaining `period_events - window_events` events, where every event
+    /// still updates microarchitectural state (caches, TLBs, branch
+    /// predictors, vector caches) and traffic counters but time stands
+    /// still. [`finish`](Self::finish) extrapolates the measured cycles by
+    /// `total_events / detailed_events` and reports per-window spread under
+    /// `sample.*` keys.
+    ///
+    /// `window_events >= period_events` degenerates to a plain detailed
+    /// run, bit-identical to [`run`](Self::run) /
+    /// [`run_reference`](Self::run_reference) (pinned by
+    /// `tests/sampled_equivalence.rs`).
+    pub fn run_sampled(
+        &mut self,
+        traces: Vec<TraceStream>,
+        window_events: u64,
+        period_events: u64,
+    ) -> Result<SimResult> {
+        if window_events >= period_events {
+            return self.run(traces);
+        }
+        assert!(window_events >= 1, "sample window must cover at least one event");
+        RUN_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(traces.len(), self.cores.len(), "one trace per core");
+        let mut streams = traces;
+        let mut m = SampleMeasure {
+            window_events,
+            period_events,
+            windows: WindowStats::new(),
+            detailed_events: 0,
+            ff_events: 0,
+        };
+        if streams.len() == 1 {
+            self.run_sampled_single(&mut streams[0], &mut m)?;
+        } else {
+            self.run_sampled_interleaved(&mut streams, &mut m)?;
+        }
+        self.sample = Some(m);
+        self.finish()
+    }
+
+    /// Single-core sampled driver: back-to-back chunks, no windowing
+    /// bookkeeping (mirrors the [`run`](Self::run) fast path).
+    fn run_sampled_single(
+        &mut self,
+        stream: &mut TraceStream,
+        m: &mut SampleMeasure,
+    ) -> Result<()> {
+        let ff_budget = m.period_events - m.window_events;
+        loop {
+            // --- detailed window ---
+            let start = self.cores[0].now();
+            let mut left = m.window_events;
+            while left > 0 {
+                if !stream.fill() {
+                    // Partial trailing window: its cycles are on the clock
+                    // but its spread is unrepresentative — don't record it.
+                    m.detailed_events += m.window_events - left;
+                    return Ok(());
+                }
+                let chunk = stream.chunk();
+                let take = (left as usize).min(chunk.len());
+                let n = self.run_chunk_until(0, &chunk[..take], u64::MAX)?;
+                stream.consume(n);
+                left -= n as u64;
+            }
+            m.detailed_events += m.window_events;
+            m.windows.record((self.cores[0].now() - start) as f64);
+
+            // --- functional fast-forward ---
+            self.mem.begin_functional();
+            let mut left = ff_budget;
+            while left > 0 {
+                if !stream.fill() {
+                    break;
+                }
+                let chunk = stream.chunk();
+                let take = (left as usize).min(chunk.len());
+                self.run_chunk_functional(0, &chunk[..take])?;
+                stream.consume(take);
+                left -= take as u64;
+            }
+            m.ff_events += ff_budget - left;
+            self.mem.end_functional();
+            if left > 0 {
+                return Ok(()); // stream ran dry mid-fast-forward
+            }
+        }
+    }
+
+    /// Multi-core sampled driver: detailed windows run through the same
+    /// bounded-skew watermark/rotation interleaver as
+    /// [`run_interleaved`](Self::run_interleaved) with a per-core event
+    /// budget; fast-forward phases visit cores sequentially (no timing, so
+    /// interleaving order is irrelevant).
+    fn run_sampled_interleaved(
+        &mut self,
+        streams: &mut [TraceStream],
+        m: &mut SampleMeasure,
+    ) -> Result<()> {
+        let n = streams.len();
+        let ff_budget = m.period_events - m.window_events;
+        let mut done = vec![false; n];
+        let mut round = 0usize;
+        while !done.iter().all(|&d| d) {
+            // --- detailed window ---
+            let start = self.cores.iter().map(|c| c.now()).max().unwrap_or(0);
+            let live_at_start = done.clone();
+            let mut budget = vec![m.window_events; n];
+            loop {
+                let watermark = (0..n)
+                    .filter(|&c| !done[c] && budget[c] > 0)
+                    .map(|c| self.cores[c].now())
+                    .min();
+                let Some(watermark) = watermark else { break };
+                let limit = watermark + WINDOW;
+                round += 1;
+                for i in 0..n {
+                    let c = (i + round) % n;
+                    if done[c] || budget[c] == 0 {
+                        continue;
+                    }
+                    while self.cores[c].now() <= limit && budget[c] > 0 {
+                        if !streams[c].fill() {
+                            done[c] = true;
+                            break;
+                        }
+                        let chunk = streams[c].chunk();
+                        let take = (budget[c] as usize).min(chunk.len());
+                        let consumed = self.run_chunk_until(c, &chunk[..take], limit)?;
+                        streams[c].consume(consumed);
+                        budget[c] -= consumed as u64;
+                        m.detailed_events += consumed as u64;
+                    }
+                }
+            }
+            let end = self.cores.iter().map(|c| c.now()).max().unwrap_or(start);
+            // Record only clean windows: if a stream ran dry mid-window the
+            // measured cost is unrepresentative of a full one.
+            if done == live_at_start {
+                m.windows.record((end - start) as f64);
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+
+            // --- functional fast-forward ---
+            self.mem.begin_functional();
+            for c in 0..n {
+                if done[c] {
+                    continue;
+                }
+                let mut left = ff_budget;
+                while left > 0 {
+                    if !streams[c].fill() {
+                        done[c] = true;
+                        break;
+                    }
+                    let chunk = streams[c].chunk();
+                    let take = (left as usize).min(chunk.len());
+                    self.run_chunk_functional(c, &chunk[..take])?;
+                    streams[c].consume(take);
+                    left -= take as u64;
+                }
+                m.ff_events += ff_budget - left;
+            }
+            self.mem.end_functional();
+        }
+        Ok(())
+    }
+
+    /// Digest of every *order-driven* microarchitectural structure the
+    /// functional fast-forward path promises to keep bit-identical to
+    /// detailed execution: cache tag/LRU/dirty arrays at every level, the
+    /// region occupancy filter, each core's DTLB and branch predictor, and
+    /// each VIMA device's vector cache. Timing state (resource clocks,
+    /// MSHR windows, pipeline rings, in-flight prefetch ready times) is
+    /// excluded by design. Pinned by `tests/sampled_equivalence.rs`.
+    pub fn state_digest(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        for c in &self.cores {
+            c.dtlb.digest_into(&mut h);
+            c.bpred.digest_into(&mut h);
+        }
+        self.mem.digest_into(&mut h);
+        self.vima.digest_into(&mut h);
+        h.finish()
+    }
+
     /// Event-at-a-time reference implementation of [`run`] — the
     /// pre-chunking execution path, kept as the determinism oracle (the
     /// chunked engine must reproduce its cycle counts bit for bit) and as
@@ -283,6 +553,7 @@ impl Machine {
     pub fn run_reference(&mut self, traces: Vec<TraceStream>) -> Result<SimResult> {
         RUN_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
         assert_eq!(traces.len(), self.cores.len(), "one trace per core");
+        self.sample = None;
         let mut streams: Vec<_> = traces.into_iter().map(Some).collect();
         let mut done = vec![false; streams.len()];
 
@@ -356,14 +627,22 @@ impl Machine {
             );
         }
         let cycles_raw = core_end.max(vima_end).max(hive_end).max(self.mem.mem.drained_at());
-        // Extrapolate through f64 only when a sampling scale is set, and
-        // round instead of truncating: `as u64` floors, which past 2^53 (or
-        // with any fractional scale) biases every scaled run downward.
-        let cycles = if self.scale == 1.0 {
-            cycles_raw
-        } else {
-            (cycles_raw as f64 * self.scale).round() as u64
+        // Sampled-run extrapolation (DESIGN.md §11): the clock advanced
+        // only during detailed windows, so measured cycles blow up by the
+        // fraction of events they covered. Composes with the trace-level
+        // sampling `scale` — the two sub-sample along independent axes.
+        let factor = match &self.sample {
+            Some(m) if m.detailed_events > 0 => {
+                (m.detailed_events + m.ff_events) as f64 / m.detailed_events as f64
+            }
+            _ => 1.0,
         };
+        // Extrapolate through f64 only when a factor is set, and round
+        // instead of truncating: `as u64` floors, which past 2^53 (or
+        // with any fractional scale) biases every scaled run downward.
+        let eff = self.scale * factor;
+        let cycles =
+            if eff == 1.0 { cycles_raw } else { (cycles_raw as f64 * eff).round() as u64 };
 
         let mut report = StatsReport::new();
         for core in &self.cores {
@@ -383,9 +662,30 @@ impl Machine {
                 report.set("vima.devices", self.vima.num_devices() as f64);
             }
         }
+        if factor != 1.0 {
+            // Durations (stall/queue cycle sums, busy timestamps) accrued
+            // only inside detailed windows; event counters are whole-run
+            // exact. Extrapolate just the former.
+            report.scale_durations(factor);
+        }
         report.set("sim.cycles", cycles as f64);
         report.set("sim.threads", self.cores.len() as f64);
         report.set("sim.scale", self.scale);
+        if let Some(m) = &self.sample {
+            let k = m.windows.count().max(1) as f64;
+            report.set("sample.windows", m.windows.count() as f64);
+            report.set("sample.window_events", m.window_events as f64);
+            report.set("sample.period_events", m.period_events as f64);
+            report.set("sample.detailed_events", m.detailed_events as f64);
+            report.set("sample.total_events", (m.detailed_events + m.ff_events) as f64);
+            report.set("sample.factor", factor);
+            report.set("sample.cycles_mean", m.windows.mean());
+            report.set("sample.cycles_stddev", m.windows.stddev());
+            // Error bound on the extrapolated cycle count: the window
+            // mean's 95% CI plus a 1/k boundary term (cold-start and
+            // partial-window bias shrink as more windows are measured).
+            report.set("sample.cycles_ci95", cycles as f64 * (m.windows.rel_ci95() + 1.0 / k));
+        }
 
         let energy = EnergyModel::new(&self.cfg).compute(&report, cycles, self.cores.len());
         let seconds = cycles as f64 / (self.cfg.core.freq_ghz * 1e9);
@@ -401,6 +701,7 @@ impl Machine {
         self.vima.reset();
         self.hive.reset();
         self.scale = 1.0;
+        self.sample = None;
     }
 }
 
@@ -454,16 +755,31 @@ pub fn run_on(machine: &mut Machine, params: TraceParams) -> Result<SimResult> {
         params.threads
     );
     let workload = crate::workload::get(params.workload)?;
-    // The extrapolation factor is a property of the *cell*, computed from
-    // the single-thread view of the parameters (the per-thread generators
-    // divide their sampling caps by the thread count themselves; see
-    // matmul::sampling_for) — this keeps sweep output identical whether a
-    // cell was declared threaded or not.
-    machine.set_scale(workload.sampling_scale(&params.with_threads(0, 1)).max(1.0));
+    // The extrapolation factor is computed from the cell's own parameters
+    // (historically it was evaluated on a `with_threads(0, 1)` view). The
+    // per-thread generators divide their sampling caps by the thread count
+    // (see matmul::sampling_for), so every single-thread cell and fig4's
+    // t<=8 cells are bit-unchanged — pinned by
+    // `sampling_scale_matches_single_thread_view` in
+    // tests/sampled_equivalence.rs. At 16/32 threads MatMul's per-thread
+    // cap floors at 6 rows and the factor now matches the rows each thread
+    // actually emits; the old view overestimated cycles there (intentional
+    // fix, documented in DESIGN.md §11).
+    machine.set_scale(workload.sampling_scale(&params).max(1.0));
     let traces = (0..params.threads)
         .map(|t| params.with_threads(t, params.threads).stream())
         .collect::<Result<Vec<_>>>()?;
-    machine.run(traces)
+    if machine.cfg.sample.enabled {
+        // Zero window/period defer to the workload's own defaults.
+        let (dw, dp) = workload.sample_defaults(&params);
+        let w = machine.cfg.sample.window_events;
+        let p = machine.cfg.sample.period_events;
+        let window = if w > 0 { w } else { dw };
+        let period = if p > 0 { p } else { dp };
+        machine.run_sampled(traces, window, period)
+    } else {
+        machine.run(traces)
+    }
 }
 
 #[cfg(test)]
@@ -609,6 +925,42 @@ mod tests {
         twice.energy.total_j = 1.0;
         assert_eq!(real.speedup_vs(&twice), 2.0);
         assert_eq!(real.energy_ratio_vs(&twice), 0.5);
+    }
+
+    #[test]
+    fn sampled_run_reports_sample_keys_and_tracks_full_run() {
+        let c = cfg();
+        let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20);
+        let full = simulate(&c, p).unwrap();
+        let mut m = Machine::new(&c, 1).unwrap();
+        let sampled = m.run_sampled(vec![p.stream().unwrap()], 2048, 32768).unwrap();
+        let r = &sampled.report;
+        assert!(r.get("sample.windows").unwrap() >= 1.0);
+        assert!(r.get("sample.factor").unwrap() > 1.0);
+        assert_eq!(
+            r.get("sample.total_events").unwrap(),
+            full.report.get("core.uops").unwrap(),
+            "every event must be executed (functionally or in detail)"
+        );
+        let err = (sampled.cycles as f64 - full.cycles as f64).abs() / full.cycles as f64;
+        assert!(err < 0.10, "extrapolated cycles off by {:.1}%", err * 100.0);
+        // Detailed events are a strict subset: the run must be cheaper in
+        // simulated timing work (factor > 1 implies skipped timing).
+        assert!(
+            r.get("sample.detailed_events").unwrap() < r.get("sample.total_events").unwrap()
+        );
+    }
+
+    #[test]
+    fn sampled_degenerate_window_equals_plain_run() {
+        let c = cfg();
+        let p = TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20);
+        let full = simulate(&c, p).unwrap();
+        let mut m = Machine::new(&c, 1).unwrap();
+        let degen = m.run_sampled(vec![p.stream().unwrap()], 4096, 4096).unwrap();
+        assert_eq!(degen.cycles, full.cycles);
+        assert_eq!(degen.report, full.report);
+        assert!(degen.report.get("sample.windows").is_none(), "no sample keys on delegation");
     }
 
     #[test]

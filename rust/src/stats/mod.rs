@@ -48,6 +48,27 @@ impl StatsReport {
         }
     }
 
+    /// Scale only duration-like entries (stall/queue cycle sums and busy
+    /// timestamps) by `f` — the sampled-execution extrapolation (DESIGN.md
+    /// §11). During functional fast-forward every *event* is counted but
+    /// time stands still, so durations accrue only inside the detailed
+    /// windows and must extrapolate by the sample factor, while the event
+    /// counters are already whole-run exact.
+    pub fn scale_durations(&mut self, f: f64) {
+        for (k, v) in self.entries.iter_mut() {
+            if Self::is_duration(k) {
+                *v *= f;
+            }
+        }
+    }
+
+    /// Duration-like keys: cycle sums (`*_cycles`, `*_cycles_sum`) and the
+    /// device busy timestamps. Event counters (hits, misses, traffic) and
+    /// hardware-count gauges are *not* durations.
+    fn is_duration(key: &str) -> bool {
+        key.ends_with("_cycles") || key.ends_with("_cycles_sum") || key.ends_with(".busy_until")
+    }
+
     /// Non-summable gauges: timestamps ("when did this component go
     /// idle") and fixed hardware counts. Unlike event counters they must
     /// combine by `max`: summing two reports' `sim.cycles` or
@@ -60,6 +81,10 @@ impl StatsReport {
             || key == "fabric.cubes"
             || key == "vima.devices"
             || key.ends_with(".busy_until")
+            // Sampled-run summary statistics (window means, CI widths,
+            // extrapolation factor) are per-run descriptors, not summable
+            // event counts.
+            || key.starts_with("sample.")
     }
 
     /// Merge another report into this one: event counters sum, timestamp
@@ -98,6 +123,92 @@ impl fmt::Display for StatsReport {
             }
         }
         Ok(())
+    }
+}
+
+/// Streaming mean/variance accumulator (Welford) over the per-window cycle
+/// costs of a sampled run (DESIGN.md §11). Drives the confidence interval
+/// the engine reports next to every extrapolated result: with `k` detailed
+/// windows of measured cost `x_i`, the run-total estimate is
+/// `mean(x) * k * factor` and its 95% CI half-width follows from the
+/// sample standard deviation, `1.96 * s / sqrt(k)` per window.
+#[derive(Debug, Default, Clone)]
+pub struct WindowStats {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl WindowStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        if self.count == 1 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Sample variance (n-1 denominator); 0 with fewer than two samples.
+    pub fn variance(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            self.m2 / (self.count - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// 95% CI half-width of the per-window mean: `1.96 * s / sqrt(k)`.
+    pub fn ci95_half(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            1.96 * self.stddev() / (self.count as f64).sqrt()
+        }
+    }
+
+    /// CI half-width relative to the mean (0 when the mean is 0).
+    pub fn rel_ci95(&self) -> f64 {
+        ratio(self.ci95_half(), self.mean.abs())
     }
 }
 
@@ -288,5 +399,69 @@ mod tests {
     fn ratio_zero_denominator() {
         assert_eq!(ratio(5.0, 0.0), 0.0);
         assert_eq!(ratio(6.0, 3.0), 2.0);
+    }
+
+    #[test]
+    fn window_stats_welford_matches_direct_formulas() {
+        let xs = [10.0, 12.0, 11.0, 13.0, 9.0];
+        let mut w = WindowStats::new();
+        for x in xs {
+            w.record(x);
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+        assert_eq!(w.count(), 5);
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 9.0);
+        assert_eq!(w.max(), 13.0);
+        let ci = 1.96 * var.sqrt() / n.sqrt();
+        assert!((w.ci95_half() - ci).abs() < 1e-12);
+        assert!((w.rel_ci95() - ci / mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_stats_degenerate_cases() {
+        let w = WindowStats::new();
+        assert_eq!((w.count(), w.mean(), w.variance(), w.ci95_half()), (0, 0.0, 0.0, 0.0));
+        let mut one = WindowStats::new();
+        one.record(42.0);
+        assert_eq!(one.mean(), 42.0);
+        assert_eq!(one.variance(), 0.0, "a single window has no spread estimate");
+        assert_eq!(one.ci95_half(), 0.0);
+        // Identical windows (perfectly regular streaming kernel): zero CI.
+        let mut flat = WindowStats::new();
+        for _ in 0..10 {
+            flat.record(7.0);
+        }
+        assert_eq!(flat.stddev(), 0.0);
+        assert_eq!(flat.rel_ci95(), 0.0);
+    }
+
+    #[test]
+    fn scale_durations_touches_only_time_keys() {
+        let mut r = StatsReport::new();
+        r.set("core.fu_stall_cycles", 10.0);
+        r.set("vima.fetch_cycles_sum", 4.0);
+        r.set("vima.busy_until", 100.0);
+        r.set("core.uops", 50.0);
+        r.set("mem.host_reads", 7.0);
+        r.scale_durations(3.0);
+        assert_eq!(r.get("core.fu_stall_cycles"), Some(30.0));
+        assert_eq!(r.get("vima.fetch_cycles_sum"), Some(12.0));
+        assert_eq!(r.get("vima.busy_until"), Some(300.0));
+        assert_eq!(r.get("core.uops"), Some(50.0), "event counters must not scale");
+        assert_eq!(r.get("mem.host_reads"), Some(7.0));
+    }
+
+    #[test]
+    fn sample_keys_merge_as_gauges() {
+        let mut a = StatsReport::new();
+        a.set("sample.factor", 32.0);
+        let mut b = StatsReport::new();
+        b.set("sample.factor", 30.0);
+        a.merge(&b);
+        assert_eq!(a.get("sample.factor"), Some(32.0), "sample.* must not sum on merge");
     }
 }

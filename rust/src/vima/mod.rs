@@ -180,6 +180,94 @@ impl VimaDevice {
         Ok(done + self.inst_lat)
     }
 
+    /// Functional-phase twin of [`execute`](Self::execute): replays the
+    /// exact vector-cache lookup/insert order (so tags, LRU stamps, dirty
+    /// bits and the hit/miss/eviction counters stay bit-identical to
+    /// detailed execution) and counts every 64 B DRAM sub-request through
+    /// `mem`, but touches no FU pipeline, accrues no fetch/compute cycle
+    /// sums and leaves `busy_until` alone — those are durations, measured
+    /// only inside detailed sample windows (DESIGN.md §11).
+    pub fn execute_functional(
+        &mut self,
+        instr: &VimaInstr,
+        mut mem: impl FnMut(u64, bool),
+    ) -> Result<()> {
+        crate::ensure!(
+            instr.vector_bytes as usize <= self.cfg.vector_bytes,
+            "VIMA instruction vector ({} B) exceeds the configured device vector ({} B)",
+            instr.vector_bytes,
+            self.cfg.vector_bytes
+        );
+        self.stats.instructions += 1;
+        for &s in &instr.unique_src_addrs() {
+            self.fetch_vector_functional(s, instr.vector_bytes, &mut mem);
+        }
+        if instr.op.writes_vector() {
+            if let Some(dst) = instr.dst() {
+                if let Some((victim, vbytes)) =
+                    self.vcache.insert_sized(dst, true, instr.vector_bytes)
+                {
+                    self.writeback_vector_functional(victim, vbytes, &mut mem);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Functional [`fetch_vector`](Self::fetch_vector): same cache calls,
+    /// no latency accounting.
+    fn fetch_vector_functional(
+        &mut self,
+        base: u64,
+        bytes: u32,
+        mem: &mut impl FnMut(u64, bool),
+    ) {
+        self.stats.vector_fetches += 1;
+        if self.vcache.lookup(base) {
+            return;
+        }
+        let subs = (bytes as u64).div_ceil(64);
+        for i in 0..subs {
+            mem(base + i * 64, false);
+        }
+        if let Some((victim, vbytes)) = self.vcache.insert_sized(base, false, bytes) {
+            self.writeback_vector_functional(victim, vbytes, mem);
+        }
+    }
+
+    /// Functional [`writeback_vector`](Self::writeback_vector).
+    fn writeback_vector_functional(
+        &mut self,
+        base: u64,
+        bytes: u32,
+        mem: &mut impl FnMut(u64, bool),
+    ) {
+        self.stats.writeback_vectors += 1;
+        let subs = (bytes as u64).div_ceil(64);
+        for i in 0..subs {
+            mem(base + i * 64, true);
+        }
+    }
+
+    /// Functional [`flush_vector`](Self::flush_vector) (dispatcher
+    /// coherence during fast-forward phases).
+    pub fn flush_vector_functional(&mut self, base: u64, mut mem: impl FnMut(u64, bool)) -> bool {
+        if let Some(bytes) = self.vcache.clean(base) {
+            self.writeback_vector_functional(base, bytes, &mut mem);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Functional [`invalidate`](Self::invalidate) (host wrote the vector
+    /// during a fast-forward phase).
+    pub fn invalidate_functional(&mut self, base: u64, mut mem: impl FnMut(u64, bool)) {
+        if let Some(bytes) = self.vcache.invalidate(base) {
+            self.writeback_vector_functional(base, bytes, &mut mem);
+        }
+    }
+
     /// Fabric coherence (DESIGN.md §10): if this device holds `base`
     /// dirty, post its write-back and downgrade the copy to clean —
     /// called by the dispatcher before a *sibling* cube's device gathers
@@ -406,6 +494,40 @@ mod tests {
         let fma_big =
             VimaInstr::new(VimaOp::Fma, VDtype::F32, &[0x0, 0x2000, 0x4000], Some(0x6000), 8192);
         assert_eq!(duration_of(&fma_big) - duration_of(&fma_small), 14);
+    }
+
+    #[test]
+    fn functional_execute_mirrors_cache_state_without_timing() {
+        // Drive the same instruction stream through a detailed device and
+        // a functional one: vector-cache state and event counters must be
+        // bit-identical, while the functional device accrues zero timing.
+        let (mut v_det, mut mem_det) = setup();
+        let mut v_fun = VimaDevice::new(&VimaConfig::default(), 1, 2.0);
+        let mut mem_fun = Mem3D::new(&Mem3DConfig::default(), 2.0).unwrap();
+        let mut t = 0;
+        for i in 0..20u64 {
+            let base = i * 0x6000;
+            let instr = add_instr(base, base + 0x2000, base + 0x4000);
+            t = v_det.execute(&instr, t, &mut mem_det).unwrap();
+            v_fun
+                .execute_functional(&instr, |a, w| mem_fun.vima_access_functional(a, w))
+                .unwrap();
+        }
+        assert_eq!(v_fun.vcache.dirty_lines(), v_det.vcache.dirty_lines());
+        assert_eq!(
+            (v_fun.vcache.hits, v_fun.vcache.misses, v_fun.vcache.dirty_evictions),
+            (v_det.vcache.hits, v_det.vcache.misses, v_det.vcache.dirty_evictions)
+        );
+        assert_eq!(v_fun.stats.instructions, v_det.stats.instructions);
+        assert_eq!(v_fun.stats.vector_fetches, v_det.stats.vector_fetches);
+        assert_eq!(v_fun.stats.writeback_vectors, v_det.stats.writeback_vectors);
+        assert_eq!(mem_fun.stats.vima_reads, mem_det.stats.vima_reads);
+        assert_eq!(mem_fun.stats.vima_writes, mem_det.stats.vima_writes);
+        assert_eq!(
+            (v_fun.stats.busy_until, v_fun.stats.compute_cycles_sum, v_fun.stats.fetch_cycles_sum),
+            (0, 0, 0),
+            "functional path must accrue no timing"
+        );
     }
 
     #[test]

@@ -147,6 +147,14 @@ impl VCache {
         None
     }
 
+    /// Fold the complete line state into `h` (sampled-mode state-parity
+    /// digests; see `Machine::state_digest`).
+    pub fn digest_into(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        self.tick.hash(h);
+        self.lines.hash(h);
+    }
+
     /// All dirty vector (base address, touched bytes) pairs (end-of-run drain).
     pub fn dirty_lines(&self) -> Vec<(u64, u32)> {
         self.lines.iter().filter(|l| l.0 != INVALID && l.1).map(|l| (l.0, l.3)).collect()

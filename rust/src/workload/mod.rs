@@ -76,6 +76,27 @@ pub trait Workload: Send + Sync {
         4 << 20
     }
 
+    /// Default `(window_events, period_events)` for sampled execution
+    /// (DESIGN.md §11), used when `[sample]` is enabled with zero
+    /// window/period. The heuristic estimates the per-thread event count
+    /// from the footprint — ~6 events per 64 B line on the scalar backend,
+    /// ~6 per vector on VIMA/HIVE — and slices it into ~16 periods with a
+    /// 1/64 detailed fraction. The window floor keeps each measured window
+    /// long enough to amortize its boundary transient (pipeline/MSHR
+    /// refill after a fast-forward phase); the period floor makes short
+    /// runs degenerate toward full-detail execution rather than a single
+    /// unrepresentative window.
+    fn sample_defaults(&self, p: &TraceParams) -> (u64, u64) {
+        let per_unit = match p.backend {
+            Backend::Avx => p.footprint.div_ceil(64),
+            _ => p.footprint.div_ceil(p.vector_bytes),
+        };
+        let est = (per_unit * 6 / p.threads.max(1) as u64).max(1);
+        let period = (est / 16).max(2048);
+        let window = (period / 64).max(1024);
+        (window, period)
+    }
+
     /// Build the trace producer for `p` (`p.backend` is guaranteed to be in
     /// [`backends`](Self::backends) and `p` to have passed
     /// [`validate`](Self::validate)).

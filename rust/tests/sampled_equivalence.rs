@@ -1,0 +1,211 @@
+//! Sampled-execution oracle (DESIGN.md §11): the functional fast-forward
+//! engine must preserve microarchitectural state bit-for-bit, the
+//! degenerate `window == period` configuration must reproduce
+//! `Machine::run_reference` exactly, the reported error bars must bracket
+//! the full-run result on the paper kernels, and sampled jobs must never
+//! collide with full-detail jobs in the service result cache.
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::{SizeScale, WorkloadSet};
+use vima_sim::service::{Job, ServiceConfig, SimService};
+use vima_sim::sim::Machine;
+use vima_sim::sweep::RunCell;
+use vima_sim::trace::{Backend, KernelId, TraceParams, TraceStream};
+use vima_sim::util::error::Result;
+use vima_sim::workload;
+
+/// Single-core cells covering every event kind: µop-dense AVX streams,
+/// VIMA dispatch + coherence walks (including partial vectors), and HIVE
+/// register transactions.
+fn cells() -> Vec<TraceParams> {
+    vec![
+        TraceParams::new(KernelId::VecSum, Backend::Avx, 2 << 20),
+        TraceParams::new(KernelId::MemCopy, Backend::Avx, 1 << 20),
+        TraceParams::new(KernelId::Stencil, Backend::Vima, 1 << 20),
+        TraceParams::new(KernelId::MatMul, Backend::Vima, 256 << 10),
+        TraceParams::new(KernelId::MemSet, Backend::Vima, 1 << 20).with_vector_bytes(256),
+        TraceParams::new(KernelId::VecSum, Backend::Hive, 1 << 20),
+    ]
+}
+
+fn streams(p: TraceParams, threads: usize) -> Result<Vec<TraceStream>> {
+    (0..threads).map(|t| p.with_threads(t, threads).stream()).collect()
+}
+
+/// (a) `window == period` leaves no fast-forward budget: `run_sampled`
+/// degenerates to a plain detailed run, bit-identical to the
+/// event-at-a-time reference oracle — cycles and every counter — and
+/// reports no `sample.*` keys.
+#[test]
+fn window_equals_period_matches_reference_bit_for_bit() {
+    let cfg = SystemConfig::default();
+    let mut shapes: Vec<(TraceParams, usize)> = cells().into_iter().map(|p| (p, 1)).collect();
+    shapes.push((TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20), 4));
+    for (p, threads) in shapes {
+        let mut m = Machine::new(&cfg, threads).unwrap();
+        let sampled = m.run_sampled(streams(p, threads).unwrap(), 4096, 4096).unwrap();
+        let mut m = Machine::new(&cfg, threads).unwrap();
+        let reference = m.run_reference(streams(p, threads).unwrap()).unwrap();
+        assert_eq!(sampled.cycles, reference.cycles, "cycles diverged for {p:?} x{threads}");
+        assert_eq!(sampled.report, reference.report, "report diverged for {p:?} x{threads}");
+        assert!(
+            sampled.report.get("sample.windows").is_none(),
+            "degenerate sampled run must not report sample.* keys for {p:?}"
+        );
+    }
+}
+
+/// (b) After a sampled run the order-driven microarchitectural state —
+/// cache tag/LRU/dirty arrays, region filter, DTLB, branch predictor,
+/// VIMA vector caches — is bit-identical to a full detailed run of the
+/// same trace: fast-forward replays the exact state transitions of
+/// detailed execution, only without timing. (Single-core cells: with
+/// several cores the fast-forward phases visit cores sequentially, which
+/// legitimately reorders accesses to shared structures.)
+#[test]
+fn fast_forward_preserves_microarchitectural_state() {
+    let cfg = SystemConfig::default();
+    for p in cells() {
+        let mut detailed = Machine::new(&cfg, 1).unwrap();
+        detailed.run(streams(p, 1).unwrap()).unwrap();
+        let mut sampled = Machine::new(&cfg, 1).unwrap();
+        let r = sampled.run_sampled(streams(p, 1).unwrap(), 512, 8192).unwrap();
+        assert!(
+            r.report.get("sample.windows").unwrap_or(0.0) >= 1.0,
+            "cell must actually sample: {p:?}"
+        );
+        assert_eq!(
+            detailed.state_digest(),
+            sampled.state_digest(),
+            "microarchitectural state diverged for {p:?}"
+        );
+    }
+}
+
+/// (c) On all seven paper kernels at quick scale, the sampled cycle count
+/// must land within its own reported 95% error bar of the full-run truth.
+#[test]
+fn error_bars_bracket_full_run_on_paper_kernels() {
+    let cfg = SystemConfig::default();
+    let kernels = [
+        KernelId::MemSet,
+        KernelId::MemCopy,
+        KernelId::VecSum,
+        KernelId::Stencil,
+        KernelId::MatMul,
+        KernelId::Knn,
+        KernelId::Mlp,
+    ];
+    for kernel in kernels {
+        let w = WorkloadSet::sizes(kernel, SizeScale::Quick)[0];
+        let p = RunCell::new(w, Backend::Avx).params();
+        // ~16 periods over the real event count, 1/16 detailed fraction:
+        // windows long enough that the boundary transient is amortized and
+        // few enough that the ci95's 1/k term covers what remains.
+        let events = p.stream().unwrap().count() as u64;
+        let period = (events / 16).max(2048);
+        let window = (period / 16).max(256);
+        let mut m = Machine::new(&cfg, 1).unwrap();
+        let full = m.run(streams(p, 1).unwrap()).unwrap();
+        let mut m = Machine::new(&cfg, 1).unwrap();
+        let sampled = m.run_sampled(streams(p, 1).unwrap(), window, period).unwrap();
+        let err = (sampled.cycles as f64 - full.cycles as f64).abs();
+        match sampled.report.get("sample.cycles_ci95") {
+            Some(ci95) => {
+                assert!(
+                    err <= ci95,
+                    "{kernel:?}: |{} - {}| = {err} exceeds ci95 {ci95:.0}",
+                    sampled.cycles,
+                    full.cycles
+                );
+            }
+            // Degenerate defaults (short trace): the run was full-detail
+            // and must agree exactly.
+            None => assert_eq!(sampled.cycles, full.cycles, "{kernel:?}"),
+        }
+    }
+}
+
+/// (d) A sampled job and a full-detail job for the same cell have
+/// different `CellKey`s (`SampleConfig` is part of the config identity):
+/// they never share a cached result, while resubmissions of each still
+/// hit their own entry.
+#[test]
+fn sampled_and_full_jobs_never_collide_in_the_service_cache() {
+    let svc = SimService::new(ServiceConfig { jobs: 1, ..ServiceConfig::default() });
+    let p = TraceParams::new(KernelId::VecSum, Backend::Avx, 1 << 20);
+    let mut sampled_cfg = SystemConfig::default();
+    sampled_cfg.sample.enabled = true;
+
+    let full = svc.submit(Job::new(p)).wait().unwrap();
+    let sampled = svc.submit(Job::new(p).with_cfg(sampled_cfg.clone())).wait().unwrap();
+    assert!(full.report.get("sample.windows").is_none());
+    assert!(
+        sampled.report.get("sample.windows").unwrap_or(0.0) >= 1.0,
+        "sampled job must run the sampled engine"
+    );
+    let stats = svc.stats();
+    assert_eq!(stats.unique_runs, 2, "sampled and full cells must simulate separately");
+    assert_eq!(stats.cache_hits, 0);
+
+    // Resubmitting each flavor is a pure hit on its own cell.
+    let full2 = svc.submit(Job::new(p)).wait().unwrap();
+    let sampled2 = svc.submit(Job::new(p).with_cfg(sampled_cfg)).wait().unwrap();
+    assert_eq!(full2.cycles, full.cycles);
+    assert_eq!(sampled2.cycles, sampled.cycles);
+    let stats = svc.stats();
+    assert_eq!(stats.unique_runs, 2);
+    assert_eq!(stats.cache_hits, 2);
+}
+
+/// Satellite regression pin: `run_on` now evaluates the trace-level
+/// sampling factor on the cell's own parameters instead of a hardcoded
+/// `with_threads(0, 1)` view. Every single-thread cell (all of fig2, fig3
+/// and fig5) and fig4's 1/2/4/8-thread cells are bit-unchanged; at 16/32
+/// threads MatMul's per-thread row cap floors at 6, so the factor now
+/// matches the rows each thread actually emits — the historical view
+/// overestimated extrapolated cycles there (intentional fix, documented
+/// in DESIGN.md §11).
+#[test]
+fn sampling_scale_matches_single_thread_view() {
+    // Figs 2/3/5 grids: single-thread cells across the whole matrix.
+    for w in WorkloadSet::all(SizeScale::Paper) {
+        for backend in [Backend::Avx, Backend::Vima] {
+            let p = RunCell::new(w, backend).params();
+            let wl = workload::get(p.workload).unwrap();
+            assert_eq!(
+                wl.sampling_scale(&p),
+                wl.sampling_scale(&p.with_threads(0, 1)),
+                "single-thread cell changed: {} {backend:?}",
+                wl.name()
+            );
+        }
+    }
+    // Fig 4 grid: multithreaded AVX on the largest Stencil/VecSum/MatMul.
+    for w in WorkloadSet::multithread(SizeScale::Paper) {
+        let wl = {
+            let p = RunCell::new(w, Backend::Avx).params();
+            workload::get(p.workload).unwrap()
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let p = RunCell::new(w, Backend::Avx).with_threads(threads).params();
+            assert_eq!(
+                wl.sampling_scale(&p),
+                wl.sampling_scale(&p.with_threads(0, 1)),
+                "fig4 cell changed: {} x{threads}",
+                wl.name()
+            );
+        }
+        for threads in [16usize, 32] {
+            let p = RunCell::new(w, Backend::Avx).with_threads(threads).params();
+            let actual = wl.sampling_scale(&p);
+            let single = wl.sampling_scale(&p.with_threads(0, 1));
+            assert!(
+                actual <= single,
+                "deep-thread factor must not exceed the historical view: \
+                 {} x{threads} ({actual} vs {single})",
+                wl.name()
+            );
+        }
+    }
+}
