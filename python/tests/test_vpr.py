@@ -1,0 +1,165 @@
+"""Structural checks for the pure-Python ``.vpr`` emitter (compile/vpr.py).
+
+The authoritative round-trip pin lives on the Rust side
+(``rust/tests/program_format.rs``: every committed golden parses and lowers
+bit-identically on both backends).  These tests keep the emitter honest
+standalone: a lightweight mirror of the Rust parser's validation rules runs
+over every program ``compile.vpr`` can emit, so drift in the emitted text is
+caught without a Rust toolchain.  No JAX needed — the emitter is pure
+Python by design.
+"""
+
+import pytest
+
+from compile import vpr
+
+# (mnemonic, num_srcs, writes_vector) — mirrors rust/src/program/mod.rs
+# MNEMONICS x VimaOp::num_srcs/writes_vector.
+MNEMONICS = {
+    "vim2k_adds": (2, True),
+    "vim2k_subs": (2, True),
+    "vim2k_muls": (2, True),
+    "vim2k_divs": (2, True),
+    "vim2k_fmadds": (3, True),
+    "vim2k_movs": (1, True),
+    "vim2k_sets": (0, True),
+    "vim2k_dots": (2, False),
+    "vim2k_addu": (2, True),
+    "vim2k_andu": (2, True),
+    "vim1k_addd": (2, True),
+}
+VOP_ARITY = {
+    "add": (2, True), "sub": (2, True), "mul": (2, True), "div": (2, True),
+    "min": (2, True), "max": (2, True), "and": (2, True), "or": (2, True),
+    "xor": (2, True), "fma": (3, True), "mov": (1, True), "bcast": (0, True),
+    "dot": (2, False), "redsum": (1, False),
+}
+DTYPES = {"i32", "i64", "f32", "f64"}
+
+
+def validate(text: str):
+    """Mirror of the Rust parser's structural rules; returns (allocs, n_stmts)."""
+    lines = [ln.split("#")[0].split() for ln in text.splitlines()]
+    lines = [ln for ln in lines if ln]
+    assert lines[0] == ["vpr", "1"], "magic header must lead"
+    allocs, footprint_decl, vb = {}, None, vpr.VECTOR_BYTES
+    depth, body_started, n_stmts = 0, False, 0
+
+    def operand(tok, iters):
+        head, _, stride = tok.partition(":")
+        name, _, off = head.partition("+")
+        stride, off = int(stride or 0), int(off or 0)
+        assert name in allocs, f"unknown allocation {name!r} in {tok!r}"
+        base, size = allocs[name]
+        assert off < size, f"offset {off} outside {name!r}"
+        heap = sum(s for _, s in allocs.values())
+        span = (iters - 1) * stride if iters else 0
+        assert base + off + span + 8 <= heap + vb, f"operand {tok!r} walks out of footprint"
+
+    loop_iters = []
+    for ln in lines[1:]:
+        kw = ln[0]
+        if kw in ("name", "desc", "vector_bytes", "footprint", "loop_overhead"):
+            assert not body_started and not allocs, f"{kw} must be in the header"
+            if kw == "vector_bytes":
+                vb = int(ln[1])
+            if kw == "footprint":
+                footprint_decl = int(ln[1])
+        elif kw == "alloc":
+            assert depth == 0 and not body_started, "alloc must precede statements"
+            name, size = ln[1], int(ln[2])
+            assert name not in allocs and size % vb == 0, f"bad alloc {name}"
+            allocs[name] = (sum(s for _, s in allocs.values()), size)
+        elif kw == "vloop":
+            body_started = True
+            depth += 1
+            loop_iters.append(int(ln[1]))
+        elif kw == "end":
+            assert depth > 0, "end with no open vloop"
+            depth -= 1
+            loop_iters.pop()
+        else:
+            body_started = True
+            n_stmts += 1
+            iters = loop_iters[-1] if loop_iters else 0
+            if kw == "host_load":
+                assert len(ln) == 3 and 1 <= int(ln[2]) <= 65535
+                operand(ln[1], iters)
+                continue
+            if kw == "vop":
+                assert ln[2] in DTYPES, f"bad dtype {ln[2]}"
+                nsrc, writes = VOP_ARITY[ln[1]]
+                rest = ln[3:]
+            else:
+                nsrc, writes = MNEMONICS[kw]
+                rest = ln[1:]
+            if "->" in rest:
+                i = rest.index("->")
+                srcs, dst = rest[:i], rest[i + 1:]
+                assert len(dst) == 1, "exactly one destination"
+                assert writes, f"{kw} reduces to a scalar, no -> dst"
+                operand(dst[0], iters)
+            else:
+                srcs = rest
+                assert not writes, f"{kw} requires -> dst"
+            assert len(srcs) == nsrc, f"{kw}: want {nsrc} srcs, got {len(srcs)}"
+            for s in srcs:
+                operand(s, iters)
+    assert depth == 0, "unclosed vloop"
+    assert n_stmts > 0, "no statements"
+    if footprint_decl is not None:
+        assert footprint_decl == sum(s for _, s in allocs.values())
+    return allocs, n_stmts
+
+
+@pytest.mark.parametrize("name", sorted(vpr.PROGRAMS))
+def test_every_program_is_structurally_valid(name):
+    validate(vpr.PROGRAMS[name]().to_vpr())
+
+
+@pytest.mark.parametrize("name", sorted(vpr.PROGRAMS))
+def test_emission_is_deterministic(name):
+    assert vpr.PROGRAMS[name]().to_vpr() == vpr.PROGRAMS[name]().to_vpr()
+
+
+def test_saxpy_matches_the_rust_dsl_shape():
+    # The contract rust/tests/program_format.rs pins bit-exactly: same alloc
+    # sizes, same statement sequence as programs::saxpy(256).
+    text = vpr.saxpy().to_vpr()
+    allocs, n = validate(text)
+    assert [s for _, s in allocs.values()] == [8192, 256 * 8192, 256 * 8192]
+    assert "vim2k_sets -> alpha" in text
+    assert "vim2k_fmadds alpha x:8192 y:8192 -> y:8192" in text
+    assert "footprint 4202496" in text
+    assert n == 2  # sets + one fmadds statement (in a 256-iteration vloop)
+
+
+def test_softmax_matches_the_rust_dsl_shape():
+    text = vpr.softmax().to_vpr()
+    allocs, n = validate(text)
+    assert [s for _, s in allocs.values()] == [256 * 8192, 8192, 256 * 8192]
+    assert n == 4  # dot, host_load, set, div per row
+
+
+def test_refs_render_offsets_and_strides():
+    r = vpr.Ref("buf")
+    assert str(r) == "buf"
+    assert str(r.walk(8192)) == "buf:8192"
+    assert str(r.at(16384).walk(4)) == "buf+16384:4"
+    # at/walk return new refs; the original is untouched.
+    assert str(r) == "buf"
+
+
+def test_alloc_sizes_are_vector_aligned_and_names_unique():
+    p = vpr.Program("t", "t")
+    p.alloc("a", 1)  # rounds up to one vector
+    assert p.allocs == [("a", vpr.VECTOR_BYTES)]
+    with pytest.raises(ValueError, match="duplicate"):
+        p.alloc("a", 8192)
+
+
+def test_check_mode_flags_drift(tmp_path):
+    assert vpr.main(["--out-dir", str(tmp_path), "--only", "saxpy"]) == 0
+    assert vpr.main(["--out-dir", str(tmp_path), "--check", "--only", "saxpy"]) == 0
+    (tmp_path / "saxpy.vpr").write_text("vpr 1\n")
+    assert vpr.main(["--out-dir", str(tmp_path), "--check", "--only", "saxpy"]) == 1

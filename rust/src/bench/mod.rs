@@ -16,6 +16,7 @@ use crate::config::SystemConfig;
 use crate::sim::{run_on, Machine};
 use crate::trace::{Backend, KernelId, TraceParams, TraceStream};
 use crate::util::error::Result;
+use crate::workload::{self, WorkloadId};
 
 /// One benchmark cell: a workload/backend pair timed on both engines.
 #[derive(Debug, Clone)]
@@ -165,16 +166,28 @@ impl ThroughputReport {
 
 /// Workload matrix: the three trace shapes that stress different hot paths
 /// (µop-dense AVX streaming, VIMA instruction dispatch + coherence walks,
-/// HIVE transactions), plus a multithreaded cell for the interleaver.
-fn matrix(quick: bool) -> Vec<(KernelId, Backend, u64, usize)> {
+/// HIVE transactions), plus a multithreaded cell for the interleaver, plus
+/// one loaded-`.vpr` program cell (`saxpy` round-tripped through the text
+/// format) so the parser + `ProgramChunker` path is tracked in the
+/// `BENCH_*.json` trajectory. The program cell's footprint is fixed by its
+/// structure, so `quick` does not scale it.
+fn matrix(quick: bool) -> Result<Vec<(WorkloadId, String, Backend, u64, usize)>> {
     let mb = if quick { 1u64 } else { 8 };
-    vec![
+    let kernel_cells = [
         (KernelId::VecSum, Backend::Avx, mb << 20, 1),
         (KernelId::MemCopy, Backend::Avx, mb << 20, 1),
         (KernelId::VecSum, Backend::Vima, mb << 20, 1),
         (KernelId::VecSum, Backend::Hive, mb << 20, 1),
         (KernelId::VecSum, Backend::Avx, mb << 20, 4),
-    ]
+    ];
+    let mut cells: Vec<(WorkloadId, String, Backend, u64, usize)> = kernel_cells
+        .into_iter()
+        .map(|(k, b, fp, t)| (k.into(), k.to_string(), b, fp, t))
+        .collect();
+    let vpr = crate::program::bench_workload()?;
+    let fp = workload::get(vpr)?.default_footprint();
+    cells.push((vpr, workload::name(vpr), Backend::Vima, fp, 1));
+    Ok(cells)
 }
 
 fn streams(p: TraceParams, threads: usize) -> Result<Vec<TraceStream>> {
@@ -206,8 +219,8 @@ pub fn throughput(
     verbose: bool,
 ) -> Result<ThroughputReport> {
     let mut rows = Vec::new();
-    for (kernel, backend, footprint, threads) in matrix(quick) {
-        let p = TraceParams::new(kernel, backend, footprint);
+    for (id, name, backend, footprint, threads) in matrix(quick)? {
+        let p = TraceParams::new(id, backend, footprint);
         let events = streams(p, threads)?
             .into_iter()
             .map(|s| s.count() as u64)
@@ -222,7 +235,7 @@ pub fn throughput(
             Ok(m.run(streams(p, threads)?)?.cycles)
         })?;
         let row = ThroughputRow {
-            workload: kernel.to_string(),
+            workload: name,
             backend: backend.to_string(),
             events,
             reference_eps: events as f64 / t_ref,

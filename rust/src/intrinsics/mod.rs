@@ -42,7 +42,7 @@ use crate::util::error::Result;
 use crate::workload::WorkloadId;
 
 /// Base of the simulated heap [`VimaProgram::alloc`] carves from.
-const HEAP_BASE: u64 = 0x5_0000_0000;
+pub(crate) const HEAP_BASE: u64 = 0x5_0000_0000;
 
 /// Handle to a vector-aligned allocation in the simulated address space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,8 +64,8 @@ impl VecPtr {
 /// vectors stay pinned while `walk`ed operands stream.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Operand {
-    base: u64,
-    stride: u64,
+    pub(crate) base: u64,
+    pub(crate) stride: u64,
 }
 
 impl Operand {
@@ -83,19 +83,30 @@ impl From<VecPtr> for Operand {
 /// One program statement. Loops carry an iteration *range* so the chunker
 /// can slice them across data-parallel threads without rewriting bodies.
 #[derive(Debug, Clone, PartialEq)]
-enum Stmt {
+pub(crate) enum Stmt {
     Instr { op: VimaOp, dtype: VDtype, srcs: Vec<Operand>, dst: Option<Operand> },
     HostLoad { addr: Operand, bytes: u16 },
     Loop { start: u64, end: u64, body: Vec<Stmt> },
+}
+
+/// One [`VimaProgram::alloc`] record: base address and vector-aligned size.
+/// Kept so the `.vpr` emitter (`VimaProgram::to_vpr`, see `crate::program`)
+/// can name the allocations and resolve operand addresses back to symbolic
+/// offsets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Alloc {
+    pub(crate) base: u64,
+    pub(crate) size: u64,
 }
 
 /// Builder for VIMA programs (the Intrinsics-VIMA surface). Cloneable so a
 /// registered workload can hand out fresh trace streams forever.
 #[derive(Debug, Clone)]
 pub struct VimaProgram {
-    stmts: Vec<Stmt>,
-    heap: u64,
-    vector_bytes: u32,
+    pub(crate) stmts: Vec<Stmt>,
+    pub(crate) allocs: Vec<Alloc>,
+    pub(crate) heap: u64,
+    pub(crate) vector_bytes: u32,
     /// Emit host-side loop-control µops after each instruction (mirrors the
     /// compiled intrinsics call overhead). On by default.
     pub loop_overhead: bool,
@@ -109,7 +120,13 @@ impl Default for VimaProgram {
 
 impl VimaProgram {
     pub fn new() -> Self {
-        Self { stmts: Vec::new(), heap: HEAP_BASE, vector_bytes: 8192, loop_overhead: true }
+        Self {
+            stmts: Vec::new(),
+            allocs: Vec::new(),
+            heap: HEAP_BASE,
+            vector_bytes: 8192,
+            loop_overhead: true,
+        }
     }
 
     /// Use a non-default vector size (design-space exploration).
@@ -132,6 +149,7 @@ impl VimaProgram {
     pub fn alloc(&mut self, bytes: u64) -> VecPtr {
         let aligned = bytes.div_ceil(self.vector_bytes as u64) * self.vector_bytes as u64;
         let p = VecPtr(self.heap);
+        self.allocs.push(Alloc { base: self.heap, size: aligned });
         self.heap += aligned;
         p
     }
@@ -150,6 +168,7 @@ impl VimaProgram {
     pub fn vloop(&mut self, iters: u64, f: impl FnOnce(&mut VimaProgram)) {
         let mut body = VimaProgram {
             stmts: Vec::new(),
+            allocs: Vec::new(),
             heap: self.heap,
             vector_bytes: self.vector_bytes,
             loop_overhead: self.loop_overhead,
@@ -157,6 +176,7 @@ impl VimaProgram {
         f(&mut body);
         self.heap = body.heap;
         self.loop_overhead = body.loop_overhead;
+        self.allocs.extend(body.allocs);
         self.stmts.push(Stmt::Loop { start: 0, end: iters, body: body.stmts });
     }
 

@@ -46,6 +46,7 @@ pub mod hive;
 pub mod intrinsics;
 pub mod isa;
 pub mod mem3d;
+pub mod program;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod service;
@@ -67,9 +68,10 @@ pub mod prelude {
         Experiment, FigTable, RunSpec,
     };
     pub use crate::intrinsics::{VecPtr, VimaProgram};
+    pub use crate::program::ParsedVpr;
     pub use crate::service::{Job, JobHandle, JobStatus, ServiceConfig, SimService};
     pub use crate::sim::{Machine, SimResult};
     pub use crate::sweep::{RunCell, SweepPlan, SweepRunner};
     pub use crate::trace::{Backend, KernelId, TraceParams};
-    pub use crate::workload::{ProgramWorkload, Workload, WorkloadId};
+    pub use crate::workload::{ProgramWorkload, Workload, WorkloadId, WorkloadKind};
 }

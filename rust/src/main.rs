@@ -7,13 +7,18 @@
 //! ```text
 //! vima-sim sweep [--jobs N] [--figs fig2,custom|all] [--csv DIR] [--quick]
 //! vima-sim fig2|fig3|fig4|fig5|ablation|headline|custom|all [--quick]
-//! vima-sim run <workload> <backend> [--mb N] [--threads N] [--sampled] [--stats]
-//! vima-sim serve [--jobs N] [--cache N]   (JSONL jobs: stdin -> stdout)
+//! vima-sim run <workload|file.vpr> <backend> [--mb N] [--threads N] [--sampled] [--stats]
+//! vima-sim serve [--jobs N] [--cache N] [--load PATH]  (JSONL: stdin -> stdout)
 //! vima-sim bench [--quick] [--iters N] [--sampled] [--json FILE]
 //! vima-sim workloads          (list the registry: kernels + programs)
 //! vima-sim config [--config FILE]
 //! vima-sim selftest           (requires a build with --features pjrt)
 //! ```
+//!
+//! `--load PATH` (any command) registers a `.vpr` program file — or every
+//! `.vpr` in a directory — before dispatch, so loaded programs are
+//! first-class workloads for `run`, `serve`, `sweep --figs custom`, and
+//! `workloads` alike. See DESIGN.md §12 for the format.
 
 use vima_sim::bail;
 use vima_sim::config::SystemConfig;
@@ -56,14 +61,17 @@ COMMANDS:
   run         Run one workload: vima-sim run <workload> <backend> [--mb N]
               workload: any registered name (see `vima-sim workloads`) —
               the 7 paper kernels plus Intrinsics-VIMA programs like
-              saxpy / softmax; backends: avx vima hive
+              saxpy / softmax — or a path to a `.vpr` program file
+              (e.g. vima-sim run examples/programs/saxpy.vpr vima);
+              backends: avx vima hive
   serve       Long-running service mode: read JSONL job requests from
               stdin, write JSONL results to stdout (one line each, in
               request order; the in-flight window simulates in parallel
               with dedup). Request:
                 {"id": 1, "workload": "vecsum", "backend": "vima",
                  "mb": 4, "threads": 2}
-              see EXPERIMENTS.md §Serving for the full protocol
+              with --load DIR, clients can submit loaded .vpr programs
+              by name; see EXPERIMENTS.md §Serving for the full protocol
   custom      Custom-workload figure: each registered Intrinsics-VIMA
               program, VIMA vs the AVX lowering of the same program
   scaling     Cube-scaling figure: streaming kernels on 1/2/4/8-cube
@@ -87,6 +95,8 @@ OPTIONS:
   --json FILE      (bench) write the JSON record to FILE
   --quick          1/16 dataset sizes (smoke runs)
   --config FILE    TOML overrides for Table I
+  --load PATH      register a .vpr program file (or every .vpr in a
+                   directory) before running the command (DESIGN.md §12)
   --cubes N        memory cubes in the sharded fabric (default 1; power of
                    two; equivalent to [mem] num_cubes in --config)
   --out DIR        also write each table as CSV into DIR
@@ -161,6 +171,13 @@ fn main() -> Result<()> {
         cfg.mem.num_cubes = cubes.parse::<usize>()?;
     }
     cfg.validate()?;
+    // `--load PATH`: register `.vpr` programs before dispatch so every
+    // command (run, serve, sweep --figs custom, workloads) sees them.
+    if let Some(path) = args.get("load") {
+        let ids = vima_sim::program::load_path(path)?;
+        let names: Vec<String> = ids.iter().map(|&id| workload::name(id)).collect();
+        eprintln!("[vima-sim] loaded {} program(s) from {path}: {}", ids.len(), names.join(", "));
+    }
     let scale = if args.flag("quick") { SizeScale::Quick } else { SizeScale::Paper };
     let jobs = args.get_usize("jobs", 0);
     // Built only by the figure-running commands: constructing an
@@ -255,9 +272,19 @@ fn main() -> Result<()> {
             );
         }
         "run" => {
-            let id = workload::resolve(
-                args.positional.get(1).map(String::as_str).unwrap_or_default(),
-            )?;
+            let target = args.positional.get(1).map(String::as_str).unwrap_or_default();
+            // A `.vpr` path runs directly: load (register) then resolve.
+            let id = if target.ends_with(".vpr") {
+                vima_sim::program::load_file(target)?
+            } else {
+                match workload::resolve(target) {
+                    Ok(id) => id,
+                    Err(e) => bail!(
+                        "{e} (a .vpr program file also runs directly: \
+                         vima-sim run examples/programs/saxpy.vpr vima)"
+                    ),
+                }
+            };
             let backend: Backend =
                 args.positional.get(2).map(String::as_str).unwrap_or_default().parse()?;
             // Programs carry their own footprint; --mb overrides where the
@@ -369,18 +396,19 @@ fn main() -> Result<()> {
         }
         "workloads" => {
             println!(
-                "{:<10} {:>15} {:>10}  {}",
-                "name", "backends", "default", "description"
+                "{:<16} {:<12} {:>15} {:>10}  {}",
+                "name", "kind", "backends", "default", "description"
             );
             for id in workload::all_ids() {
                 let w = workload::get(id)?;
                 let backends: Vec<String> =
                     w.backends().iter().map(|b| b.to_string()).collect();
                 println!(
-                    "{:<10} {:>15} {:>8}MB  {}",
+                    "{:<16} {:<12} {:>15} {:>8.1}MB  {}",
                     w.name(),
+                    w.kind(),
                     backends.join(","),
-                    w.default_footprint() >> 20,
+                    w.default_footprint() as f64 / (1 << 20) as f64,
                     w.description(),
                 );
             }

@@ -1,0 +1,801 @@
+//! The `.vpr` serialized program format — closing the compiler loop.
+//!
+//! The paper's pitch (Sec. III/VI) is an *easy programming interface*:
+//! ordinary code emits VIMA instructions through an intrinsics library.
+//! This module gives that interface a wire format, so programs can reach
+//! the simulator without a Rust toolchain in the loop:
+//!
+//! * **emit** — [`VimaProgram::to_vpr`] serializes any Intrinsics-VIMA
+//!   program (allocations, nested `vloop`s, strided operands, host loads)
+//!   to a line-oriented text file;
+//! * **parse** — [`parse`] reads it back into a [`VimaProgram`] that lowers
+//!   to event streams *bit-identical* to the original DSL construction, on
+//!   both the VIMA and honest-AVX backends (pinned by
+//!   `tests/program_format.rs`). Every malformed input is a typed
+//!   [`util::error`](crate::util::error) result carrying line/column
+//!   context, never a panic;
+//! * **load** — [`load_file`]/[`load_dir`] register parsed programs in the
+//!   [`workload`] registry, after which they are first-class workloads:
+//!   runnable (`vima-sim run prog.vpr`), servable by name over JSONL
+//!   (`vima-sim serve --load DIR`), sweepable with result-cache dedup, and
+//!   listed by `vima-sim workloads` as kind "loaded .vpr".
+//!
+//! `python/compile/vpr.py` is the other end of the bridge: it lowers the
+//! `python/compile/kernels/` entry points straight to this format (the
+//! committed goldens live in `examples/programs/`), so a kernel authored
+//! against the Pallas model runs in the simulator with no JAX/XLA at
+//! runtime. Grammar reference: DESIGN.md §12.
+//!
+//! # Format sketch
+//!
+//! ```text
+//! # comments run to end of line; blank lines are ignored
+//! vpr 1                      # magic + version, first significant line
+//! name saxpy-vpr             # optional registry name
+//! desc y = a*x + y           # optional one-line description
+//! vector_bytes 8192          # power of two >= 64 (default 8192)
+//! footprint 4202496          # optional cross-check vs the allocs
+//! loop_overhead on           # on (default) | off
+//! alloc alpha 8192           # name + bytes (vector-aligned up)
+//! alloc x 2097152
+//! alloc y 2097152
+//! vim2k_sets -> alpha        # broadcast: no sources
+//! vloop 256                  # 256 iterations; loops nest
+//!   vim2k_fmadds alpha x:8192 y:8192 -> y:8192
+//! end
+//! ```
+//!
+//! Operands are `NAME[+OFFSET][:STRIDE]` (bytes, decimal or `0x...` hex):
+//! the offset addresses into the named allocation, the stride is the
+//! per-iteration advance of the innermost enclosing `vloop` — exactly
+//! [`VecPtr::walk`](crate::intrinsics::VecPtr::walk). Mnemonics outside
+//! the Intrinsics-VIMA surface use the generic form
+//! `vop <op> <dtype> srcs... [-> dst]` (e.g. `vop max f32 a b -> c`).
+
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+use crate::intrinsics::{Alloc, Operand, Stmt, VimaProgram, HEAP_BASE};
+use crate::isa::{VDtype, VimaOp};
+use crate::util::error::{Context as _, Error, Result};
+use crate::workload::{self, ProgramWorkload, WorkloadId, WorkloadKind};
+
+/// Bidirectional mnemonic table: the Intrinsics-VIMA surface of
+/// [`VimaProgram`] <-> `.vpr` statement keywords. Combinations outside
+/// this table round-trip through the generic `vop <op> <dtype>` form.
+const MNEMONICS: [(&str, VimaOp, VDtype); 11] = [
+    ("vim2k_adds", VimaOp::Add, VDtype::F32),
+    ("vim2k_subs", VimaOp::Sub, VDtype::F32),
+    ("vim2k_muls", VimaOp::Mul, VDtype::F32),
+    ("vim2k_divs", VimaOp::Div, VDtype::F32),
+    ("vim2k_fmadds", VimaOp::Fma, VDtype::F32),
+    ("vim2k_movs", VimaOp::Mov, VDtype::I32),
+    ("vim2k_sets", VimaOp::Bcast, VDtype::F32),
+    ("vim2k_dots", VimaOp::Dot, VDtype::F32),
+    ("vim2k_addu", VimaOp::Add, VDtype::I32),
+    ("vim2k_andu", VimaOp::And, VDtype::I32),
+    ("vim1k_addd", VimaOp::Add, VDtype::F64),
+];
+
+/// `vop` opcode spellings, one per [`VimaOp`] variant.
+const OP_NAMES: [(&str, VimaOp); 14] = [
+    ("add", VimaOp::Add),
+    ("sub", VimaOp::Sub),
+    ("mul", VimaOp::Mul),
+    ("div", VimaOp::Div),
+    ("min", VimaOp::Min),
+    ("max", VimaOp::Max),
+    ("and", VimaOp::And),
+    ("or", VimaOp::Or),
+    ("xor", VimaOp::Xor),
+    ("fma", VimaOp::Fma),
+    ("mov", VimaOp::Mov),
+    ("bcast", VimaOp::Bcast),
+    ("dot", VimaOp::Dot),
+    ("redsum", VimaOp::RedSum),
+];
+
+const DTYPE_NAMES: [(&str, VDtype); 4] = [
+    ("i32", VDtype::I32),
+    ("i64", VDtype::I64),
+    ("f32", VDtype::F32),
+    ("f64", VDtype::F64),
+];
+
+fn op_name(op: VimaOp) -> &'static str {
+    OP_NAMES.iter().find(|(_, o)| *o == op).map(|(n, _)| *n).expect("every VimaOp is named")
+}
+
+fn dtype_name(d: VDtype) -> &'static str {
+    DTYPE_NAMES.iter().find(|(_, t)| *t == d).map(|(n, _)| *n).expect("every VDtype is named")
+}
+
+// ---------------------------------------------------------------- emitter
+
+impl VimaProgram {
+    /// Serialize this program to `.vpr` text under `name` (becomes the
+    /// file's `name` directive; pass `""` to omit it). Errors if an
+    /// operand points outside every allocation, or if a loop carries a
+    /// nonzero start iteration (i.e. the program is a per-thread slice —
+    /// serialize the original, not a slice).
+    pub fn to_vpr(&self, name: &str) -> Result<String> {
+        let mut out = String::new();
+        out.push_str("vpr 1\n");
+        if !name.is_empty() {
+            out.push_str(&format!("name {name}\n"));
+        }
+        out.push_str(&format!("vector_bytes {}\n", self.vector_bytes));
+        out.push_str(&format!("footprint {}\n", self.footprint()));
+        out.push_str(&format!(
+            "loop_overhead {}\n",
+            if self.loop_overhead { "on" } else { "off" }
+        ));
+        for (i, a) in self.allocs.iter().enumerate() {
+            out.push_str(&format!("alloc v{i} {}\n", a.size));
+        }
+        emit_stmts(&mut out, &self.stmts, &self.allocs, 0)?;
+        Ok(out)
+    }
+}
+
+fn emit_stmts(out: &mut String, stmts: &[Stmt], allocs: &[Alloc], depth: usize) -> Result<()> {
+    let pad = "  ".repeat(depth);
+    for s in stmts {
+        match s {
+            Stmt::Instr { op, dtype, srcs, dst } => {
+                let mut line =
+                    match MNEMONICS.iter().find(|(_, o, d)| o == op && d == dtype) {
+                        Some((m, _, _)) => (*m).to_string(),
+                        None => format!("vop {} {}", op_name(*op), dtype_name(*dtype)),
+                    };
+                for src in srcs {
+                    line.push(' ');
+                    line.push_str(&operand_text(src, allocs)?);
+                }
+                if let Some(d) = dst {
+                    line.push_str(" -> ");
+                    line.push_str(&operand_text(d, allocs)?);
+                }
+                out.push_str(&format!("{pad}{line}\n"));
+            }
+            Stmt::HostLoad { addr, bytes } => {
+                out.push_str(&format!(
+                    "{pad}host_load {} {bytes}\n",
+                    operand_text(addr, allocs)?
+                ));
+            }
+            Stmt::Loop { start, end, body } => {
+                crate::ensure!(
+                    *start == 0,
+                    "cannot serialize a thread-sliced loop (iterations {start}..{end}); \
+                     emit .vpr from the original program, not a per-thread slice"
+                );
+                out.push_str(&format!("{pad}vloop {end}\n"));
+                emit_stmts(out, body, allocs, depth + 1)?;
+                out.push_str(&format!("{pad}end\n"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Render an operand as `vN[+off][:stride]` by locating the allocation
+/// containing its base address.
+fn operand_text(o: &Operand, allocs: &[Alloc]) -> Result<String> {
+    let (idx, a) = allocs
+        .iter()
+        .enumerate()
+        .find(|(_, a)| o.base >= a.base && o.base < a.base + a.size)
+        .with_context(|| {
+            format!("operand address {:#x} is not inside any allocation", o.base)
+        })?;
+    let mut s = format!("v{idx}");
+    let off = o.base - a.base;
+    if off > 0 {
+        s.push_str(&format!("+{off}"));
+    }
+    if o.stride > 0 {
+        s.push_str(&format!(":{}", o.stride));
+    }
+    Ok(s)
+}
+
+// ----------------------------------------------------------------- parser
+
+/// A parsed `.vpr` file: the optional header identity plus the program.
+#[derive(Debug, Clone)]
+pub struct ParsedVpr {
+    /// `name` header directive (the registration name), if present.
+    pub name: Option<String>,
+    /// `desc` header directive, if present.
+    pub description: Option<String>,
+    /// The reconstructed program; lowers bit-identically to the DSL
+    /// construction it was emitted from.
+    pub program: VimaProgram,
+}
+
+/// Typed parse error with line/column context.
+fn perr<T>(line: usize, col: usize, msg: impl std::fmt::Display) -> Result<T> {
+    Err(Error::msg(format!("line {line}, col {col}: {msg}")))
+}
+
+/// Split a line into (1-based column, token) pairs.
+fn tokenize(line: &str) -> Vec<(usize, &str)> {
+    let mut toks = Vec::new();
+    let mut start: Option<usize> = None;
+    for (i, c) in line.char_indices() {
+        if c.is_whitespace() {
+            if let Some(s) = start.take() {
+                toks.push((s + 1, &line[s..i]));
+            }
+        } else if start.is_none() {
+            start = Some(i);
+        }
+    }
+    if let Some(s) = start {
+        toks.push((s + 1, &line[s..]));
+    }
+    toks
+}
+
+/// Unsigned byte/count literal: decimal or `0x` hex, `_` separators ok.
+fn parse_num(s: &str) -> Option<u64> {
+    let digits = s.replace('_', "");
+    match digits.strip_prefix("0x").or_else(|| digits.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => digits.parse().ok(),
+    }
+}
+
+/// One open parse frame: the innermost `vloop` being filled (`iters`, the
+/// line that opened it, and its statements so far). Frame 0 is the top
+/// level; its `iters`/line are unused.
+struct Frame {
+    iters: u64,
+    opened_at: usize,
+    stmts: Vec<Stmt>,
+}
+
+/// Parse `.vpr` text into a [`ParsedVpr`]. Every failure is a typed error
+/// naming the offending line (and column where it helps); the reconstructed
+/// program's event streams are bit-identical to the DSL construction the
+/// text was emitted from.
+pub fn parse(src: &str) -> Result<ParsedVpr> {
+    let mut name: Option<String> = None;
+    let mut description: Option<String> = None;
+    let mut vector_bytes: u32 = 8192;
+    let mut vb_seen = false;
+    let mut footprint_decl: Option<u64> = None;
+    let mut loop_overhead = true;
+    let mut allocs: Vec<(String, Alloc)> = Vec::new();
+    let mut heap = HEAP_BASE;
+    let mut saw_magic = false;
+    let mut body_started = false;
+    let mut stack = vec![Frame { iters: 0, opened_at: 0, stmts: Vec::new() }];
+
+    for (idx, raw) in src.lines().enumerate() {
+        let lno = idx + 1;
+        let line = raw.split('#').next().unwrap_or("");
+        let toks = tokenize(line);
+        let Some(&(col0, kw)) = toks.first() else { continue };
+        if !saw_magic {
+            if kw != "vpr" {
+                return perr(
+                    lno,
+                    col0,
+                    "expected the `vpr 1` magic header on the first significant line",
+                );
+            }
+            let Some(&(_, ver)) = toks.get(1) else {
+                return perr(lno, col0, "expected a version after `vpr`");
+            };
+            if ver != "1" {
+                return perr(
+                    lno,
+                    toks[1].0,
+                    format!("unsupported .vpr version `{ver}` (this build reads version 1)"),
+                );
+            }
+            saw_magic = true;
+            continue;
+        }
+        let in_header = !body_started && allocs.is_empty();
+        match kw {
+            "name" | "desc" | "vector_bytes" | "footprint" | "loop_overhead"
+                if !in_header =>
+            {
+                return perr(
+                    lno,
+                    col0,
+                    format!("`{kw}` must appear in the header, before any alloc or statement"),
+                );
+            }
+            "name" => {
+                if toks.len() != 2 {
+                    return perr(lno, col0, "`name` takes exactly one value");
+                }
+                if name.is_some() {
+                    return perr(lno, col0, "duplicate `name` directive");
+                }
+                name = Some(toks[1].1.to_string());
+            }
+            "desc" => {
+                if toks.len() < 2 {
+                    return perr(lno, col0, "`desc` needs a description text");
+                }
+                let text: Vec<&str> = toks[1..].iter().map(|&(_, t)| t).collect();
+                description = Some(text.join(" "));
+            }
+            "vector_bytes" => {
+                if vb_seen {
+                    return perr(lno, col0, "duplicate `vector_bytes` directive");
+                }
+                let Some(v) = toks.get(1).and_then(|&(_, t)| parse_num(t)) else {
+                    return perr(lno, col0, "`vector_bytes` needs a byte count");
+                };
+                if v < 64 || !v.is_power_of_two() || v > u64::from(u32::MAX) {
+                    return perr(
+                        lno,
+                        toks[1].0,
+                        format!("vector_bytes must be a power of two >= 64 (got {v})"),
+                    );
+                }
+                vector_bytes = v as u32;
+                vb_seen = true;
+            }
+            "footprint" => {
+                let Some(v) = toks.get(1).and_then(|&(_, t)| parse_num(t)) else {
+                    return perr(lno, col0, "`footprint` needs a byte count");
+                };
+                footprint_decl = Some(v);
+            }
+            "loop_overhead" => {
+                loop_overhead = match toks.get(1).map(|&(_, t)| t) {
+                    Some("on") => true,
+                    Some("off") => false,
+                    _ => return perr(lno, col0, "`loop_overhead` must be `on` or `off`"),
+                };
+            }
+            "alloc" => {
+                if stack.len() > 1 {
+                    return perr(lno, col0, "alloc is not allowed inside a vloop");
+                }
+                if body_started {
+                    return perr(lno, col0, "alloc must precede all statements");
+                }
+                if toks.len() != 3 {
+                    return perr(lno, col0, "alloc takes a name and a byte count");
+                }
+                let (ncol, aname) = toks[1];
+                let mut chars = aname.chars();
+                let head_ok =
+                    chars.next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_');
+                let rest_ok =
+                    chars.all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '-'));
+                if !head_ok || !rest_ok {
+                    return perr(
+                        lno,
+                        ncol,
+                        format!(
+                            "bad allocation name `{aname}` (letters, digits, `_`, `.`, `-`; \
+                             must start with a letter or `_`)"
+                        ),
+                    );
+                }
+                if allocs.iter().any(|(n, _)| n == aname) {
+                    return perr(lno, ncol, format!("duplicate allocation name `{aname}`"));
+                }
+                let Some(bytes) = parse_num(toks[2].1) else {
+                    return perr(lno, toks[2].0, "alloc needs a byte count");
+                };
+                let vb = u64::from(vector_bytes);
+                let aligned = bytes
+                    .div_ceil(vb)
+                    .checked_mul(vb)
+                    .and_then(|sz| heap.checked_add(sz).map(|_| sz));
+                let Some(size) = aligned else {
+                    return perr(
+                        lno,
+                        toks[2].0,
+                        "allocation overflows the simulated address space",
+                    );
+                };
+                allocs.push((aname.to_string(), Alloc { base: heap, size }));
+                heap += size;
+            }
+            "vloop" => {
+                body_started = true;
+                let Some(iters) = toks.get(1).and_then(|&(_, t)| parse_num(t)) else {
+                    return perr(lno, col0, "vloop needs an iteration count");
+                };
+                stack.push(Frame { iters, opened_at: lno, stmts: Vec::new() });
+            }
+            "end" => {
+                if stack.len() == 1 {
+                    return perr(lno, col0, "`end` with no open vloop");
+                }
+                let frame = stack.pop().expect("stack holds at least the open frame");
+                let top = stack.last_mut().expect("top-level frame is never popped");
+                top.stmts.push(Stmt::Loop {
+                    start: 0,
+                    end: frame.iters,
+                    body: frame.stmts,
+                });
+            }
+            _ => {
+                body_started = true;
+                let inner_iters = (stack.len() > 1)
+                    .then(|| stack.last().expect("non-empty stack").iters);
+                let stmt =
+                    parse_stmt(&toks, lno, &allocs, heap, vector_bytes, inner_iters)?;
+                stack.last_mut().expect("non-empty stack").stmts.push(stmt);
+            }
+        }
+    }
+
+    if stack.len() > 1 {
+        let opened = stack.last().expect("open frame").opened_at;
+        return Err(Error::msg(format!(
+            "line {opened}: this vloop is never closed (missing `end` before end of file)"
+        )));
+    }
+    crate::ensure!(saw_magic, "empty .vpr input: expected the `vpr 1` magic header");
+    let stmts = stack.pop().expect("top-level frame").stmts;
+    crate::ensure!(!stmts.is_empty(), "program has no statements");
+    let footprint = heap - HEAP_BASE;
+    if let Some(decl) = footprint_decl {
+        crate::ensure!(
+            decl == footprint,
+            "header declares footprint {decl} but the allocations total {footprint} bytes"
+        );
+    }
+    let program = VimaProgram {
+        stmts,
+        allocs: allocs.iter().map(|(_, a)| *a).collect(),
+        heap,
+        vector_bytes,
+        loop_overhead,
+    };
+    Ok(ParsedVpr { name, description, program })
+}
+
+/// Parse one statement line (an intrinsic mnemonic, `vop`, or `host_load`).
+fn parse_stmt(
+    toks: &[(usize, &str)],
+    lno: usize,
+    allocs: &[(String, Alloc)],
+    heap: u64,
+    vector_bytes: u32,
+    inner_iters: Option<u64>,
+) -> Result<Stmt> {
+    let (col0, kw) = toks[0];
+    if kw == "host_load" {
+        if toks.len() != 3 {
+            return perr(lno, col0, "host_load takes an operand and a byte count");
+        }
+        let bytes = match parse_num(toks[2].1) {
+            Some(b) if (1..=u64::from(u16::MAX)).contains(&b) => b,
+            _ => return perr(lno, toks[2].0, "host_load byte count must be 1..=65535"),
+        };
+        let addr = parse_operand(toks[1], lno, allocs, heap, bytes, inner_iters)?;
+        return Ok(Stmt::HostLoad { addr, bytes: bytes as u16 });
+    }
+    let (op, dtype, operand_start) = if kw == "vop" {
+        if toks.len() < 3 {
+            return perr(lno, col0, "vop takes `<op> <dtype>` then operands");
+        }
+        let Some(&(_, op)) = OP_NAMES.iter().find(|(n, _)| *n == toks[1].1) else {
+            let valid: Vec<&str> = OP_NAMES.iter().map(|&(n, _)| n).collect();
+            return perr(
+                lno,
+                toks[1].0,
+                format!("unknown vector op `{}` (valid: {})", toks[1].1, valid.join(", ")),
+            );
+        };
+        let Some(&(_, dtype)) = DTYPE_NAMES.iter().find(|(n, _)| *n == toks[2].1) else {
+            return perr(
+                lno,
+                toks[2].0,
+                format!("unknown dtype `{}` (valid: i32, i64, f32, f64)", toks[2].1),
+            );
+        };
+        (op, dtype, 3)
+    } else if let Some(&(_, op, dtype)) = MNEMONICS.iter().find(|(m, _, _)| *m == kw) {
+        (op, dtype, 1)
+    } else {
+        return perr(
+            lno,
+            col0,
+            format!(
+                "unknown statement `{kw}` (expected an intrinsic like vim2k_adds, or \
+                 vop / host_load / vloop / end / alloc)"
+            ),
+        );
+    };
+    let rest = &toks[operand_start..];
+    let (src_toks, dst_tok) = match rest.iter().position(|&(_, t)| t == "->") {
+        Some(i) => {
+            if rest.len() != i + 2 {
+                let col = rest.get(i + 2).map_or(rest[i].0, |&(c, _)| c);
+                return perr(lno, col, "expected exactly one destination operand after `->`");
+            }
+            (&rest[..i], Some(rest[i + 1]))
+        }
+        None => (rest, None),
+    };
+    if src_toks.len() != op.num_srcs() {
+        return perr(
+            lno,
+            col0,
+            format!("`{kw}` expects {} source operand(s), got {}", op.num_srcs(), src_toks.len()),
+        );
+    }
+    if op.writes_vector() && dst_tok.is_none() {
+        return perr(lno, col0, format!("`{kw}` requires a destination (`-> dst`)"));
+    }
+    if let (false, Some((dcol, _))) = (op.writes_vector(), dst_tok) {
+        return perr(
+            lno,
+            dcol,
+            format!("`{kw}` reduces to a scalar and takes no `-> dst`"),
+        );
+    }
+    let vb = u64::from(vector_bytes);
+    let srcs = src_toks
+        .iter()
+        .map(|&t| parse_operand(t, lno, allocs, heap, vb, inner_iters))
+        .collect::<Result<Vec<_>>>()?;
+    let dst = dst_tok
+        .map(|t| parse_operand(t, lno, allocs, heap, vb, inner_iters))
+        .transpose()?;
+    Ok(Stmt::Instr { op, dtype, srcs, dst })
+}
+
+/// Parse `NAME[+OFFSET][:STRIDE]` and bounds-check it: the base must lie
+/// inside the named allocation, and the farthest byte the operand touches
+/// across the innermost loop (`base + (iters-1)*stride + extent`) must stay
+/// inside the program footprint.
+fn parse_operand(
+    (col, tok): (usize, &str),
+    lno: usize,
+    allocs: &[(String, Alloc)],
+    heap: u64,
+    extent: u64,
+    inner_iters: Option<u64>,
+) -> Result<Operand> {
+    let (head, stride) = match tok.split_once(':') {
+        Some((h, s)) => match parse_num(s) {
+            Some(n) => (h, n),
+            None => return perr(lno, col, format!("bad stride in operand `{tok}`")),
+        },
+        None => (tok, 0),
+    };
+    let (base_name, off) = match head.split_once('+') {
+        Some((n, o)) => match parse_num(o) {
+            Some(v) => (n, v),
+            None => return perr(lno, col, format!("bad offset in operand `{tok}`")),
+        },
+        None => (head, 0),
+    };
+    let Some((_, a)) = allocs.iter().find(|(n, _)| n == base_name) else {
+        return perr(lno, col, format!("unknown allocation `{base_name}` in operand `{tok}`"));
+    };
+    if off >= a.size {
+        return perr(
+            lno,
+            col,
+            format!("offset {off} is outside allocation `{base_name}` ({} bytes)", a.size),
+        );
+    }
+    let base = a.base + off;
+    let span = match inner_iters {
+        Some(n) if stride > 0 => n.saturating_sub(1),
+        _ => 0,
+    };
+    let reach = span
+        .checked_mul(stride)
+        .and_then(|x| x.checked_add(base))
+        .and_then(|x| x.checked_add(extent));
+    match reach {
+        Some(r) if r <= heap => Ok(Operand { base, stride }),
+        Some(r) => perr(
+            lno,
+            col,
+            format!(
+                "out-of-footprint operand `{tok}`: reaches {} bytes past the end of the \
+                 program's allocations",
+                r - heap
+            ),
+        ),
+        None => perr(lno, col, format!("out-of-footprint operand `{tok}`: address overflow")),
+    }
+}
+
+// ----------------------------------------------------------------- loader
+
+/// Parse `src` and register the program as a loaded-`.vpr` workload. The
+/// registered name is the file's `name` directive when present, else
+/// `fallback_name`. Re-registering a taken name is a clean "already
+/// registered" error from the registry, never a panic.
+pub fn load_str(src: &str, fallback_name: &str) -> Result<WorkloadId> {
+    let parsed = parse(src)?;
+    let name = parsed.name.unwrap_or_else(|| fallback_name.to_string());
+    crate::ensure!(!name.is_empty(), "program has no `name` directive and no fallback name");
+    let desc = parsed.description.unwrap_or_else(|| "loaded .vpr program".to_string());
+    workload::register(Arc::new(
+        ProgramWorkload::new(name, parsed.program)
+            .with_description(desc)
+            .with_kind(WorkloadKind::LoadedVpr),
+    ))
+}
+
+/// Load and register one `.vpr` file; the registered name defaults to the
+/// file stem when the file has no `name` directive.
+pub fn load_file(path: impl AsRef<Path>) -> Result<WorkloadId> {
+    let path = path.as_ref();
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let stem =
+        path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+    load_str(&src, &stem).with_context(|| path.display().to_string())
+}
+
+/// Load every `.vpr` file in `dir` (sorted by path, so registration order
+/// is deterministic). Errors if the directory holds none.
+pub fn load_dir(dir: impl AsRef<Path>) -> Result<Vec<WorkloadId>> {
+    let dir = dir.as_ref();
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "vpr"))
+        .collect();
+    paths.sort();
+    crate::ensure!(!paths.is_empty(), "no .vpr files in {}", dir.display());
+    paths.iter().map(load_file).collect()
+}
+
+/// Load a single `.vpr` file or every `.vpr` in a directory — the CLI
+/// `--load PATH` flag.
+pub fn load_path(path: impl AsRef<Path>) -> Result<Vec<WorkloadId>> {
+    let path = path.as_ref();
+    if path.is_dir() {
+        load_dir(path)
+    } else {
+        Ok(vec![load_file(path)?])
+    }
+}
+
+/// The bench-matrix program cell: `saxpy` round-tripped through the text
+/// format (emit -> parse -> register), so `vima-sim bench` tracks the
+/// parse-then-`ProgramChunker` path's throughput alongside the native
+/// generators. Registered once per process as `saxpy-vpr-bench`.
+pub fn bench_workload() -> Result<WorkloadId> {
+    static ID: OnceLock<Result<WorkloadId, String>> = OnceLock::new();
+    ID.get_or_init(|| {
+        let build = || -> Result<WorkloadId> {
+            let text = crate::workload::programs::saxpy(1024).to_vpr("saxpy-vpr-bench")?;
+            load_str(&text, "saxpy-vpr-bench")
+        };
+        build().map_err(|e| e.to_string())
+    })
+    .clone()
+    .map_err(Error::msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Backend;
+    use crate::workload::programs::{saxpy, softmax};
+
+    #[test]
+    fn tokenizer_reports_columns() {
+        let toks = tokenize("  vloop 16 ");
+        assert_eq!(toks, vec![(3, "vloop"), (9, "16")]);
+        assert!(tokenize("").is_empty());
+    }
+
+    #[test]
+    fn numbers_parse_decimal_hex_and_separators() {
+        assert_eq!(parse_num("8192"), Some(8192));
+        assert_eq!(parse_num("0x2000"), Some(8192));
+        assert_eq!(parse_num("8_192"), Some(8192));
+        assert_eq!(parse_num("nope"), None);
+    }
+
+    #[test]
+    fn every_mnemonic_round_trips() {
+        for (m, op, dtype) in MNEMONICS {
+            let mut p = VimaProgram::new();
+            let a = p.alloc(8192);
+            let b = p.alloc(8192);
+            let c = p.alloc(8192);
+            match op.num_srcs() {
+                0 => p.vim2k_sets(c),
+                1 => p.vim2k_movs(a, c),
+                3 => p.vim2k_fmadds(a, b, c, c),
+                _ if op.writes_vector() => {
+                    // Reuse the statement shape through the parser's own
+                    // generic path below; here push via the text form.
+                    let text = format!(
+                        "vpr 1\nvector_bytes 8192\nalloc a 8192\nalloc b 8192\n\
+                         alloc c 8192\n{m} a b -> c\n"
+                    );
+                    let rt = parse(&text).unwrap();
+                    assert_eq!(rt.program.to_vpr("").unwrap().matches(m).count(), 1);
+                    continue;
+                }
+                _ => p.vim2k_dots(a, b),
+            }
+            let text = p.to_vpr("t").unwrap();
+            let rt = parse(&text).unwrap();
+            assert_eq!(
+                rt.program.build_for(Backend::Vima).unwrap(),
+                p.build_for(Backend::Vima).unwrap(),
+                "{m}: round-trip must be bit-identical ({op:?} {dtype:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn builtin_programs_round_trip_bit_identically() {
+        for (p, name) in [(saxpy(64), "s1"), (softmax(32), "s2")] {
+            let text = p.to_vpr(name).unwrap();
+            let rt = parse(&text).unwrap();
+            assert_eq!(rt.name.as_deref(), Some(name));
+            for backend in [Backend::Vima, Backend::Avx] {
+                assert_eq!(
+                    rt.program.build_for(backend).unwrap(),
+                    p.build_for(backend).unwrap(),
+                    "{name}/{backend}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generic_vop_form_round_trips() {
+        let text = "vpr 1\nvector_bytes 8192\nalloc a 8192\nalloc z 8192\n\
+                    vop max f32 a z -> a\nvop redsum f32 a\n";
+        let rt = parse(text).unwrap();
+        let emitted = rt.program.to_vpr("").unwrap();
+        assert!(emitted.contains("vop max f32"), "{emitted}");
+        assert!(emitted.contains("vop redsum f32"), "{emitted}");
+        let rt2 = parse(&emitted).unwrap();
+        assert_eq!(
+            rt2.program.build_for(Backend::Vima).unwrap(),
+            rt.program.build_for(Backend::Vima).unwrap()
+        );
+    }
+
+    #[test]
+    fn parse_errors_name_the_line() {
+        let unclosed = "vpr 1\nalloc a 8192\nvloop 4\nvim2k_movs a -> a\n";
+        let e = parse(unclosed).unwrap_err().to_string();
+        assert!(e.contains("line 3"), "{e}");
+        let stray = "vpr 1\nalloc a 8192\nvim2k_movs a -> a\nend\n";
+        let e = parse(stray).unwrap_err().to_string();
+        assert!(e.contains("line 4") && e.contains("no open vloop"), "{e}");
+        let oob = "vpr 1\nalloc a 8192\nvloop 4\nvim2k_movs a:8192 -> a\nend\n";
+        let e = parse(oob).unwrap_err().to_string();
+        assert!(e.contains("line 4") && e.contains("out-of-footprint"), "{e}");
+    }
+
+    #[test]
+    fn loader_registers_and_rejects_duplicates() {
+        let text = saxpy(4).to_vpr("ut-vpr-loaded").unwrap();
+        let id = load_str(&text, "unused-fallback").unwrap();
+        assert_eq!(workload::name(id), "ut-vpr-loaded");
+        assert_eq!(workload::get(id).unwrap().kind(), WorkloadKind::LoadedVpr);
+        let e = load_str(&text, "unused-fallback").unwrap_err().to_string();
+        assert!(e.contains("already registered"), "{e}");
+    }
+
+    #[test]
+    fn bench_workload_is_idempotent() {
+        let a = bench_workload().unwrap();
+        let b = bench_workload().unwrap();
+        assert_eq!(a, b);
+        assert_eq!(workload::name(a), "saxpy-vpr-bench");
+    }
+}

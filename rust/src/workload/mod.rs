@@ -32,6 +32,7 @@ pub mod paper;
 pub mod programs;
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::ensure;
@@ -39,6 +40,31 @@ use crate::trace::{Backend, KernelId, TraceChunker, TraceParams};
 use crate::util::error::Result;
 
 pub use programs::ProgramWorkload;
+
+/// Where a workload came from — surfaced by `vima-sim workloads` so loaded
+/// programs are discoverable next to the built-ins, and used by the custom
+/// figure to enumerate every program-shaped workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// One of the paper's seven kernels (hand-written trace generators).
+    PaperKernel,
+    /// An Intrinsics-VIMA program registered from Rust code.
+    Program,
+    /// A program loaded from a `.vpr` file at runtime (see
+    /// [`crate::program`]).
+    LoadedVpr,
+}
+
+impl fmt::Display for WorkloadKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `pad` (not `write_str`) so callers' width specs apply.
+        f.pad(match self {
+            WorkloadKind::PaperKernel => "paper kernel",
+            WorkloadKind::Program => "program",
+            WorkloadKind::LoadedVpr => "loaded .vpr",
+        })
+    }
+}
 
 /// An open workload: anything that can lower itself to a per-backend trace
 /// stream. Implementations are registered once ([`register`]) and addressed
@@ -54,6 +80,13 @@ pub trait Workload: Send + Sync {
     /// One-line description for `vima-sim workloads`.
     fn description(&self) -> &str {
         ""
+    }
+
+    /// Provenance of this workload (paper kernel / program / loaded
+    /// `.vpr`). Programs are the open-registry default; the paper kernels
+    /// override.
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::Program
     }
 
     /// Validate parameters before any trace is generated. The default
@@ -218,6 +251,22 @@ pub fn all_ids() -> Vec<WorkloadId> {
     (0..r.entries.len() as u32).map(WorkloadId).collect()
 }
 
+/// Ids of every registered *program* workload (built-in or loaded `.vpr` —
+/// anything that is not a paper kernel) that lowers to both AVX and VIMA:
+/// the custom-figure set, in registration order.
+pub fn program_ids() -> Vec<WorkloadId> {
+    let r = global().read().unwrap();
+    (0..r.entries.len() as u32)
+        .map(WorkloadId)
+        .filter(|id| {
+            let w = &r.entries[id.index()];
+            w.kind() != WorkloadKind::PaperKernel
+                && w.backends().contains(&Backend::Avx)
+                && w.backends().contains(&Backend::Vima)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +313,18 @@ mod tests {
             assert!(w.backends().contains(&Backend::Avx));
             assert!(w.default_footprint() > 0);
         }
+    }
+
+    #[test]
+    fn kinds_distinguish_kernels_from_programs() {
+        let memset = get(WorkloadId::from(KernelId::MemSet)).unwrap();
+        assert_eq!(memset.kind(), WorkloadKind::PaperKernel);
+        let saxpy = get(resolve("saxpy").unwrap()).unwrap();
+        assert_eq!(saxpy.kind(), WorkloadKind::Program);
+        let programs = program_ids();
+        assert!(programs.contains(&resolve("saxpy").unwrap()));
+        assert!(programs.contains(&resolve("softmax").unwrap()));
+        assert!(!programs.contains(&WorkloadId::from(KernelId::MemSet)));
     }
 
     #[test]

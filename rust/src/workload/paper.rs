@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use super::Workload;
+use super::{Workload, WorkloadKind};
 use crate::trace::{knn, matmul, mlp, stencil, streaming, Backend, TraceChunker, TraceParams};
 use crate::util::error::Result;
 
@@ -38,6 +38,10 @@ impl Workload for MemSet {
         &ALL_BACKENDS
     }
 
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::PaperKernel
+    }
+
     fn description(&self) -> &str {
         "fill one array (pure store bandwidth)"
     }
@@ -60,6 +64,10 @@ impl Workload for MemCopy {
 
     fn backends(&self) -> &[Backend] {
         &ALL_BACKENDS
+    }
+
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::PaperKernel
     }
 
     fn description(&self) -> &str {
@@ -86,6 +94,10 @@ impl Workload for VecSum {
         &ALL_BACKENDS
     }
 
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::PaperKernel
+    }
+
     fn description(&self) -> &str {
         "c = a + b elementwise (streaming compute)"
     }
@@ -110,6 +122,10 @@ impl Workload for Stencil {
         &ALL_BACKENDS
     }
 
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::PaperKernel
+    }
+
     fn description(&self) -> &str {
         "5-point convolution with row reuse"
     }
@@ -132,6 +148,10 @@ impl Workload for MatMul {
 
     fn backends(&self) -> &[Backend] {
         &NO_HIVE
+    }
+
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::PaperKernel
     }
 
     fn description(&self) -> &str {
@@ -167,6 +187,10 @@ impl Workload for Knn {
         &NO_HIVE
     }
 
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::PaperKernel
+    }
+
     fn description(&self) -> &str {
         "k-nearest-neighbours distance sweep"
     }
@@ -193,6 +217,10 @@ impl Workload for Mlp {
 
     fn backends(&self) -> &[Backend] {
         &NO_HIVE
+    }
+
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::PaperKernel
     }
 
     fn description(&self) -> &str {

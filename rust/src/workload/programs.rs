@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use super::{common_validate, Workload};
+use super::{common_validate, Workload, WorkloadKind};
 use crate::ensure;
 use crate::intrinsics::VimaProgram;
 use crate::trace::{Backend, TraceChunker, TraceParams};
@@ -29,16 +29,29 @@ use crate::util::error::Result;
 pub struct ProgramWorkload {
     name: String,
     description: String,
+    kind: WorkloadKind,
     program: VimaProgram,
 }
 
 impl ProgramWorkload {
     pub fn new(name: impl Into<String>, program: VimaProgram) -> Self {
-        Self { name: name.into(), description: String::new(), program }
+        Self {
+            name: name.into(),
+            description: String::new(),
+            kind: WorkloadKind::Program,
+            program,
+        }
     }
 
     pub fn with_description(mut self, d: impl Into<String>) -> Self {
         self.description = d.into();
+        self
+    }
+
+    /// Tag the provenance (the `.vpr` loader marks its registrations
+    /// [`WorkloadKind::LoadedVpr`]).
+    pub fn with_kind(mut self, kind: WorkloadKind) -> Self {
+        self.kind = kind;
         self
     }
 }
@@ -54,6 +67,10 @@ impl Workload for ProgramWorkload {
 
     fn description(&self) -> &str {
         &self.description
+    }
+
+    fn kind(&self) -> WorkloadKind {
+        self.kind
     }
 
     fn default_footprint(&self) -> u64 {
