@@ -1,0 +1,323 @@
+//! `vima-check`: a multi-pass static analyzer for VIMA programs.
+//!
+//! The paper sells VIMA on an *easy programming interface* with *precise
+//! exceptions* — but before this module, a malformed or pathological
+//! program was only caught when the simulator tripped over it at run time,
+//! and performance hazards were never caught at all. The analyzer walks a
+//! [`VimaProgram`] statement tree (and therefore every parsed `.vpr` file)
+//! *before execution* and reports typed [`Diagnostic`]s with stable lint
+//! IDs, severities, and line/column spans. Four pass families
+//! (DESIGN.md §13):
+//!
+//! 1. **interval dataflow per allocation** — read-before-initialize, dead
+//!    stores, and write-after-write shadowing, computed across `vloop`
+//!    iteration spaces with strided-interval arithmetic on
+//!    `NAME[+OFF][:STRIDE]` operands;
+//! 2. **alias/overlap** — partial src/dst overlap within one instruction
+//!    (which the chunked AVX lowering would miscompute) and loop-carried
+//!    overlap or exact aliasing across iterations;
+//! 3. **backend portability** — vector sizes the configured VIMA unit
+//!    cannot execute (the run-time "oversized vector" error, moved to load
+//!    time);
+//! 4. **performance, keyed to the simulated machine** — vcache thrash,
+//!    redundant re-loads of unmodified regions, hoistable loop-invariant
+//!    statements, and operand walks that ping-pong across `MemFabric`
+//!    cubes.
+//!
+//! Entry points: [`analyze`] for a program plus its [`SourceInfo`] (spans
+//! and allocation names from the `.vpr` parser; empty for DSL-built
+//! programs), [`analyze_parsed`] for a [`ParsedVpr`]. The loaders in
+//! [`crate::program`] reject error-bearing files on load, and the
+//! `vima-sim check` subcommand runs the analyzer against the session's
+//! machine configuration.
+
+mod passes;
+
+use crate::config::SystemConfig;
+use crate::intrinsics::VimaProgram;
+use crate::program::ParsedVpr;
+
+/// A 1-based line/column source position; `line == 0` means unknown
+/// (DSL-built programs carry no source text).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Span {
+    pub const UNKNOWN: Span = Span { line: 0, col: 0 };
+
+    pub fn new(line: u32, col: u32) -> Self {
+        Span { line, col }
+    }
+
+    pub fn known(self) -> bool {
+        self.line > 0
+    }
+}
+
+/// Source positions for a statement list, mirroring the [`Stmt`] tree
+/// shape: one node per statement, loops carry their body's nodes.
+///
+/// [`Stmt`]: crate::intrinsics
+#[derive(Debug, Clone)]
+pub enum SpanNode {
+    Leaf(Span),
+    Loop(Span, Vec<SpanNode>),
+}
+
+impl SpanNode {
+    pub fn span(&self) -> Span {
+        match self {
+            SpanNode::Leaf(s) => *s,
+            SpanNode::Loop(s, _) => *s,
+        }
+    }
+}
+
+/// Everything the analyzer knows about a program's source text. Default
+/// (empty) for DSL-built programs: spans render as file-level diagnostics
+/// and allocations are named `v0`, `v1`, ... (the emitter's convention).
+#[derive(Debug, Clone, Default)]
+pub struct SourceInfo {
+    /// One node per top-level statement (empty = no source positions).
+    pub spans: Vec<SpanNode>,
+    /// One name per allocation (empty = `v{index}` defaults).
+    pub alloc_names: Vec<String>,
+    /// Position of the `vector_bytes` header directive, if any.
+    pub vb_span: Span,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// Stable lint identifiers (the `check` output contract: tests and CI pin
+/// diagnostics by these IDs).
+pub mod lint {
+    pub const UNINIT_READ: &str = "uninit-read";
+    pub const MAYBE_UNINIT_READ: &str = "maybe-uninit-read";
+    pub const DEAD_STORE: &str = "dead-store";
+    pub const LOOP_SHADOWED_STORE: &str = "loop-shadowed-store";
+    pub const PARTIAL_OVERLAP: &str = "partial-overlap";
+    pub const LOOP_CARRIED_OVERLAP: &str = "loop-carried-overlap";
+    pub const LOOP_CARRIED_ALIAS: &str = "loop-carried-alias";
+    pub const EMPTY_LOOP: &str = "empty-loop";
+    pub const VECTOR_SIZE_UNSUPPORTED: &str = "vector-size-unsupported";
+    pub const UNREAD_REDUCTION: &str = "unread-reduction";
+    pub const VCACHE_THRASH: &str = "vcache-thrash";
+    pub const REDUNDANT_RELOAD: &str = "redundant-reload";
+    pub const HOISTABLE_INVARIANT: &str = "hoistable-invariant";
+    pub const CUBE_PING_PONG: &str = "cube-ping-pong";
+
+    /// Every lint the analyzer can emit, for docs and coverage tests.
+    pub const ALL: [&str; 14] = [
+        UNINIT_READ,
+        MAYBE_UNINIT_READ,
+        DEAD_STORE,
+        LOOP_SHADOWED_STORE,
+        PARTIAL_OVERLAP,
+        LOOP_CARRIED_OVERLAP,
+        LOOP_CARRIED_ALIAS,
+        EMPTY_LOOP,
+        VECTOR_SIZE_UNSUPPORTED,
+        UNREAD_REDUCTION,
+        VCACHE_THRASH,
+        REDUNDANT_RELOAD,
+        HOISTABLE_INVARIANT,
+        CUBE_PING_PONG,
+    ];
+}
+
+/// One analyzer finding: a stable lint ID, a severity, a source span (may
+/// be unknown for DSL programs), and a rendered message.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub span: Span,
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// `file:line:col: severity[id]: message` (the line/col segment is
+    /// omitted when the span is unknown).
+    pub fn render(&self, file: &str) -> String {
+        if self.span.known() {
+            format!(
+                "{file}:{}:{}: {}[{}]: {}",
+                self.span.line,
+                self.span.col,
+                self.severity.label(),
+                self.id,
+                self.message
+            )
+        } else {
+            format!("{file}: {}[{}]: {}", self.severity.label(), self.id, self.message)
+        }
+    }
+
+    /// One flat JSON object (hand-rolled; see [`crate::service::jsonl`]).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"id\": \"{}\", \"severity\": \"{}\", \"line\": {}, \"col\": {}, \
+             \"message\": \"{}\"}}",
+            self.id,
+            self.severity.label(),
+            self.span.line,
+            self.span.col,
+            crate::service::jsonl::escape(&self.message)
+        )
+    }
+}
+
+/// The analyzer's result for one program: diagnostics sorted by source
+/// position (file-level first), stable within a statement.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity == sev).count()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.count(Severity::Warning)
+    }
+
+    pub fn info_count(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// First error-severity diagnostic, if any (the load-gate message).
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.diags.iter().find(|d| d.severity == Severity::Error)
+    }
+
+    /// Render every diagnostic, one line each, with a trailing newline
+    /// (empty string when clean) — the `.expect` fixture format.
+    pub fn render(&self, file: &str) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.render(file));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Compact `"1E 2W 3I"` counts label (or `"clean"`) for the
+    /// `vima-sim workloads` listing.
+    pub fn counts_label(&self) -> String {
+        if self.is_clean() {
+            return "clean".to_string();
+        }
+        let mut parts = Vec::new();
+        for (n, tag) in [
+            (self.error_count(), "E"),
+            (self.warning_count(), "W"),
+            (self.info_count(), "I"),
+        ] {
+            if n > 0 {
+                parts.push(format!("{n}{tag}"));
+            }
+        }
+        parts.join(" ")
+    }
+
+    /// The per-file JSON fragment for `check --json`.
+    pub fn to_json(&self, file: &str) -> String {
+        let diags: Vec<String> = self.diags.iter().map(Diagnostic::to_json).collect();
+        format!(
+            "{{\"file\": \"{}\", \"errors\": {}, \"warnings\": {}, \"infos\": {}, \
+             \"diagnostics\": [{}]}}",
+            crate::service::jsonl::escape(file),
+            self.error_count(),
+            self.warning_count(),
+            self.info_count(),
+            diags.join(", ")
+        )
+    }
+}
+
+/// Analyze a program against a machine configuration. `src` supplies
+/// source spans and allocation names where available ([`SourceInfo`]
+/// default for DSL-built programs).
+pub fn analyze(program: &VimaProgram, src: &SourceInfo, cfg: &SystemConfig) -> Report {
+    passes::run(program, src, cfg)
+}
+
+/// Analyze a parsed `.vpr` file (spans and names travel with it).
+pub fn analyze_parsed(parsed: &ParsedVpr, cfg: &SystemConfig) -> Report {
+    analyze(&parsed.program, &parsed.source, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_includes_span_when_known() {
+        let d = Diagnostic {
+            id: lint::UNINIT_READ,
+            severity: Severity::Error,
+            span: Span::new(7, 3),
+            message: "m".to_string(),
+        };
+        assert_eq!(d.render("f.vpr"), "f.vpr:7:3: error[uninit-read]: m");
+        let d2 = Diagnostic { span: Span::UNKNOWN, ..d };
+        assert_eq!(d2.render("f.vpr"), "f.vpr: error[uninit-read]: m");
+    }
+
+    #[test]
+    fn counts_label_summarizes() {
+        let mut r = Report::default();
+        assert_eq!(r.counts_label(), "clean");
+        r.diags.push(Diagnostic {
+            id: lint::DEAD_STORE,
+            severity: Severity::Warning,
+            span: Span::UNKNOWN,
+            message: String::new(),
+        });
+        assert_eq!(r.counts_label(), "1W");
+        assert_eq!(r.warning_count(), 1);
+        assert!(r.first_error().is_none());
+    }
+
+    #[test]
+    fn dsl_saxpy_is_clean() {
+        let p = crate::workload::programs::saxpy(16);
+        let r = analyze(&p, &SourceInfo::default(), &SystemConfig::default());
+        assert!(r.is_clean(), "{}", r.render("saxpy"));
+    }
+
+    #[test]
+    fn dsl_softmax_is_clean() {
+        let p = crate::workload::programs::softmax(16);
+        let r = analyze(&p, &SourceInfo::default(), &SystemConfig::default());
+        assert!(r.is_clean(), "{}", r.render("softmax"));
+    }
+}

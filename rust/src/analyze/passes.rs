@@ -1,0 +1,941 @@
+//! The analyzer passes: strided-interval dataflow, alias/overlap,
+//! portability, and machine-keyed performance lints.
+//!
+//! Every operand is abstracted as a [`Pat`]: `count` instances of
+//! `extent` bytes starting at `base`, `stride` bytes apart (`count` = the
+//! innermost loop's iteration count, 1 at top level). The walk follows
+//! the statement tree in execution order, maintaining the set of byte
+//! intervals proven written ([`IntervalSet`]), instance-precise records
+//! of sparse (gapped) writes, and the set of stores not yet observed by
+//! any read. An ownership pre-pass classifies each allocation by its
+//! first textual touch — written first means VIMA-owned (reads must be
+//! proven initialized), read first means host-initialized input (reads
+//! are trusted, matching `host_store`-style preloading that the program
+//! text cannot see).
+
+use super::{lint, Diagnostic, Report, Severity, SourceInfo, Span, SpanNode};
+use crate::config::SystemConfig;
+use crate::fabric::cube_index;
+use crate::intrinsics::{Operand, Stmt, VimaProgram};
+use crate::isa::VimaOp;
+
+/// A strided access pattern: `count` instances of `extent` bytes,
+/// `stride` apart, starting at `base`.
+#[derive(Debug, Clone, Copy)]
+struct Pat {
+    base: u64,
+    stride: u64,
+    count: u64,
+    extent: u64,
+}
+
+impl Pat {
+    fn of(o: &Operand, iters: u64, extent: u64) -> Pat {
+        Pat { base: o.base, stride: o.stride, count: iters.max(1), extent }
+    }
+
+    /// Convex hull `[lo, hi)` over every instance.
+    fn hull(&self) -> (u64, u64) {
+        (self.base, self.base + (self.count - 1) * self.stride + self.extent)
+    }
+
+    /// Iteration 0's instance `[lo, hi)`.
+    fn first(&self) -> (u64, u64) {
+        (self.base, self.base + self.extent)
+    }
+
+    /// Dense patterns tile their hull with no gaps between instances.
+    fn dense(&self) -> bool {
+        self.count == 1 || self.stride <= self.extent
+    }
+
+    /// Whether one single instance contains `[lo, hi)` (instance-precise
+    /// membership for sparse writes).
+    fn instance_covers(&self, lo: u64, hi: u64) -> bool {
+        if lo >= hi || lo < self.base || hi - lo > self.extent {
+            return false;
+        }
+        let k = if self.stride == 0 {
+            0
+        } else {
+            ((lo - self.base) / self.stride).min(self.count - 1)
+        };
+        let start = self.base + k * self.stride;
+        start <= lo && hi <= start + self.extent
+    }
+}
+
+/// Sorted, disjoint half-open byte intervals with merge-on-touch insert.
+#[derive(Debug, Clone, Default)]
+struct IntervalSet {
+    v: Vec<(u64, u64)>,
+}
+
+impl IntervalSet {
+    fn insert(&mut self, mut lo: u64, mut hi: u64) {
+        if lo >= hi {
+            return;
+        }
+        let mut out: Vec<(u64, u64)> = Vec::with_capacity(self.v.len() + 1);
+        let mut placed = false;
+        for &(a, b) in &self.v {
+            if b < lo || hi < a {
+                if a > hi && !placed {
+                    out.push((lo, hi));
+                    placed = true;
+                }
+                out.push((a, b));
+            } else {
+                lo = lo.min(a);
+                hi = hi.max(b);
+            }
+        }
+        if !placed {
+            out.push((lo, hi));
+        }
+        self.v = out;
+    }
+
+    /// After merge-on-touch, containment in a single interval is exact.
+    fn covers(&self, lo: u64, hi: u64) -> bool {
+        lo >= hi || self.v.iter().any(|&(a, b)| a <= lo && hi <= b)
+    }
+
+    fn total(&self) -> u64 {
+        self.v.iter().map(|&(a, b)| b - a).sum()
+    }
+}
+
+/// First-textual-touch classification of an allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Owner {
+    Untouched,
+    /// First touched by a VIMA write: reads must be proven initialized.
+    Owned,
+    /// First touched by a read (or `host_load`): a host-initialized input
+    /// whose contents the program text cannot see — reads are trusted.
+    External,
+}
+
+/// One write site recorded by the pre-pass (for the optimistic
+/// any-write-anywhere union behind `maybe-uninit-read`).
+struct WriteRec {
+    stmt: usize,
+    pat: Pat,
+}
+
+/// A completed dense store no read has observed yet.
+struct Pending {
+    alloc: usize,
+    lo: u64,
+    hi: u64,
+    span: Span,
+}
+
+/// Per-statement write patterns for the block being walked (nested loops
+/// contribute their dense write hulls as stride-0 pseudo-patterns).
+struct Entry {
+    writes: Vec<Pat>,
+}
+
+fn span_at(spans: &[SpanNode], pos: usize) -> (Span, &[SpanNode]) {
+    match spans.get(pos) {
+        Some(SpanNode::Leaf(s)) => (*s, &[]),
+        Some(SpanNode::Loop(s, kids)) => (*s, kids),
+        None => (Span::UNKNOWN, &[]),
+    }
+}
+
+/// Hulls of every *dense* write in `stmts`, recursively.
+fn dense_write_hulls(stmts: &[Stmt], iters: u64, vb: u64, out: &mut Vec<(u64, u64)>) {
+    for s in stmts {
+        match s {
+            Stmt::Instr { dst: Some(d), .. } => {
+                let w = Pat::of(d, iters, vb);
+                if w.dense() {
+                    out.push(w.hull());
+                }
+            }
+            Stmt::Instr { .. } | Stmt::HostLoad { .. } => {}
+            Stmt::Loop { start, end, body } => {
+                if *end > *start {
+                    dense_write_hulls(body, *end - *start, vb, out);
+                }
+            }
+        }
+    }
+}
+
+/// Hulls of every write in `stmts` (dense or not), recursively.
+fn write_hulls(stmts: &[Stmt], iters: u64, vb: u64, out: &mut Vec<(u64, u64)>) {
+    for s in stmts {
+        match s {
+            Stmt::Instr { dst: Some(d), .. } => out.push(Pat::of(d, iters, vb).hull()),
+            Stmt::Instr { .. } | Stmt::HostLoad { .. } => {}
+            Stmt::Loop { start, end, body } => {
+                if *end > *start {
+                    write_hulls(body, *end - *start, vb, out);
+                }
+            }
+        }
+    }
+}
+
+/// Hulls of every read in `stmts`, recursively. `host` controls whether
+/// `host_load` counts as a read (it does for liveness, not for the
+/// VIMA-cache re-load lint: host loads bypass the vcache).
+fn read_hulls(stmts: &[Stmt], iters: u64, vb: u64, host: bool, out: &mut Vec<(u64, u64)>) {
+    for s in stmts {
+        match s {
+            Stmt::Instr { srcs, .. } => {
+                for o in srcs {
+                    out.push(Pat::of(o, iters, vb).hull());
+                }
+            }
+            Stmt::HostLoad { addr, bytes } => {
+                if host {
+                    out.push(Pat::of(addr, iters, u64::from(*bytes)).hull());
+                }
+            }
+            Stmt::Loop { start, end, body } => {
+                if *end > *start {
+                    read_hulls(body, *end - *start, vb, host, out);
+                }
+            }
+        }
+    }
+}
+
+fn has_host_load(stmts: &[Stmt]) -> bool {
+    stmts.iter().any(|s| match s {
+        Stmt::HostLoad { .. } => true,
+        Stmt::Loop { start, end, body } => *end > *start && has_host_load(body),
+        Stmt::Instr { .. } => false,
+    })
+}
+
+fn overlaps(lo: u64, hi: u64, ranges: &[(u64, u64)]) -> bool {
+    ranges.iter().any(|&(a, b)| a < hi && lo < b)
+}
+
+/// Can write pattern `w` (at body position `wpos`) prove read `r` (at
+/// `rpos`) initialized on every iteration >= 1? `rl1..rh1` is the read's
+/// rest-hull (instances 1..count). Same-body patterns share `count`.
+fn strided_cover(w: &Pat, wpos: usize, r: &Pat, rpos: usize, rl1: u64, rh1: u64) -> bool {
+    if w.stride == 0 {
+        // A constant interval rewritten every iteration: iteration i >= 1
+        // saw iteration i-1's instance regardless of body position.
+        return w.base <= rl1 && rh1 <= w.base + w.extent;
+    }
+    if w.stride != r.stride {
+        return false;
+    }
+    let s = r.stride as i128;
+    let d = r.base as i128 - w.base as i128;
+    let q = d.div_euclid(s);
+    let rem = d.rem_euclid(s) as u64;
+    // Congruent offsets: read instance i lies inside write instance i + q.
+    // q == -1 completed last iteration; q == 0 needs the write textually
+    // earlier in the body.
+    if rem + r.extent <= w.extent && (q == -1 || (q == 0 && wpos < rpos)) {
+        return true;
+    }
+    // Dense prefix: an earlier dense walker's instances 0..=i tile
+    // [w.base, w.base + i*s + extent), which contains read instance i.
+    w.stride <= w.extent
+        && wpos < rpos
+        && w.base <= r.base
+        && r.base + r.extent <= w.base + w.extent
+}
+
+struct Analyzer<'a> {
+    p: &'a VimaProgram,
+    cfg: &'a SystemConfig,
+    names: Vec<String>,
+    owner: Vec<Owner>,
+    all_writes: Vec<WriteRec>,
+    /// Byte intervals proven written by completed dense stores.
+    init: IntervalSet,
+    /// Completed sparse (gapped) write patterns, instance-precise.
+    sparse: Vec<Pat>,
+    pending: Vec<Pending>,
+    diags: Vec<Diagnostic>,
+    vb: u64,
+    counter: usize,
+}
+
+pub(super) fn run(p: &VimaProgram, src: &SourceInfo, cfg: &SystemConfig) -> Report {
+    let mut names: Vec<String> = (0..p.allocs.len()).map(|i| format!("v{i}")).collect();
+    for (i, n) in src.alloc_names.iter().enumerate() {
+        if i < names.len() {
+            names[i] = n.clone();
+        }
+    }
+    let mut a = Analyzer {
+        p,
+        cfg,
+        names,
+        owner: vec![Owner::Untouched; p.allocs.len()],
+        all_writes: Vec::new(),
+        init: IntervalSet::default(),
+        sparse: Vec::new(),
+        pending: Vec::new(),
+        diags: Vec::new(),
+        vb: u64::from(p.vector_bytes),
+        counter: 0,
+    };
+    if p.vector_bytes as usize > cfg.vima.vector_bytes {
+        a.diag(
+            lint::VECTOR_SIZE_UNSUPPORTED,
+            Severity::Error,
+            src.vb_span,
+            format!(
+                "program uses {} B vectors but the configured VIMA unit supports {} B \
+                 (raise [vima] vector_bytes or rebuild the program)",
+                p.vector_bytes, cfg.vima.vector_bytes
+            ),
+        );
+    }
+    let mut c = 0usize;
+    a.prepass(&p.stmts, 1, &mut c);
+    a.block(&p.stmts, &src.spans, 1, Span::UNKNOWN);
+    a.diags.sort_by_key(|d| (d.span.line, d.span.col));
+    Report { diags: a.diags }
+}
+
+impl Analyzer<'_> {
+    fn diag(&mut self, id: &'static str, severity: Severity, span: Span, message: String) {
+        self.diags.push(Diagnostic { id, severity, span, message });
+    }
+
+    fn alloc_of(&self, addr: u64) -> Option<usize> {
+        self.p.allocs.iter().position(|al| al.base <= addr && addr < al.base + al.size)
+    }
+
+    /// `NAME[+OFF][:STRIDE]`, the `.vpr` operand syntax.
+    fn label(&self, o: &Operand) -> String {
+        match self.alloc_of(o.base) {
+            Some(i) => {
+                let mut s = self.names[i].clone();
+                let off = o.base - self.p.allocs[i].base;
+                if off > 0 {
+                    s.push_str(&format!("+{off}"));
+                }
+                if o.stride > 0 {
+                    s.push_str(&format!(":{}", o.stride));
+                }
+                s
+            }
+            None => format!("0x{:x}", o.base),
+        }
+    }
+
+    fn touch(&mut self, addr: u64, write: bool) {
+        if let Some(i) = self.alloc_of(addr) {
+            if self.owner[i] == Owner::Untouched {
+                self.owner[i] = if write { Owner::Owned } else { Owner::External };
+            }
+        }
+    }
+
+    /// Ownership + write-site collection, in textual (= first-execution)
+    /// order. Zero-iteration loops are skipped exactly as in the main
+    /// walk so statement ids stay aligned.
+    fn prepass(&mut self, stmts: &[Stmt], iters: u64, counter: &mut usize) {
+        for s in stmts {
+            let id = *counter;
+            *counter += 1;
+            match s {
+                Stmt::Instr { srcs, dst, .. } => {
+                    for o in srcs {
+                        self.touch(o.base, false);
+                    }
+                    if let Some(d) = dst {
+                        self.touch(d.base, true);
+                        let pat = Pat::of(d, iters, self.vb);
+                        self.all_writes.push(WriteRec { stmt: id, pat });
+                    }
+                }
+                Stmt::HostLoad { addr, .. } => self.touch(addr.base, false),
+                Stmt::Loop { start, end, body } => {
+                    if *end > *start {
+                        self.prepass(body, *end - *start, counter);
+                    }
+                }
+            }
+        }
+    }
+
+    fn covered_completed(&self, lo: u64, hi: u64) -> bool {
+        self.init.covers(lo, hi) || self.sparse.iter().any(|p| p.instance_covers(lo, hi))
+    }
+
+    /// Fold a completed write pattern into the proven-written state.
+    fn complete(&mut self, w: Pat) {
+        if w.dense() {
+            let (lo, hi) = w.hull();
+            self.init.insert(lo, hi);
+        } else {
+            self.sparse.push(w);
+        }
+    }
+
+    fn mark_live(&mut self, lo: u64, hi: u64) {
+        self.pending.retain(|p| !(p.lo < hi && lo < p.hi));
+    }
+
+    /// Record a store: report pending stores it fully shadows, then (if
+    /// dense) become the new pending store for its hull.
+    fn store(&mut self, w: Pat, span: Span) {
+        if !w.dense() {
+            return;
+        }
+        let (lo, hi) = w.hull();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if lo <= self.pending[i].lo && self.pending[i].hi <= hi {
+                let dead = self.pending.remove(i);
+                let base = self.p.allocs[dead.alloc].base;
+                let tail = if span.known() {
+                    format!("is overwritten by line {} before any read", span.line)
+                } else {
+                    "is overwritten before any read".to_string()
+                };
+                let msg = format!(
+                    "store to `{}` bytes {}..{} {}",
+                    self.names[dead.alloc],
+                    dead.lo - base,
+                    dead.hi - base,
+                    tail
+                );
+                self.diag(lint::DEAD_STORE, Severity::Warning, dead.span, msg);
+            } else {
+                i += 1;
+            }
+        }
+        if let Some(alloc) = self.alloc_of(w.base) {
+            self.pending.push(Pending { alloc, lo, hi, span });
+        }
+    }
+
+    /// Per-statement write patterns for one block, used for in-body
+    /// coverage and alias suppression.
+    fn scan_entries(&self, stmts: &[Stmt], iters: u64) -> Vec<Entry> {
+        stmts
+            .iter()
+            .map(|s| {
+                let writes = match s {
+                    Stmt::Instr { dst: Some(d), .. } => vec![Pat::of(d, iters, self.vb)],
+                    Stmt::Instr { .. } | Stmt::HostLoad { .. } => Vec::new(),
+                    Stmt::Loop { start, end, body } => {
+                        if *end > *start {
+                            let mut hulls = Vec::new();
+                            dense_write_hulls(body, *end - *start, self.vb, &mut hulls);
+                            hulls
+                                .into_iter()
+                                .map(|(lo, hi)| Pat {
+                                    base: lo,
+                                    stride: 0,
+                                    count: iters,
+                                    extent: hi - lo,
+                                })
+                                .collect()
+                        } else {
+                            Vec::new()
+                        }
+                    }
+                };
+                Entry { writes }
+            })
+            .collect()
+    }
+
+    /// Walk one statement list executing `iters` times (1 = top level).
+    fn block(&mut self, stmts: &[Stmt], spans: &[SpanNode], iters: u64, loop_span: Span) {
+        let entries = self.scan_entries(stmts, iters);
+        let mut body_reads = Vec::new();
+        read_hulls(stmts, iters, self.vb, true, &mut body_reads);
+        let body_has_host = has_host_load(stmts);
+        if iters >= 2 {
+            self.vcache_thrash(stmts, loop_span);
+            self.redundant_reload(stmts, iters, loop_span);
+        }
+        for (pos, s) in stmts.iter().enumerate() {
+            let id = self.counter;
+            self.counter += 1;
+            let (span, child_spans) = span_at(spans, pos);
+            match s {
+                Stmt::Instr { op, srcs, dst, .. } => {
+                    for o in srcs {
+                        let r = Pat::of(o, iters, self.vb);
+                        self.check_read(&r, pos, &entries, id, span);
+                        let (lo, hi) = r.hull();
+                        self.mark_live(lo, hi);
+                    }
+                    if let Some(d) = dst {
+                        self.alias(srcs, d, iters, pos, &entries, span);
+                        let w = Pat::of(d, iters, self.vb);
+                        self.store(w, span);
+                        if iters >= 2 && w.stride < w.extent {
+                            let (lo, hi) = w.hull();
+                            if !overlaps(lo, hi, &body_reads) {
+                                let msg = format!(
+                                    "store to `{}` overwrites the same bytes every iteration \
+                                     (stride {} < vector size {}) and the result is never read \
+                                     in this loop",
+                                    self.label(d),
+                                    w.stride,
+                                    self.vb
+                                );
+                                self.diag(lint::LOOP_SHADOWED_STORE, Severity::Warning, span, msg);
+                            }
+                        }
+                    }
+                    if iters >= 2 {
+                        self.hoistable(srcs, dst.as_ref(), &entries, body_has_host, span);
+                        if matches!(op, VimaOp::Dot | VimaOp::RedSum) && !body_has_host {
+                            self.diag(
+                                lint::UNREAD_REDUCTION,
+                                Severity::Info,
+                                span,
+                                "reduction result is never read back in this loop (no \
+                                 host_load): each iteration overwrites the VIMA status register"
+                                    .to_string(),
+                            );
+                        }
+                        self.cube_ping_pong(srcs, dst.as_ref(), iters, span);
+                    }
+                    if iters == 1 {
+                        if let Some(d) = dst {
+                            self.complete(Pat::of(d, 1, self.vb));
+                        }
+                    }
+                }
+                Stmt::HostLoad { addr, bytes } => {
+                    let r = Pat::of(addr, iters, u64::from(*bytes));
+                    let (lo, hi) = r.hull();
+                    self.mark_live(lo, hi);
+                }
+                Stmt::Loop { start, end, body } => {
+                    let n = end.saturating_sub(*start);
+                    if n == 0 {
+                        self.diag(
+                            lint::EMPTY_LOOP,
+                            Severity::Warning,
+                            span,
+                            "vloop executes zero iterations".to_string(),
+                        );
+                        continue;
+                    }
+                    if body.is_empty() {
+                        self.diag(
+                            lint::EMPTY_LOOP,
+                            Severity::Warning,
+                            span,
+                            "vloop body is empty".to_string(),
+                        );
+                    }
+                    self.block(body, child_spans, n, span);
+                    // The loop has fully executed: fold its writes into
+                    // the proven-written state, and let its reads keep
+                    // earlier stores live.
+                    for e in self.scan_entries(body, n) {
+                        for w in e.writes {
+                            self.complete(w);
+                        }
+                    }
+                    let mut reads = Vec::new();
+                    read_hulls(body, n, self.vb, true, &mut reads);
+                    for (lo, hi) in reads {
+                        self.mark_live(lo, hi);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The read-before-initialize check for one source pattern.
+    fn check_read(&mut self, r: &Pat, pos: usize, entries: &[Entry], id: usize, span: Span) {
+        let Some(alloc) = self.alloc_of(r.base) else {
+            return;
+        };
+        if self.owner[alloc] != Owner::Owned {
+            return;
+        }
+        let (rl0, rh0) = r.first();
+        let covered0 = self.covered_completed(rl0, rh0)
+            || entries[..pos]
+                .iter()
+                .any(|e| e.writes.iter().any(|w| w.base <= rl0 && rh0 <= w.base + w.extent));
+        let covered_rest = if r.count <= 1 {
+            true
+        } else if r.stride == 0 {
+            // Iterations >= 1 re-read iteration i-1's bytes: any stride-0
+            // body write over the interval (its own accumulator included)
+            // proves them.
+            covered0
+                || entries.iter().any(|e| {
+                    e.writes
+                        .iter()
+                        .any(|w| w.stride == 0 && w.base <= rl0 && rh0 <= w.base + w.extent)
+                })
+        } else {
+            let (_, rh) = r.hull();
+            let rl1 = r.base + r.stride;
+            self.covered_completed(rl1, rh)
+                || entries.iter().enumerate().any(|(wpos, e)| {
+                    e.writes.iter().any(|w| strided_cover(w, wpos, r, pos, rl1, rh))
+                })
+        };
+        if covered0 && covered_rest {
+            return;
+        }
+        let (lo, hi) = if covered0 && r.count > 1 && r.stride > 0 {
+            (r.base + r.stride, r.hull().1)
+        } else {
+            r.hull()
+        };
+        // Optimistic union of every write site in the program except this
+        // statement's own in-place destination: if even that cannot reach
+        // the read, the bytes are definitely never written.
+        let mut others = IntervalSet::default();
+        for rec in &self.all_writes {
+            if rec.stmt == id && rec.pat.base == r.base && rec.pat.stride == r.stride {
+                continue;
+            }
+            let (a, b) = rec.pat.hull();
+            others.insert(a, b);
+        }
+        let base = self.p.allocs[alloc].base;
+        let name = self.names[alloc].clone();
+        if others.covers(lo, hi) {
+            self.diag(
+                lint::MAYBE_UNINIT_READ,
+                Severity::Warning,
+                span,
+                format!(
+                    "read of `{name}` bytes {}..{} cannot be proven initialized before this \
+                     statement",
+                    lo - base,
+                    hi - base
+                ),
+            );
+        } else {
+            self.diag(
+                lint::UNINIT_READ,
+                Severity::Error,
+                span,
+                format!(
+                    "read of `{name}` bytes {}..{} before any write reaches them",
+                    lo - base,
+                    hi - base
+                ),
+            );
+        }
+    }
+
+    /// Src/dst overlap within one instruction and across iterations.
+    fn alias(
+        &mut self,
+        srcs: &[Operand],
+        d: &Operand,
+        iters: u64,
+        pos: usize,
+        entries: &[Entry],
+        span: Span,
+    ) {
+        let dp = Pat::of(d, iters, self.vb);
+        let (dl, dh) = dp.hull();
+        let ext = self.vb as i128;
+        let n = iters as i128;
+        let mut partial_done = false;
+        for o in srcs {
+            let sp = Pat::of(o, iters, self.vb);
+            let (sl, sh) = sp.hull();
+            if !(sl < dh && dl < sh) {
+                continue;
+            }
+            let ss = sp.stride as i128;
+            let ds = dp.stride as i128;
+            let diff0 = sp.base as i128 - dp.base as i128;
+            // Same-iteration partial overlap. Exact aliasing (diff 0) is
+            // fine — in-place updates are whole-vector — but a partial
+            // shift is miscomputed by the chunked AVX lowering.
+            let mut fire_partial = |a: &mut Self, dv: i128| {
+                if dv != 0 && dv.abs() < ext && !partial_done {
+                    partial_done = true;
+                    let msg = format!(
+                        "source `{}` partially overlaps destination `{}`: the chunked AVX \
+                         lowering reads and writes 64 B blocks in place, so overlapped source \
+                         bytes are clobbered mid-instruction",
+                        a.label(o),
+                        a.label(d)
+                    );
+                    a.diag(lint::PARTIAL_OVERLAP, Severity::Error, span, msg);
+                }
+            };
+            if ss == ds {
+                fire_partial(self, diff0);
+            } else {
+                // diff(i) = diff0 + i*(ss - ds) is monotone: check the
+                // endpoints and the iterations nearest the zero crossing.
+                let slope = ss - ds;
+                let cross = -diff0 / slope;
+                for i in [0, n - 1, cross - 1, cross, cross + 1] {
+                    if i >= 0 && i < n {
+                        fire_partial(self, diff0 + i * slope);
+                    }
+                }
+            }
+            if iters < 2 || ss != ds {
+                continue;
+            }
+            // Loop-carried: src instance i vs dst instance i - k.
+            if ss == 0 {
+                if diff0 == 0 {
+                    let (l0, h0) = sp.first();
+                    let rewritten = entries[..pos]
+                        .iter()
+                        .any(|e| e.writes.iter().any(|w| w.base <= l0 && h0 <= w.base + w.extent));
+                    if !rewritten {
+                        let msg = format!(
+                            "`{}` reads exactly what `{}` wrote 1 iteration(s) earlier: \
+                             loop-carried dependence (not safe to slice across threads)",
+                            self.label(o),
+                            self.label(d)
+                        );
+                        self.diag(lint::LOOP_CARRIED_ALIAS, Severity::Info, span, msg);
+                    }
+                }
+                continue;
+            }
+            let k1 = (-diff0).div_euclid(ss);
+            let mut cand = [k1, k1 + 1];
+            cand.sort_unstable_by_key(|k| (k.abs(), *k));
+            for k in cand {
+                if k == 0 || k.abs() > n - 1 {
+                    continue;
+                }
+                let dv = diff0 + k * ss;
+                if dv == 0 {
+                    let msg = if k > 0 {
+                        format!(
+                            "`{}` reads exactly what `{}` wrote {} iteration(s) earlier: \
+                             loop-carried dependence (not safe to slice across threads)",
+                            self.label(o),
+                            self.label(d),
+                            k
+                        )
+                    } else {
+                        format!(
+                            "`{}` reads bytes that `{}` overwrites {} iteration(s) later: \
+                             loop-carried anti-dependence (not safe to slice across threads)",
+                            self.label(o),
+                            self.label(d),
+                            -k
+                        )
+                    };
+                    self.diag(lint::LOOP_CARRIED_ALIAS, Severity::Info, span, msg);
+                    break;
+                } else if dv.abs() < ext {
+                    let (lag, when) = if k > 0 { (k, "earlier") } else { (-k, "later") };
+                    let msg = format!(
+                        "source `{}` overlaps bytes that `{}` writes {} iteration(s) {}: \
+                         loop-carried hazard",
+                        self.label(o),
+                        self.label(d),
+                        lag,
+                        when
+                    );
+                    self.diag(lint::LOOP_CARRIED_OVERLAP, Severity::Warning, span, msg);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// All-stride-0 statement whose inputs nothing in the body writes.
+    fn hoistable(
+        &mut self,
+        srcs: &[Operand],
+        dst: Option<&Operand>,
+        entries: &[Entry],
+        body_has_host: bool,
+        span: Span,
+    ) {
+        if body_has_host || (srcs.is_empty() && dst.is_none()) {
+            return;
+        }
+        if srcs.iter().any(|o| o.stride != 0) || dst.is_some_and(|d| d.stride != 0) {
+            return;
+        }
+        for o in srcs {
+            let (lo, hi) = (o.base, o.base + self.vb);
+            let written = entries.iter().any(|e| {
+                e.writes.iter().any(|w| {
+                    let (a, b) = w.hull();
+                    a < hi && lo < b
+                })
+            });
+            if written {
+                return;
+            }
+        }
+        self.diag(
+            lint::HOISTABLE_INVARIANT,
+            Severity::Info,
+            span,
+            "every operand has stride 0, so this statement computes the same value every \
+             iteration: hoist it out of the vloop"
+                .to_string(),
+        );
+    }
+
+    /// Distinct resident operands vs the VIMA cache's line count.
+    fn vcache_thrash(&mut self, stmts: &[Stmt], span: Span) {
+        let mut keys: Vec<(u64, u64)> = Vec::new();
+        let mut pinned = false;
+        for s in stmts {
+            if let Stmt::Instr { srcs, dst, .. } = s {
+                for o in srcs.iter().chain(dst.as_ref()) {
+                    let k = (o.base, o.stride);
+                    if !keys.contains(&k) {
+                        keys.push(k);
+                        if o.stride == 0 {
+                            pinned = true;
+                        }
+                    }
+                }
+            }
+        }
+        let per = self.vb.div_ceil(self.cfg.vima.vector_bytes as u64);
+        let lines = keys.len() as u64 * per;
+        let cap = self.cfg.vima.cache_lines() as u64;
+        if pinned && lines > cap {
+            self.diag(
+                lint::VCACHE_THRASH,
+                Severity::Warning,
+                span,
+                format!(
+                    "loop body touches {lines} vector-cache lines per iteration but the VIMA \
+                     cache holds {cap}: resident operands will thrash"
+                ),
+            );
+        }
+    }
+
+    /// Loop-invariant bytes re-read every iteration, vs cache capacity.
+    fn redundant_reload(&mut self, stmts: &[Stmt], iters: u64, span: Span) {
+        let mut writes = Vec::new();
+        write_hulls(stmts, iters, self.vb, &mut writes);
+        let mut cands: Vec<(u64, u64)> = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::Instr { srcs, .. } => {
+                    for o in srcs {
+                        if o.stride == 0 {
+                            cands.push((o.base, o.base + self.vb));
+                        }
+                    }
+                }
+                Stmt::HostLoad { .. } => {}
+                Stmt::Loop { start, end, body } => {
+                    // Everything a nested loop reads is re-read on every
+                    // iteration of *this* loop.
+                    if *end > *start {
+                        read_hulls(body, *end - *start, self.vb, false, &mut cands);
+                    }
+                }
+            }
+        }
+        let mut inv = IntervalSet::default();
+        for (lo, hi) in cands {
+            if !overlaps(lo, hi, &writes) {
+                inv.insert(lo, hi);
+            }
+        }
+        let total = inv.total();
+        let cap = self.cfg.vima.cache_bytes as u64;
+        if total > cap {
+            self.diag(
+                lint::REDUNDANT_RELOAD,
+                Severity::Info,
+                span,
+                format!(
+                    "loop re-reads {total} B of loop-invariant data per iteration, more than \
+                     the {cap} B VIMA cache: hoist or tile to avoid re-loading from DRAM"
+                ),
+            );
+        }
+    }
+
+    /// Sampled iterations whose source cube differs from the destination
+    /// cube (uses the fabric's real address→cube hash).
+    fn cube_ping_pong(&mut self, srcs: &[Operand], dst: Option<&Operand>, iters: u64, span: Span) {
+        let cubes = self.cfg.mem.num_cubes;
+        let Some(d) = dst else {
+            return;
+        };
+        if cubes < 2 || srcs.is_empty() {
+            return;
+        }
+        let shard = self.cfg.mem.cube_shard_bytes;
+        let samples = iters.min(64);
+        let mut crossing = 0u64;
+        for i in 0..samples {
+            let dc = cube_index(d.base + i * d.stride, cubes, shard);
+            if srcs.iter().any(|o| cube_index(o.base + i * o.stride, cubes, shard) != dc) {
+                crossing += 1;
+            }
+        }
+        if 2 * crossing > samples {
+            self.diag(
+                lint::CUBE_PING_PONG,
+                Severity::Warning,
+                span,
+                format!(
+                    "{crossing} of {samples} sampled iterations gather a source vector from a \
+                     different cube than the destination ({cubes}-cube fabric): operands \
+                     ping-pong across cube links"
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_set_merges_on_touch() {
+        let mut s = IntervalSet::default();
+        s.insert(0, 10);
+        s.insert(20, 30);
+        assert_eq!(s.v, vec![(0, 10), (20, 30)]);
+        s.insert(10, 20);
+        assert_eq!(s.v, vec![(0, 30)]);
+        assert!(s.covers(5, 25));
+        assert!(!s.covers(5, 31));
+        assert_eq!(s.total(), 30);
+    }
+
+    #[test]
+    fn sparse_pattern_instance_coverage() {
+        // 4 instances of 8 bytes, 32 apart: [100,108) [132,140) ...
+        let p = Pat { base: 100, stride: 32, count: 4, extent: 8 };
+        assert!(!p.dense());
+        assert!(p.instance_covers(132, 140));
+        assert!(p.instance_covers(134, 136));
+        assert!(!p.instance_covers(140, 148));
+        assert!(!p.instance_covers(96, 104));
+        assert_eq!(p.hull(), (100, 204));
+    }
+
+    #[test]
+    fn dense_walk_is_dense() {
+        let p = Pat { base: 0, stride: 8192, count: 16, extent: 8192 };
+        assert!(p.dense());
+        assert_eq!(p.hull(), (0, 16 * 8192));
+    }
+}

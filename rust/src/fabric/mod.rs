@@ -46,6 +46,21 @@ pub struct FabricStats {
     pub hop_cycles: u64,
 }
 
+/// The pure address→cube mapping, shared with the static analyzer so
+/// `check` predicts exactly the cube the fabric would pick: the
+/// XOR-folded hash of the shard-granular block index. `num_cubes` must be
+/// a power of two (enforced at [`MemFabric::new`]); `num_cubes == 1`
+/// always maps to cube 0.
+#[inline]
+pub fn cube_index(addr: u64, num_cubes: usize, cube_shard_bytes: usize) -> usize {
+    if num_cubes <= 1 {
+        return 0;
+    }
+    let blk = addr >> cube_shard_bytes.trailing_zeros();
+    let mix = blk ^ (blk >> 5) ^ (blk >> 10) ^ (blk >> 15) ^ (blk >> 20) ^ (blk >> 25);
+    (mix as usize) & (num_cubes - 1)
+}
+
 /// `num_cubes` stacked-memory cubes behind one address-interleaved front
 /// door. See the module docs for the sharding/hop model.
 #[derive(Debug)]
@@ -108,12 +123,7 @@ impl MemFabric {
     /// vector of at most that size) maps to exactly one cube.
     #[inline]
     pub fn cube_of(&self, addr: u64) -> usize {
-        if self.cube_mask == 0 {
-            return 0;
-        }
-        let blk = addr >> self.shard_shift;
-        let mix = blk ^ (blk >> 5) ^ (blk >> 10) ^ (blk >> 15) ^ (blk >> 20) ^ (blk >> 25);
-        (mix as usize) & self.cube_mask
+        cube_index(addr, self.cube_mask + 1, 1usize << self.shard_shift)
     }
 
     /// Host-side access for one 64 B line. The owning cube's own SerDes

@@ -18,6 +18,7 @@ use crate::config::HiveConfig;
 use crate::isa::{HiveOp, VDtype, VimaFuKind};
 use crate::mem3d::MemPort;
 use crate::stats::StatsReport;
+use crate::util::error::Result;
 
 #[derive(Debug, Default, Clone)]
 pub struct HiveStats {
@@ -128,9 +129,11 @@ impl HiveDevice {
     }
 
     /// Process one HIVE op arriving at CPU-cycle `at` (posted: the host does
-    /// not wait). Returns the op's internal completion time.
-    pub fn execute(&mut self, op: &HiveOp, at: u64, mem: &mut impl MemPort) -> u64 {
-        match *op {
+    /// not wait). Returns the op's internal completion time. An `Unlock`
+    /// with no open lock is a typed error (a malformed trace stream), never
+    /// a silently-simulated state.
+    pub fn execute(&mut self, op: &HiveOp, at: u64, mem: &mut impl MemPort) -> Result<u64> {
+        Ok(match *op {
             HiveOp::Lock => {
                 self.stats.transactions += 1;
                 let start = at.max(self.lock_free_at);
@@ -140,7 +143,7 @@ impl HiveDevice {
                 self.lock_acquired_at
             }
             HiveOp::Unlock => {
-                debug_assert!(self.lock_depth > 0, "unlock without lock");
+                crate::ensure!(self.lock_depth > 0, "HIVE unlock without a matching lock");
                 // Sequential write-back of every dirty register.
                 let mut t = at.max(self.lock_acquired_at);
                 for r in 0..self.regs.len() {
@@ -151,7 +154,7 @@ impl HiveDevice {
                 }
                 let done = t + self.cfg.unlock_cycles;
                 self.lock_free_at = done;
-                self.lock_depth = self.lock_depth.saturating_sub(1);
+                self.lock_depth -= 1;
                 self.stats.busy_until = self.stats.busy_until.max(done);
                 done
             }
@@ -186,7 +189,7 @@ impl HiveDevice {
                 self.stats.busy_until = self.stats.busy_until.max(done);
                 done
             }
-        }
+        })
     }
 
     /// Functional-phase twin of [`execute`](Self::execute): tracks the
@@ -198,14 +201,18 @@ impl HiveDevice {
     /// times are dropped to zero (HIVE is timing-entangled, so it is
     /// excluded from the warm-up state-identity guarantee; its event
     /// counters and traffic stay exact).
-    pub fn execute_functional(&mut self, op: &HiveOp, mut mem: impl FnMut(u64, bool)) {
+    pub fn execute_functional(
+        &mut self,
+        op: &HiveOp,
+        mut mem: impl FnMut(u64, bool),
+    ) -> Result<()> {
         match *op {
             HiveOp::Lock => {
                 self.stats.transactions += 1;
                 self.lock_depth += 1;
             }
             HiveOp::Unlock => {
-                debug_assert!(self.lock_depth > 0, "unlock without lock");
+                crate::ensure!(self.lock_depth > 0, "HIVE unlock without a matching lock");
                 let subs = (self.cfg.vector_bytes / 64) as u64;
                 for reg in &mut self.regs {
                     if reg.dirty {
@@ -216,7 +223,7 @@ impl HiveDevice {
                         reg.dirty = false;
                     }
                 }
-                self.lock_depth = self.lock_depth.saturating_sub(1);
+                self.lock_depth -= 1;
             }
             HiveOp::LoadReg { reg, addr } => {
                 self.stats.loads += 1;
@@ -237,6 +244,7 @@ impl HiveDevice {
                 self.regs[rd as usize].dirty = true;
             }
         }
+        Ok(())
     }
 
     /// Bind the memory address a register will write back to (set by the
@@ -290,16 +298,16 @@ mod tests {
     #[test]
     fn lock_costs_cycles() {
         let (mut h, mut mem) = setup();
-        let t = h.execute(&HiveOp::Lock, 100, &mut mem);
+        let t = h.execute(&HiveOp::Lock, 100, &mut mem).unwrap();
         assert_eq!(t, 100 + h.cfg.lock_cycles);
     }
 
     #[test]
     fn loads_within_transaction_overlap() {
         let (mut h, mut mem) = setup();
-        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
-        let a = h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
-        let b = h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem);
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem).unwrap();
+        let a = h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem).unwrap();
+        let b = h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem).unwrap();
         // Issued at the same time, different vaults: near-full overlap.
         assert!(b < a + 100, "loads should overlap: {a} vs {b}");
     }
@@ -307,34 +315,37 @@ mod tests {
     #[test]
     fn compute_waits_for_registers() {
         let (mut h, mut mem) = setup();
-        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
-        let la = h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
-        let lb = h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem);
-        let c = h.execute(
-            &HiveOp::Compute { op: VimaOp::Add, dtype: VDtype::F32, r1: 0, r2: 1, rd: 2 },
-            t0,
-            &mut mem,
-        );
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem).unwrap();
+        let la = h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem).unwrap();
+        let lb = h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem).unwrap();
+        let c = h
+            .execute(
+                &HiveOp::Compute { op: VimaOp::Add, dtype: VDtype::F32, r1: 0, r2: 1, rd: 2 },
+                t0,
+                &mut mem,
+            )
+            .unwrap();
         assert!(c > la.max(lb), "compute must wait for both loads");
     }
 
     #[test]
     fn unlock_serializes_dirty_writebacks() {
         let (mut h, mut mem) = setup();
-        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem).unwrap();
         // Two dirty result registers.
         for (rd, dst) in [(2u8, 0x8000u64), (3, 0xA000)] {
-            h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
-            h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem);
+            h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem).unwrap();
+            h.execute(&HiveOp::LoadReg { reg: 1, addr: 0x2000 }, t0, &mut mem).unwrap();
             h.execute(
                 &HiveOp::Compute { op: VimaOp::Add, dtype: VDtype::F32, r1: 0, r2: 1, rd },
                 t0,
                 &mut mem,
-            );
+            )
+            .unwrap();
             h.bind_reg_addr(rd, dst);
         }
         let writes_before = mem.stats.vima_writes;
-        let t1 = h.execute(&HiveOp::Unlock, t0 + 1000, &mut mem);
+        let t1 = h.execute(&HiveOp::Unlock, t0 + 1000, &mut mem).unwrap();
         assert_eq!(mem.stats.vima_writes - writes_before, 256);
         // Sequential: strictly more than one parallel vector writeback.
         let (h2, mut mem2) = setup();
@@ -349,9 +360,9 @@ mod tests {
     #[test]
     fn second_lock_waits_for_unlock() {
         let (mut h, mut mem) = setup();
-        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
-        let t1 = h.execute(&HiveOp::Unlock, t0 + 10, &mut mem);
-        let t2 = h.execute(&HiveOp::Lock, 5, &mut mem); // arrives "early"
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem).unwrap();
+        let t1 = h.execute(&HiveOp::Unlock, t0 + 10, &mut mem).unwrap();
+        let t2 = h.execute(&HiveOp::Lock, 5, &mut mem).unwrap(); // arrives "early"
         assert!(t2 >= t1, "lock must wait for previous unlock");
         assert!(h.stats.lock_wait_cycles > 0);
     }
@@ -359,10 +370,29 @@ mod tests {
     #[test]
     fn explicit_store_reg_writes_memory() {
         let (mut h, mut mem) = setup();
-        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem);
-        h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem);
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem).unwrap();
+        h.execute(&HiveOp::LoadReg { reg: 0, addr: 0x0000 }, t0, &mut mem).unwrap();
         let w = mem.stats.vima_writes;
-        h.execute(&HiveOp::StoreReg { reg: 0, addr: 0x4000 }, t0, &mut mem);
+        h.execute(&HiveOp::StoreReg { reg: 0, addr: 0x4000 }, t0, &mut mem).unwrap();
         assert_eq!(mem.stats.vima_writes - w, 128);
+    }
+
+    #[test]
+    fn unlock_without_lock_is_a_typed_error() {
+        let (mut h, mut mem) = setup();
+        let err = h.execute(&HiveOp::Unlock, 0, &mut mem).unwrap_err();
+        assert!(err.to_string().contains("unlock"), "{err}");
+        // A proper lock/unlock pair still works afterwards.
+        let t0 = h.execute(&HiveOp::Lock, 0, &mut mem).unwrap();
+        assert!(h.execute(&HiveOp::Unlock, t0, &mut mem).is_ok());
+    }
+
+    #[test]
+    fn functional_unlock_without_lock_is_a_typed_error() {
+        let (mut h, _mem) = setup();
+        let err = h.execute_functional(&HiveOp::Unlock, |_, _| {}).unwrap_err();
+        assert!(err.to_string().contains("unlock"), "{err}");
+        h.execute_functional(&HiveOp::Lock, |_, _| {}).unwrap();
+        h.execute_functional(&HiveOp::Unlock, |_, _| {}).unwrap();
     }
 }

@@ -35,6 +35,9 @@
 //! as well as *temporally* (cycles/energy). Python is never on the run
 //! path, and the default build has no dependencies at all.
 
+#![forbid(unsafe_code)]
+
+pub mod analyze;
 pub mod bench;
 pub mod cache;
 pub mod config;
@@ -61,6 +64,7 @@ pub mod workload;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::analyze::{Diagnostic, Report, Severity};
     pub use crate::config::SystemConfig;
     pub use crate::fabric::{FabricPort, MemFabric, VimaDispatcher};
     pub use crate::coordinator::{

@@ -8,6 +8,7 @@
 //! vima-sim sweep [--jobs N] [--figs fig2,custom|all] [--csv DIR] [--quick]
 //! vima-sim fig2|fig3|fig4|fig5|ablation|headline|custom|all [--quick]
 //! vima-sim run <workload|file.vpr> <backend> [--mb N] [--threads N] [--sampled] [--stats]
+//! vima-sim check <file.vpr|workload> ... [--json [FILE]]
 //! vima-sim serve [--jobs N] [--cache N] [--load PATH]  (JSONL: stdin -> stdout)
 //! vima-sim bench [--quick] [--iters N] [--sampled] [--json FILE]
 //! vima-sim workloads          (list the registry: kernels + programs)
@@ -64,6 +65,12 @@ COMMANDS:
               saxpy / softmax — or a path to a `.vpr` program file
               (e.g. vima-sim run examples/programs/saxpy.vpr vima);
               backends: avx vima hive
+  check       Static analysis (DESIGN.md §13): run the vima-check dataflow
+              analyzer + lint pass over `.vpr` files and/or registered
+              program workloads against the session machine configuration;
+              diagnostics are `file:line:col: severity[lint-id]: message`
+              lines, --json emits the machine-readable report, and the
+              exit status is nonzero when any error-severity lint fires
   serve       Long-running service mode: read JSONL job requests from
               stdin, write JSONL results to stdout (one line each, in
               request order; the in-flight window simulates in parallel
@@ -92,7 +99,9 @@ OPTIONS:
   --jobs N         sweep/serve worker threads (default: all cores; 1 = serial)
   --cache N        (serve) result-cache bound in cells (default 1024)
   --iters N        (bench) timed iterations per cell, median reported (3)
-  --json FILE      (bench) write the JSON record to FILE
+  --json FILE      (bench) write the JSON record to FILE;
+                   (check) write the JSON report to FILE, or to stdout
+                   when the flag is bare
   --quick          1/16 dataset sizes (smoke runs)
   --config FILE    TOML overrides for Table I
   --load PATH      register a .vpr program file (or every .vpr in a
@@ -309,6 +318,89 @@ fn main() -> Result<()> {
                 print!("{}", r.report);
             }
         }
+        "check" => {
+            let mut targets: Vec<String> = args.positional[1..].to_vec();
+            // A bare `--json` before a target swallows the target as its
+            // value (the parser can't tell); hand a `.vpr` value back.
+            let mut json_file: Option<&str> = None;
+            if let Some(v) = args.get("json") {
+                if v.ends_with(".vpr") {
+                    targets.push(v.to_string());
+                } else {
+                    json_file = Some(v);
+                }
+            }
+            if targets.is_empty() {
+                bail!(
+                    "usage: vima-sim check <file.vpr|workload> ... [--json [FILE]]; \
+                     targets are .vpr paths or registered program workloads \
+                     (see `vima-sim workloads`)"
+                );
+            }
+            // (label, report) per analyzable target, in argument order.
+            let mut reports: Vec<(String, vima_sim::analyze::Report)> = Vec::new();
+            let mut skipped: Vec<&str> = Vec::new();
+            for target in &targets {
+                if target.ends_with(".vpr") {
+                    let src = match std::fs::read_to_string(target) {
+                        Ok(s) => s,
+                        Err(e) => bail!("{target}: {e}"),
+                    };
+                    let parsed = match vima_sim::program::parse(&src) {
+                        Ok(p) => p,
+                        Err(e) => bail!("{target}: {e}"),
+                    };
+                    reports.push((
+                        target.clone(),
+                        vima_sim::analyze::analyze_parsed(&parsed, &cfg),
+                    ));
+                } else {
+                    let id = workload::resolve(target)?;
+                    match workload::get(id)?.analyze(&cfg) {
+                        Some(report) => reports.push((target.clone(), report)),
+                        None => skipped.push(target),
+                    }
+                }
+            }
+            let errors: usize = reports.iter().map(|(_, r)| r.error_count()).sum();
+            let warnings: usize = reports.iter().map(|(_, r)| r.warning_count()).sum();
+            let infos: usize = reports.iter().map(|(_, r)| r.info_count()).sum();
+            if args.flag("json") {
+                let files: Vec<String> =
+                    reports.iter().map(|(f, r)| r.to_json(f)).collect();
+                let doc = format!(
+                    "{{\"files\": [{}], \"errors\": {errors}, \
+                     \"warnings\": {warnings}, \"infos\": {infos}}}\n",
+                    files.join(", ")
+                );
+                match json_file {
+                    Some(path) => {
+                        std::fs::write(path, &doc)?;
+                        eprintln!("[vima-sim] wrote {path}");
+                    }
+                    None => print!("{doc}"),
+                }
+            } else {
+                for (file, report) in &reports {
+                    if report.is_clean() {
+                        println!("{file}: clean");
+                    } else {
+                        print!("{}", report.render(file));
+                    }
+                }
+            }
+            for name in &skipped {
+                eprintln!("[vima-sim] {name}: not analyzable (paper kernel)");
+            }
+            eprintln!(
+                "[vima-sim] check: {} file(s) checked: {errors} error(s), \
+                 {warnings} warning(s), {infos} info(s)",
+                reports.len(),
+            );
+            if errors > 0 {
+                bail!("check failed: {errors} error(s)");
+            }
+        }
         "serve" => {
             let cache = args.get_usize("cache", service::DEFAULT_CACHE_CAPACITY);
             let svc = SimService::new(ServiceConfig {
@@ -396,19 +488,26 @@ fn main() -> Result<()> {
         }
         "workloads" => {
             println!(
-                "{:<16} {:<12} {:>15} {:>10}  {}",
-                "name", "kind", "backends", "default", "description"
+                "{:<16} {:<12} {:>15} {:>10} {:>8}  {}",
+                "name", "kind", "backends", "default", "lint", "description"
             );
             for id in workload::all_ids() {
                 let w = workload::get(id)?;
                 let backends: Vec<String> =
                     w.backends().iter().map(|b| b.to_string()).collect();
+                // `-` = not analyzable (paper kernels have no statement
+                // tree); programs get their vima-check summary.
+                let lint = match w.analyze(&cfg) {
+                    Some(report) => report.counts_label(),
+                    None => "-".to_string(),
+                };
                 println!(
-                    "{:<16} {:<12} {:>15} {:>8.1}MB  {}",
+                    "{:<16} {:<12} {:>15} {:>8.1}MB {:>8}  {}",
                     w.name(),
                     w.kind(),
                     backends.join(","),
                     w.default_footprint() as f64 / (1 << 20) as f64,
+                    lint,
                     w.description(),
                 );
             }
@@ -447,8 +546,8 @@ fn main() -> Result<()> {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!(
             "unknown command {other:?}; valid commands: sweep, fig2, fig3, fig4, fig5, \
-             ablation, headline, custom, scaling, all, run, serve, bench, workloads, \
-             transpile, config, selftest, help"
+             ablation, headline, custom, scaling, all, run, check, serve, bench, \
+             workloads, transpile, config, selftest, help"
         ),
     }
     Ok(())

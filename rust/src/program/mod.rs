@@ -212,6 +212,9 @@ pub struct ParsedVpr {
     /// The reconstructed program; lowers bit-identically to the DSL
     /// construction it was emitted from.
     pub program: VimaProgram,
+    /// Statement spans and allocation names for the static analyzer
+    /// ([`crate::analyze`]), so diagnostics point at real lines/columns.
+    pub source: crate::analyze::SourceInfo,
 }
 
 /// Typed parse error with line/column context.
@@ -249,11 +252,14 @@ fn parse_num(s: &str) -> Option<u64> {
 
 /// One open parse frame: the innermost `vloop` being filled (`iters`, the
 /// line that opened it, and its statements so far). Frame 0 is the top
-/// level; its `iters`/line are unused.
+/// level; its `iters`/line are unused. `spans` mirrors `stmts` one-to-one
+/// for the analyzer.
 struct Frame {
     iters: u64,
     opened_at: usize,
+    opened_span: crate::analyze::Span,
     stmts: Vec<Stmt>,
+    spans: Vec<crate::analyze::SpanNode>,
 }
 
 /// Parse `.vpr` text into a [`ParsedVpr`]. Every failure is a typed error
@@ -271,7 +277,14 @@ pub fn parse(src: &str) -> Result<ParsedVpr> {
     let mut heap = HEAP_BASE;
     let mut saw_magic = false;
     let mut body_started = false;
-    let mut stack = vec![Frame { iters: 0, opened_at: 0, stmts: Vec::new() }];
+    let mut vb_span = crate::analyze::Span::UNKNOWN;
+    let mut stack = vec![Frame {
+        iters: 0,
+        opened_at: 0,
+        opened_span: crate::analyze::Span::UNKNOWN,
+        stmts: Vec::new(),
+        spans: Vec::new(),
+    }];
 
     for (idx, raw) in src.lines().enumerate() {
         let lno = idx + 1;
@@ -342,6 +355,7 @@ pub fn parse(src: &str) -> Result<ParsedVpr> {
                 }
                 vector_bytes = v as u32;
                 vb_seen = true;
+                vb_span = crate::analyze::Span::new(lno as u32, col0 as u32);
             }
             "footprint" => {
                 let Some(v) = toks.get(1).and_then(|&(_, t)| parse_num(t)) else {
@@ -408,7 +422,13 @@ pub fn parse(src: &str) -> Result<ParsedVpr> {
                 let Some(iters) = toks.get(1).and_then(|&(_, t)| parse_num(t)) else {
                     return perr(lno, col0, "vloop needs an iteration count");
                 };
-                stack.push(Frame { iters, opened_at: lno, stmts: Vec::new() });
+                stack.push(Frame {
+                    iters,
+                    opened_at: lno,
+                    opened_span: crate::analyze::Span::new(lno as u32, col0 as u32),
+                    stmts: Vec::new(),
+                    spans: Vec::new(),
+                });
             }
             "end" => {
                 if stack.len() == 1 {
@@ -421,6 +441,7 @@ pub fn parse(src: &str) -> Result<ParsedVpr> {
                     end: frame.iters,
                     body: frame.stmts,
                 });
+                top.spans.push(crate::analyze::SpanNode::Loop(frame.opened_span, frame.spans));
             }
             _ => {
                 body_started = true;
@@ -428,7 +449,11 @@ pub fn parse(src: &str) -> Result<ParsedVpr> {
                     .then(|| stack.last().expect("non-empty stack").iters);
                 let stmt =
                     parse_stmt(&toks, lno, &allocs, heap, vector_bytes, inner_iters)?;
-                stack.last_mut().expect("non-empty stack").stmts.push(stmt);
+                let top = stack.last_mut().expect("non-empty stack");
+                top.stmts.push(stmt);
+                top.spans.push(crate::analyze::SpanNode::Leaf(crate::analyze::Span::new(
+                    lno as u32, col0 as u32,
+                )));
             }
         }
     }
@@ -440,7 +465,8 @@ pub fn parse(src: &str) -> Result<ParsedVpr> {
         )));
     }
     crate::ensure!(saw_magic, "empty .vpr input: expected the `vpr 1` magic header");
-    let stmts = stack.pop().expect("top-level frame").stmts;
+    let top = stack.pop().expect("top-level frame");
+    let (stmts, spans) = (top.stmts, top.spans);
     crate::ensure!(!stmts.is_empty(), "program has no statements");
     let footprint = heap - HEAP_BASE;
     if let Some(decl) = footprint_decl {
@@ -456,7 +482,12 @@ pub fn parse(src: &str) -> Result<ParsedVpr> {
         vector_bytes,
         loop_overhead,
     };
-    Ok(ParsedVpr { name, description, program })
+    let source = crate::analyze::SourceInfo {
+        spans,
+        alloc_names: allocs.iter().map(|(n, _)| n.clone()).collect(),
+        vb_span,
+    };
+    Ok(ParsedVpr { name, description, program, source })
 }
 
 /// Parse one statement line (an intrinsic mnemonic, `vop`, or `host_load`).
@@ -617,15 +648,34 @@ fn parse_operand(
 /// registered name is the file's `name` directive when present, else
 /// `fallback_name`. Re-registering a taken name is a clean "already
 /// registered" error from the registry, never a panic.
+///
+/// The static analyzer ([`crate::analyze`]) gates registration: a program
+/// with error-severity diagnostics is rejected here, before it can reach a
+/// simulator — the load-time half of the precise-exception story. The gate
+/// analyzes against a default machine widened to the program's own vector
+/// size, so only machine-independent defects (uninitialized reads, partial
+/// overlaps) reject; machine-fit lints belong to `vima-sim check`, which
+/// uses the session's real configuration. Warnings and infos stay attached
+/// to the registered workload via [`Workload::analyze`].
+///
+/// [`Workload::analyze`]: crate::workload::Workload::analyze
 pub fn load_str(src: &str, fallback_name: &str) -> Result<WorkloadId> {
     let parsed = parse(src)?;
+    let mut cfg = crate::config::SystemConfig::default();
+    cfg.vima.vector_bytes = cfg.vima.vector_bytes.max(parsed.program.vector_bytes() as usize);
+    let report = crate::analyze::analyze_parsed(&parsed, &cfg);
+    if let Some(err) = report.first_error() {
+        let name = parsed.name.as_deref().unwrap_or(fallback_name);
+        return Err(Error::msg(format!("program rejected by check: {}", err.render(name))));
+    }
     let name = parsed.name.unwrap_or_else(|| fallback_name.to_string());
     crate::ensure!(!name.is_empty(), "program has no `name` directive and no fallback name");
     let desc = parsed.description.unwrap_or_else(|| "loaded .vpr program".to_string());
     workload::register(Arc::new(
         ProgramWorkload::new(name, parsed.program)
             .with_description(desc)
-            .with_kind(WorkloadKind::LoadedVpr),
+            .with_kind(WorkloadKind::LoadedVpr)
+            .with_source_info(parsed.source),
     ))
 }
 

@@ -191,7 +191,7 @@ impl Machine {
                 // The HIVE register bank sits on the host-attached cube 0;
                 // remote vectors stream through the fabric as hops.
                 let t = self.cores[c].now();
-                self.hive.execute(h, t, &mut FabricPort::new(&mut self.mem.mem, 0));
+                self.hive.execute(h, t, &mut FabricPort::new(&mut self.mem.mem, 0))?;
                 t
             }
         })
@@ -327,7 +327,7 @@ impl Machine {
                 let fabric = &mut self.mem.mem;
                 self.hive.execute_functional(h, |a, w| {
                     fabric.vima_access_functional_from(0, a, w)
-                });
+                })?;
             }
         }
         Ok(())

@@ -134,6 +134,15 @@ pub trait Workload: Send + Sync {
     /// [`backends`](Self::backends) and `p` to have passed
     /// [`validate`](Self::validate)).
     fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>>;
+
+    /// Run the static analyzer ([`crate::analyze`]) over this workload's
+    /// program against `cfg`, if it has one. `None` means "not analyzable"
+    /// (the paper kernels are synthetic trace generators with no statement
+    /// tree); program-backed workloads return a [`Report`](crate::analyze::Report).
+    fn analyze(&self, cfg: &crate::config::SystemConfig) -> Option<crate::analyze::Report> {
+        let _ = cfg;
+        None
+    }
 }
 
 /// Parameter invariants shared by every trace generator.

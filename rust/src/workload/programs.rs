@@ -31,6 +31,7 @@ pub struct ProgramWorkload {
     description: String,
     kind: WorkloadKind,
     program: VimaProgram,
+    source: crate::analyze::SourceInfo,
 }
 
 impl ProgramWorkload {
@@ -40,6 +41,7 @@ impl ProgramWorkload {
             description: String::new(),
             kind: WorkloadKind::Program,
             program,
+            source: crate::analyze::SourceInfo::default(),
         }
     }
 
@@ -52,6 +54,13 @@ impl ProgramWorkload {
     /// [`WorkloadKind::LoadedVpr`]).
     pub fn with_kind(mut self, kind: WorkloadKind) -> Self {
         self.kind = kind;
+        self
+    }
+
+    /// Attach `.vpr` source spans and allocation names so analyzer
+    /// diagnostics name real lines and allocations.
+    pub fn with_source_info(mut self, source: crate::analyze::SourceInfo) -> Self {
+        self.source = source;
         self
     }
 }
@@ -99,6 +108,10 @@ impl Workload for ProgramWorkload {
 
     fn chunker(&self, p: &TraceParams) -> Result<Box<dyn TraceChunker>> {
         self.program.chunker(p.backend, p.thread, p.threads)
+    }
+
+    fn analyze(&self, cfg: &crate::config::SystemConfig) -> Option<crate::analyze::Report> {
+        Some(crate::analyze::analyze(&self.program, &self.source, cfg))
     }
 }
 
