@@ -10,13 +10,20 @@
 //! JSON is emitted by hand: the offline build is dependency-free by
 //! design, and the schema is flat (see [`ThroughputReport::to_json`]).
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::time::Instant;
 
 use crate::config::SystemConfig;
+use crate::coordinator::workloads::{SizeScale, WorkloadSet};
+use crate::net::{run_sharded, NetServer, ShardOptions};
+use crate::service::{Job, ServiceConfig, SimService};
 use crate::sim::{run_on, Machine};
+use crate::sweep::{RunCell, SweepPlan};
 use crate::trace::{Backend, KernelId, TraceParams, TraceStream};
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::workload::{self, WorkloadId};
+use crate::{bail, ensure};
 
 /// One benchmark cell: a workload/backend pair timed on both engines.
 #[derive(Debug, Clone)]
@@ -53,6 +60,58 @@ pub struct SampledRow {
     pub energy_error_pct: f64,
 }
 
+/// One connection-scaling point of the serving saturation bench
+/// (`bench --net`): N concurrent loopback-TCP clients pipelining
+/// warm-cache requests at one `vima-sim net` server.
+#[derive(Debug, Clone)]
+pub struct NetConnRow {
+    pub connections: usize,
+    /// Total requests answered across every connection.
+    pub requests: u64,
+    pub wall_s: f64,
+    /// `requests / wall_s` — protocol + scheduling throughput, since the
+    /// result cache is pre-warmed.
+    pub jobs_per_sec: f64,
+}
+
+/// One worker-scaling point of the serving saturation bench: the
+/// quick-scale Fig. 2 plan sharded across N `net worker` processes.
+#[derive(Debug, Clone)]
+pub struct NetWorkerRow {
+    pub workers: usize,
+    /// Plan cells (before dedup).
+    pub cells: usize,
+    /// Unique cells actually dispatched.
+    pub unique: usize,
+    pub wall_s: f64,
+    /// `unique / wall_s` — end-to-end sharded sweep throughput.
+    pub cells_per_sec: f64,
+}
+
+/// The `bench --net` section: serving-layer saturation along both axes
+/// (connections into one server, worker processes under one coordinator).
+#[derive(Debug, Clone)]
+pub struct NetReport {
+    pub conn_rows: Vec<NetConnRow>,
+    pub worker_rows: Vec<NetWorkerRow>,
+}
+
+impl NetReport {
+    /// Best jobs/sec across the connection-scaling rows.
+    pub fn peak_jobs_per_sec(&self) -> f64 {
+        self.conn_rows.iter().map(|r| r.jobs_per_sec).fold(0.0, f64::max)
+    }
+
+    /// Connection count of the peak jobs/sec row.
+    pub fn peak_connections(&self) -> usize {
+        self.conn_rows
+            .iter()
+            .max_by(|a, b| a.jobs_per_sec.total_cmp(&b.jobs_per_sec))
+            .map(|r| r.connections)
+            .unwrap_or(0)
+    }
+}
+
 /// The full benchmark record; serializes to `BENCH_*.json`.
 #[derive(Debug, Clone)]
 pub struct ThroughputReport {
@@ -63,6 +122,9 @@ pub struct ThroughputReport {
     /// Sampled-mode accuracy/speed frontier (`bench --sampled`); empty
     /// when the frontier was not requested.
     pub sampled: Vec<SampledRow>,
+    /// Serving saturation section (`bench --net`); absent when the net
+    /// section was not requested.
+    pub net: Option<NetReport>,
 }
 
 impl ThroughputReport {
@@ -150,6 +212,37 @@ impl ThroughputReport {
                 self.geomean_sampled_speedup(),
                 self.max_cycle_error_pct(),
                 self.max_energy_error_pct()
+            );
+        }
+        if let Some(net) = &self.net {
+            s += "  \"net\": {\n    \"connections\": [\n";
+            for (i, r) in net.conn_rows.iter().enumerate() {
+                s += &format!(
+                    "      {{\"connections\": {}, \"requests\": {}, \"wall_s\": {:.4}, \
+                     \"jobs_per_sec\": {:.0}}}{}\n",
+                    r.connections,
+                    r.requests,
+                    r.wall_s,
+                    r.jobs_per_sec,
+                    if i + 1 < net.conn_rows.len() { "," } else { "" }
+                );
+            }
+            s += "    ],\n    \"workers\": [\n";
+            for (i, r) in net.worker_rows.iter().enumerate() {
+                s += &format!(
+                    "      {{\"workers\": {}, \"cells\": {}, \"unique_cells\": {}, \
+                     \"wall_s\": {:.4}, \"cells_per_sec\": {:.2}}}{}\n",
+                    r.workers,
+                    r.cells,
+                    r.unique,
+                    r.wall_s,
+                    r.cells_per_sec,
+                    if i + 1 < net.worker_rows.len() { "," } else { "" }
+                );
+            }
+            s += &format!(
+                "    ],\n    \"peak_jobs_per_sec\": {:.0}\n  }},\n",
+                net.peak_jobs_per_sec()
             );
         }
         s += &format!(
@@ -256,7 +349,7 @@ pub fn throughput(
         }
         rows.push(row);
     }
-    Ok(ThroughputReport { quick, iters, rows, sampled: Vec::new() })
+    Ok(ThroughputReport { quick, iters, rows, sampled: Vec::new(), net: None })
 }
 
 /// Streaming-kernel cells for the sampled accuracy/speed frontier:
@@ -329,6 +422,151 @@ pub fn sampled_frontier(
     Ok(rows)
 }
 
+/// Distinct warm-cache cells the connection-scaling clients rotate over.
+const NET_DISTINCT_CELLS: usize = 8;
+
+/// The request line for the `i`-th connection-scaling job: one of
+/// [`NET_DISTINCT_CELLS`] small memset/AVX cells, all pre-warmed into the
+/// service cache so the row measures protocol + scheduling throughput.
+fn net_request(i: u64) -> String {
+    format!(
+        "{{\"id\": {i}, \"workload\": \"memset\", \"backend\": \"avx\", \"footprint\": {}}}",
+        net_footprint(i as usize % NET_DISTINCT_CELLS)
+    )
+}
+
+fn net_footprint(k: usize) -> u64 {
+    ((k + 1) as u64) * (256 << 10)
+}
+
+/// One client of the connection-scaling bench: pipeline `total` requests
+/// with a bounded in-flight depth (write-then-read interleave, so neither
+/// the session window nor the TCP buffers can deadlock the pair) and
+/// verify every response is a `done` line.
+fn net_client(addr: &str, total: u64) -> Result<u64> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect bench client to {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone bench client stream")?);
+    let depth = 16u64.min(total.max(1));
+    let (mut sent, mut received) = (0u64, 0u64);
+    let mut line = String::new();
+    while received < total {
+        while sent < total && sent - received < depth {
+            writeln!(stream, "{}", net_request(sent))?;
+            sent += 1;
+        }
+        stream.flush()?;
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection after {received}/{total} responses");
+        }
+        ensure!(
+            line.contains("\"status\": \"done\""),
+            "bench client expected a done line, got: {}",
+            line.trim()
+        );
+        received += 1;
+    }
+    Ok(received)
+}
+
+/// Measure the serving saturation section (`bench --net`, DESIGN.md §14).
+///
+/// Two axes:
+/// * **Connections** — one in-process [`NetServer`] on an ephemeral
+///   loopback port, N concurrent pipelining clients over a pre-warmed
+///   result cache: jobs/sec vs connection count.
+/// * **Workers** — the Fig. 2 plan sharded via [`run_sharded`] across N
+///   spawned `net worker` processes (one scheduler job each, so scaling
+///   comes from processes, not intra-worker threads): cells/sec vs worker
+///   count. Always quick-scale — the axis measures orchestration, not
+///   simulator throughput (the `rows` section already tracks that).
+pub fn net_saturation(cfg: &SystemConfig, quick: bool, verbose: bool) -> Result<NetReport> {
+    let conn_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let per_conn: u64 = if quick { 200 } else { 1000 };
+
+    let svc = SimService::new(ServiceConfig { base: cfg.clone(), ..ServiceConfig::default() });
+    // Pre-warm every distinct cell so the timed rounds are pure cache
+    // hits: the row should saturate the serving layer, not the simulator.
+    let memset = workload::resolve("memset")?;
+    for k in 0..NET_DISTINCT_CELLS {
+        svc.submit(Job::new(TraceParams::new(memset, Backend::Avx, net_footprint(k)))).wait()?;
+    }
+
+    let mut conn_rows = Vec::new();
+    for &connections in conn_counts {
+        let server = NetServer::bind_tcp("127.0.0.1:0")?;
+        let addr = server.local_addr();
+        let ctl = server.ctl();
+        let (wall_s, requests) = std::thread::scope(|scope| -> Result<(f64, u64)> {
+            let serving = scope.spawn(|| server.serve(&svc));
+            let t0 = Instant::now();
+            let clients: Vec<_> = (0..connections)
+                .map(|_| {
+                    let addr = addr.clone();
+                    scope.spawn(move || net_client(&addr, per_conn))
+                })
+                .collect();
+            let mut requests = 0u64;
+            for client in clients {
+                requests += client
+                    .join()
+                    .unwrap_or_else(|_| Err(crate::util::error::Error::msg(
+                        "bench client panicked",
+                    )))?;
+            }
+            let wall_s = t0.elapsed().as_secs_f64();
+            ctl.request_drain();
+            serving.join().expect("bench server thread")?;
+            Ok((wall_s, requests))
+        })?;
+        let row = NetConnRow {
+            connections,
+            requests,
+            wall_s,
+            jobs_per_sec: requests as f64 / wall_s.max(1e-9),
+        };
+        if verbose {
+            eprintln!(
+                "[vima-sim] bench --net: {} connection(s): {} request(s) in {:.3}s \
+                 ({:.0} jobs/s)",
+                row.connections, row.requests, row.wall_s, row.jobs_per_sec
+            );
+        }
+        conn_rows.push(row);
+    }
+
+    let mut plan = SweepPlan::new();
+    for w in WorkloadSet::fig2(SizeScale::Quick) {
+        for b in [Backend::Avx, Backend::Hive, Backend::Vima] {
+            plan.push(RunCell::new(w, b));
+        }
+    }
+    let mut worker_rows = Vec::new();
+    for &workers in if quick { &[1usize, 2][..] } else { &[1usize, 2, 4][..] } {
+        let opts = ShardOptions { workers, worker_jobs: 1, ..ShardOptions::default() };
+        let t0 = Instant::now();
+        let (_, stats) = run_sharded(cfg, &plan, &opts)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let row = NetWorkerRow {
+            workers,
+            cells: stats.cells,
+            unique: stats.unique_cells,
+            wall_s,
+            cells_per_sec: stats.unique_cells as f64 / wall_s.max(1e-9),
+        };
+        if verbose {
+            eprintln!(
+                "[vima-sim] bench --net: {} worker(s): {} unique cell(s) in {:.3}s \
+                 ({:.2} cells/s)",
+                row.workers, row.unique, row.wall_s, row.cells_per_sec
+            );
+        }
+        worker_rows.push(row);
+    }
+    Ok(NetReport { conn_rows, worker_rows })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,6 +585,7 @@ mod tests {
                 speedup: 2.0,
             }],
             sampled: Vec::new(),
+            net: None,
         };
         let j = report.to_json();
         assert!(j.contains("\"speedup\": 2.000"), "{j}");
@@ -373,12 +612,53 @@ mod tests {
                 cycle_error_pct: 1.5,
                 energy_error_pct: 0.5,
             }],
+            net: None,
         };
         let j = report.to_json();
         assert!(j.contains("\"sampled_summary\""), "{j}");
         assert!(j.contains("\"max_cycle_error_pct\": 1.500"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert!((report.geomean_sampled_speedup() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_section_appears_and_balances() {
+        let report = ThroughputReport {
+            quick: true,
+            iters: 1,
+            rows: Vec::new(),
+            sampled: Vec::new(),
+            net: Some(NetReport {
+                conn_rows: vec![
+                    NetConnRow {
+                        connections: 1,
+                        requests: 200,
+                        wall_s: 0.5,
+                        jobs_per_sec: 400.0,
+                    },
+                    NetConnRow {
+                        connections: 4,
+                        requests: 800,
+                        wall_s: 0.5,
+                        jobs_per_sec: 1600.0,
+                    },
+                ],
+                worker_rows: vec![NetWorkerRow {
+                    workers: 2,
+                    cells: 27,
+                    unique: 27,
+                    wall_s: 1.5,
+                    cells_per_sec: 18.0,
+                }],
+            }),
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"net\": {"), "{j}");
+        assert!(j.contains("\"peak_jobs_per_sec\": 1600"), "{j}");
+        assert!(j.contains("\"unique_cells\": 27"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert_eq!(report.net.as_ref().unwrap().peak_connections(), 4);
     }
 
     #[test]
@@ -396,6 +676,7 @@ mod tests {
             iters: 1,
             rows: vec![row(2.0), row(8.0)],
             sampled: Vec::new(),
+            net: None,
         };
         assert!((r.geomean_speedup() - 4.0).abs() < 1e-9);
         assert_eq!(r.min_speedup(), 2.0);

@@ -23,7 +23,8 @@
 //!   [`service`] layer: one long-lived [`service::SimService`] scheduler
 //!   (worker pool, pooled machines, bounded result cache, exactly-once
 //!   dedup) behind `simulate`, sweeps, figures, and the `vima-sim serve`
-//!   JSONL mode.
+//!   JSONL mode — which the [`net`] layer promotes to real TCP/Unix-socket
+//!   serving and multi-process sweep sharding (`vima-sim net`).
 //! * **Layer 2 (python/compile/model.py)** — JAX workload graphs, AOT-lowered
 //!   to HLO text in `artifacts/`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels modelling the
@@ -49,6 +50,7 @@ pub mod hive;
 pub mod intrinsics;
 pub mod isa;
 pub mod mem3d;
+pub mod net;
 pub mod program;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
@@ -72,6 +74,7 @@ pub mod prelude {
         Experiment, FigTable, RunSpec,
     };
     pub use crate::intrinsics::{VecPtr, VimaProgram};
+    pub use crate::net::{NetServer, NetSummary, ShardOptions, ShardStats};
     pub use crate::program::ParsedVpr;
     pub use crate::service::{Job, JobHandle, JobStatus, ServiceConfig, SimService};
     pub use crate::sim::{Machine, SimResult};

@@ -10,7 +10,10 @@
 //! vima-sim run <workload|file.vpr> <backend> [--mb N] [--threads N] [--sampled] [--stats]
 //! vima-sim check <file.vpr|workload> ... [--json [FILE]]
 //! vima-sim serve [--jobs N] [--cache N] [--load PATH]  (JSONL: stdin -> stdout)
-//! vima-sim bench [--quick] [--iters N] [--sampled] [--json FILE]
+//! vima-sim net serve [--tcp ADDR|--unix PATH] [--jobs N] [--window N]
+//! vima-sim net worker [--jobs N]              (stdio protocol; spawned by coordinate)
+//! vima-sim net coordinate [--workers N] [--figs fig2|all] [--quick] [--check]
+//! vima-sim bench [--quick] [--iters N] [--sampled] [--net] [--json FILE]
 //! vima-sim workloads          (list the registry: kernels + programs)
 //! vima-sim config [--config FILE]
 //! vima-sim selftest           (requires a build with --features pjrt)
@@ -21,14 +24,18 @@
 //! first-class workloads for `run`, `serve`, `sweep --figs custom`, and
 //! `workloads` alike. See DESIGN.md §12 for the format.
 
+use std::io::Write;
+
 use vima_sim::bail;
 use vima_sim::config::SystemConfig;
-use vima_sim::coordinator::workloads::SizeScale;
+use vima_sim::coordinator::workloads::{SizeScale, WorkloadSet};
 use vima_sim::coordinator::{Experiment, FigTable};
+use vima_sim::net::{self, NetServer, ShardOptions};
 #[cfg(feature = "pjrt")]
 use vima_sim::runtime::{default_artifacts_dir, Engine};
 use vima_sim::service::{self, ServiceConfig, SimService};
 use vima_sim::sim::simulate_threads;
+use vima_sim::sweep::{RunCell, SweepPlan};
 use vima_sim::trace::{Backend, TraceParams};
 use vima_sim::util::cli::Args;
 use vima_sim::util::error::Result;
@@ -79,6 +86,19 @@ COMMANDS:
                  "mb": 4, "threads": 2}
               with --load DIR, clients can submit loaded .vpr programs
               by name; see EXPERIMENTS.md §Serving for the full protocol
+  net         Network serving & scale-out (DESIGN.md §14):
+                net serve [--tcp ADDR|--unix PATH]
+                  serve the same JSONL protocol over a socket to many
+                  concurrent clients; Ctrl-C (or a client's
+                  {\"op\": \"shutdown\"}) drains gracefully — stops
+                  accepting, finishes in-flight work, flushes, exits
+                net worker
+                  one stdio protocol worker (what `coordinate` spawns)
+                net coordinate [--workers N] [--figs fig2|all] [--check]
+                  shard a sweep plan across N worker processes with
+                  exactly-once execution per cell fleet-wide; results
+                  are bit-identical to the single-process sweep
+                  (--check verifies that against an in-process run)
   custom      Custom-workload figure: each registered Intrinsics-VIMA
               program, VIMA vs the AVX lowering of the same program
   scaling     Cube-scaling figure: streaming kernels on 1/2/4/8-cube
@@ -87,7 +107,10 @@ COMMANDS:
               the event-at-a-time reference path, in simulated events/sec;
               --json FILE writes the BENCH_*.json perf-trajectory record
               (e.g. BENCH_PR3.json); --sampled adds the sampled-execution
-              accuracy/speed frontier (full vs sampled wall time + error)
+              accuracy/speed frontier (full vs sampled wall time + error);
+              --net adds the serving saturation section: jobs/sec vs
+              concurrent connections (loopback TCP) and sharded-sweep
+              cells/sec vs worker-process count
   workloads   List every workload in the registry (name, backends, size)
   transpile   Future-work demo: auto-convert an AVX trace to VIMA
               (vima-sim transpile <workload> [--mb N])
@@ -96,8 +119,21 @@ COMMANDS:
               and a binary built with `--features pjrt`)
 
 OPTIONS:
-  --jobs N         sweep/serve worker threads (default: all cores; 1 = serial)
-  --cache N        (serve) result-cache bound in cells (default 1024)
+  --jobs N         sweep/serve worker threads (default: all cores; 1 = serial);
+                   (net coordinate) per-worker-process pool width
+  --cache N        (serve, net serve) result-cache bound in cells (default 1024)
+  --tcp ADDR       (net serve) listen address, e.g. 127.0.0.1:7117; port 0
+                   picks an ephemeral port (printed on stderr)
+  --unix PATH      (net serve) listen on a Unix-domain socket instead
+  --window N       (net serve/worker) per-connection in-flight window
+                   (backpressure bound, default 256);
+                   (net coordinate) outstanding cells per worker (default 4)
+  --workers N      (net coordinate) worker processes to spawn (default 2)
+  --check          (net coordinate) also run the plan in-process and verify
+                   the sharded results are bit-identical
+  --net            (bench) measure the serving saturation section
+  --exit-after N   (net worker) fault injection for tests: crash the worker
+                   process after answering N responses
   --iters N        (bench) timed iterations per cell, median reported (3)
   --json FILE      (bench) write the JSON record to FILE;
                    (check) write the JSON report to FILE, or to stdout
@@ -429,6 +465,167 @@ fn main() -> Result<()> {
                 stats.evictions,
             );
         }
+        "net" => {
+            let sub = args.positional.get(1).map(String::as_str).unwrap_or_default();
+            let cache = args.get_usize("cache", service::DEFAULT_CACHE_CAPACITY);
+            let make_svc = || {
+                SimService::new(ServiceConfig {
+                    base: cfg.clone(),
+                    jobs,
+                    cache_capacity: cache,
+                    ..ServiceConfig::default()
+                })
+            };
+            match sub {
+                "serve" => {
+                    let window = args.get_usize("window", service::jsonl::SERVE_WINDOW);
+                    let svc = make_svc();
+                    let server = match args.get("unix") {
+                        Some(path) => bind_unix_server(path)?,
+                        None => NetServer::bind_tcp(args.get("tcp").unwrap_or("127.0.0.1:7117"))?,
+                    };
+                    let server = server.with_window(window);
+                    #[cfg(unix)]
+                    let server = {
+                        sigint::install();
+                        server.with_external_shutdown(&sigint::FLAG)
+                    };
+                    eprintln!(
+                        "[vima-sim] net serve: listening on {} ({} worker(s), cache {} \
+                         cells, window {}); Ctrl-C or {{\"op\": \"shutdown\"}} drains",
+                        server.local_addr(),
+                        svc.jobs(),
+                        cache,
+                        window,
+                    );
+                    let summary = server.serve(&svc)?;
+                    let stats = svc.stats();
+                    eprintln!(
+                        "[vima-sim] net serve: {} connection(s), {} request(s) -> {} ok, \
+                         {} failed, {} timeout(s); {} unique simulation(s), {} cache hit(s)",
+                        summary.connections,
+                        summary.requests,
+                        summary.ok,
+                        summary.failed,
+                        summary.timeouts,
+                        stats.unique_runs,
+                        stats.cache_hits,
+                    );
+                }
+                "worker" => {
+                    let window = args.get_usize("window", service::jsonl::SERVE_WINDOW);
+                    let svc = make_svc();
+                    let opts = net::SessionOptions { window };
+                    let ctl = net::SessionCtl::new();
+                    let stdin = std::io::stdin();
+                    let summary = match args.get("exit-after") {
+                        Some(n) => {
+                            let out =
+                                ExitAfter { inner: std::io::stdout(), remaining: n.parse()? };
+                            net::run_session(&svc, stdin.lock(), out, &opts, &ctl)?
+                        }
+                        None => {
+                            net::run_session(&svc, stdin.lock(), std::io::stdout(), &opts, &ctl)?
+                        }
+                    };
+                    let stats = svc.stats();
+                    eprintln!(
+                        "[vima-sim] net worker: {} request(s) -> {} ok, {} failed, \
+                         {} timeout(s); {} unique simulation(s)",
+                        summary.requests,
+                        summary.ok,
+                        summary.failed,
+                        summary.timeouts,
+                        stats.unique_runs,
+                    );
+                }
+                "coordinate" => {
+                    let figs = args.get("figs").unwrap_or("fig2");
+                    let sized = match figs {
+                        "fig2" => WorkloadSet::fig2(scale),
+                        "all" => WorkloadSet::all(scale),
+                        other => bail!(
+                            "unknown --figs {other:?} for net coordinate; valid: fig2, all"
+                        ),
+                    };
+                    let backends: &[Backend] = if figs == "fig2" {
+                        &[Backend::Avx, Backend::Hive, Backend::Vima]
+                    } else {
+                        &[Backend::Avx, Backend::Vima]
+                    };
+                    let mut plan = SweepPlan::new();
+                    for &w in &sized {
+                        for &b in backends {
+                            plan.push(RunCell::new(w, b));
+                        }
+                    }
+                    let opts = ShardOptions {
+                        workers: args.get_usize("workers", 2),
+                        window: args.get_usize("window", 4),
+                        worker_jobs: jobs,
+                        verbose: args.flag("verbose"),
+                        ..ShardOptions::default()
+                    };
+                    let t0 = std::time::Instant::now();
+                    let (results, stats) = net::run_sharded(&cfg, &plan, &opts)?;
+                    let wall = t0.elapsed().as_secs_f64();
+                    println!(
+                        "{:<16} {:>7} {:>14} {:>12} {:>12}",
+                        "cell", "backend", "cycles", "seconds", "energy_j"
+                    );
+                    for (cell, r) in plan.cells().iter().zip(&results) {
+                        println!(
+                            "{:<16} {:>7} {:>14} {:>12.6} {:>12.6}",
+                            cell.label(),
+                            cell.params().backend.to_string(),
+                            r.cycles,
+                            r.seconds,
+                            r.energy.total_j,
+                        );
+                    }
+                    if args.flag("check") {
+                        let svc = make_svc();
+                        let local = svc.run_plan(&cfg, &plan, args.flag("verbose"))?;
+                        for ((cell, sharded), serial) in
+                            plan.cells().iter().zip(&results).zip(&local)
+                        {
+                            if sharded.cycles != serial.cycles
+                                || sharded.seconds.to_bits() != serial.seconds.to_bits()
+                                || sharded.energy != serial.energy
+                                || sharded.report != serial.report
+                            {
+                                bail!(
+                                    "sharded result for cell {} differs from the \
+                                     single-process sweep",
+                                    cell.label()
+                                );
+                            }
+                        }
+                        eprintln!(
+                            "[vima-sim] net coordinate: --check passed: {} cell(s) \
+                             bit-identical to the single-process sweep",
+                            results.len(),
+                        );
+                    }
+                    eprintln!(
+                        "[vima-sim] net coordinate: {} cells -> {} unique across {} \
+                         worker(s) in {wall:.2}s ({:.1} cells/s); {} request(s) sent, \
+                         {} requeued, {} worker death(s), fleet unique_runs {}",
+                        stats.cells,
+                        stats.unique_cells,
+                        stats.workers_spawned,
+                        stats.cells as f64 / wall.max(1e-9),
+                        stats.requests_sent,
+                        stats.requeued,
+                        stats.worker_deaths,
+                        stats.fleet_unique_runs,
+                    );
+                }
+                other => bail!(
+                    "unknown net subcommand {other:?}; valid: serve, worker, coordinate"
+                ),
+            }
+        }
         "bench" => {
             let iters = args.get_usize("iters", 3) as u32;
             let mut report =
@@ -480,6 +677,35 @@ fn main() -> Result<()> {
                     report.max_cycle_error_pct(),
                     report.max_energy_error_pct()
                 );
+            }
+            if args.flag("net") {
+                let netr = vima_sim::bench::net_saturation(&cfg, args.flag("quick"), true)?;
+                println!(
+                    "\n{:<12} {:>10} {:>9} {:>12}",
+                    "connections", "requests", "wall_s", "jobs/sec"
+                );
+                for r in &netr.conn_rows {
+                    println!(
+                        "{:<12} {:>10} {:>9.3} {:>12.0}",
+                        r.connections, r.requests, r.wall_s, r.jobs_per_sec
+                    );
+                }
+                println!(
+                    "\n{:<8} {:>7} {:>8} {:>9} {:>12}",
+                    "workers", "cells", "unique", "wall_s", "cells/sec"
+                );
+                for r in &netr.worker_rows {
+                    println!(
+                        "{:<8} {:>7} {:>8} {:>9.3} {:>12.2}",
+                        r.workers, r.cells, r.unique, r.wall_s, r.cells_per_sec
+                    );
+                }
+                println!(
+                    "net peak {:.0} jobs/sec at {} connection(s)",
+                    netr.peak_jobs_per_sec(),
+                    netr.peak_connections()
+                );
+                report.net = Some(netr);
             }
             if let Some(path) = args.get("json") {
                 std::fs::write(path, report.to_json())?;
@@ -546,9 +772,75 @@ fn main() -> Result<()> {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => bail!(
             "unknown command {other:?}; valid commands: sweep, fig2, fig3, fig4, fig5, \
-             ablation, headline, custom, scaling, all, run, check, serve, bench, \
+             ablation, headline, custom, scaling, all, run, check, serve, net, bench, \
              workloads, transpile, config, selftest, help"
         ),
     }
     Ok(())
+}
+
+/// Bind the `net serve --unix PATH` listener where the platform has
+/// Unix-domain sockets, and fail with a typed error where it does not.
+#[cfg(unix)]
+fn bind_unix_server(path: &str) -> Result<NetServer> {
+    NetServer::bind_unix(std::path::Path::new(path))
+}
+
+#[cfg(not(unix))]
+fn bind_unix_server(_path: &str) -> Result<NetServer> {
+    bail!("--unix sockets are unavailable on this platform; use --tcp ADDR")
+}
+
+/// `net worker --exit-after N` fault injection: a stdout wrapper that
+/// kills the whole process right after the N-th response line reaches the
+/// pipe — an abrupt worker death (no drain, no flush of later answers)
+/// for the coordinator's re-queue path and its tests.
+struct ExitAfter<W: Write> {
+    inner: W,
+    remaining: u64,
+}
+
+impl<W: Write> Write for ExitAfter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        for &b in &buf[..n] {
+            if b == b'\n' {
+                self.remaining = self.remaining.saturating_sub(1);
+                if self.remaining == 0 {
+                    let _ = self.inner.flush();
+                    std::process::exit(86);
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// SIGINT-to-drain bridge for `net serve`. A `signal(2)` handler may only
+/// do async-signal-safe work, so the handler body is a single atomic
+/// store; the accept loop polls [`FLAG`](sigint::FLAG) (it never blocks in
+/// `accept(2)` — Rust's std retries `EINTR`) and runs the graceful drain.
+/// Lives in the binary crate because the library forbids `unsafe`.
+#[cfg(unix)]
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static FLAG: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        FLAG.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        // SAFETY: registering an async-signal-safe handler (one relaxed-
+        // enough atomic store, no allocation, no locks) for SIGINT (2).
+        unsafe { signal(2, on_sigint) };
+    }
 }

@@ -1,0 +1,465 @@
+//! Shard coordinator: split a [`SweepPlan`] across worker *processes*.
+//!
+//! `vima-sim net coordinate` is the horizontal-scale counterpart of
+//! [`SimService::run_plan`]: it spawns N `vima-sim net worker` children
+//! (each a stdio [`run_session`](super::session::run_session) around its
+//! own in-process service) and streams the plan's cells to them over the
+//! JSONL protocol. The contract is the same as single-process plans —
+//! results in plan order, **bit-identical**, with exactly-once execution
+//! per [`CellKey`] fleet-wide — because the coordinator reuses the same
+//! identity machinery end to end:
+//!
+//! * **Dedup before dispatch.** Cells are grouped by `cell.key(base)`
+//!   (the full `TraceParams` + effective-config identity the service
+//!   cache uses); each *unique* key is sent to exactly one worker, and
+//!   duplicate cells in the plan are expanded from the merged results.
+//!   Workers never see the same key twice, so the fleet executes each
+//!   cell exactly once — pinned after the run by summing every worker's
+//!   `unique_runs` stat.
+//! * **Bit-exact transport.** Requests carry the *effective* config as
+//!   TOML (`SystemConfig::to_toml` round-trips by value) and set
+//!   `"wire": true`, so results come back through
+//!   [`wire::decode_result`](super::wire::decode_result) with every
+//!   `f64` bit intact.
+//! * **Fault tolerance.** Each worker's stdout has a reader thread; a
+//!   worker that dies (EOF, write error, kill -9) gets its unanswered
+//!   cells re-queued to the survivors. Only if *every* worker is gone
+//!   with cells unfinished does the sweep fail, with a typed error. A
+//!   `failed` response (an invalid cell that slipped validation, or a
+//!   simulator bug) fails fast with the cell's label, like `run_plan`.
+//!
+//! Dispatch is windowed per worker (a few cells outstanding each) so a
+//! long plan load-balances by completion speed instead of by a static
+//! partition — a worker stuck on a huge cell simply stops being fed.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc;
+
+use crate::config::SystemConfig;
+use crate::net::wire;
+use crate::service::jsonl::{self, JsonValue};
+use crate::sim::SimResult;
+use crate::sweep::{CellKey, SweepPlan};
+use crate::util::error::{Context, Error, Result};
+use crate::workload;
+use crate::{bail, ensure};
+
+/// Tuning for one [`run_sharded`] call.
+#[derive(Debug, Clone)]
+pub struct ShardOptions {
+    /// Worker processes to spawn (at least 1).
+    pub workers: usize,
+    /// Outstanding requests per worker. Small on purpose: the window
+    /// exists for pipelining, while load balance comes from completion-
+    /// driven dispatch.
+    pub window: usize,
+    /// `--jobs` handed to each worker (its in-process pool width);
+    /// `0` = the worker's `available_parallelism()`.
+    pub worker_jobs: usize,
+    /// Worker binary; `None` = `std::env::current_exe()`.
+    pub worker_cmd: Option<PathBuf>,
+    /// Extra argv per worker index (fault injection in tests:
+    /// `--exit-after N`). Workers beyond the vec get no extra args.
+    pub worker_extra_args: Vec<Vec<String>>,
+    /// Inherit worker stderr (per-worker logs); otherwise discarded.
+    pub verbose: bool,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            window: 4,
+            worker_jobs: 0,
+            worker_cmd: None,
+            worker_extra_args: Vec::new(),
+            verbose: false,
+        }
+    }
+}
+
+/// Accounting for one sharded sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Plan cells (before dedup).
+    pub cells: usize,
+    /// Distinct [`CellKey`]s actually dispatched.
+    pub unique_cells: usize,
+    /// Job requests written to workers (`unique_cells` plus re-sends of
+    /// requeued cells).
+    pub requests_sent: u64,
+    /// Cells re-queued because their worker died before answering.
+    pub requeued: u64,
+    /// Workers that died before the sweep completed.
+    pub worker_deaths: u64,
+    pub workers_spawned: usize,
+    /// Sum of `unique_runs` over worker `stats` ops at completion, plus
+    /// answered requests of workers that died (their stats are
+    /// unreachable). With no deaths this equals `unique_cells` — the
+    /// fleet-wide exactly-once pin.
+    pub fleet_unique_runs: u64,
+}
+
+struct Worker {
+    child: Child,
+    /// `None` once the worker is dead (or its pipe failed).
+    stdin: Option<ChildStdin>,
+    alive: bool,
+    /// Unique-cell indices awaiting this worker's answer.
+    outstanding: Vec<usize>,
+    /// Job responses received from this worker.
+    answered: u64,
+}
+
+enum Event {
+    Line(String),
+    Gone,
+}
+
+/// Run `plan` across `opts.workers` child processes. Returns results in
+/// plan order — bit-identical to [`SimService::run_plan`] on `base` —
+/// plus the shard accounting.
+///
+/// [`SimService::run_plan`]: crate::service::SimService::run_plan
+pub fn run_sharded(
+    base: &SystemConfig,
+    plan: &SweepPlan,
+    opts: &ShardOptions,
+) -> Result<(Vec<SimResult>, ShardStats)> {
+    ensure!(opts.workers >= 1, "need at least one worker, got {}", opts.workers);
+    let window = opts.window.max(1);
+    let mut stats = ShardStats { cells: plan.cells().len(), ..ShardStats::default() };
+
+    // Validate every cell up front — fail fast with the cell label,
+    // before any process is spawned (run_plan's contract).
+    for cell in plan.cells() {
+        cell.params()
+            .check()
+            .map_err(|e| e.context(format!("sweep cell {}", cell.label())))?;
+    }
+    if plan.cells().is_empty() {
+        return Ok((Vec::new(), stats));
+    }
+
+    // Dedup by full cell identity; duplicates expand from unique results.
+    let mut key_to_unique: HashMap<CellKey, usize> = HashMap::new();
+    let mut cell_to_unique: Vec<usize> = Vec::with_capacity(plan.cells().len());
+    let mut requests: Vec<String> = Vec::new();
+    let mut labels: Vec<String> = Vec::new();
+    for cell in plan.cells() {
+        let key = cell.key(base);
+        let next = requests.len();
+        let u = *key_to_unique.entry(key).or_insert(next);
+        if u == requests.len() {
+            requests.push(request_line(u, cell, base)?);
+            labels.push(cell.label());
+        }
+        cell_to_unique.push(u);
+    }
+    stats.unique_cells = requests.len();
+
+    // Spawn the fleet and one reader thread per worker stdout.
+    stats.workers_spawned = opts.workers;
+    let worker_cmd = match &opts.worker_cmd {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("locate vima-sim binary for workers")?,
+    };
+    let (tx, rx) = mpsc::channel::<(usize, Event)>();
+    let mut workers: Vec<Worker> = Vec::with_capacity(opts.workers);
+    let mut readers = Vec::with_capacity(opts.workers);
+    for w in 0..opts.workers {
+        let mut cmd = Command::new(&worker_cmd);
+        cmd.arg("net").arg("worker");
+        cmd.arg("--jobs").arg(opts.worker_jobs.to_string());
+        if let Some(extra) = opts.worker_extra_args.get(w) {
+            cmd.args(extra);
+        }
+        cmd.stdin(Stdio::piped()).stdout(Stdio::piped());
+        cmd.stderr(if opts.verbose { Stdio::inherit() } else { Stdio::null() });
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawn worker {w} ({})", worker_cmd.display()))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let tx = tx.clone();
+        readers.push(std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if tx.send((w, Event::Line(line))).is_err() {
+                    break;
+                }
+            }
+            let _ = tx.send((w, Event::Gone));
+        }));
+        workers.push(Worker {
+            child,
+            stdin: Some(stdin),
+            alive: true,
+            outstanding: Vec::new(),
+            answered: 0,
+        });
+    }
+    drop(tx);
+
+    let run = drive(&mut workers, &rx, &requests, &labels, window, &mut stats);
+    let fleet = match &run {
+        Ok(_) => collect_fleet_stats(&mut workers, &rx, &mut stats),
+        Err(_) => Ok(()),
+    };
+    // Wind the fleet down on every path: close pipes (EOF), reap, join.
+    for worker in &mut workers {
+        worker.stdin = None;
+        if run.is_err() {
+            let _ = worker.child.kill();
+        }
+        let _ = worker.child.wait();
+    }
+    drop(rx);
+    for reader in readers {
+        let _ = reader.join();
+    }
+    let unique_results = run?;
+    fleet?;
+
+    let results =
+        cell_to_unique.iter().map(|&u| unique_results[u].clone()).collect::<Vec<_>>();
+    Ok((results, stats))
+}
+
+/// The dispatch/receive loop: returns every unique result, or the first
+/// hard failure.
+fn drive(
+    workers: &mut [Worker],
+    rx: &mpsc::Receiver<(usize, Event)>,
+    requests: &[String],
+    labels: &[String],
+    window: usize,
+    stats: &mut ShardStats,
+) -> Result<Vec<SimResult>> {
+    let mut pending: VecDeque<usize> = (0..requests.len()).collect();
+    let mut results: Vec<Option<SimResult>> = vec![None; requests.len()];
+    let mut remaining = requests.len();
+
+    for w in 0..workers.len() {
+        dispatch(workers, w, &mut pending, requests, window, stats);
+    }
+    while remaining > 0 {
+        ensure!(
+            workers.iter().any(|w| w.alive),
+            "all {} workers died with {} cells unfinished",
+            workers.len(),
+            remaining
+        );
+        let (w, event) = rx
+            .recv()
+            .map_err(|_| Error::msg("worker channel closed with cells unfinished"))?;
+        match event {
+            Event::Gone => {
+                bury(workers, w, &mut pending, stats);
+            }
+            Event::Line(line) => {
+                let fields = jsonl::parse_flat_object(&line)
+                    .with_context(|| format!("worker {w} sent a malformed line: {line}"))?;
+                let u = response_unique_index(&fields, requests.len(), &line)?;
+                let status = find_str(&fields, "status").unwrap_or_default();
+                match status {
+                    "done" => {
+                        let encoded = find_str(&fields, "result").with_context(|| {
+                            format!("worker {w} sent a done line without a wire result: {line}")
+                        })?;
+                        let result = wire::decode_result(encoded)
+                            .with_context(|| format!("sweep cell {}", labels[u]))?;
+                        workers[w].outstanding.retain(|&o| o != u);
+                        workers[w].answered += 1;
+                        if results[u].replace(result).is_none() {
+                            remaining -= 1;
+                        }
+                    }
+                    other => {
+                        let error = find_str(&fields, "error").unwrap_or("unknown error");
+                        bail!("sweep cell {}: worker {w} answered {other}: {error}", labels[u]);
+                    }
+                }
+                dispatch(workers, w, &mut pending, requests, window, stats);
+            }
+        }
+        // A death may have re-queued cells while every survivor's window
+        // was full of its own work; top everyone up.
+        if !pending.is_empty() {
+            for w in 0..workers.len() {
+                dispatch(workers, w, &mut pending, requests, window, stats);
+            }
+        }
+    }
+    Ok(results.into_iter().map(|r| r.expect("remaining hit zero")).collect())
+}
+
+/// Feed worker `w` until its window is full (or it dies mid-write).
+fn dispatch(
+    workers: &mut [Worker],
+    w: usize,
+    pending: &mut VecDeque<usize>,
+    requests: &[String],
+    window: usize,
+    stats: &mut ShardStats,
+) {
+    while workers[w].alive && workers[w].outstanding.len() < window {
+        let Some(u) = pending.pop_front() else { return };
+        let wrote = match workers[w].stdin.as_mut() {
+            Some(stdin) => {
+                writeln!(stdin, "{}", requests[u]).and_then(|_| stdin.flush()).is_ok()
+            }
+            None => false,
+        };
+        if wrote {
+            workers[w].outstanding.push(u);
+            stats.requests_sent += 1;
+        } else {
+            // Broken pipe: the worker is gone. Put the cell back and let
+            // the survivors absorb its load.
+            pending.push_front(u);
+            bury(workers, w, pending, stats);
+            return;
+        }
+    }
+}
+
+/// Mark worker `w` dead (idempotent) and re-queue its unanswered cells.
+fn bury(
+    workers: &mut [Worker],
+    w: usize,
+    pending: &mut VecDeque<usize>,
+    stats: &mut ShardStats,
+) {
+    if !workers[w].alive {
+        return;
+    }
+    workers[w].alive = false;
+    workers[w].stdin = None;
+    stats.worker_deaths += 1;
+    let orphaned = std::mem::take(&mut workers[w].outstanding);
+    stats.requeued += orphaned.len() as u64;
+    // Answered work is banked; only the unanswered cells ran (at most
+    // partially) for nothing.
+    for u in orphaned {
+        pending.push_front(u);
+    }
+    // The dead worker's unique_runs stat is unreachable; its answered
+    // responses are the provable lower bound of what it ran.
+    stats.fleet_unique_runs += workers[w].answered;
+}
+
+/// Completion phase: ask every survivor for its `stats`, sum
+/// `unique_runs` into the fleet pin, then request graceful shutdown.
+fn collect_fleet_stats(
+    workers: &mut [Worker],
+    rx: &mpsc::Receiver<(usize, Event)>,
+    stats: &mut ShardStats,
+) -> Result<()> {
+    let mut awaiting = 0usize;
+    for worker in workers.iter_mut().filter(|w| w.alive) {
+        let ok = match worker.stdin.as_mut() {
+            Some(stdin) => writeln!(stdin, "{}", r#"{"op": "stats"}"#)
+                .and_then(|_| stdin.flush())
+                .is_ok(),
+            None => false,
+        };
+        if ok {
+            awaiting += 1;
+        } else {
+            worker.alive = false;
+            stats.worker_deaths += 1;
+            stats.fleet_unique_runs += worker.answered;
+        }
+    }
+    while awaiting > 0 {
+        let Ok((w, event)) = rx.recv() else { break };
+        match event {
+            Event::Line(line) => {
+                let fields = jsonl::parse_flat_object(&line)
+                    .with_context(|| format!("worker {w} sent a malformed line: {line}"))?;
+                if find_str(&fields, "op") == Some("stats") {
+                    let runs = fields
+                        .iter()
+                        .find(|(k, _)| k == "unique_runs")
+                        .and_then(|(_, v)| match v {
+                            JsonValue::Num(n) => Some(*n as u64),
+                            _ => None,
+                        })
+                        .with_context(|| format!("worker {w} stats without unique_runs: {line}"))?;
+                    stats.fleet_unique_runs += runs;
+                    awaiting -= 1;
+                }
+            }
+            Event::Gone => {
+                if workers[w].alive {
+                    workers[w].alive = false;
+                    stats.worker_deaths += 1;
+                    stats.fleet_unique_runs += workers[w].answered;
+                    awaiting -= 1;
+                }
+            }
+        }
+    }
+    for worker in workers.iter_mut().filter(|w| w.alive) {
+        if let Some(stdin) = worker.stdin.as_mut() {
+            // Best-effort: closing stdin right after is the EOF fallback.
+            let _ = writeln!(stdin, "{}", r#"{"op": "shutdown"}"#);
+            let _ = stdin.flush();
+        }
+    }
+    Ok(())
+}
+
+/// Render the job request for one unique cell. The request always ships
+/// the cell's *effective* config as TOML (even when it equals the base)
+/// so the worker's `CellKey` is the coordinator's, and always asks for
+/// the wire-encoded result.
+fn request_line(
+    unique: usize,
+    cell: &crate::sweep::RunCell,
+    base: &SystemConfig,
+) -> Result<String> {
+    let params = cell.params();
+    let cfg = cell.cfg_override.clone().unwrap_or_else(|| base.clone());
+    Ok(format!(
+        "{{\"id\": {unique}, \"workload\": \"{}\", \"backend\": \"{}\", \
+         \"footprint\": {}, \"threads\": {}, \"vector_bytes\": {}, \
+         \"wire\": true, \"cfg\": \"{}\"}}",
+        jsonl::escape(&workload::name(params.workload)),
+        params.backend,
+        params.footprint,
+        params.threads,
+        params.vector_bytes,
+        jsonl::escape(&cfg.to_toml())
+    ))
+}
+
+fn find_str<'a>(fields: &'a [(String, JsonValue)], key: &str) -> Option<&'a str> {
+    fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        JsonValue::Str(s) => Some(s.as_str()),
+        _ => None,
+    })
+}
+
+/// Pull the echoed `id` back out of a response and bounds-check it
+/// against the unique-cell table.
+fn response_unique_index(
+    fields: &[(String, JsonValue)],
+    uniques: usize,
+    line: &str,
+) -> Result<usize> {
+    let id = fields
+        .iter()
+        .find(|(k, _)| k == "id")
+        .and_then(|(_, v)| match v {
+            JsonValue::Num(n) if n.fract() == 0.0 && *n >= 0.0 => Some(*n as usize),
+            _ => None,
+        })
+        .with_context(|| format!("worker response without a numeric id: {line}"))?;
+    ensure!(id < uniques, "worker echoed an unknown request id {id}: {line}");
+    Ok(id)
+}

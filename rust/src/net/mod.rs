@@ -1,0 +1,31 @@
+//! Network serving & scale-out (DESIGN.md §14).
+//!
+//! Promotes the [`SimService`](crate::service::SimService) from a
+//! single stdin/stdout loop to real network serving and multi-process
+//! sweeps, std-only (the default build stays dependency-free):
+//!
+//! * [`session`] — the one protocol implementation: newline-delimited
+//!   JSONL framing, a bounded in-flight window for backpressure, typed
+//!   inline errors, per-request timeouts, control ops, and graceful
+//!   drain. `vima-sim serve`, every network connection, and every shard
+//!   worker run this same core over different byte streams.
+//! * [`server`] — the TCP / Unix-socket transport: one accept loop,
+//!   one session thread per connection, and a shared drain switch
+//!   (SIGINT or a client's `{"op": "shutdown"}`) that finishes and
+//!   flushes all in-flight work before exit.
+//! * [`coordinator`] — `vima-sim net coordinate`: shards a
+//!   [`SweepPlan`](crate::sweep::SweepPlan) across spawned
+//!   `vima-sim net worker` processes with fleet-wide exactly-once
+//!   execution per [`CellKey`](crate::sweep::CellKey), bit-identical
+//!   results, and re-queue recovery when a worker dies.
+//! * [`wire`] — the bit-exact result codec (IEEE-754 bit patterns in
+//!   hex) that makes "bit-identical across processes" literal.
+
+pub mod coordinator;
+pub mod server;
+pub mod session;
+pub mod wire;
+
+pub use coordinator::{run_sharded, ShardOptions, ShardStats};
+pub use server::{NetServer, NetSummary};
+pub use session::{run_session, SessionCtl, SessionOptions, SessionSummary};

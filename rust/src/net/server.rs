@@ -1,0 +1,334 @@
+//! TCP / Unix-socket transport: many concurrent [`run_session`]s behind
+//! one accept loop.
+//!
+//! The server owns nothing protocol-shaped — each accepted connection is
+//! handed verbatim to [`run_session`](super::session::run_session) on its
+//! own scoped thread, with the per-connection backpressure window and a
+//! [`SessionCtl`] **shared by every connection and the accept loop**.
+//! That shared control is the whole drain story:
+//!
+//! 1. something raises the flag — a SIGINT handler's atomic (polled via
+//!    [`NetServer::with_external_shutdown`]), any client's
+//!    `{"op": "shutdown"}` line, or a test holding the
+//!    [`ctl`](NetServer::ctl) handle;
+//! 2. the accept loop (nonblocking + poll, so a signal can never leave it
+//!    wedged inside `accept(2)` — Rust's std retries `EINTR`) stops
+//!    accepting and half-closes the **read** side of every live
+//!    connection, which unblocks each session's `read_line` with EOF;
+//! 3. every session answers and flushes what was already in flight, the
+//!    scoped threads join, and [`serve`](NetServer::serve) returns the
+//!    merged [`NetSummary`].
+//!
+//! In-flight jobs are never abandoned and responses are never truncated
+//! mid-line; clients see complete answers for everything they managed to
+//! send.
+
+use std::io::{BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::net::session::{run_session, SessionCtl, SessionOptions};
+use crate::service::SimService;
+use crate::util::error::{Context, Result};
+
+/// How long the accept loop sleeps when no connection is pending. Drain
+/// latency is bounded by this; it is far below human-perceptible.
+const ACCEPT_POLL: Duration = Duration::from_millis(15);
+
+/// Merged totals across every connection of one [`NetServer::serve`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetSummary {
+    pub connections: u64,
+    pub requests: u64,
+    pub ok: u64,
+    pub failed: u64,
+    pub timeouts: u64,
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> Result<Conn> {
+        Ok(match self {
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone().context("clone tcp stream")?),
+            #[cfg(unix)]
+            Conn::Unix(s) => Conn::Unix(s.try_clone().context("clone unix stream")?),
+        })
+    }
+
+    /// Half-close the read side: the session's `read_line` sees EOF and
+    /// winds down gracefully; pending responses still go out the write
+    /// side.
+    fn shutdown_read(&self) {
+        match self {
+            Conn::Tcp(s) => drop(s.shutdown(Shutdown::Read)),
+            #[cfg(unix)]
+            Conn::Unix(s) => drop(s.shutdown(Shutdown::Read)),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound-but-not-yet-serving network server. Binding and serving are
+/// split so a caller (tests, the saturation bench) can learn the
+/// ephemeral port and keep a drain handle before the accept loop blocks.
+pub struct NetServer {
+    listener: Listener,
+    ctl: Arc<SessionCtl>,
+    window: usize,
+    external_shutdown: Option<&'static AtomicBool>,
+}
+
+impl NetServer {
+    /// Bind a TCP listener; `"127.0.0.1:0"` picks an ephemeral port
+    /// (recover it with [`local_addr`](Self::local_addr)).
+    pub fn bind_tcp(addr: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind tcp {addr:?}"))?;
+        Ok(Self::over(Listener::Tcp(listener)))
+    }
+
+    /// Bind a Unix-domain socket; the path is unlinked when serving ends.
+    #[cfg(unix)]
+    pub fn bind_unix(path: &Path) -> Result<Self> {
+        // A stale socket file from a crashed process would fail the bind.
+        if path.exists() {
+            std::fs::remove_file(path)
+                .with_context(|| format!("remove stale socket {}", path.display()))?;
+        }
+        let listener = UnixListener::bind(path)
+            .with_context(|| format!("bind unix socket {}", path.display()))?;
+        Ok(Self::over(Listener::Unix(listener, path.to_path_buf())))
+    }
+
+    fn over(listener: Listener) -> Self {
+        Self {
+            listener,
+            ctl: Arc::new(SessionCtl::new()),
+            window: crate::service::jsonl::SERVE_WINDOW,
+            external_shutdown: None,
+        }
+    }
+
+    /// Per-connection backpressure window (default
+    /// [`SERVE_WINDOW`](crate::service::jsonl::SERVE_WINDOW)).
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    /// Poll this flag in the accept loop and drain when it goes up — the
+    /// bridge from a `signal(2)` handler (which may only touch a static
+    /// atomic) to the graceful-drain path.
+    pub fn with_external_shutdown(mut self, flag: &'static AtomicBool) -> Self {
+        self.external_shutdown = Some(flag);
+        self
+    }
+
+    /// The drain switch shared with every session.
+    pub fn ctl(&self) -> Arc<SessionCtl> {
+        Arc::clone(&self.ctl)
+    }
+
+    /// Where the server is listening: `host:port` for TCP, the socket
+    /// path for Unix.
+    pub fn local_addr(&self) -> String {
+        match &self.listener {
+            Listener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown>".to_string()),
+            #[cfg(unix)]
+            Listener::Unix(_, path) => path.display().to_string(),
+        }
+    }
+
+    /// Accept and serve connections until drained. Blocks; returns the
+    /// merged summary after every session thread has joined.
+    pub fn serve(self, service: &SimService) -> Result<NetSummary> {
+        match &self.listener {
+            Listener::Tcp(l) => l.set_nonblocking(true).context("nonblocking tcp listener")?,
+            #[cfg(unix)]
+            Listener::Unix(l, _) => {
+                l.set_nonblocking(true).context("nonblocking unix listener")?
+            }
+        }
+        let summary = Mutex::new(NetSummary::default());
+        let opts = SessionOptions { window: self.window };
+        let result = std::thread::scope(|scope| -> Result<()> {
+            // Read-shutdown handles for live connections, so drain can
+            // unblock sessions stuck in read_line.
+            let mut live: Vec<Conn> = Vec::new();
+            loop {
+                if self.external_shutdown.is_some_and(|f| f.load(Ordering::SeqCst)) {
+                    self.ctl.request_drain();
+                }
+                if self.ctl.drain_requested() {
+                    break;
+                }
+                let accepted = match &self.listener {
+                    Listener::Tcp(l) => match l.accept() {
+                        Ok((s, _)) => {
+                            s.set_nonblocking(false).context("blocking tcp stream")?;
+                            let _ = s.set_nodelay(true);
+                            Some(Conn::Tcp(s))
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                        Err(e) => return Err(e).context("accept tcp connection"),
+                    },
+                    #[cfg(unix)]
+                    Listener::Unix(l, _) => match l.accept() {
+                        Ok((s, _)) => {
+                            s.set_nonblocking(false).context("blocking unix stream")?;
+                            Some(Conn::Unix(s))
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                        Err(e) => return Err(e).context("accept unix connection"),
+                    },
+                };
+                let Some(conn) = accepted else {
+                    std::thread::sleep(ACCEPT_POLL);
+                    continue;
+                };
+                summary.lock().unwrap().connections += 1;
+                let reader = conn.try_clone()?;
+                let writer = conn.try_clone()?;
+                live.push(conn);
+                let (ctl, opts, summary) = (&self.ctl, &opts, &summary);
+                scope.spawn(move || {
+                    match run_session(service, BufReader::new(reader), writer, opts, ctl) {
+                        Ok(s) => {
+                            let mut total = summary.lock().unwrap();
+                            total.requests += s.requests;
+                            total.ok += s.ok;
+                            total.failed += s.failed;
+                            total.timeouts += s.timeouts;
+                        }
+                        // A peer that vanishes mid-write is its own
+                        // problem; the server keeps serving others.
+                        Err(e) => eprintln!("[vima-sim] net session error: {e}"),
+                    }
+                });
+            }
+            for conn in &live {
+                conn.shutdown_read();
+            }
+            Ok(())
+            // Scope exit joins every session thread: all in-flight work
+            // answered and flushed before serve() returns.
+        });
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = &self.listener {
+            let _ = std::fs::remove_file(path);
+        }
+        result?;
+        Ok(summary.into_inner().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{ServiceConfig, SimService};
+    use std::io::{BufRead, BufReader, Write};
+
+    #[test]
+    fn tcp_round_trip_and_ctl_drain() {
+        let svc = SimService::new(ServiceConfig { jobs: 2, ..ServiceConfig::default() });
+        let server = NetServer::bind_tcp("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let ctl = server.ctl();
+        let summary = std::thread::scope(|scope| {
+            let serving = scope.spawn(|| server.serve(&svc));
+
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            writeln!(
+                stream,
+                "{{\"id\": 1, \"workload\": \"vecsum\", \"backend\": \"vima\", \"mb\": 1}}"
+            )
+            .unwrap();
+            stream.flush().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"status\": \"done\""), "{line}");
+            drop(reader);
+            drop(stream);
+
+            ctl.request_drain();
+            serving.join().unwrap().unwrap()
+        });
+        assert_eq!(summary.connections, 1);
+        assert_eq!(summary.requests, 1);
+        assert_eq!(summary.ok, 1);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_round_trip() {
+        let svc = SimService::new(ServiceConfig { jobs: 1, ..ServiceConfig::default() });
+        let path = std::env::temp_dir().join(format!("vima-sim-test-{}.sock", std::process::id()));
+        let server = NetServer::bind_unix(&path).unwrap();
+        let ctl = server.ctl();
+        let summary = std::thread::scope(|scope| {
+            let serving = scope.spawn(|| server.serve(&svc));
+
+            let mut stream = std::os::unix::net::UnixStream::connect(&path).unwrap();
+            writeln!(stream, "{{\"op\": \"ping\"}}").unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"op\": \"ping\""), "{line}");
+            drop(reader);
+            drop(stream);
+
+            ctl.request_drain();
+            serving.join().unwrap().unwrap()
+        });
+        assert_eq!(summary.ok, 1);
+        assert!(!path.exists(), "socket file must be unlinked after drain");
+    }
+}

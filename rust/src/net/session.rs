@@ -1,0 +1,423 @@
+//! The session core — one protocol implementation for every transport.
+//!
+//! A *session* pumps newline-delimited JSONL requests from any `BufRead`
+//! against a [`SimService`] and writes one response line per request, in
+//! request order, to any `Write`. `vima-sim serve` (stdin/stdout),
+//! every `vima-sim net serve` connection (TCP or Unix socket), and
+//! `vima-sim net worker` (a coordinator-driven child process) are all
+//! this one function behind different byte streams.
+//!
+//! The mechanics:
+//!
+//! * **Reader/writer split.** The caller's thread parses and submits;
+//!   a scoped responder thread waits on [`JobHandle`]s and writes
+//!   answers. The two are joined by a bounded channel, so submission and
+//!   response streaming overlap without reordering.
+//! * **Backpressure.** The channel bound ([`SessionOptions::window`],
+//!   default [`SERVE_WINDOW`](jsonl::SERVE_WINDOW)) caps how many
+//!   requests may be in flight (submitted but unanswered): the reader
+//!   blocks once the window fills, so a multi-million-line client keeps
+//!   the session at O(window) memory, never O(total requests). Peak
+//!   occupancy is `window + 2` — the queue, the item the responder is
+//!   answering, and the item the reader is blocked on.
+//! * **Typed errors inline.** A malformed line, unknown field, or
+//!   invalid cell is answered with a `failed` line *in order* and the
+//!   session keeps serving — a bad request must never take a connection
+//!   down.
+//! * **Timeouts.** A request's `timeout_ms` becomes an absolute deadline
+//!   at submission; the responder waits with
+//!   [`JobHandle::wait_timeout`] and answers a typed `timeout` line if
+//!   the job has not settled. The job keeps running server-side and
+//!   lands in the result cache.
+//! * **Control ops.** `{"op": "ping"}` / `{"op": "stats"}` /
+//!   `{"op": "shutdown"}` are answered through the same ordered channel.
+//!   `shutdown` acks, stops reading, raises the shared [`SessionCtl`]
+//!   drain flag (so a server stops accepting), finishes everything in
+//!   flight, and flushes — the graceful-drain contract of DESIGN.md §14.
+//!
+//! Drain from *outside* (SIGINT, a peer's shutdown op) works the same
+//! way: the transport unblocks the reader (EOF / socket read-shutdown),
+//! the reader stops, and the responder settles the window before the
+//! session returns its [`SessionSummary`].
+
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::service::jsonl::{self, Op};
+use crate::service::{JobHandle, SimService};
+use crate::trace::TraceParams;
+use crate::util::error::{Error, Result};
+
+/// Tuning for one [`run_session`] call.
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    /// Backpressure bound: submitted-but-unanswered requests before the
+    /// reader stops pulling lines. Clamped to at least 1.
+    pub window: usize,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        Self { window: jsonl::SERVE_WINDOW }
+    }
+}
+
+/// Shared drain switch. A server hands the same `SessionCtl` to every
+/// connection; raising it (from a SIGINT handler's flag, or by any
+/// session seeing `{"op": "shutdown"}`) tells the accept loop to stop
+/// accepting and every session to stop reading at the next line
+/// boundary. Already-submitted work still completes and flushes.
+#[derive(Debug, Default)]
+pub struct SessionCtl {
+    drain: AtomicBool,
+}
+
+impl SessionCtl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Raise the drain flag (idempotent).
+    pub fn request_drain(&self) {
+        self.drain.store(true, Ordering::SeqCst);
+    }
+
+    pub fn drain_requested(&self) -> bool {
+        self.drain.load(Ordering::SeqCst)
+    }
+}
+
+/// Totals of one session, returned when the request stream ends.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionSummary {
+    /// Lines answered (jobs, ops, and malformed lines alike).
+    pub requests: u64,
+    /// `done` responses plus op acks.
+    pub ok: u64,
+    /// `failed` responses (parse errors, invalid cells, failed runs).
+    pub failed: u64,
+    /// Typed `timeout` responses.
+    pub timeouts: u64,
+    /// Peak submitted-but-unanswered requests; bounded by `window + 2`.
+    pub max_in_flight: u64,
+    /// The peer sent `{"op": "shutdown"}` on this session.
+    pub shutdown_requested: bool,
+}
+
+enum Item {
+    /// Answered without touching the scheduler: parse/shape errors and
+    /// control-op acks, already rendered.
+    Immediate { line: String, failed: bool },
+    /// Submitted job: the responder blocks on its handle, in order.
+    Pending {
+        id: Option<String>,
+        params: TraceParams,
+        handle: JobHandle,
+        /// Absolute deadline plus the request's `timeout_ms` (for the
+        /// typed timeout line), when the request set one.
+        deadline: Option<(Instant, u64)>,
+        wire: bool,
+    },
+}
+
+/// Serve one request stream to completion. See the module docs for the
+/// contract; returns when `input` hits EOF, the peer requests shutdown,
+/// or `ctl` is drained and the current line boundary is reached.
+pub fn run_session<W: Write + Send>(
+    service: &SimService,
+    mut input: impl BufRead,
+    output: W,
+    opts: &SessionOptions,
+    ctl: &SessionCtl,
+) -> Result<SessionSummary> {
+    let window = opts.window.max(1);
+    let (tx, rx) = mpsc::sync_channel::<Item>(window);
+    let in_flight = AtomicU64::new(0);
+    let max_in_flight = AtomicU64::new(0);
+    std::thread::scope(|scope| -> Result<SessionSummary> {
+        let responder = scope.spawn(|| -> Result<SessionSummary> {
+            let mut out = output;
+            let mut summary = SessionSummary::default();
+            for item in rx {
+                summary.requests += 1;
+                let line = match item {
+                    Item::Immediate { line, failed } => {
+                        if failed {
+                            summary.failed += 1;
+                        } else {
+                            summary.ok += 1;
+                        }
+                        line
+                    }
+                    Item::Pending { id, params, handle, deadline, wire } => {
+                        let outcome = match deadline {
+                            None => handle.wait().map(Some),
+                            Some((at, _)) => {
+                                handle.wait_timeout(at.saturating_duration_since(Instant::now()))
+                            }
+                        };
+                        match outcome {
+                            Ok(Some(r)) => {
+                                match jsonl::response_done(id.as_deref(), &params, &r, wire) {
+                                    Ok(line) => {
+                                        summary.ok += 1;
+                                        line
+                                    }
+                                    Err(e) => {
+                                        summary.failed += 1;
+                                        jsonl::response_err(id.as_deref(), &e.to_string())
+                                    }
+                                }
+                            }
+                            Ok(None) => {
+                                summary.timeouts += 1;
+                                let ms = deadline.map(|(_, ms)| ms).unwrap_or(0);
+                                jsonl::response_timeout(id.as_deref(), ms)
+                            }
+                            Err(e) => {
+                                summary.failed += 1;
+                                jsonl::response_err(id.as_deref(), &e.to_string())
+                            }
+                        }
+                    }
+                };
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                writeln!(out, "{line}")?;
+                out.flush()?;
+            }
+            Ok(summary)
+        });
+
+        let mut shutdown_requested = false;
+        let mut line = String::new();
+        loop {
+            if ctl.drain_requested() {
+                break;
+            }
+            line.clear();
+            if input.read_line(&mut line)? == 0 {
+                break;
+            }
+            let text = line.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let mut stop_after = false;
+            let item = match jsonl::parse_flat_object(text) {
+                Err(e) => Item::Immediate {
+                    line: jsonl::response_err(None, &format!("bad request line: {e}")),
+                    failed: true,
+                },
+                Ok(fields) => {
+                    let id = jsonl::request_id(&fields);
+                    match jsonl::request_op(&fields) {
+                        Err(e) => Item::Immediate {
+                            line: jsonl::response_err(id.as_deref(), &e.to_string()),
+                            failed: true,
+                        },
+                        Ok(Some(op)) => {
+                            if op == Op::Shutdown {
+                                shutdown_requested = true;
+                                stop_after = true;
+                                ctl.request_drain();
+                            }
+                            Item::Immediate {
+                                line: op_response(service, id.as_deref(), op),
+                                failed: false,
+                            }
+                        }
+                        Ok(None) => match jsonl::request_spec(&fields) {
+                            Ok(spec) => {
+                                let params = spec.job.params;
+                                let handle = service.submit(spec.job);
+                                let deadline = spec
+                                    .timeout_ms
+                                    .map(|ms| (Instant::now() + Duration::from_millis(ms), ms));
+                                Item::Pending { id, params, handle, deadline, wire: spec.wire }
+                            }
+                            Err(e) => Item::Immediate {
+                                line: jsonl::response_err(id.as_deref(), &e.to_string()),
+                                failed: true,
+                            },
+                        },
+                    }
+                }
+            };
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            max_in_flight.fetch_max(now, Ordering::SeqCst);
+            if tx.send(item).is_err() {
+                break; // responder died (output error); stop reading
+            }
+            if stop_after {
+                break;
+            }
+        }
+        drop(tx);
+        let mut summary = responder
+            .join()
+            .unwrap_or_else(|_| Err(Error::msg("session responder panicked")))?;
+        summary.max_in_flight = max_in_flight.load(Ordering::SeqCst);
+        summary.shutdown_requested = shutdown_requested;
+        Ok(summary)
+    })
+}
+
+/// Render the ack line for a control op. The `stats` snapshot is taken
+/// at read time, i.e. *after* every request earlier in the stream has
+/// been submitted (submission accounting is synchronous) — this is what
+/// lets a coordinator pin fleet-wide exactly-once execution by summing
+/// worker `unique_runs` after all results are in.
+fn op_response(service: &SimService, id: Option<&str>, op: Op) -> String {
+    let mut s = String::from("{");
+    if let Some(id) = id {
+        s += &format!("\"id\": {id}, ");
+    }
+    match op {
+        Op::Ping => s + "\"status\": \"ok\", \"op\": \"ping\"}",
+        Op::Shutdown => s + "\"status\": \"ok\", \"op\": \"shutdown\", \"draining\": true}",
+        Op::Stats => {
+            let st = service.stats();
+            s + &format!(
+                "\"status\": \"ok\", \"op\": \"stats\", \"cells\": {}, \
+                 \"unique_runs\": {}, \"cache_hits\": {}, \"cache_misses\": {}, \
+                 \"evictions\": {}, \"cached_cells\": {}, \"jobs\": {}}}",
+                st.cells,
+                st.unique_runs,
+                st.cache_hits,
+                st.cache_misses,
+                st.evictions,
+                service.cached_cells(),
+                service.jobs()
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{ServiceConfig, SimService};
+
+    fn small_service() -> SimService {
+        SimService::new(ServiceConfig { jobs: 2, ..ServiceConfig::default() })
+    }
+
+    fn run(svc: &SimService, input: &str, window: usize) -> (String, SessionSummary) {
+        let mut out = Vec::new();
+        let summary = run_session(
+            svc,
+            input.as_bytes(),
+            &mut out,
+            &SessionOptions { window },
+            &SessionCtl::new(),
+        )
+        .unwrap();
+        (String::from_utf8(out).unwrap(), summary)
+    }
+
+    #[test]
+    fn ops_are_answered_in_order() {
+        let svc = small_service();
+        let input = "{\"id\": 1, \"op\": \"ping\"}\n\
+                     {\"id\": 2, \"workload\": \"vecsum\", \"backend\": \"vima\", \"mb\": 1}\n\
+                     {\"id\": 3, \"op\": \"stats\"}\n";
+        let (out, summary) = run(&svc, input, 8);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"id\": 1") && lines[0].contains("\"op\": \"ping\""));
+        assert!(lines[1].contains("\"id\": 2") && lines[1].contains("\"status\": \"done\""));
+        assert!(lines[2].contains("\"id\": 3") && lines[2].contains("\"unique_runs\": 1"));
+        assert_eq!(summary.requests, 3);
+        assert_eq!(summary.ok, 3);
+        assert!(!summary.shutdown_requested);
+    }
+
+    #[test]
+    fn shutdown_acks_and_stops_reading() {
+        let svc = small_service();
+        let input = "{\"id\": 1, \"workload\": \"vecsum\", \"backend\": \"vima\", \"mb\": 1}\n\
+                     {\"op\": \"shutdown\"}\n\
+                     {\"id\": 99, \"workload\": \"vecsum\", \"backend\": \"avx\", \"mb\": 1}\n";
+        let (out, summary) = run(&svc, input, 8);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2, "the line after shutdown must never be read:\n{out}");
+        assert!(lines[0].contains("\"status\": \"done\""));
+        assert!(lines[1].contains("\"draining\": true"));
+        assert!(summary.shutdown_requested);
+    }
+
+    #[test]
+    fn in_flight_stays_within_the_window() {
+        let svc = small_service();
+        let window = 4;
+        let mut input = String::new();
+        for i in 0..200 {
+            // Distinct cells so every request is real scheduler work.
+            input += &format!(
+                "{{\"id\": {i}, \"workload\": \"memset\", \"backend\": \"avx\", \
+                 \"footprint\": {}}}\n",
+                (i + 1) * 4096
+            );
+        }
+        let (out, summary) = run(&svc, &input, window);
+        assert_eq!(out.lines().count(), 200);
+        assert_eq!(summary.requests, 200);
+        assert!(
+            summary.max_in_flight <= window as u64 + 2,
+            "max_in_flight {} exceeds window {} + 2",
+            summary.max_in_flight,
+            window
+        );
+    }
+
+    #[test]
+    fn timeouts_answer_typed_lines_without_wedging_the_session() {
+        let svc = small_service();
+        // timeout_ms: 1 on a real cell: either it finishes in time (done)
+        // or we get the typed timeout line; both keep the session alive.
+        let input = "{\"id\": 1, \"workload\": \"vecsum\", \"backend\": \"vima\", \"mb\": 4, \"timeout_ms\": 1}\n\
+                     {\"id\": 2, \"op\": \"ping\"}\n";
+        let (out, summary) = run(&svc, input, 8);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(
+            lines[0].contains("\"status\": \"done\"") || lines[0].contains("\"status\": \"timeout\""),
+            "{}",
+            lines[0]
+        );
+        assert!(lines[1].contains("\"op\": \"ping\""));
+        assert_eq!(summary.ok + summary.timeouts, 2);
+    }
+
+    #[test]
+    fn wire_results_ride_the_done_line() {
+        let svc = small_service();
+        let input =
+            "{\"id\": 1, \"workload\": \"vecsum\", \"backend\": \"vima\", \"mb\": 1, \"wire\": true}\n";
+        let (out, _) = run(&svc, input, 8);
+        let fields = jsonl::parse_flat_object(out.lines().next().unwrap()).unwrap();
+        let encoded = fields
+            .iter()
+            .find(|(k, _)| k == "result")
+            .map(|(_, v)| match v {
+                jsonl::JsonValue::Str(s) => s.clone(),
+                other => panic!("result must be a string, got {other:?}"),
+            })
+            .expect("done line carries a result field");
+        let decoded = crate::net::wire::decode_result(&encoded).unwrap();
+        let direct = crate::sim::simulate(
+            &crate::config::SystemConfig::default(),
+            TraceParams::new(
+                crate::workload::resolve("vecsum").unwrap(),
+                crate::trace::Backend::Vima,
+                1 << 20,
+            ),
+        )
+        .unwrap();
+        assert_eq!(decoded.cycles, direct.cycles);
+        assert_eq!(decoded.report, direct.report);
+        assert_eq!(decoded.energy, direct.energy);
+    }
+}

@@ -1,0 +1,187 @@
+//! Bit-exact result transport — how a worker process ships a whole
+//! [`SimResult`] back to a coordinator without losing a single bit.
+//!
+//! The acceptance bar for sharded sweeps is *bit identity* with
+//! single-process [`run_plan`](crate::service::SimService::run_plan):
+//! cycles, seconds, the full counter report, and every energy component
+//! must survive the process boundary exactly. Decimal float printing
+//! cannot guarantee that across the hand-rolled JSON layer, so the wire
+//! format encodes every `f64` as its IEEE-754 bit pattern in hex and
+//! packs the whole result into **one flat string field** (the JSONL
+//! protocol is flat by design — no nesting):
+//!
+//! ```text
+//! v1:<cycles hex>:<seconds bits hex>:<7 energy bits hex, comma-sep>:<report k=hex, comma-sep>
+//! ```
+//!
+//! Counter keys are dotted identifiers (`l1d.hits`, `vima.busy_until.3`)
+//! and never contain `:`, `,` or `=`, which the decoder enforces on the
+//! encode side so a future exotic key fails loudly instead of producing
+//! an ambiguous record.
+//!
+//! Configurations travel the other direction (coordinator → worker) as
+//! TOML text in a request field: `SystemConfig::to_toml` round-trips
+//! exactly (float fields emit with Rust's shortest-round-trip formatting
+//! and hash/compare by bit pattern), so the worker reconstructs the
+//! coordinator's *effective* config by value — `CellKey` identity is
+//! preserved fleet-wide.
+
+use crate::bail;
+use crate::energy::EnergyBreakdown;
+use crate::sim::SimResult;
+use crate::stats::StatsReport;
+use crate::util::error::{Context, Result};
+
+/// Wire-format version tag; bump when the layout changes.
+const VERSION: &str = "v1";
+
+fn f64_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn f64_from_hex(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bits {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Encode a full [`SimResult`] as the flat `v1:...` wire string.
+pub fn encode_result(r: &SimResult) -> Result<String> {
+    let e = &r.energy;
+    let energy = [
+        e.core_j,
+        e.cache_dynamic_j,
+        e.cache_static_j,
+        e.dram_dynamic_j,
+        e.dram_static_j,
+        e.vima_j,
+        e.total_j,
+    ]
+    .map(f64_hex)
+    .join(",");
+    let mut report = String::new();
+    for (k, v) in r.report.iter() {
+        crate::ensure!(
+            !k.is_empty() && k.bytes().all(|b| b != b':' && b != b',' && b != b'='),
+            "counter key {k:?} is not wire-safe"
+        );
+        if !report.is_empty() {
+            report.push(',');
+        }
+        report.push_str(k);
+        report.push('=');
+        report.push_str(&f64_hex(v));
+    }
+    Ok(format!("{VERSION}:{:x}:{}:{energy}:{report}", r.cycles, f64_hex(r.seconds)))
+}
+
+/// Decode the `v1:...` wire string back into a [`SimResult`] — the exact
+/// bits [`encode_result`] was handed.
+pub fn decode_result(s: &str) -> Result<SimResult> {
+    let mut parts = s.splitn(5, ':');
+    let version = parts.next().unwrap_or("");
+    if version != VERSION {
+        bail!("unsupported result wire version {version:?} (expected {VERSION})");
+    }
+    let cycles = parts.next().context("wire result: missing cycles")?;
+    let cycles =
+        u64::from_str_radix(cycles, 16).with_context(|| format!("bad cycles {cycles:?}"))?;
+    let seconds = f64_from_hex(parts.next().context("wire result: missing seconds")?)?;
+    let energy_field = parts.next().context("wire result: missing energy")?;
+    let mut energy_bits = energy_field.split(',');
+    let mut next_energy = || -> Result<f64> {
+        f64_from_hex(energy_bits.next().context("wire result: truncated energy")?)
+    };
+    let energy = EnergyBreakdown {
+        core_j: next_energy()?,
+        cache_dynamic_j: next_energy()?,
+        cache_static_j: next_energy()?,
+        dram_dynamic_j: next_energy()?,
+        dram_static_j: next_energy()?,
+        vima_j: next_energy()?,
+        total_j: next_energy()?,
+    };
+    let mut report = StatsReport::new();
+    let report_field = parts.next().context("wire result: missing report")?;
+    for entry in report_field.split(',').filter(|e| !e.is_empty()) {
+        let (k, v) = entry
+            .split_once('=')
+            .with_context(|| format!("bad report entry {entry:?}"))?;
+        report.set(k, f64_from_hex(v)?);
+    }
+    Ok(SimResult { cycles, seconds, energy, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::trace::{Backend, KernelId, TraceParams};
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let cfg = SystemConfig::default();
+        let r = crate::sim::simulate(
+            &cfg,
+            TraceParams::new(KernelId::VecSum, Backend::Vima, 1 << 20),
+        )
+        .unwrap();
+        let back = decode_result(&encode_result(&r).unwrap()).unwrap();
+        assert_eq!(back.cycles, r.cycles);
+        assert_eq!(back.seconds.to_bits(), r.seconds.to_bits());
+        assert_eq!(back.energy, r.energy);
+        assert_eq!(back.report, r.report);
+        assert_eq!(
+            back.energy.total_j.to_bits(),
+            r.energy.total_j.to_bits(),
+            "energy must survive bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn awkward_floats_survive() {
+        let mut report = StatsReport::new();
+        report.set("a.min_subnormal", f64::MIN_POSITIVE / 1e10);
+        report.set("b.neg_zero", -0.0);
+        report.set("c.huge", 1.23456789e300);
+        let r = SimResult {
+            cycles: u64::MAX,
+            seconds: f64::MIN_POSITIVE,
+            energy: EnergyBreakdown { total_j: 0.1 + 0.2, ..Default::default() },
+            report,
+        };
+        let back = decode_result(&encode_result(&r).unwrap()).unwrap();
+        assert_eq!(back.cycles, u64::MAX);
+        assert_eq!(back.seconds.to_bits(), r.seconds.to_bits());
+        assert_eq!(back.energy.total_j.to_bits(), r.energy.total_j.to_bits());
+        assert_eq!(
+            back.report.get("b.neg_zero").unwrap().to_bits(),
+            (-0.0f64).to_bits()
+        );
+    }
+
+    #[test]
+    fn malformed_strings_are_typed_errors() {
+        for bad in [
+            "",
+            "v0:1:3ff0000000000000::",
+            "v1:xyz:3ff0000000000000::",
+            "v1:1",
+            "v1:1:3ff0000000000000:deadbeef:",
+            "v1:1:3ff0000000000000:0,0,0,0,0,0,0:noequals",
+        ] {
+            assert!(decode_result(bad).is_err(), "{bad:?} must fail");
+        }
+    }
+
+    #[test]
+    fn config_toml_round_trips_by_value() {
+        // The coordinator ships the *effective* config as TOML; identity
+        // (Eq + Hash, hence CellKey) must survive the text round trip.
+        let mut cfg = SystemConfig::default();
+        cfg.vima.cache_bytes = 16 << 10;
+        cfg.core.freq_ghz = 2.337;
+        cfg.mem.core_to_bus_ratio = 1.0 / 3.0; // not representable in short decimal
+        let back = SystemConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, back);
+    }
+}

@@ -1,10 +1,14 @@
-//! `vima-sim serve` — the JSONL request/response protocol.
+//! The JSONL request/response protocol — vima-sim's one wire vocabulary.
 //!
-//! One request per line on stdin, one response per line on stdout, so any
-//! external harness can drive a long-running simulator process with a
-//! pipe. Requests are **flat** JSON objects (no nesting — the offline
-//! build is dependency-free, so both directions use the same hand-rolled
-//! JSON the `bench` module writes):
+//! One request per line, one response per line. This module owns the
+//! *grammar* (hand-rolled flat JSON — the offline build is
+//! dependency-free): parsing request lines into [`Job`]s and emitting
+//! response lines. The *session* machinery that pumps a request stream
+//! against a [`SimService`] (bounded in-flight window, ordered
+//! responses, timeouts, control ops, graceful drain) lives in
+//! [`net::session`](crate::net::session); `vima-sim serve` (stdin/stdout)
+//! and `vima-sim net serve` (TCP/Unix socket) are two transports over
+//! that single implementation.
 //!
 //! ```text
 //! {"id": 1, "workload": "vecsum", "backend": "vima", "mb": 4, "threads": 2}
@@ -14,7 +18,14 @@
 //! (`avx`/`vima`/`hive`, required), one of `mb` (MiB) or `footprint`
 //! (bytes) — default is the workload's own footprint — plus optional
 //! `threads` (default 1), `vector_bytes` (default 8192), and `id`, an
-//! arbitrary scalar echoed verbatim in the response.
+//! arbitrary scalar echoed verbatim in the response. Network sessions
+//! (DESIGN.md §14) add three optional fields: `timeout_ms` (answer with a
+//! typed `timeout` line if the job has not settled in time), `cfg` (a
+//! full `SystemConfig` as TOML text, the coordinator→worker transport of
+//! the effective config), and `wire` (`true` asks for the bit-exact
+//! [`wire`](crate::net::wire)-encoded result in the response). A line
+//! whose only meaningful field is `op` is a **control request**
+//! (`ping`/`stats`/`shutdown`), handled by the session layer.
 //!
 //! Responses (same order as the requests; the service still simulates the
 //! whole in-flight window in parallel and dedups identical cells):
@@ -22,16 +33,17 @@
 //! ```text
 //! {"id": 1, "status": "done", "workload": "VecSum", "backend": "VIMA", "threads": 2, "cycles": 123456, "seconds": 0.000041, "energy_j": 0.000972}
 //! {"id": 2, "status": "failed", "error": "unknown backend \"neon\"; valid backends: avx, vima, hive"}
+//! {"id": 3, "status": "timeout", "error": "job exceeded timeout_ms 50"}
 //! ```
 //!
 //! A malformed line is answered with a `failed` response and the stream
 //! keeps serving — a bad request must never take the service down.
 
 use std::io::{BufRead, Write};
-use std::sync::mpsc;
 
 use crate::bail;
-use crate::service::{Job, JobHandle, SimService};
+use crate::config::SystemConfig;
+use crate::service::{Job, SimService};
 use crate::trace::{Backend, TraceParams};
 use crate::util::error::{Context, Error, Result};
 use crate::workload;
@@ -257,15 +269,70 @@ fn field_count(v: &JsonValue, key: &str) -> Result<u64> {
     Ok(n as u64)
 }
 
-/// Turn a parsed request into a [`Job`] (the service validates the cell
-/// itself at submission; this resolves names and shapes the parameters).
-pub fn request_job(fields: &[(String, JsonValue)]) -> Result<Job> {
+fn field_bool(v: &JsonValue, key: &str) -> Result<bool> {
+    match v {
+        JsonValue::Bool(b) => Ok(*b),
+        other => bail!("field {key:?} must be a boolean, got {}", other.to_json()),
+    }
+}
+
+/// A session control request: a line whose `op` field names an action
+/// instead of a simulation. Answered in request order like any job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Liveness probe; acked immediately.
+    Ping,
+    /// Scheduler accounting snapshot (cells, unique runs, cache traffic).
+    Stats,
+    /// Graceful drain: ack this line, answer everything already in
+    /// flight, flush, then end the session.
+    Shutdown,
+}
+
+/// Detect a control request. `Ok(None)` means the line is a job request.
+pub fn request_op(fields: &[(String, JsonValue)]) -> Result<Option<Op>> {
+    let Some((_, v)) = fields.iter().find(|(k, _)| k == "op") else {
+        return Ok(None);
+    };
+    let op = match field_str(v, "op")? {
+        "ping" => Op::Ping,
+        "stats" => Op::Stats,
+        "shutdown" => Op::Shutdown,
+        other => bail!("unknown op {other:?}; expected ping, stats, shutdown"),
+    };
+    for (key, _) in fields {
+        if key != "op" && key != "id" {
+            bail!("op request carries unexpected field {key:?} (only \"id\" may accompany \"op\")");
+        }
+    }
+    Ok(Some(op))
+}
+
+/// A fully parsed job request: the [`Job`] plus session-level options.
+#[derive(Debug)]
+pub struct RequestSpec {
+    pub job: Job,
+    /// Answer with a typed `timeout` line if the job has not settled
+    /// within this many milliseconds of submission.
+    pub timeout_ms: Option<u64>,
+    /// Attach the bit-exact [`wire`](crate::net::wire)-encoded result to
+    /// the `done` line (coordinator→worker traffic sets this).
+    pub wire: bool,
+}
+
+/// Turn a parsed request into a [`RequestSpec`] (the service validates
+/// the cell itself at submission; this resolves names and shapes the
+/// parameters).
+pub fn request_spec(fields: &[(String, JsonValue)]) -> Result<RequestSpec> {
     let mut workload_name: Option<&str> = None;
     let mut backend: Option<&str> = None;
     let mut mb: Option<f64> = None;
     let mut footprint: Option<u64> = None;
     let mut threads: u64 = 1;
     let mut vector_bytes: Option<u64> = None;
+    let mut cfg: Option<SystemConfig> = None;
+    let mut timeout_ms: Option<u64> = None;
+    let mut wire = false;
     for (key, value) in fields {
         match key.as_str() {
             "id" => {}
@@ -275,9 +342,19 @@ pub fn request_job(fields: &[(String, JsonValue)]) -> Result<Job> {
             "footprint" => footprint = Some(field_count(value, key)?),
             "threads" => threads = field_count(value, key)?,
             "vector_bytes" => vector_bytes = Some(field_count(value, key)?),
+            "cfg" => {
+                let toml = field_str(value, key)?;
+                cfg = Some(
+                    SystemConfig::from_toml_str(toml)
+                        .map_err(|e| e.context("field \"cfg\" is not a valid config TOML"))?,
+                );
+            }
+            "timeout_ms" => timeout_ms = Some(field_count(value, key)?),
+            "wire" => wire = field_bool(value, key)?,
+            "op" => bail!("\"op\" cannot be combined with job fields"),
             other => bail!(
                 "unknown request field {other:?}; expected id, workload, backend, \
-                 mb, footprint, threads, vector_bytes"
+                 mb, footprint, threads, vector_bytes, cfg, timeout_ms, wire, op"
             ),
         }
     }
@@ -302,7 +379,15 @@ pub fn request_job(fields: &[(String, JsonValue)]) -> Result<Job> {
         params = params.with_vector_bytes(vb as u32);
     }
     params.threads = threads as usize;
-    Ok(Job::new(params))
+    let mut job = Job::new(params);
+    job.cfg = cfg;
+    Ok(RequestSpec { job, timeout_ms, wire })
+}
+
+/// Turn a parsed request into a bare [`Job`] (compatibility surface over
+/// [`request_spec`]).
+pub fn request_job(fields: &[(String, JsonValue)]) -> Result<Job> {
+    request_spec(fields).map(|spec| spec.job)
 }
 
 /// Success response line.
@@ -324,6 +409,24 @@ pub fn response_ok(id: Option<&str>, params: &TraceParams, r: &crate::sim::SimRe
     s
 }
 
+/// Success response line for the session layer: [`response_ok`] plus,
+/// when the request set `"wire": true`, the bit-exact encoded result.
+/// With `wire = false` the line is byte-identical to [`response_ok`].
+pub fn response_done(
+    id: Option<&str>,
+    params: &TraceParams,
+    r: &crate::sim::SimResult,
+    wire: bool,
+) -> Result<String> {
+    let mut s = response_ok(id, params, r);
+    if wire {
+        let encoded = crate::net::wire::encode_result(r)?;
+        s.pop(); // the closing '}'
+        s += &format!(", \"result\": \"{}\"}}", escape(&encoded));
+    }
+    Ok(s)
+}
+
 /// Failure response line.
 pub fn response_err(id: Option<&str>, error: &str) -> String {
     let mut s = String::from("{");
@@ -331,6 +434,17 @@ pub fn response_err(id: Option<&str>, error: &str) -> String {
         s += &format!("\"id\": {id}, ");
     }
     s + &format!("\"status\": \"failed\", \"error\": \"{}\"}}", escape(error))
+}
+
+/// Typed timeout response line. The job itself keeps running server-side
+/// (and lands in the result cache); only this request's answer gave up
+/// waiting.
+pub fn response_timeout(id: Option<&str>, timeout_ms: u64) -> String {
+    let mut s = String::from("{");
+    if let Some(id) = id {
+        s += &format!("\"id\": {id}, ");
+    }
+    s + &format!("\"status\": \"timeout\", \"error\": \"job exceeded timeout_ms {timeout_ms}\"}}")
 }
 
 /// Totals of one [`serve`] session.
@@ -341,93 +455,33 @@ pub struct ServeSummary {
     pub failed: u64,
 }
 
-enum Item {
-    /// Request that never reached the scheduler (parse/shape error).
-    Immediate { id: Option<String>, error: String },
-    /// Submitted job: the writer blocks on its handle, in order.
-    Pending { id: Option<String>, params: TraceParams, handle: JobHandle },
-}
-
 /// Backpressure bound: how many requests may be in flight (submitted but
-/// not yet answered) before the reader stops pulling from stdin. Keeps a
-/// multi-million-line input from materializing its whole job table in
-/// memory — peak usage is O(window), not O(total requests) — while still
-/// giving the scheduler a deep parallel window.
+/// not yet answered) before the reader stops pulling from the transport.
+/// Keeps a multi-million-line input from materializing its whole job
+/// table in memory — peak usage is O(window), not O(total requests) —
+/// while still giving the scheduler a deep parallel window.
 pub const SERVE_WINDOW: usize = 256;
 
 /// Serve JSONL requests from `input` until EOF, writing one response line
-/// per request to `output` **in request order**. Reading and responding
-/// are decoupled (the responder runs on its own scoped thread), so a
-/// harness may stream requests and read responses concurrently without
-/// deadlocking, and every job in the in-flight window (at most
-/// [`SERVE_WINDOW`] requests) runs through the service's parallel
-/// scheduler.
+/// per request to `output` **in request order**. This is the stdin/stdout
+/// transport over [`net::session::run_session`](crate::net::session::run_session)
+/// — the exact machinery behind every `vima-sim net serve` connection —
+/// with the default [`SERVE_WINDOW`] backpressure bound. Reading and
+/// responding are decoupled, so a harness may stream requests and read
+/// responses concurrently without deadlocking, and every job in the
+/// in-flight window runs through the service's parallel scheduler.
 pub fn serve<W: Write + Send>(
     service: &SimService,
-    mut input: impl BufRead,
+    input: impl BufRead,
     output: W,
 ) -> Result<ServeSummary> {
-    let (tx, rx) = mpsc::sync_channel::<Item>(SERVE_WINDOW);
-    std::thread::scope(|scope| -> Result<ServeSummary> {
-        let writer = scope.spawn(move || -> Result<ServeSummary> {
-            let mut out = output;
-            let mut summary = ServeSummary::default();
-            for item in rx {
-                summary.requests += 1;
-                let line = match item {
-                    Item::Immediate { id, error } => {
-                        summary.failed += 1;
-                        response_err(id.as_deref(), &error)
-                    }
-                    Item::Pending { id, params, handle } => match handle.wait() {
-                        Ok(r) => {
-                            summary.ok += 1;
-                            response_ok(id.as_deref(), &params, &r)
-                        }
-                        Err(e) => {
-                            summary.failed += 1;
-                            response_err(id.as_deref(), &e.to_string())
-                        }
-                    },
-                };
-                writeln!(out, "{line}")?;
-                out.flush()?;
-            }
-            Ok(summary)
-        });
-
-        let mut line = String::new();
-        loop {
-            line.clear();
-            if input.read_line(&mut line)? == 0 {
-                break;
-            }
-            let text = line.trim();
-            if text.is_empty() {
-                continue;
-            }
-            let item = match parse_flat_object(text) {
-                Err(e) => Item::Immediate { id: None, error: format!("bad request line: {e}") },
-                Ok(fields) => {
-                    let id = request_id(&fields);
-                    match request_job(&fields) {
-                        Ok(job) => {
-                            let params = job.params;
-                            let handle = service.submit(job);
-                            Item::Pending { id, params, handle }
-                        }
-                        Err(e) => Item::Immediate { id, error: e.to_string() },
-                    }
-                }
-            };
-            if tx.send(item).is_err() {
-                break; // responder died (output error); stop reading
-            }
-        }
-        drop(tx);
-        writer
-            .join()
-            .unwrap_or_else(|_| Err(Error::msg("serve responder panicked")))
+    let opts = crate::net::session::SessionOptions::default();
+    let ctl = crate::net::session::SessionCtl::new();
+    let s = crate::net::session::run_session(service, input, output, &opts, &ctl)?;
+    Ok(ServeSummary {
+        requests: s.requests,
+        ok: s.ok,
+        failed: s.failed + s.timeouts,
     })
 }
 
@@ -504,5 +558,40 @@ mod tests {
         let err = response_err(Some("7"), "boom \"quoted\"");
         assert_eq!(err, r#"{"id": 7, "status": "failed", "error": "boom \"quoted\""}"#);
         assert!(parse_flat_object(&err).is_ok(), "{err}");
+        let t = response_timeout(Some("3"), 50);
+        assert_eq!(t, r#"{"id": 3, "status": "timeout", "error": "job exceeded timeout_ms 50"}"#);
+        assert!(parse_flat_object(&t).is_ok(), "{t}");
+    }
+
+    #[test]
+    fn session_fields_parse() {
+        let cfg = SystemConfig::default();
+        let line = format!(
+            r#"{{"workload": "vecsum", "backend": "vima", "timeout_ms": 250, "wire": true, "cfg": "{}"}}"#,
+            escape(&cfg.to_toml())
+        );
+        let spec = request_spec(&parse_flat_object(&line).unwrap()).unwrap();
+        assert_eq!(spec.timeout_ms, Some(250));
+        assert!(spec.wire);
+        assert_eq!(spec.job.cfg.as_ref(), Some(&cfg));
+
+        // A bad cfg payload is a typed error naming the field.
+        let bad = parse_flat_object(r#"{"workload": "x", "backend": "vima", "cfg": "!!"}"#).unwrap();
+        let e = request_spec(&bad).unwrap_err().to_string();
+        assert!(e.contains("cfg"), "{e}");
+    }
+
+    #[test]
+    fn ops_parse_and_reject_mixed_lines() {
+        let f = parse_flat_object(r#"{"id": 1, "op": "ping"}"#).unwrap();
+        assert_eq!(request_op(&f).unwrap(), Some(Op::Ping));
+        let f = parse_flat_object(r#"{"op": "shutdown"}"#).unwrap();
+        assert_eq!(request_op(&f).unwrap(), Some(Op::Shutdown));
+        let f = parse_flat_object(r#"{"workload": "vecsum"}"#).unwrap();
+        assert_eq!(request_op(&f).unwrap(), None);
+        let f = parse_flat_object(r#"{"op": "reboot"}"#).unwrap();
+        assert!(request_op(&f).is_err());
+        let f = parse_flat_object(r#"{"op": "ping", "workload": "vecsum"}"#).unwrap();
+        assert!(request_op(&f).is_err());
     }
 }

@@ -175,20 +175,47 @@ impl JobHandle {
     pub fn wait(&self) -> Result<SimResult> {
         let mut st = self.shared.state.lock().unwrap();
         loop {
-            let outcome = {
-                let entry = st.table.get(&self.id).expect("job entry lives while handle does");
-                match entry.status {
-                    JobStatus::Done | JobStatus::Failed => {
-                        Some(entry.outcome.clone().expect("completed job has outcome"))
-                    }
-                    JobStatus::Queued | JobStatus::Running => None,
-                }
-            };
-            match outcome {
+            match Self::settled_outcome(&st, self.id) {
                 Some(Ok(r)) => return Ok((*r).clone()),
                 Some(Err(msg)) => return Err(Error::msg(msg)),
                 None => st = self.shared.done_cv.wait(st).unwrap(),
             }
+        }
+    }
+
+    /// Block for at most `timeout`; `Ok(None)` means the job is still
+    /// queued/running when the deadline passes (the simulation itself
+    /// keeps going — a later [`wait`](Self::wait) still returns it). This
+    /// is what keeps a network session from hanging forever on a wedged
+    /// job: the serving layer maps a request's `timeout_ms` onto it and
+    /// answers with a typed `timeout` line instead of blocking the
+    /// connection (DESIGN.md §14).
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> Result<Option<SimResult>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            match Self::settled_outcome(&st, self.id) {
+                Some(Ok(r)) => return Ok(Some((*r).clone())),
+                Some(Err(msg)) => return Err(Error::msg(msg)),
+                None => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return Ok(None);
+                    }
+                    st = self.shared.done_cv.wait_timeout(st, deadline - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// The job's outcome if it has settled (`Done`/`Failed`), else `None`.
+    fn settled_outcome(st: &State, id: u64) -> Option<Result<Arc<SimResult>, String>> {
+        let entry = st.table.get(&id).expect("job entry lives while handle does");
+        match entry.status {
+            JobStatus::Done | JobStatus::Failed => {
+                Some(entry.outcome.clone().expect("completed job has outcome"))
+            }
+            JobStatus::Queued | JobStatus::Running => None,
         }
     }
 }

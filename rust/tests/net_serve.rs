@@ -1,0 +1,289 @@
+//! Integration tests of the network serving layer (DESIGN.md §14): the
+//! TCP transport must answer concurrent clients with results bit-identical
+//! to serial `simulate`, the shard coordinator must execute each unique
+//! cell exactly once fleet-wide and recover from worker death, and a
+//! client-requested shutdown must drain gracefully — every in-flight
+//! request answered and flushed before the server exits.
+//!
+//! The coordinator tests spawn the real `vima-sim` binary as worker
+//! processes (`CARGO_BIN_EXE_vima-sim`), so they cover the `net worker`
+//! CLI path end to end, including `--exit-after` fault injection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+use vima_sim::config::SystemConfig;
+use vima_sim::coordinator::workloads::SizedWorkload;
+use vima_sim::net::{run_sharded, wire, NetServer, ShardOptions};
+use vima_sim::service::{jsonl, ServiceConfig, SimService};
+use vima_sim::sim::simulate;
+use vima_sim::sweep::{RunCell, SweepPlan};
+use vima_sim::trace::{Backend, KernelId, TraceParams};
+
+fn worker_binary() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_vima-sim"))
+}
+
+fn sized(kernel: KernelId, mb: u64) -> SizedWorkload {
+    SizedWorkload { workload: kernel.into(), footprint: mb << 20, size_label: "test" }
+}
+
+/// A small plan with real variety: three kernels, two backends, an exact
+/// duplicate cell (dedup must collapse it), and a config-override cell
+/// (the full-config identity must survive the process boundary).
+fn test_plan(base: &SystemConfig) -> SweepPlan {
+    let mut cfg2 = base.clone();
+    cfg2.mem.num_cubes = 2;
+    let mut plan = SweepPlan::new();
+    plan.push(RunCell::new(sized(KernelId::VecSum, 1), Backend::Avx));
+    plan.push(RunCell::new(sized(KernelId::VecSum, 1), Backend::Vima));
+    plan.push(RunCell::new(sized(KernelId::MemSet, 1), Backend::Avx));
+    plan.push(RunCell::new(sized(KernelId::MemSet, 1), Backend::Avx)); // duplicate
+    plan.push(RunCell::new(sized(KernelId::Stencil, 1), Backend::Vima));
+    plan.push(RunCell::new(sized(KernelId::VecSum, 2), Backend::Vima));
+    plan.push(RunCell::new(sized(KernelId::VecSum, 1), Backend::Vima).with_cfg(cfg2));
+    plan
+}
+
+fn find_str<'a>(fields: &'a [(String, jsonl::JsonValue)], key: &str) -> Option<&'a str> {
+    fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        jsonl::JsonValue::Str(s) => Some(s.as_str()),
+        _ => None,
+    })
+}
+
+/// The tentpole acceptance check, client side: several concurrent TCP
+/// clients stream wire-encoded requests and every decoded result is
+/// bit-identical to a serial `simulate` of the same cell.
+#[test]
+fn tcp_multi_client_matches_serial_simulate() {
+    let cfg = SystemConfig::default();
+    let svc = SimService::new(ServiceConfig { jobs: 2, ..ServiceConfig::default() });
+    let server = NetServer::bind_tcp("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let ctl = server.ctl();
+
+    let kernels = [KernelId::VecSum, KernelId::MemSet, KernelId::MemCopy];
+    std::thread::scope(|scope| {
+        let serving = scope.spawn(|| server.serve(&svc));
+        let clients: Vec<_> = kernels
+            .iter()
+            .map(|&kernel| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut stream = TcpStream::connect(&addr).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    // Two backends per client, pipelined before reading.
+                    for (i, backend) in ["avx", "vima"].iter().enumerate() {
+                        writeln!(
+                            stream,
+                            "{{\"id\": {i}, \"workload\": \"{kernel}\", \
+                             \"backend\": \"{backend}\", \"mb\": 1, \"wire\": true}}",
+                        )
+                        .unwrap();
+                    }
+                    stream.flush().unwrap();
+                    let mut line = String::new();
+                    for (i, backend) in [Backend::Avx, Backend::Vima].iter().enumerate() {
+                        line.clear();
+                        assert!(reader.read_line(&mut line).unwrap() > 0, "server hung up");
+                        let fields = jsonl::parse_flat_object(&line).unwrap();
+                        assert_eq!(
+                            find_str(&fields, "status"),
+                            Some("done"),
+                            "client {kernel}: {line}"
+                        );
+                        let decoded =
+                            wire::decode_result(find_str(&fields, "result").unwrap()).unwrap();
+                        let direct = simulate(
+                            &SystemConfig::default(),
+                            TraceParams::new(kernel, *backend, 1 << 20),
+                        )
+                        .unwrap();
+                        assert_eq!(decoded.cycles, direct.cycles, "{kernel}/{backend} id {i}");
+                        assert_eq!(decoded.seconds.to_bits(), direct.seconds.to_bits());
+                        assert_eq!(decoded.energy, direct.energy);
+                        assert_eq!(decoded.report, direct.report);
+                    }
+                })
+            })
+            .collect();
+        for client in clients {
+            client.join().unwrap();
+        }
+        ctl.request_drain();
+        let summary = serving.join().unwrap().unwrap();
+        assert_eq!(summary.connections, 3);
+        assert_eq!(summary.requests, 6);
+        assert_eq!(summary.ok, 6);
+        assert_eq!(summary.failed, 0);
+    });
+}
+
+/// The tentpole acceptance check, coordinator side: a sharded sweep across
+/// two worker processes returns results in plan order, bit-identical to
+/// `SimService::run_plan`, with each unique `CellKey` executed exactly
+/// once fleet-wide.
+#[test]
+fn sharded_sweep_is_bit_identical_and_exactly_once() {
+    let cfg = SystemConfig::default();
+    let plan = test_plan(&cfg);
+    let opts = ShardOptions {
+        workers: 2,
+        worker_jobs: 1,
+        worker_cmd: Some(worker_binary()),
+        ..ShardOptions::default()
+    };
+    let (sharded, stats) = run_sharded(&cfg, &plan, &opts).unwrap();
+
+    let svc = SimService::new(ServiceConfig { jobs: 2, ..ServiceConfig::default() });
+    let serial = svc.run_plan(&cfg, &plan, false).unwrap();
+    assert_eq!(sharded.len(), serial.len());
+    for ((cell, a), b) in plan.cells().iter().zip(&sharded).zip(&serial) {
+        assert_eq!(a.cycles, b.cycles, "cell {}", cell.label());
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "cell {}", cell.label());
+        assert_eq!(a.energy, b.energy, "cell {}", cell.label());
+        assert_eq!(a.report, b.report, "cell {}", cell.label());
+    }
+
+    assert_eq!(stats.cells, 7);
+    assert_eq!(stats.unique_cells, 6, "the duplicate cell must dedup before dispatch");
+    assert_eq!(
+        stats.requests_sent, 6,
+        "exactly one request per unique cell when no worker dies"
+    );
+    assert_eq!(stats.worker_deaths, 0);
+    assert_eq!(stats.requeued, 0);
+    assert_eq!(stats.workers_spawned, 2);
+    assert_eq!(
+        stats.fleet_unique_runs, 6,
+        "fleet-wide exactly-once: summed worker unique_runs must equal unique cells"
+    );
+}
+
+/// Fault tolerance: worker 0 crashes after answering one response
+/// (`--exit-after 1`); its unanswered cells are re-queued to the survivor
+/// and the merged results are still bit-identical to the in-process plan.
+#[test]
+fn worker_death_requeues_and_results_stay_identical() {
+    let cfg = SystemConfig::default();
+    let plan = test_plan(&cfg);
+    let opts = ShardOptions {
+        workers: 2,
+        worker_jobs: 1,
+        worker_cmd: Some(worker_binary()),
+        worker_extra_args: vec![vec!["--exit-after".into(), "1".into()]],
+        ..ShardOptions::default()
+    };
+    let (sharded, stats) = run_sharded(&cfg, &plan, &opts).unwrap();
+
+    let svc = SimService::new(ServiceConfig { jobs: 2, ..ServiceConfig::default() });
+    let serial = svc.run_plan(&cfg, &plan, false).unwrap();
+    for ((cell, a), b) in plan.cells().iter().zip(&sharded).zip(&serial) {
+        assert_eq!(a.cycles, b.cycles, "cell {}", cell.label());
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "cell {}", cell.label());
+        assert_eq!(a.energy, b.energy, "cell {}", cell.label());
+        assert_eq!(a.report, b.report, "cell {}", cell.label());
+    }
+
+    assert!(stats.worker_deaths >= 1, "the --exit-after worker must count as dead");
+    assert!(stats.requeued >= 1, "its unanswered cells must be re-queued");
+    assert!(
+        stats.requests_sent > stats.unique_cells as u64,
+        "re-queued cells are re-sent, so requests exceed unique cells"
+    );
+    assert_eq!(
+        stats.fleet_unique_runs, stats.unique_cells as u64,
+        "every unique cell is answered exactly once even across a death"
+    );
+}
+
+/// Graceful drain: a client that pipelines jobs and then requests shutdown
+/// still receives every response — in order, shutdown ack last — before
+/// the server exits.
+#[test]
+fn shutdown_drains_in_flight_work() {
+    let svc = SimService::new(ServiceConfig { jobs: 2, ..ServiceConfig::default() });
+    let server = NetServer::bind_tcp("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    let summary = std::thread::scope(|scope| {
+        let serving = scope.spawn(|| server.serve(&svc));
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for i in 0..5 {
+            // Distinct footprints: real scheduler work in flight when the
+            // shutdown line lands.
+            writeln!(
+                stream,
+                "{{\"id\": {i}, \"workload\": \"memset\", \"backend\": \"avx\", \
+                 \"footprint\": {}}}",
+                (i + 1) * 65536
+            )
+            .unwrap();
+        }
+        writeln!(stream, "{{\"id\": 99, \"op\": \"shutdown\"}}").unwrap();
+        stream.flush().unwrap();
+        let mut lines = Vec::new();
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            lines.push(line.trim().to_string());
+            line.clear();
+        }
+        assert_eq!(lines.len(), 6, "all in-flight jobs + the ack must flush:\n{lines:?}");
+        for (i, l) in lines[..5].iter().enumerate() {
+            assert!(l.contains(&format!("\"id\": {i}")), "{l}");
+            assert!(l.contains("\"status\": \"done\""), "{l}");
+        }
+        assert!(lines[5].contains("\"draining\": true"), "{}", lines[5]);
+        // The shutdown op drains the whole server, not just this session.
+        serving.join().unwrap().unwrap()
+    });
+    assert_eq!(summary.requests, 6);
+    assert_eq!(summary.ok, 6);
+    assert_eq!(summary.failed, 0);
+}
+
+/// Per-request timeouts answer a typed line over the wire and never wedge
+/// the connection: the follow-up ping is still served.
+#[test]
+fn timeout_is_typed_and_session_survives() {
+    let svc = SimService::new(ServiceConfig { jobs: 1, ..ServiceConfig::default() });
+    let server = NetServer::bind_tcp("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let ctl = server.ctl();
+
+    std::thread::scope(|scope| {
+        let serving = scope.spawn(|| server.serve(&svc));
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writeln!(
+            stream,
+            "{{\"id\": 1, \"workload\": \"stencil\", \"backend\": \"vima\", \"mb\": 4, \
+             \"timeout_ms\": 1}}"
+        )
+        .unwrap();
+        writeln!(stream, "{{\"id\": 2, \"op\": \"ping\"}}").unwrap();
+        stream.flush().unwrap();
+        let mut first = String::new();
+        reader.read_line(&mut first).unwrap();
+        // Either the cell beat the deadline (done) or the typed timeout
+        // line came back; both must carry the request id.
+        assert!(first.contains("\"id\": 1"), "{first}");
+        assert!(
+            first.contains("\"status\": \"done\"") || first.contains("\"status\": \"timeout\""),
+            "{first}"
+        );
+        if first.contains("\"status\": \"timeout\"") {
+            assert!(first.contains("timeout_ms"), "typed timeout must name the budget: {first}");
+        }
+        let mut second = String::new();
+        reader.read_line(&mut second).unwrap();
+        assert!(second.contains("\"op\": \"ping\""), "{second}");
+        drop(reader);
+        drop(stream);
+        ctl.request_drain();
+        serving.join().unwrap().unwrap();
+    });
+}
