@@ -1,0 +1,520 @@
+//! Static analytic cost model for VIMA programs.
+//!
+//! `vima-sim check --predict` answers "what will this program cost on this
+//! machine?" *without running the detailed simulator*: it replays the
+//! statement tree once per loop iteration against **real machine state
+//! replicas** — the same [`VCache`] type the device uses (so hit/miss/
+//! eviction streams are exact, not estimated), the same
+//! [`cube_index`](crate::fabric::cube_index) hash the fabric uses (so the
+//! per-cube instruction distribution is exact) — and prices each event
+//! with closed-form latency terms derived from the configured geometry:
+//!
+//! * **FU time** — the device's own duration formula (tag + ported
+//!   transfer beats + residual pipeline depth + beat drain), reproduced
+//!   exactly from [`VimaConfig`];
+//! * **DRAM time** — a vector miss splits into 64 B sub-requests striped
+//!   across the cube's vaults by the address hash; the model charges the
+//!   closed-row access latency once plus the per-vault data-bus
+//!   serialization `ceil(lines / vaults) * burst`, and tracks a per-cube
+//!   bus clock so posted write-backs push later fetches the way the
+//!   per-vault `next_free` clocks do in [`crate::mem3d`];
+//! * **host time** — dispatch latency, the `stop_and_go` serialization
+//!   gap, the scalar loop-overhead µop pair, and an analytic LLC-miss
+//!   path (L1+L2+LLC lookup plus one uncontended link+DRAM round trip)
+//!   for `host_load` synchronization points.
+//!
+//! What the model deliberately does **not** track — per-bank conflict
+//! queueing inside a vault, host-cache flush settling on dispatch, and
+//! host-core pipeline overlap — is exactly where predictions legitimately
+//! diverge from the simulator; the `bench --predict` cross-check harness
+//! measures that divergence per kernel and records it in BENCH_PR10.json.
+//! Formulas and the measured error bound: DESIGN.md §15.
+
+use crate::analyze::symbolic::{self, AccessPattern};
+use crate::analyze::SourceInfo;
+use crate::config::SystemConfig;
+use crate::fabric::cube_index;
+use crate::intrinsics::{Stmt, VimaProgram};
+use crate::isa::{VDtype, VimaFuKind, VimaOp};
+use crate::trace::Backend;
+use crate::vima::VCache;
+
+/// Predicted cost of one backend lowering.
+#[derive(Debug, Clone, Default)]
+pub struct BackendCost {
+    /// Logical vector statements executed (loop-expanded).
+    pub instructions: u64,
+    /// Lowered trace events (host µops included).
+    pub events: u64,
+    /// Architectural bytes read / written by vector operands.
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// VIMA vector-cache behaviour (exact LRU replay; zero for AVX).
+    pub vcache_hits: u64,
+    pub vcache_misses: u64,
+    pub writeback_vectors: u64,
+    /// Predicted DRAM traffic under the VIMA lowering (zero for AVX: its
+    /// traffic depends on the host cache hierarchy the model does not
+    /// replay).
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    /// Host-side synchronization loads (`host_load`).
+    pub host_loads: u64,
+    /// Vector instructions homed per cube by the fabric's address hash.
+    pub cube_instructions: Vec<u64>,
+    /// Source operands fetched across cubes (owner != home).
+    pub cross_cube_fetches: u64,
+    /// Predicted end-to-end cycles (VIMA lowering only).
+    pub predicted_cycles: Option<u64>,
+}
+
+/// The full `--predict` result for one program.
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    pub vector_bytes: u32,
+    pub vima: BackendCost,
+    pub avx: BackendCost,
+}
+
+impl CostReport {
+    /// Hand-rolled JSON object (house style: see [`crate::service::jsonl`]).
+    pub fn to_json(&self) -> String {
+        fn backend(b: &BackendCost) -> String {
+            let cubes: Vec<String> =
+                b.cube_instructions.iter().map(u64::to_string).collect();
+            let mut s = format!(
+                "{{\"instructions\": {}, \"events\": {}, \"bytes_read\": {}, \
+                 \"bytes_written\": {}",
+                b.instructions, b.events, b.bytes_read, b.bytes_written
+            );
+            if b.predicted_cycles.is_some() {
+                s.push_str(&format!(
+                    ", \"vcache_hits\": {}, \"vcache_misses\": {}, \
+                     \"writeback_vectors\": {}, \"dram_read_bytes\": {}, \
+                     \"dram_write_bytes\": {}, \"host_loads\": {}, \
+                     \"cube_instructions\": [{}], \"cross_cube_fetches\": {}",
+                    b.vcache_hits,
+                    b.vcache_misses,
+                    b.writeback_vectors,
+                    b.dram_read_bytes,
+                    b.dram_write_bytes,
+                    b.host_loads,
+                    cubes.join(", "),
+                    b.cross_cube_fetches
+                ));
+            }
+            if let Some(c) = b.predicted_cycles {
+                s.push_str(&format!(", \"predicted_cycles\": {c}"));
+            }
+            s.push('}');
+            s
+        }
+        format!(
+            "{{\"vector_bytes\": {}, \"vima\": {}, \"avx\": {}}}",
+            self.vector_bytes,
+            backend(&self.vima),
+            backend(&self.avx)
+        )
+    }
+
+    /// Multi-line human rendering for `check --predict` text mode.
+    pub fn render(&self, file: &str) -> String {
+        let v = &self.vima;
+        let a = &self.avx;
+        let mut out = format!(
+            "{file}: predict: vima {} instr / {} events, avx {} events\n\
+             {file}: predict: vcache {} hit / {} miss / {} writeback vectors\n\
+             {file}: predict: dram {} B read, {} B written, {} host load(s)\n",
+            v.instructions,
+            v.events,
+            a.events,
+            v.vcache_hits,
+            v.vcache_misses,
+            v.writeback_vectors,
+            v.dram_read_bytes,
+            v.dram_write_bytes,
+            v.host_loads,
+        );
+        if v.cube_instructions.len() > 1 {
+            let cubes: Vec<String> =
+                v.cube_instructions.iter().map(u64::to_string).collect();
+            out.push_str(&format!(
+                "{file}: predict: cube homes [{}], {} cross-cube fetch(es)\n",
+                cubes.join(", "),
+                v.cross_cube_fetches
+            ));
+        }
+        if let Some(c) = v.predicted_cycles {
+            out.push_str(&format!("{file}: predict: {c} cycles (vima backend)\n"));
+        }
+        out
+    }
+}
+
+/// Analytic latency terms, all in CPU cycles, derived once from the
+/// configured geometry.
+struct Lat {
+    inst: u64,
+    tag: u64,
+    /// Vault command issue slot.
+    cmd: u64,
+    /// Closed-row activate + column read.
+    access: u64,
+    /// One 64 B line over a vault's internal data bus.
+    burst: u64,
+    /// Posted-write completion (activate + write column).
+    write: u64,
+    /// Host LLC-miss round trip for a `host_load` (cache lookups + link +
+    /// DRAM + link).
+    host_load: u64,
+    /// Host-side scalar loop µops (pointer bump + fused compare-branch).
+    loop_ctl: u64,
+    vaults: u64,
+    dispatch_gap: u64,
+    stop_and_go: bool,
+}
+
+impl Lat {
+    fn of(cfg: &SystemConfig) -> Lat {
+        let ghz = cfg.core.freq_ghz;
+        let m = &cfg.mem;
+        let link = m.link_cycles_per_line(ghz).ceil() as u64;
+        Lat {
+            inst: m.inst_lat_cycles,
+            tag: cfg.vima.to_cpu_cycles(cfg.vima.cache_tag_lat, ghz),
+            cmd: m.dram_to_cpu(1, ghz).max(1),
+            access: m.dram_to_cpu(m.access_dram_cycles(), ghz),
+            burst: m.dram_to_cpu(64 / 8, ghz),
+            write: m.dram_to_cpu(m.t_cwd + m.t_rcd, ghz),
+            host_load: cfg.l1d.latency
+                + cfg.l2.latency
+                + cfg.llc.latency
+                + m.dram_to_cpu(1, ghz).max(1)
+                + m.dram_to_cpu(m.access_dram_cycles(), ghz)
+                + m.dram_to_cpu(64 / 8, ghz)
+                + 2 * link.max(1),
+            loop_ctl: 2,
+            vaults: m.vaults as u64,
+            dispatch_gap: cfg.vima.dispatch_gap_cycles,
+            stop_and_go: cfg.vima.stop_and_go,
+        }
+    }
+
+    /// Per-vault serialization of `lines` 64 B bursts striped across the
+    /// vaults (the hash spreads consecutive lines round-robin).
+    fn stripe(&self, lines: u64) -> u64 {
+        (lines * self.burst).div_ceil(self.vaults)
+    }
+}
+
+/// One cube's device replica: the real vector cache plus FU and data-bus
+/// ready clocks.
+struct CubeState {
+    vcache: VCache,
+    fu_free: [u64; 6],
+    bus_free: u64,
+}
+
+struct Model<'a> {
+    cfg: &'a SystemConfig,
+    lat: Lat,
+    cubes: Vec<CubeState>,
+    t: u64,
+    cost: BackendCost,
+}
+
+impl Model<'_> {
+    fn fu_index(dtype: VDtype, kind: VimaFuKind) -> usize {
+        let base = if dtype.is_float() { 3 } else { 0 };
+        base + match kind {
+            VimaFuKind::Alu => 0,
+            VimaFuKind::Mul => 1,
+            VimaFuKind::Div => 2,
+        }
+    }
+
+    fn fu_total_lat(&self, dtype: VDtype, kind: VimaFuKind) -> u64 {
+        let v = &self.cfg.vima;
+        match (dtype.is_float(), kind) {
+            (false, VimaFuKind::Alu) => v.int_alu_lat,
+            (false, VimaFuKind::Mul) => v.int_mul_lat,
+            (false, VimaFuKind::Div) => v.int_div_lat,
+            (true, VimaFuKind::Alu) => v.fp_alu_lat,
+            (true, VimaFuKind::Mul) => v.fp_mul_lat,
+            (true, VimaFuKind::Div) => v.fp_div_lat,
+        }
+    }
+
+    fn home_of(&self, srcs: &[u64], dst: Option<u64>) -> usize {
+        let anchor = dst.or_else(|| srcs.first().copied()).unwrap_or(0);
+        cube_index(anchor, self.cubes.len(), self.cfg.mem.cube_shard_bytes)
+    }
+
+    /// Posted write-back of `bytes` at `at`: occupies the cube's data bus.
+    fn writeback(&mut self, cube: usize, bytes: u32, at: u64) {
+        let lines = u64::from(bytes).div_ceil(64);
+        self.cost.writeback_vectors += 1;
+        self.cost.dram_write_bytes += lines * 64;
+        let serial = self.lat.stripe(lines);
+        let c = &mut self.cubes[cube];
+        c.bus_free = c.bus_free.max(at) + serial;
+    }
+
+    /// Mirror of `VimaDevice::fetch_vector` with the analytic DRAM terms.
+    fn fetch(&mut self, cube: usize, base: u64, bytes: u32, at: u64) -> u64 {
+        if self.cubes[cube].vcache.lookup(base) {
+            self.cost.vcache_hits += 1;
+            return at + self.lat.tag;
+        }
+        self.cost.vcache_misses += 1;
+        let lines = u64::from(bytes).div_ceil(64);
+        self.cost.dram_read_bytes += lines * 64;
+        let serial = self.lat.stripe(lines);
+        let start = self.cubes[cube].bus_free.max(at);
+        let ready = start + self.lat.cmd + self.lat.access + serial;
+        self.cubes[cube].bus_free = start + serial;
+        if let Some((_victim, vbytes)) =
+            self.cubes[cube].vcache.insert_sized(base, false, bytes)
+        {
+            self.writeback(cube, vbytes, ready);
+        }
+        ready
+    }
+
+    /// Mirror of `VimaDevice::execute` (plus the fabric's coherence walk
+    /// when more than one cube is configured). Returns the completion
+    /// signal time at the CPU.
+    fn execute(
+        &mut self,
+        op: VimaOp,
+        dtype: VDtype,
+        srcs: &[u64],
+        dst: Option<u64>,
+        vb: u32,
+        dispatch: u64,
+    ) -> u64 {
+        let home = self.home_of(srcs, dst);
+        self.cost.cube_instructions[home] += 1;
+        let arrive = dispatch + self.lat.inst;
+
+        let mut unique: Vec<u64> = srcs.to_vec();
+        unique.sort_unstable();
+        unique.dedup();
+
+        // Cross-cube gathers: the owner flushes its dirty copy first.
+        if self.cubes.len() > 1 {
+            for &s in &unique {
+                let owner = cube_index(s, self.cubes.len(), self.cfg.mem.cube_shard_bytes);
+                if owner != home {
+                    self.cost.cross_cube_fetches += 1;
+                    if let Some(bytes) = self.cubes[owner].vcache.clean(s) {
+                        self.writeback(owner, bytes, arrive);
+                    }
+                }
+            }
+        }
+
+        let mut operands_ready = arrive;
+        for &s in &unique {
+            let r = self.fetch(home, s, vb, arrive);
+            operands_ready = operands_ready.max(r);
+        }
+
+        let kind = op.fu_kind();
+        let elems = u64::from(vb) / dtype.bytes() as u64;
+        let beats = elems.div_ceil(self.cfg.vima.lanes as u64).max(1);
+        let port_rounds =
+            (op.num_srcs().max(1) as u64).div_ceil(self.cfg.vima.cache_ports as u64);
+        let transfer = beats * port_rounds;
+        let depth = self.fu_total_lat(dtype, kind).saturating_sub(beats);
+        let duration_vima =
+            self.cfg.vima.cache_tag_lat + transfer + depth + self.cfg.vima.cache_beat_lat;
+        let duration = self.cfg.vima.to_cpu_cycles(duration_vima, self.cfg.core.freq_ghz);
+
+        let fu = Self::fu_index(dtype, kind);
+        let start = operands_ready.max(self.cubes[home].fu_free[fu]);
+        let done = start + duration;
+        self.cubes[home].fu_free[fu] = done;
+
+        if op.writes_vector() {
+            if let Some(d) = dst {
+                if self.cubes.len() > 1 {
+                    for i in 0..self.cubes.len() {
+                        if i != home {
+                            self.cubes[i].vcache.invalidate(d);
+                        }
+                    }
+                }
+                if let Some((_victim, vbytes)) =
+                    self.cubes[home].vcache.insert_sized(d, true, vb)
+                {
+                    self.writeback(home, vbytes, done);
+                }
+            }
+        }
+        done + self.lat.inst
+    }
+
+    /// Replay one statement list; `iter` is the innermost loop induction
+    /// value (operand strides resolve against it).
+    fn block(&mut self, p: &VimaProgram, stmts: &[Stmt], iter: u64) {
+        for stmt in stmts {
+            match stmt {
+                Stmt::Instr { op, dtype, srcs, dst } => {
+                    self.cost.instructions += 1;
+                    let rs: Vec<u64> = srcs.iter().map(|o| o.at(iter)).collect();
+                    let rd = dst.map(|o| o.at(iter));
+                    let ret = self.execute(*op, *dtype, &rs, rd, p.vector_bytes, self.t);
+                    if self.lat.stop_and_go {
+                        // The host serializes to `done + dispatch_gap`
+                        // (`ret` is `done + inst_lat`).
+                        let done = ret.saturating_sub(self.lat.inst);
+                        self.t = ret.max(done + self.lat.dispatch_gap);
+                    }
+                    if p.loop_overhead {
+                        self.t += self.lat.loop_ctl;
+                    }
+                }
+                Stmt::HostLoad { addr, bytes } => {
+                    let _ = addr.at(iter);
+                    self.cost.host_loads += 1;
+                    self.t += self.lat.host_load + u64::from(*bytes) / 8;
+                }
+                Stmt::Loop { start, end, body } => {
+                    for i in *start..*end {
+                        self.block(p, body, i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// End-of-run drain: post every dirty vector and wait out the bus.
+    fn drain(&mut self) -> u64 {
+        let mut end = self.t;
+        for c in 0..self.cubes.len() {
+            for (base, bytes) in self.cubes[c].vcache.dirty_lines() {
+                self.cubes[c].vcache.clean(base);
+                self.writeback(c, bytes, end);
+            }
+            end = end.max(self.cubes[c].bus_free + self.lat.write);
+            for f in self.cubes[c].fu_free {
+                end = end.max(f);
+            }
+        }
+        end
+    }
+}
+
+/// Predict the cost of `p` on the machine described by `cfg`.
+///
+/// Counts (instructions, events, architectural bytes) are exact by
+/// construction; the VIMA vcache stream is exact (same replacement code);
+/// predicted cycles are analytic and model a single host thread — the
+/// cross-check in `bench --predict` quantifies the residual error.
+pub fn predict(p: &VimaProgram, cfg: &SystemConfig) -> CostReport {
+    let src = SourceInfo::default();
+    let vsum = symbolic::summarize(p, &src, Backend::Vima);
+    let asum = symbolic::summarize(p, &src, Backend::Avx);
+    let arch = |patterns: &[AccessPattern]| patterns.iter().map(AccessPattern::bytes).sum::<u64>();
+
+    let num_cubes = cfg.mem.num_cubes.max(1);
+    let lat = Lat::of(cfg);
+    let mut model = Model {
+        cfg,
+        lat,
+        cubes: (0..num_cubes)
+            .map(|_| CubeState {
+                vcache: VCache::new(cfg.vima.cache_lines(), cfg.vima.vector_bytes),
+                fu_free: [0; 6],
+                bus_free: 0,
+            })
+            .collect(),
+        t: 0,
+        cost: BackendCost {
+            cube_instructions: vec![0; num_cubes],
+            ..BackendCost::default()
+        },
+    };
+    model.block(p, &p.stmts, 0);
+    let end = model.drain();
+
+    let mut vima = model.cost;
+    vima.events = vsum.total_events;
+    vima.bytes_read = vsum.instrs.iter().map(|i| arch(&i.reads)).sum();
+    vima.bytes_written =
+        vsum.instrs.iter().filter_map(|i| i.write.as_ref()).map(AccessPattern::bytes).sum();
+    vima.predicted_cycles = Some(end);
+
+    let avx = BackendCost {
+        instructions: vima.instructions,
+        events: asum.total_events,
+        bytes_read: asum.instrs.iter().map(|i| arch(&i.reads)).sum(),
+        bytes_written: asum
+            .instrs
+            .iter()
+            .filter_map(|i| i.write.as_ref())
+            .map(AccessPattern::bytes)
+            .sum(),
+        cube_instructions: Vec::new(),
+        ..BackendCost::default()
+    };
+
+    CostReport { vector_bytes: p.vector_bytes, vima, avx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saxpy_counts_are_exact() {
+        let p = crate::workload::programs::saxpy(16);
+        let cfg = SystemConfig::default();
+        let r = predict(&p, &cfg);
+        // 1 set + 16 fmadds.
+        assert_eq!(r.vima.instructions, 17);
+        assert_eq!(r.vima.events, p.events());
+        assert!(r.vima.predicted_cycles.unwrap() > 0);
+        // Streaming x+y misses, alpha hits after its first touch.
+        assert!(r.vima.vcache_misses > r.vima.vcache_hits);
+        assert!(r.avx.events > r.vima.events);
+        assert!(r.avx.predicted_cycles.is_none());
+    }
+
+    #[test]
+    fn dram_traffic_scales_with_footprint() {
+        let cfg = SystemConfig::default();
+        let small = predict(&crate::workload::programs::saxpy(8), &cfg);
+        let big = predict(&crate::workload::programs::saxpy(64), &cfg);
+        assert!(big.vima.dram_read_bytes > small.vima.dram_read_bytes);
+        assert!(big.vima.predicted_cycles > small.vima.predicted_cycles);
+    }
+
+    #[test]
+    fn cube_histogram_spreads_homes() {
+        let mut cfg = SystemConfig::default();
+        cfg.mem.num_cubes = 4;
+        let r = predict(&crate::workload::programs::saxpy(64), &cfg);
+        assert_eq!(r.vima.cube_instructions.len(), 4);
+        assert_eq!(
+            r.vima.cube_instructions.iter().sum::<u64>(),
+            r.vima.instructions
+        );
+        assert!(
+            r.vima.cube_instructions.iter().filter(|&&c| c > 0).count() > 1,
+            "hash should spread homes: {:?}",
+            r.vima.cube_instructions
+        );
+    }
+
+    #[test]
+    fn json_is_balanced() {
+        let r = predict(&crate::workload::programs::softmax(4), &SystemConfig::default());
+        let j = r.to_json();
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(j.contains("\"predicted_cycles\""));
+        assert!(j.contains("\"host_loads\""));
+    }
+}

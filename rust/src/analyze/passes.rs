@@ -299,7 +299,7 @@ pub(super) fn run(p: &VimaProgram, src: &SourceInfo, cfg: &SystemConfig) -> Repo
     let mut c = 0usize;
     a.prepass(&p.stmts, 1, &mut c);
     a.block(&p.stmts, &src.spans, 1, Span::UNKNOWN);
-    a.diags.sort_by_key(|d| (d.span.line, d.span.col));
+    a.diags.sort_by_key(|d| (d.span.line, d.span.col, d.id));
     Report { diags: a.diags }
 }
 

@@ -1,0 +1,326 @@
+//! Symbolic evaluation of [`VimaProgram`] backend lowerings.
+//!
+//! The verifier ([`super::verify`]) and the static cost model
+//! ([`super::cost`]) both need to reason about *what a lowering does*
+//! without materializing its event stream. This module walks the statement
+//! tree once per backend and summarizes every lowered instruction as a set
+//! of **affine access patterns** (`base + i*stride` polytopes over the
+//! enclosing loop's iteration space, each instance touching a contiguous
+//! byte run), plus the two ordering facts that distinguish the backends:
+//!
+//! * **intra-instruction order** — VIMA fetches every source vector into
+//!   the vector cache before the FU writes the destination
+//!   ([`IntraOrder::ReadAllThenWrite`]); the honest AVX lowering walks the
+//!   vector in 64 B blocks, loading and storing each block before moving
+//!   to the next ([`IntraOrder::Chunked`]);
+//! * **reduction shape** — VIMA folds `Dot`/`RedSum` in a lane-parallel
+//!   binary tree ([`ReductionShape::LaneTree`]), AVX folds sequentially in
+//!   chunk order ([`ReductionShape::SequentialChunks`]).
+//!
+//! The summaries mirror [`crate::intrinsics`]'s `ProgramChunker::emit` /
+//! `emit_avx` shapes statement-for-statement (the two lowerings share one
+//! `Stmt` tree, so summaries pair 1:1 by statement index), which is what
+//! lets [`super::verify`] *prove* dataflow equivalence instead of assuming
+//! it. Formal rules: DESIGN.md §15.
+
+use crate::analyze::{Span, SourceInfo, SpanNode};
+use crate::intrinsics::{Operand, Stmt, VimaProgram};
+use crate::isa::{VDtype, VimaOp};
+use crate::trace::Backend;
+
+/// AVX chunk granularity (one ZMM register), in bytes.
+pub const AVX_CHUNK: u64 = 64;
+
+/// An affine access polytope: `count` instances at `base + i*stride`
+/// (`i` in `0..count`), each touching `len` contiguous bytes, the whole
+/// pattern repeated `repeats` times by enclosing outer loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessPattern {
+    pub base: u64,
+    pub stride: u64,
+    pub count: u64,
+    pub len: u64,
+    pub repeats: u64,
+}
+
+impl AccessPattern {
+    fn of(o: Operand, iters: u64, len: u64, repeats: u64) -> Self {
+        AccessPattern { base: o.base, stride: o.stride, count: iters.max(1), len, repeats }
+    }
+
+    /// Address of instance `i`.
+    pub fn at(&self, i: u64) -> u64 {
+        self.base + i * self.stride
+    }
+
+    /// Convex hull `[lo, hi)` over every instance.
+    pub fn hull(&self) -> (u64, u64) {
+        (self.base, self.at(self.count - 1) + self.len)
+    }
+
+    /// Total bytes touched, counting revisits (traffic, not footprint).
+    pub fn bytes(&self) -> u64 {
+        self.count * self.len * self.repeats
+    }
+
+    /// Does any instance of `self` overlap any instance of `other`?
+    /// (Convex-hull test — sound for the divergence proof, which refines
+    /// it with the exact affine difference before firing.)
+    pub fn hull_overlaps(&self, other: &AccessPattern) -> bool {
+        let (al, ah) = self.hull();
+        let (bl, bh) = other.hull();
+        al < bh && bl < ah
+    }
+}
+
+/// How a backend orders reads and writes *within* one lowered instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntraOrder {
+    /// Every source byte is observed before any destination byte is
+    /// written (VIMA: sources are fetched whole into the vcache, the FU
+    /// computes, the result vector is inserted afterwards).
+    ReadAllThenWrite,
+    /// The lowering advances through the vector in `chunk`-byte blocks,
+    /// reading then writing each block before touching the next (the
+    /// honest AVX 64 B load/compute/store loop).
+    Chunked { chunk: u64 },
+}
+
+/// The combine tree a backend lowers a reduction (`Dot`/`RedSum`) to.
+/// Distinct shapes give bit-different results for non-associative
+/// (floating-point) element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReductionShape {
+    /// Not a reduction.
+    None,
+    /// Lane-parallel binary tree over the whole vector (VIMA FU array).
+    LaneTree,
+    /// Sequential left fold in ascending chunk order (AVX).
+    SequentialChunks { chunk: u64 },
+}
+
+/// Summary of one lowered vector instruction on one backend: its op-DAG
+/// node (op/dtype plus reduction shape) and its access polytopes.
+#[derive(Debug, Clone)]
+pub struct InstrSummary {
+    /// Flattened statement index (identical across backends — both
+    /// lowerings walk one `Stmt` tree).
+    pub stmt: usize,
+    pub span: Span,
+    pub op: VimaOp,
+    pub dtype: VDtype,
+    /// One read polytope per source operand (in operand order, duplicates
+    /// preserved — the verifier needs the full arity).
+    pub reads: Vec<AccessPattern>,
+    /// Destination polytope, when the op writes a vector.
+    pub write: Option<AccessPattern>,
+    /// Bytes of the logical `vector_bytes`-sized vector this lowering
+    /// actually covers per operand instance (AVX truncates to whole
+    /// chunks; VIMA always covers the full vector).
+    pub covered: u64,
+    pub order: IntraOrder,
+    pub reduction: ReductionShape,
+    /// Lowered trace events per operand instance (used by the cost model).
+    pub events_per_instance: u64,
+}
+
+/// One backend's symbolic summary of a whole program: the instruction
+/// op-DAG nodes plus its def→use edges (reads that can observe an earlier
+/// write, by hull intersection).
+#[derive(Debug, Clone)]
+pub struct BackendSummary {
+    pub backend: Backend,
+    pub vector_bytes: u64,
+    pub instrs: Vec<InstrSummary>,
+    /// `(producer, consumer)` pairs of indices into `instrs`: consumer has
+    /// a read polytope hull-overlapping producer's write polytope.
+    pub dag_edges: Vec<(usize, usize)>,
+    /// Total lowered trace events (host-load and loop-control µops
+    /// included).
+    pub total_events: u64,
+}
+
+/// Walk the statement tree and produce `backend`'s symbolic summary.
+/// Program workloads lower to `Avx` or `Vima` only; `Hive` (a paper-kernel
+/// backend with no program lowering) summarizes like `Vima`.
+pub fn summarize(p: &VimaProgram, src: &SourceInfo, backend: Backend) -> BackendSummary {
+    let vb = p.vector_bytes as u64;
+    let mut s = BackendSummary {
+        backend,
+        vector_bytes: vb,
+        instrs: Vec::new(),
+        dag_edges: Vec::new(),
+        total_events: 0,
+    };
+    let mut stmt_counter = 0usize;
+    walk(p, &p.stmts, src.spans.as_slice(), 1, 1, backend, &mut stmt_counter, &mut s);
+    for c in 0..s.instrs.len() {
+        for pr in 0..c {
+            let Some(w) = s.instrs[pr].write else { continue };
+            if s.instrs[c].reads.iter().any(|r| r.hull_overlaps(&w)) {
+                s.dag_edges.push((pr, c));
+            }
+        }
+    }
+    s
+}
+
+/// Per-instance lowered event count for one `Instr` statement.
+fn instr_events(p: &VimaProgram, backend: Backend, op: VimaOp, srcs: usize, has_dst: bool) -> u64 {
+    match backend {
+        Backend::Vima | Backend::Hive => {
+            // One VimaInstr, plus the scalar bump+branch pair when the
+            // host loop is modeled.
+            if p.loop_overhead {
+                3
+            } else {
+                1
+            }
+        }
+        Backend::Avx => {
+            let chunks = (p.vector_bytes as u64 / AVX_CHUNK).max(1);
+            let compute = if matches!(op, VimaOp::Mov | VimaOp::Bcast) { 0 } else { 1 };
+            let store = if has_dst { 1 } else { 0 };
+            // loads + compute + store + loop_ctl (bump + branch) per chunk.
+            chunks * (srcs.min(3) as u64 + compute + store + 2)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn walk(
+    p: &VimaProgram,
+    stmts: &[Stmt],
+    spans: &[SpanNode],
+    iters: u64,
+    repeats: u64,
+    backend: Backend,
+    stmt_counter: &mut usize,
+    out: &mut BackendSummary,
+) {
+    let vb = p.vector_bytes as u64;
+    for (i, stmt) in stmts.iter().enumerate() {
+        let node = spans.get(i);
+        let span = node.map(SpanNode::span).unwrap_or(Span::UNKNOWN);
+        let stmt_id = *stmt_counter;
+        *stmt_counter += 1;
+        match stmt {
+            Stmt::Instr { op, dtype, srcs, dst } => {
+                let avx = backend == Backend::Avx;
+                let covered = if avx { (vb / AVX_CHUNK).max(1) * AVX_CHUNK } else { vb };
+                let order = if avx {
+                    IntraOrder::Chunked { chunk: AVX_CHUNK }
+                } else {
+                    IntraOrder::ReadAllThenWrite
+                };
+                let reduction = match op {
+                    VimaOp::Dot | VimaOp::RedSum => {
+                        if avx {
+                            ReductionShape::SequentialChunks { chunk: AVX_CHUNK }
+                        } else {
+                            ReductionShape::LaneTree
+                        }
+                    }
+                    _ => ReductionShape::None,
+                };
+                let events = instr_events(p, backend, *op, srcs.len(), dst.is_some());
+                out.total_events += events * iters.max(1) * repeats;
+                out.instrs.push(InstrSummary {
+                    stmt: stmt_id,
+                    span,
+                    op: *op,
+                    dtype: *dtype,
+                    reads: srcs
+                        .iter()
+                        .map(|o| AccessPattern::of(*o, iters, covered, repeats))
+                        .collect(),
+                    write: dst.map(|o| AccessPattern::of(o, iters, covered, repeats)),
+                    covered,
+                    order,
+                    reduction,
+                    events_per_instance: events,
+                });
+            }
+            Stmt::HostLoad { .. } => {
+                out.total_events += iters.max(1) * repeats;
+            }
+            Stmt::Loop { start, end, body } => {
+                let n = end.saturating_sub(*start);
+                let inner = match node {
+                    Some(SpanNode::Loop(_, b)) => b.as_slice(),
+                    _ => &[],
+                };
+                // Operand strides resolve against the innermost loop, so
+                // an outer loop multiplies repeats instead of widening the
+                // polytope.
+                walk(p, body, inner, n, repeats * iters.max(1), backend, stmt_counter, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn saxpyish() -> VimaProgram {
+        crate::workload::programs::saxpy(8)
+    }
+
+    #[test]
+    fn backends_summarize_the_same_statements() {
+        let p = saxpyish();
+        let v = summarize(&p, &SourceInfo::default(), Backend::Vima);
+        let a = summarize(&p, &SourceInfo::default(), Backend::Avx);
+        assert_eq!(v.instrs.len(), a.instrs.len());
+        for (iv, ia) in v.instrs.iter().zip(&a.instrs) {
+            assert_eq!(iv.stmt, ia.stmt);
+            assert_eq!(iv.op, ia.op);
+            assert_eq!(iv.reads.len(), ia.reads.len());
+        }
+        assert_eq!(v.total_events, p.events());
+    }
+
+    #[test]
+    fn avx_order_is_chunked_and_vima_reads_first() {
+        let p = saxpyish();
+        let v = summarize(&p, &SourceInfo::default(), Backend::Vima);
+        let a = summarize(&p, &SourceInfo::default(), Backend::Avx);
+        assert!(v.instrs.iter().all(|i| i.order == IntraOrder::ReadAllThenWrite));
+        assert!(a.instrs.iter().all(|i| i.order == IntraOrder::Chunked { chunk: 64 }));
+    }
+
+    #[test]
+    fn reduction_shapes_differ_by_backend() {
+        let p = crate::workload::programs::softmax(4);
+        let v = summarize(&p, &SourceInfo::default(), Backend::Vima);
+        let a = summarize(&p, &SourceInfo::default(), Backend::Avx);
+        let vd = v.instrs.iter().find(|i| i.op == VimaOp::Dot).unwrap();
+        let ad = a.instrs.iter().find(|i| i.op == VimaOp::Dot).unwrap();
+        assert_eq!(vd.reduction, ReductionShape::LaneTree);
+        assert_eq!(ad.reduction, ReductionShape::SequentialChunks { chunk: 64 });
+    }
+
+    #[test]
+    fn dag_edges_capture_def_use() {
+        // set -> a; add a a -> b : edge (0, 1).
+        let mut p = VimaProgram::new();
+        let a = p.alloc(8192);
+        let b = p.alloc(8192);
+        p.vim2k_sets(a);
+        p.vim2k_adds(a, a, b);
+        let s = summarize(&p, &SourceInfo::default(), Backend::Vima);
+        assert_eq!(s.dag_edges, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn avx_coverage_truncates_to_chunks() {
+        let mut p = VimaProgram::new().with_vector_bytes(96);
+        let a = p.alloc(96);
+        p.vim2k_sets(a);
+        let s = summarize(&p, &SourceInfo::default(), Backend::Avx);
+        assert_eq!(s.instrs[0].covered, 64);
+        let sv = summarize(&p, &SourceInfo::default(), Backend::Vima);
+        assert_eq!(sv.instrs[0].covered, 96);
+    }
+}

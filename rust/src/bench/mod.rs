@@ -88,6 +88,21 @@ pub struct NetWorkerRow {
     pub cells_per_sec: f64,
 }
 
+/// One predicted-vs-simulated cross-check cell (`bench --predict`,
+/// DESIGN.md §15): a registered program's static-cost-model cycle
+/// prediction against the cycle count the detailed simulator reports for
+/// the same program, machine, and VIMA lowering.
+#[derive(Debug, Clone)]
+pub struct PredictRow {
+    pub workload: String,
+    /// Cycles the static cost model predicts (no simulation).
+    pub predicted_cycles: u64,
+    /// Cycles the detailed simulator reports.
+    pub simulated_cycles: u64,
+    /// Signed relative error: `(predicted - simulated) / simulated * 100`.
+    pub error_pct: f64,
+}
+
 /// The `bench --net` section: serving-layer saturation along both axes
 /// (connections into one server, worker processes under one coordinator).
 #[derive(Debug, Clone)]
@@ -125,6 +140,9 @@ pub struct ThroughputReport {
     /// Serving saturation section (`bench --net`); absent when the net
     /// section was not requested.
     pub net: Option<NetReport>,
+    /// Predicted-vs-simulated cross-check (`bench --predict`); empty when
+    /// the cross-check was not requested.
+    pub predict: Vec<PredictRow>,
 }
 
 impl ThroughputReport {
@@ -163,6 +181,12 @@ impl ThroughputReport {
     /// Worst energy error across the sampled frontier, in percent.
     pub fn max_energy_error_pct(&self) -> f64 {
         self.sampled.iter().map(|r| r.energy_error_pct).fold(0.0, f64::max)
+    }
+
+    /// Worst absolute prediction error across the `--predict` rows, in
+    /// percent.
+    pub fn max_predict_error_pct(&self) -> f64 {
+        self.predict.iter().map(|r| r.error_pct.abs()).fold(0.0, f64::max)
     }
 
     pub fn to_json(&self) -> String {
@@ -212,6 +236,26 @@ impl ThroughputReport {
                 self.geomean_sampled_speedup(),
                 self.max_cycle_error_pct(),
                 self.max_energy_error_pct()
+            );
+        }
+        if !self.predict.is_empty() {
+            s += "  \"predict\": [\n";
+            for (i, r) in self.predict.iter().enumerate() {
+                s += &format!(
+                    "    {{\"workload\": \"{}\", \"backend\": \"vima\", \
+                     \"predicted_cycles\": {}, \"simulated_cycles\": {}, \
+                     \"error_pct\": {:.2}}}{}\n",
+                    r.workload,
+                    r.predicted_cycles,
+                    r.simulated_cycles,
+                    r.error_pct,
+                    if i + 1 < self.predict.len() { "," } else { "" }
+                );
+            }
+            s += "  ],\n";
+            s += &format!(
+                "  \"predict_summary\": {{\"max_abs_error_pct\": {:.2}}},\n",
+                self.max_predict_error_pct()
             );
         }
         if let Some(net) = &self.net {
@@ -349,7 +393,7 @@ pub fn throughput(
         }
         rows.push(row);
     }
-    Ok(ThroughputReport { quick, iters, rows, sampled: Vec::new(), net: None })
+    Ok(ThroughputReport { quick, iters, rows, sampled: Vec::new(), net: None, predict: Vec::new() })
 }
 
 /// Streaming-kernel cells for the sampled accuracy/speed frontier:
@@ -419,6 +463,47 @@ pub fn sampled_frontier(
         }
         rows.push(row);
     }
+    Ok(rows)
+}
+
+/// Measure the predicted-vs-simulated cross-check (`bench --predict`,
+/// DESIGN.md §15): every registered program workload — the built-ins plus
+/// anything registered via `--load` (e.g. the golden `.vpr` files) — has
+/// its static-cost-model cycle prediction compared against a detailed
+/// single-thread VIMA simulation of the same program on the same machine
+/// configuration. Paper kernels have no statement tree and are skipped.
+/// The row reports *signed* relative error so systematic over- and
+/// under-prediction stay distinguishable in the `BENCH_*.json` trajectory.
+pub fn predict_frontier(cfg: &SystemConfig, verbose: bool) -> Result<Vec<PredictRow>> {
+    let mut rows = Vec::new();
+    for id in workload::all_ids() {
+        let w = workload::get(id)?;
+        let Some(cost) = w.predict(cfg) else { continue };
+        let predicted = cost.vima.predicted_cycles.unwrap_or(0);
+        let p = TraceParams::new(id, Backend::Vima, w.default_footprint());
+        let mut m = Machine::new(cfg, 1)?;
+        let simulated = run_on(&mut m, p)?.cycles;
+        let error_pct = if simulated == 0 {
+            0.0
+        } else {
+            (predicted as f64 - simulated as f64) / simulated as f64 * 100.0
+        };
+        let row = PredictRow {
+            workload: w.name().to_string(),
+            predicted_cycles: predicted,
+            simulated_cycles: simulated,
+            error_pct,
+        };
+        if verbose {
+            eprintln!(
+                "[vima-sim] bench --predict {}: {} predicted vs {} simulated cycles \
+                 ({:+.2}%)",
+                row.workload, row.predicted_cycles, row.simulated_cycles, row.error_pct
+            );
+        }
+        rows.push(row);
+    }
+    rows.sort_by(|a, b| a.workload.cmp(&b.workload));
     Ok(rows)
 }
 
@@ -586,6 +671,7 @@ mod tests {
             }],
             sampled: Vec::new(),
             net: None,
+            predict: Vec::new(),
         };
         let j = report.to_json();
         assert!(j.contains("\"speedup\": 2.000"), "{j}");
@@ -613,6 +699,7 @@ mod tests {
                 energy_error_pct: 0.5,
             }],
             net: None,
+            predict: Vec::new(),
         };
         let j = report.to_json();
         assert!(j.contains("\"sampled_summary\""), "{j}");
@@ -651,6 +738,7 @@ mod tests {
                     cells_per_sec: 18.0,
                 }],
             }),
+            predict: Vec::new(),
         };
         let j = report.to_json();
         assert!(j.contains("\"net\": {"), "{j}");
@@ -659,6 +747,38 @@ mod tests {
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
         assert_eq!(report.net.as_ref().unwrap().peak_connections(), 4);
+    }
+
+    #[test]
+    fn predict_section_appears_and_balances() {
+        let report = ThroughputReport {
+            quick: true,
+            iters: 1,
+            rows: Vec::new(),
+            sampled: Vec::new(),
+            net: None,
+            predict: vec![
+                PredictRow {
+                    workload: "saxpy".into(),
+                    predicted_cycles: 9500,
+                    simulated_cycles: 10000,
+                    error_pct: -5.0,
+                },
+                PredictRow {
+                    workload: "softmax".into(),
+                    predicted_cycles: 11000,
+                    simulated_cycles: 10000,
+                    error_pct: 10.0,
+                },
+            ],
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"predict\": ["), "{j}");
+        assert!(j.contains("\"error_pct\": -5.00"), "{j}");
+        assert!(j.contains("\"max_abs_error_pct\": 10.00"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!((report.max_predict_error_pct() - 10.0).abs() < 1e-9);
     }
 
     #[test]
@@ -677,6 +797,7 @@ mod tests {
             rows: vec![row(2.0), row(8.0)],
             sampled: Vec::new(),
             net: None,
+            predict: Vec::new(),
         };
         assert!((r.geomean_speedup() - 4.0).abs() < 1e-9);
         assert_eq!(r.min_speedup(), 2.0);

@@ -69,7 +69,9 @@ pub struct Operand {
 }
 
 impl Operand {
-    fn at(self, iter: u64) -> u64 {
+    /// Resolved address at loop iteration `iter` (also used by the
+    /// symbolic evaluator in [`crate::analyze`]).
+    pub(crate) fn at(self, iter: u64) -> u64 {
         self.base + iter * self.stride
     }
 }

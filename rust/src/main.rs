@@ -8,7 +8,7 @@
 //! vima-sim sweep [--jobs N] [--figs fig2,custom|all] [--csv DIR] [--quick]
 //! vima-sim fig2|fig3|fig4|fig5|ablation|headline|custom|all [--quick]
 //! vima-sim run <workload|file.vpr> <backend> [--mb N] [--threads N] [--sampled] [--stats]
-//! vima-sim check <file.vpr|workload> ... [--json [FILE]]
+//! vima-sim check <file.vpr|workload> ... [--predict] [--json [FILE]]
 //! vima-sim serve [--jobs N] [--cache N] [--load PATH]  (JSONL: stdin -> stdout)
 //! vima-sim net serve [--tcp ADDR|--unix PATH] [--jobs N] [--window N]
 //! vima-sim net worker [--jobs N]              (stdio protocol; spawned by coordinate)
@@ -72,12 +72,19 @@ COMMANDS:
               saxpy / softmax — or a path to a `.vpr` program file
               (e.g. vima-sim run examples/programs/saxpy.vpr vima);
               backends: avx vima hive
-  check       Static analysis (DESIGN.md §13): run the vima-check dataflow
-              analyzer + lint pass over `.vpr` files and/or registered
-              program workloads against the session machine configuration;
-              diagnostics are `file:line:col: severity[lint-id]: message`
-              lines, --json emits the machine-readable report, and the
-              exit status is nonzero when any error-severity lint fires
+  check       Static analysis (DESIGN.md §13, §15): run the vima-check
+              dataflow analyzer + lint pass and the vima-verify symbolic
+              cross-backend equivalence prover over `.vpr` files and/or
+              registered program workloads against the session machine
+              configuration (same machine flags as run: --cubes,
+              --threads, --config); diagnostics are
+              `file:line:col: severity[lint-id]: message` lines sorted by
+              (file, line, col, lint-id) across all targets, --json emits
+              the machine-readable report in the same order, --predict
+              adds the static cost model's per-file traffic and cycle
+              predictions (DESIGN.md §15), and the exit status is nonzero
+              exactly when any error-severity lint fires (warnings alone
+              exit 0)
   serve       Long-running service mode: read JSONL job requests from
               stdin, write JSONL results to stdout (one line each, in
               request order; the in-flight window simulates in parallel
@@ -110,7 +117,10 @@ COMMANDS:
               accuracy/speed frontier (full vs sampled wall time + error);
               --net adds the serving saturation section: jobs/sec vs
               concurrent connections (loopback TCP) and sharded-sweep
-              cells/sec vs worker-process count
+              cells/sec vs worker-process count; --predict adds the
+              static-cost-model cross-check: predicted vs simulated
+              cycles per registered program, with relative error
+              (DESIGN.md §15)
   workloads   List every workload in the registry (name, backends, size)
   transpile   Future-work demo: auto-convert an AVX trace to VIMA
               (vima-sim transpile <workload> [--mb N])
@@ -135,6 +145,12 @@ OPTIONS:
   --exit-after N   (net worker) fault injection for tests: crash the worker
                    process after answering N responses
   --iters N        (bench) timed iterations per cell, median reported (3)
+  --predict        (check) append the static cost model's prediction per
+                   file: instruction/event counts, vcache hits/misses,
+                   DRAM traffic, and predicted cycles for the VIMA
+                   lowering (text and --json);
+                   (bench) add the predicted-vs-simulated cross-check
+                   section: relative cycle error per golden program
   --json FILE      (bench) write the JSON record to FILE;
                    (check) write the JSON report to FILE, or to stdout
                    when the flag is bare
@@ -148,7 +164,9 @@ OPTIONS:
   --csv DIR        (sweep) same as --out
   --figs LIST      (sweep) comma-separated subset, e.g. fig2,fig5,custom;
                    'all' = every figure including custom
-  --threads N      (run) data-parallel cores
+  --threads N      (run) data-parallel cores; (check) accepted for flag
+                   parity with run — the analyzer is keyed on the machine
+                   config (--cubes/--config), not the core count
   --mb N           (run) footprint in MiB
   --sampled        (run) sampled execution: functional fast-forward between
                    detailed windows, extrapolated result (DESIGN.md §11);
@@ -368,13 +386,23 @@ fn main() -> Result<()> {
             }
             if targets.is_empty() {
                 bail!(
-                    "usage: vima-sim check <file.vpr|workload> ... [--json [FILE]]; \
-                     targets are .vpr paths or registered program workloads \
-                     (see `vima-sim workloads`)"
+                    "usage: vima-sim check <file.vpr|workload> ... [--predict] \
+                     [--json [FILE]]; targets are .vpr paths or registered \
+                     program workloads (see `vima-sim workloads`)"
                 );
             }
-            // (label, report) per analyzable target, in argument order.
-            let mut reports: Vec<(String, vima_sim::analyze::Report)> = Vec::new();
+            let predict = args.flag("predict");
+            // `check` shares `run`'s machine flags: --cubes and --config
+            // already shaped `cfg` above; --threads is accepted so
+            // scripted run/check pairs can pass one flag set (the
+            // analyzer and cost model are keyed on the machine config,
+            // not the host core count).
+            let threads = args.get_usize("threads", 1);
+            let _ = threads;
+            // (label, lint report, cost prediction) per analyzable target.
+            type Checked =
+                (String, vima_sim::analyze::Report, Option<vima_sim::analyze::cost::CostReport>);
+            let mut reports: Vec<Checked> = Vec::new();
             let mut skipped: Vec<&str> = Vec::new();
             for target in &targets {
                 if target.ends_with(".vpr") {
@@ -386,24 +414,48 @@ fn main() -> Result<()> {
                         Ok(p) => p,
                         Err(e) => bail!("{target}: {e}"),
                     };
+                    let cost = predict
+                        .then(|| vima_sim::analyze::cost::predict(&parsed.program, &cfg));
                     reports.push((
                         target.clone(),
                         vima_sim::analyze::analyze_parsed(&parsed, &cfg),
+                        cost,
                     ));
                 } else {
                     let id = workload::resolve(target)?;
-                    match workload::get(id)?.analyze(&cfg) {
-                        Some(report) => reports.push((target.clone(), report)),
+                    let w = workload::get(id)?;
+                    match w.analyze(&cfg) {
+                        Some(report) => {
+                            let cost = if predict { w.predict(&cfg) } else { None };
+                            reports.push((target.clone(), report, cost));
+                        }
                         None => skipped.push(target),
                     }
                 }
             }
-            let errors: usize = reports.iter().map(|(_, r)| r.error_count()).sum();
-            let warnings: usize = reports.iter().map(|(_, r)| r.warning_count()).sum();
-            let infos: usize = reports.iter().map(|(_, r)| r.info_count()).sum();
+            // Deterministic multi-file output: targets sort by label, and
+            // each report's diagnostics are already (line, col, lint-id)
+            // sorted, so the stream is globally ordered by
+            // (file, span, lint id) no matter the argument order.
+            reports.sort_by(|a, b| a.0.cmp(&b.0));
+            skipped.sort_unstable();
+            let errors: usize = reports.iter().map(|(_, r, _)| r.error_count()).sum();
+            let warnings: usize = reports.iter().map(|(_, r, _)| r.warning_count()).sum();
+            let infos: usize = reports.iter().map(|(_, r, _)| r.info_count()).sum();
             if args.flag("json") {
-                let files: Vec<String> =
-                    reports.iter().map(|(f, r)| r.to_json(f)).collect();
+                let files: Vec<String> = reports
+                    .iter()
+                    .map(|(f, r, cost)| {
+                        let mut obj = r.to_json(f);
+                        if let Some(c) = cost {
+                            // Splice the prediction into the per-file
+                            // object (house-style hand-rolled JSON).
+                            obj.truncate(obj.len() - 1);
+                            obj.push_str(&format!(", \"predict\": {}}}", c.to_json()));
+                        }
+                        obj
+                    })
+                    .collect();
                 let doc = format!(
                     "{{\"files\": [{}], \"errors\": {errors}, \
                      \"warnings\": {warnings}, \"infos\": {infos}}}\n",
@@ -417,11 +469,14 @@ fn main() -> Result<()> {
                     None => print!("{doc}"),
                 }
             } else {
-                for (file, report) in &reports {
+                for (file, report, cost) in &reports {
                     if report.is_clean() {
                         println!("{file}: clean");
                     } else {
                         print!("{}", report.render(file));
+                    }
+                    if let Some(c) = cost {
+                        print!("{}", c.render(file));
                     }
                 }
             }
@@ -706,6 +761,24 @@ fn main() -> Result<()> {
                     netr.peak_connections()
                 );
                 report.net = Some(netr);
+            }
+            if args.flag("predict") {
+                report.predict = vima_sim::bench::predict_frontier(&cfg, true)?;
+                println!(
+                    "\n{:<12} {:>7} {:>14} {:>14} {:>8}",
+                    "workload", "backend", "predicted", "simulated", "err %"
+                );
+                for r in &report.predict {
+                    println!(
+                        "{:<12} {:>7} {:>14} {:>14} {:>7.2}%",
+                        r.workload, "vima", r.predicted_cycles, r.simulated_cycles, r.error_pct
+                    );
+                }
+                println!(
+                    "predict max |err| {:.2}% over {} program(s)",
+                    report.max_predict_error_pct(),
+                    report.predict.len()
+                );
             }
             if let Some(path) = args.get("json") {
                 std::fs::write(path, report.to_json())?;

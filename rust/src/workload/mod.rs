@@ -143,6 +143,27 @@ pub trait Workload: Send + Sync {
         let _ = cfg;
         None
     }
+
+    /// Prove this workload's VIMA and AVX lowerings dataflow-equivalent
+    /// ([`crate::analyze::verify`]), if it has a statement tree. `None`
+    /// means "not verifiable" (paper kernels have no program to compare);
+    /// program-backed workloads return the full [`VerifyReport`] with the
+    /// per-backend symbolic summaries.
+    ///
+    /// [`VerifyReport`]: crate::analyze::VerifyReport
+    fn verify(&self) -> Option<crate::analyze::VerifyReport> {
+        None
+    }
+
+    /// Predict this workload's cost on `cfg` with the static cost model
+    /// ([`crate::analyze::cost`]), if it has a statement tree.
+    fn predict(
+        &self,
+        cfg: &crate::config::SystemConfig,
+    ) -> Option<crate::analyze::cost::CostReport> {
+        let _ = cfg;
+        None
+    }
 }
 
 /// Parameter invariants shared by every trace generator.

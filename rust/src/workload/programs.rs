@@ -113,6 +113,17 @@ impl Workload for ProgramWorkload {
     fn analyze(&self, cfg: &crate::config::SystemConfig) -> Option<crate::analyze::Report> {
         Some(crate::analyze::analyze(&self.program, &self.source, cfg))
     }
+
+    fn verify(&self) -> Option<crate::analyze::VerifyReport> {
+        Some(crate::analyze::verify::verify(&self.program, &self.source))
+    }
+
+    fn predict(
+        &self,
+        cfg: &crate::config::SystemConfig,
+    ) -> Option<crate::analyze::cost::CostReport> {
+        Some(crate::analyze::cost::predict(&self.program, cfg))
+    }
 }
 
 /// SAXPY over `vectors` vectors: `y = a*x + y` with a resident broadcast
